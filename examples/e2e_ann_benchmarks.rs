@@ -1,0 +1,140 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): proves all layers compose on a
+//! real small workload.
+//!
+//! Pipeline:
+//!   1. generate the six Table-2-matched datasets (scaled) and verify their
+//!      measured LID against the paper's column;
+//!   2. compute ground truth **through the AOT Pallas scan artifact via
+//!      PJRT** and cross-check it against the Rust scalar path (L1 ⇄ L3
+//!      consistency);
+//!   3. build CRINN + GLASS + the strongest baseline per dataset, sweep ef,
+//!      and report QPS at recall 0.9 / window-AUC (the headline metric);
+//!   4. serve one dataset through the batching coordinator (sharded) and
+//!      report serving QPS + p99.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_ann_benchmarks
+//! # scale up: CRINN_E2E_N=30000 cargo run --release --example e2e_ann_benchmarks
+//! ```
+
+use crinn::anns::AnnIndex;
+use crinn::coordinator::{Server, ServerConfig, ShardedRouter};
+use crinn::dataset::synth;
+use crinn::eval::harness;
+use crinn::runtime::Engine;
+use crinn::variants::VariantConfig;
+use std::sync::Arc;
+
+fn env_usize(k: &str, d: usize) -> usize {
+    std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
+}
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::from_default_artifacts()?;
+    let n = env_usize("CRINN_E2E_N", 6_000);
+    let nq = env_usize("CRINN_E2E_QUERIES", 80);
+    let ef_grid = [16usize, 24, 32, 48, 64, 96, 128, 192];
+    let mut all_sweeps = Vec::new();
+
+    println!("# E2E — CRINN full-stack driver ({n} base vectors/dataset)\n");
+
+    for name in synth::paper_dataset_names() {
+        let sp = synth::spec(name).unwrap();
+        let mut ds = synth::generate_counts(sp, n, nq, 42);
+
+        // (1) Table-2 stats check.
+        let stats = ds.stats(20, 200, 7);
+        println!(
+            "## {name}: D={} LID(measured)={:.1} LID(paper)={:.1}",
+            stats.dim, stats.lid, sp.paper_lid
+        );
+
+        // (2) Ground truth through PJRT (L1 Pallas kernel), cross-checked.
+        if engine.manifest.has_dim(ds.dim) {
+            let t = std::time::Instant::now();
+            let gt = engine.brute_force_topk(ds.metric, &ds.queries, &ds.base, ds.dim, 10)?;
+            let pjrt_s = t.elapsed().as_secs_f64();
+            let rust_gt = crinn::dataset::gt::brute_force_topk(&ds.base, &ds.queries, ds.dim, ds.metric, 10);
+            let mut agree = 0usize;
+            for (a, b) in gt.iter().zip(&rust_gt) {
+                if a == b {
+                    agree += 1;
+                }
+            }
+            println!(
+                "  ground truth: PJRT/Pallas {pjrt_s:.2}s, {agree}/{} queries identical to Rust path",
+                gt.len()
+            );
+            assert!(
+                agree as f64 >= 0.98 * gt.len() as f64,
+                "PJRT and Rust ground truth disagree"
+            );
+            ds.gt = gt;
+            ds.gt_k = 10;
+        } else {
+            ds.compute_ground_truth(10);
+        }
+
+        // (3) Index comparison: CRINN vs GLASS vs ParlayANN.
+        for (label, builder) in harness::algorithms()
+            .into_iter()
+            .filter(|(l, _)| matches!(*l, "crinn" | "glass" | "parlayann"))
+        {
+            let sweep = harness::run_algorithm(&ds, label, builder, &ef_grid);
+            let q90 = crinn::eval::qps_at_recall(&sweep.points, 0.90);
+            let auc = crinn::crinn::reward::window_auc(&sweep.points, 0.85, 0.95);
+            println!(
+                "  {label:<12} QPS@0.90 {}  window-AUC {auc:.0}",
+                q90.map(|q| format!("{q:.0}")).unwrap_or_else(|| "—".into())
+            );
+            all_sweeps.push(sweep);
+        }
+        println!();
+    }
+
+    // (4) Serving path on the SIFT-like dataset.
+    println!("## serving (sift-128-like through the batching coordinator)");
+    let ds = Arc::new(synth::generate_with_gt("sift-128-euclidean", n, nq, 10, 44));
+    struct RI(ShardedRouter, Arc<crinn::dataset::Dataset>);
+    impl AnnIndex for RI {
+        fn name(&self) -> String {
+            "crinn-sharded".into()
+        }
+        fn search(&self, q: &[f32], k: usize, ef: usize) -> Vec<u32> {
+            self.0.search(q, k, ef, |g| self.1.metric.distance(q, self.1.base_vec(g as usize)))
+        }
+        fn len(&self) -> usize {
+            self.0.len()
+        }
+    }
+    let router = ShardedRouter::build_glass(&ds, &VariantConfig::crinn_full(), 2, 7);
+    let server = Server::start(Arc::new(RI(router, ds.clone())), ServerConfig::default());
+    let h = server.handle();
+    let t = std::time::Instant::now();
+    let total = 1_000;
+    let mut recall = 0.0;
+    let mut served = 0usize;
+    for r in 0..total {
+        let qi = r % ds.n_queries();
+        if let Some(resp) = h.query(ds.query_vec(qi).to_vec(), 10, 64) {
+            recall += crinn::dataset::gt::recall_at_k(&resp.ids, &ds.gt[qi], 10);
+            served += 1;
+        }
+    }
+    let elapsed = t.elapsed().as_secs_f64();
+    let snap = server.shutdown();
+    println!(
+        "  served {served}/{total} in {elapsed:.2}s → {:.0} QPS, recall@10 {:.4}, p99 {}",
+        served as f64 / elapsed,
+        recall / served.max(1) as f64,
+        crinn::util::bench::fmt_duration(snap.latency.p99)
+    );
+
+    // Persist the sweep data for EXPERIMENTS.md.
+    let csv = crinn::eval::report::sweeps_to_csv(&all_sweeps);
+    let path = harness::reports_dir().join("e2e_sweeps.csv");
+    crinn::eval::report::save(&path, &csv)?;
+    println!("\nwrote {}", path.display());
+    println!("E2E OK");
+    Ok(())
+}

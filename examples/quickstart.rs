@@ -1,0 +1,46 @@
+//! Quickstart: build a CRINN-optimized GLASS index on a synthetic dataset,
+//! search it, and compare against exact ground truth.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use crinn::anns::glass::GlassIndex;
+use crinn::anns::{AnnIndex, VectorSet};
+use crinn::dataset::synth;
+use crinn::variants::VariantConfig;
+
+fn main() -> anyhow::Result<()> {
+    // 1. A small workload: 10k vectors, 64-dim, Euclidean.
+    let ds = synth::generate_with_gt("demo-64", 10_000, 100, 10, 42);
+    println!("dataset: {} ({} base, dim {})", ds.name, ds.n_base(), ds.dim);
+
+    // 2. Build the index with the paper's discovered configuration.
+    let (build_s, index) = crinn::util::bench::time_once(|| {
+        GlassIndex::build(VectorSet::from_dataset(&ds), VariantConfig::crinn_full(), 7)
+            .with_label("crinn")
+    });
+    println!(
+        "built {} in {build_s:.2}s ({:.1} MiB)",
+        index.name(),
+        index.memory_bytes() as f64 / 1048576.0
+    );
+
+    // 3. Search and measure recall@10 at a few ef settings.
+    for ef in [16, 48, 128] {
+        let point = crinn::eval::sweep::measure_point(&index, &ds, 10, ef);
+        println!(
+            "ef={ef:<4} recall@10={:.4}  QPS={:<8.0} mean={}",
+            point.recall,
+            point.qps,
+            crinn::util::bench::fmt_duration(point.mean_latency_s)
+        );
+    }
+
+    // 4. One concrete query, next to its exact answer.
+    let q = ds.query_vec(0);
+    let approx = index.search(q, 5, 64);
+    println!("\nquery 0 — approx top-5: {approx:?}");
+    println!("query 0 — exact  top-5: {:?}", &ds.gt[0][..5]);
+    Ok(())
+}

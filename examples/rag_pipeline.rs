@@ -1,0 +1,111 @@
+//! RAG-style retrieval pipeline — the workload the paper's introduction
+//! motivates: an embedded document corpus served through the CRINN index,
+//! with the exact rerank stage running on the AOT Pallas artifact via
+//! PJRT (the batch path a production retriever would use).
+//!
+//! The "corpus" is synthetic: documents are topic-clustered embedding
+//! vectors (angular metric, like real sentence embeddings); queries are
+//! perturbed documents, so each query's "relevant document" is known and
+//! we can report retrieval hit-rate alongside latency.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example rag_pipeline
+//! ```
+
+use crinn::anns::glass::GlassIndex;
+use crinn::anns::VectorSet;
+use crinn::dataset::synth;
+use crinn::distance::Metric;
+use crinn::runtime::Engine;
+use crinn::util::rng::Rng;
+use crinn::variants::VariantConfig;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::from_default_artifacts()?;
+
+    // --- Corpus: 20k "documents" as 100-dim angular embeddings.
+    let sp = synth::spec("glove-100-angular").unwrap();
+    let corpus = synth::generate_counts(sp, 20_000, 0, 1);
+    let dim = corpus.dim;
+    println!("corpus: {} docs, dim {dim} (angular)", corpus.n_base());
+
+    // --- Queries: noisy copies of random documents (known answers).
+    let mut rng = Rng::new(9);
+    let n_queries = 64; // one PJRT rerank batch
+    let mut queries = Vec::with_capacity(n_queries * dim);
+    let mut truth = Vec::with_capacity(n_queries);
+    for _ in 0..n_queries {
+        let doc = rng.next_below(corpus.n_base());
+        truth.push(doc as u32);
+        let mut v: Vec<f32> = corpus.base_vec(doc).to_vec();
+        for x in v.iter_mut() {
+            *x += 0.05 * rng.next_gaussian_f32();
+        }
+        crinn::distance::normalize(&mut v);
+        queries.extend_from_slice(&v);
+    }
+
+    // --- Index the corpus.
+    let (build_s, index) = crinn::util::bench::time_once(|| {
+        GlassIndex::build(
+            VectorSet::new(corpus.base.clone(), dim, Metric::Angular),
+            VariantConfig::crinn_full(),
+            7,
+        )
+    });
+    println!("index built in {build_s:.2}s");
+
+    // --- Stage 1: quantized candidate generation (Rust hot path).
+    let k = 10;
+    let ef = 96;
+    let t = std::time::Instant::now();
+    let cand_per_q = engine.manifest.rerank_cands.min(64);
+    let mut cand_ids: Vec<Vec<u32>> = Vec::with_capacity(n_queries);
+    for qi in 0..n_queries {
+        let q = &queries[qi * dim..(qi + 1) * dim];
+        let mut c = index.candidates_for_rerank(q, k, ef.max(cand_per_q));
+        c.truncate(cand_per_q);
+        cand_ids.push(c);
+    }
+    let stage1 = t.elapsed();
+
+    // --- Stage 2: exact rerank through the Pallas artifact (PJRT batch).
+    let t = std::time::Instant::now();
+    let c_max = cand_ids.iter().map(Vec::len).max().unwrap_or(1);
+    let mut gathered = vec![0f32; n_queries * c_max * dim];
+    for (qi, ids) in cand_ids.iter().enumerate() {
+        for (ci, &id) in ids.iter().enumerate() {
+            gathered[(qi * c_max + ci) * dim..(qi * c_max + ci + 1) * dim]
+                .copy_from_slice(corpus.base_vec(id as usize));
+        }
+    }
+    let dists = engine.rerank(Metric::Angular, &queries, n_queries, &gathered, c_max, dim)?;
+    let stage2 = t.elapsed();
+
+    // --- Merge + report.
+    let mut hits = 0;
+    for qi in 0..n_queries {
+        let mut scored: Vec<(f32, u32)> = cand_ids[qi]
+            .iter()
+            .enumerate()
+            .map(|(ci, &id)| (dists[qi][ci], id))
+            .collect();
+        scored.sort_by(crinn::anns::heap::dist_cmp);
+        let top: Vec<u32> = scored.iter().take(k).map(|x| x.1).collect();
+        if top.contains(&truth[qi]) {
+            hits += 1;
+        }
+    }
+    println!("\nretrieval hit-rate@{k}: {hits}/{n_queries}");
+    println!(
+        "stage 1 (graph search, rust): {:.2} ms total ({:.0} µs/query)",
+        stage1.as_secs_f64() * 1e3,
+        stage1.as_secs_f64() * 1e6 / n_queries as f64
+    );
+    println!(
+        "stage 2 (exact rerank, PJRT/Pallas batch): {:.2} ms total",
+        stage2.as_secs_f64() * 1e3
+    );
+    assert!(hits as f64 >= 0.9 * n_queries as f64, "retrieval degraded");
+    Ok(())
+}

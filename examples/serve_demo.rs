@@ -1,0 +1,92 @@
+//! Serving demo: the L3 coordinator end to end — sharded GLASS indexes
+//! behind the dynamic batcher, concurrent clients, backpressure, and a
+//! latency/throughput report (the vLLM-router-shaped deployment story).
+//!
+//! ```bash
+//! cargo run --release --example serve_demo
+//! ```
+
+use crinn::anns::AnnIndex;
+use crinn::coordinator::{Server, ServerConfig, ShardedRouter};
+use crinn::dataset::synth;
+use crinn::variants::VariantConfig;
+use std::sync::Arc;
+
+struct RouterIndex {
+    router: ShardedRouter,
+    ds: Arc<crinn::dataset::Dataset>,
+}
+
+impl AnnIndex for RouterIndex {
+    fn name(&self) -> String {
+        "crinn-sharded".into()
+    }
+    fn search(&self, q: &[f32], k: usize, ef: usize) -> Vec<u32> {
+        self.router
+            .search(q, k, ef, |gid| self.ds.metric.distance(q, self.ds.base_vec(gid as usize)))
+    }
+    fn len(&self) -> usize {
+        self.router.len()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let ds = Arc::new(synth::generate_with_gt("sift-128-euclidean", 15_000, 200, 10, 42));
+    println!("dataset: {} base vectors", ds.n_base());
+
+    let router = ShardedRouter::build_glass(&ds, &VariantConfig::crinn_full(), 2, 7);
+    println!("router: {} shards", router.n_shards());
+    let index: Arc<dyn AnnIndex> = Arc::new(RouterIndex {
+        router,
+        ds: ds.clone(),
+    });
+
+    let server = Server::start(index, ServerConfig::default());
+    let n_clients = 4;
+    let requests_per_client = 500;
+    let t = std::time::Instant::now();
+    let mut clients = Vec::new();
+    for c in 0..n_clients {
+        let h = server.handle();
+        let ds = ds.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut recall = 0.0;
+            let mut served = 0;
+            for r in 0..requests_per_client {
+                let qi = (c * 131 + r) % ds.n_queries();
+                if let Some(resp) = h.query(ds.query_vec(qi).to_vec(), 10, 64) {
+                    recall += crinn::dataset::gt::recall_at_k(&resp.ids, &ds.gt[qi], 10);
+                    served += 1;
+                }
+            }
+            (recall, served)
+        }));
+    }
+    let mut recall = 0.0;
+    let mut served = 0usize;
+    for c in clients {
+        let (r, s) = c.join().unwrap();
+        recall += r;
+        served += s;
+    }
+    let elapsed = t.elapsed().as_secs_f64();
+    let snap = server.shutdown();
+
+    println!("\n== serving report ==");
+    println!("served: {served}/{} requests in {elapsed:.2}s", n_clients * requests_per_client);
+    println!("throughput: {:.0} QPS", served as f64 / elapsed);
+    println!("recall@10: {:.4}", recall / served.max(1) as f64);
+    println!(
+        "latency p50 {}  p95 {}  p99 {}",
+        crinn::util::bench::fmt_duration(snap.latency.p50),
+        crinn::util::bench::fmt_duration(snap.latency.p95),
+        crinn::util::bench::fmt_duration(snap.latency.p99),
+    );
+    println!(
+        "batches: {} (mean size {:.1}), rejected: {}",
+        snap.batches,
+        snap.mean_batch_size(),
+        snap.rejected
+    );
+    Ok(())
+}

@@ -1,0 +1,118 @@
+"""AOT bridge: lower every L2 entry point to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+published ``xla`` 0.1.6 crate binds) rejects (`proto.id() <= INT_MAX`). The
+text parser reassigns ids, so text round-trips cleanly. See
+/opt/xla-example/gen_hlo.py and its README.
+
+Artifacts written (manifest.json indexes them for the Rust runtime):
+  scan_{metric}_d{D}.hlo.txt    [64, D] x [4096, D]    -> [64, 4096]
+  rerank_{metric}_d{D}.hlo.txt  [64, D] x [64, 128, D] -> [64, 128]
+  policy_fwd.hlo.txt            params.., feats[G,F]   -> mean/logstd [G,A]
+  grpo_step.hlo.txt             fused Eq.3 + Adam update
+
+Usage: ``python -m compile.aot --out ../artifacts`` (from python/), or just
+``make artifacts`` at the repo root. Python never runs after this.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# The six benchmark dimensions of Table 2, plus 64 for examples/tests.
+DATASET_DIMS = (25, 64, 100, 128, 256, 784, 960)
+METRICS = ("l2", "angular")
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, example_args) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*example_args))
+
+
+def build_all(out_dir: str, dims=DATASET_DIMS, verbose=True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    sd = jax.ShapeDtypeStruct
+    f32 = jax.numpy.float32
+    manifest = {
+        "query_batch": model.QUERY_BATCH,
+        "base_block": model.BASE_BLOCK,
+        "rerank_cands": model.RERANK_CANDS,
+        "n_knobs": model.N_KNOBS,
+        "n_exemplars": model.N_EXEMPLARS,
+        "n_modules": model.N_MODULES,
+        "feat_dim": model.FEAT_DIM,
+        "hidden": model.HIDDEN,
+        "group": model.GROUP,
+        "param_shapes": [[n, list(s)] for n, s in model.PARAM_SHAPES],
+        "dims": list(dims),
+        "metrics": list(METRICS),
+        "artifacts": {},
+    }
+
+    def emit(name: str, fn, example_args):
+        text = lower_entry(fn, example_args)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = f"{name}.hlo.txt"
+        if verbose:
+            print(f"  {name:26s} {len(text):>9d} chars", file=sys.stderr)
+
+    for d in dims:
+        q = sd((model.QUERY_BATCH, d), f32)
+        b = sd((model.BASE_BLOCK, d), f32)
+        c = sd((model.QUERY_BATCH, model.RERANK_CANDS, d), f32)
+        for metric in METRICS:
+            emit(f"scan_{metric}_d{d}",
+                 functools.partial(model.scan_block, metric=metric), (q, b))
+            emit(f"rerank_{metric}_d{d}",
+                 functools.partial(model.rerank_block, metric=metric), (q, c))
+
+    emit("policy_fwd", model.policy_forward, model.policy_example_args())
+    emit("grpo_step", model.grpo_step, model.grpo_example_args())
+
+    # Initial policy parameters, flat f32 lists the Rust side can ingest
+    # without any tensor library.
+    params = model.init_params(seed=0)
+    manifest["init_params"] = [
+        [float(x) for x in p.reshape(-1)] for p in params
+    ]
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--dims", default=None,
+                    help="comma-separated vector dims (default: all six)")
+    args = ap.parse_args()
+    dims = DATASET_DIMS if args.dims is None else tuple(
+        int(x) for x in args.dims.split(","))
+    m = build_all(args.out, dims=dims)
+    print(f"wrote {len(m['artifacts'])} artifacts + manifest.json to {args.out}",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

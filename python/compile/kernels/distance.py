@@ -1,0 +1,150 @@
+"""L1: Pallas blocked batch-distance kernels.
+
+The compute hotspot of every batch path in the CRINN stack — brute-force
+ground truth, IVF coarse assignment, and GLASS exact reranking — is a
+(Q, D) x (B, D) distance matrix. We express it as a tiled Pallas kernel:
+
+  * grid over (Q/TQ, B/TB) output tiles;
+  * each program stages a TQ x D query tile and a TB x D base tile through
+    VMEM (BlockSpec below) and emits a TQ x TB distance tile;
+  * squared L2 uses the MXU-friendly matmul form
+        ||q - b||^2 = ||q||^2 + ||b||^2 - 2 q.b
+    so the inner loop is a (TQ, D) @ (D, TB) contraction on the systolic
+    array rather than a subtract-square-reduce chain;
+  * angular / inner-product are the same contraction with a different
+    epilogue.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's ANNS is a
+CPU system; the Pallas tiles here are shaped for a TPU-style memory
+hierarchy (VMEM-resident tiles, MXU contraction). On this image we lower
+with ``interpret=True`` — mandatory, since real TPU lowering emits Mosaic
+custom-calls the CPU PJRT plugin cannot execute. VMEM footprint per program
+at the default tiles (TQ=16, TB=512, D<=960):
+    q tile   16*960*4   =  60 KiB
+    b tile  512*960*4   = 1.9 MiB
+    out     16*512*4    =  32 KiB
+comfortably inside a 16 MiB/core VMEM budget; see EXPERIMENTS.md §Perf for
+the tile sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. TQ divides the padded query batch (64), TB divides the
+# padded base block (4096). D is carried whole per tile: ANNS dims are modest
+# (25..960) and carrying D whole avoids a K-loop + accumulator in VMEM.
+TILE_Q = 16
+TILE_B = 512
+
+
+def _dist_kernel(q_ref, b_ref, o_ref, *, metric: str):
+    """One (TQ, TB) output tile. q_ref: [TQ, D], b_ref: [TB, D]."""
+    q = q_ref[...]
+    b = b_ref[...]
+    # The contraction both metrics share — hits the MXU on real hardware.
+    dots = jax.lax.dot_general(
+        q,
+        b,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [TQ, TB]
+    if metric == "l2":
+        qn = jnp.sum(q * q, axis=1, keepdims=True)  # [TQ, 1]
+        bn = jnp.sum(b * b, axis=1, keepdims=True).T  # [1, TB]
+        o_ref[...] = qn + bn - 2.0 * dots
+    elif metric == "angular":
+        o_ref[...] = 1.0 - dots
+    elif metric == "ip":
+        o_ref[...] = -dots
+    else:  # pragma: no cover - guarded by DIST_KERNELS
+        raise ValueError(f"unknown metric {metric!r}")
+
+
+def batch_distances(
+    q: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    metric: str = "l2",
+    tile_q: int = TILE_Q,
+    tile_b: int = TILE_B,
+) -> jnp.ndarray:
+    """Blocked distance matrix. q: [Q, D], b: [B, D] -> [Q, B] float32.
+
+    Q must be divisible by ``tile_q`` and B by ``tile_b`` (the Rust runtime
+    pads its batches to the compiled shapes; see runtime/engine.rs).
+    """
+    qn, d = q.shape
+    bn, d2 = b.shape
+    assert d == d2, f"dim mismatch {d} vs {d2}"
+    tile_q = min(tile_q, qn)
+    tile_b = min(tile_b, bn)
+    assert qn % tile_q == 0 and bn % tile_b == 0, (qn, bn, tile_q, tile_b)
+    grid = (qn // tile_q, bn // tile_b)
+    return pl.pallas_call(
+        functools.partial(_dist_kernel, metric=metric),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_b, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_q, tile_b), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qn, bn), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(q, b)
+
+
+def _rerank_kernel(q_ref, c_ref, o_ref, *, metric: str):
+    """Per-query candidate rerank tile. q_ref: [TQ, D], c_ref: [TQ, C, D]."""
+    q = q_ref[...]
+    c = c_ref[...]
+    dots = jnp.einsum("qd,qcd->qc", q, c, preferred_element_type=jnp.float32)
+    if metric == "l2":
+        qn = jnp.sum(q * q, axis=1, keepdims=True)  # [TQ, 1]
+        cn = jnp.sum(c * c, axis=2)  # [TQ, C]
+        o_ref[...] = qn + cn - 2.0 * dots
+    elif metric == "angular":
+        o_ref[...] = 1.0 - dots
+    elif metric == "ip":
+        o_ref[...] = -dots
+    else:  # pragma: no cover
+        raise ValueError(f"unknown metric {metric!r}")
+
+
+def rerank_distances(
+    q: jnp.ndarray,
+    c: jnp.ndarray,
+    *,
+    metric: str = "l2",
+    tile_q: int = TILE_Q,
+) -> jnp.ndarray:
+    """Exact rerank distances for gathered candidates.
+
+    q: [Q, D], c: [Q, C, D] -> [Q, C]. Used by the GLASS refinement stage:
+    the Rust coordinator gathers the quantized-search survivors' full-
+    precision vectors into ``c`` and calls the compiled artifact.
+    """
+    qn, d = q.shape
+    qn2, cc, d2 = c.shape
+    assert qn == qn2 and d == d2, (q.shape, c.shape)
+    tile_q = min(tile_q, qn)
+    assert qn % tile_q == 0
+    grid = (qn // tile_q,)
+    return pl.pallas_call(
+        functools.partial(_rerank_kernel, metric=metric),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile_q, cc, d), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_q, cc), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((qn, cc), jnp.float32),
+        interpret=True,
+    )(q, c)
+
+
+METRICS = ("l2", "angular", "ip")

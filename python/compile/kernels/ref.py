@@ -1,0 +1,58 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every Pallas kernel in this package has an entry here with identical
+semantics, written in the most obvious jnp form. pytest (and hypothesis
+sweeps) assert `assert_allclose(kernel(...), ref(...))` — this is the
+build-time gate for the AOT artifacts the Rust runtime executes.
+
+Distance conventions (match `rust/src/distance/`):
+  * ``l2``      : squared Euclidean distance (no sqrt — monotone, cheaper,
+                  what GLASS/faiss use internally).
+  * ``angular`` : ann-benchmarks angular distance ``1 - cos(q, b)``.
+                  Vectors are L2-normalized at dataset load, so this is
+                  ``1 - <q, b>`` on the unit sphere.
+  * ``ip``      : negated inner product (maximum-IP search as a min-distance
+                  problem).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def l2_ref(q: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Squared L2 distances. q: [Q, D], b: [B, D] -> [Q, B]."""
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)  # [Q, 1]
+    bn = jnp.sum(b * b, axis=-1, keepdims=True).T  # [1, B]
+    return qn + bn - 2.0 * (q @ b.T)
+
+
+def angular_ref(q: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Angular distance 1 - <q,b> for unit vectors. [Q, D], [B, D] -> [Q, B]."""
+    return 1.0 - q @ b.T
+
+
+def ip_ref(q: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Negated inner product. [Q, D], [B, D] -> [Q, B]."""
+    return -(q @ b.T)
+
+
+def rerank_l2_ref(q: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Per-query candidate reranking distances.
+
+    q: [Q, D], c: [Q, C, D] -> [Q, C] squared L2.
+    """
+    diff = q[:, None, :] - c
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def rerank_angular_ref(q: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """q: [Q, D], c: [Q, C, D] -> [Q, C] angular distance (unit vectors)."""
+    return 1.0 - jnp.einsum("qd,qcd->qc", q, c)
+
+
+DIST_REFS = {
+    "l2": l2_ref,
+    "angular": angular_ref,
+    "ip": ip_ref,
+}

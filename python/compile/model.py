@@ -1,0 +1,215 @@
+"""L2: JAX compute graphs for the CRINN stack (build-time only).
+
+Three families of entry points, all lowered to HLO text by ``aot.py`` and
+executed from the Rust coordinator via PJRT:
+
+1. **Batch distance / rerank** — thin wrappers around the L1 Pallas kernels
+   (`kernels.distance`). One artifact per (metric, vector-dim) pair the
+   benchmark datasets need; the Rust runtime pads query/base blocks to the
+   compiled shapes.
+
+2. **Policy network** — the CRINN "generator". The paper's LLM proposes a
+   module implementation; our substitution (DESIGN.md §2) is a Gaussian
+   policy over the structured variant-knob space. ``policy_forward`` maps
+   the contrastive prompt features (exemplar knob-vectors ⊕ scores ⊕ module
+   one-hot, mirroring Table 1's structure) to a mean/log-std over the A
+   knobs of one module.
+
+3. **GRPO step** — Eq. 3 of the paper: clipped importance-weighted surrogate
+   with a KL penalty against the reference policy, over a group of G
+   completions with group-normalized advantages (Eq. 2, computed in Rust).
+   The whole update (loss -> grad -> Adam) is one fused HLO so the Rust
+   trainer does a single PJRT call per optimization step.
+
+Shape constants here are the single source of truth: ``aot.py`` writes them
+into ``artifacts/manifest.json`` and the Rust side (`crinn::policy`) reads
+them — change them here and everything re-syncs via ``make artifacts``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import distance as dk
+
+# ---------------------------------------------------------------------------
+# Shape constants (mirrored into artifacts/manifest.json).
+# ---------------------------------------------------------------------------
+
+# Batch-path shapes: Rust pads to these.
+QUERY_BATCH = 64      # rows per distance/rerank call
+BASE_BLOCK = 4096     # base vectors per scan block
+RERANK_CANDS = 128    # candidates per query in the rerank artifact
+
+# Policy shapes.
+N_KNOBS = 8           # action dim A: knobs per ANNS module (variants/)
+N_EXEMPLARS = 4       # contrastive exemplars embedded in the features
+N_MODULES = 3         # construction / search / refinement (§3.5 order)
+FEAT_DIM = N_MODULES + N_EXEMPLARS * (N_KNOBS + 1) + 1  # +1: step progress
+HIDDEN = 64
+GROUP = 8             # G in GRPO (Eq. 3)
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+# Parameter tree layout (order matters: this is the PJRT argument order).
+PARAM_SHAPES = [
+    ("w1", (FEAT_DIM, HIDDEN)),
+    ("b1", (HIDDEN,)),
+    ("w2", (HIDDEN, HIDDEN)),
+    ("b2", (HIDDEN,)),
+    ("wm", (HIDDEN, N_KNOBS)),
+    ("bm", (N_KNOBS,)),
+    ("logstd", (N_KNOBS,)),
+]
+N_PARAMS = len(PARAM_SHAPES)
+
+
+def init_params(seed: int = 0):
+    """He-ish init, returned in PARAM_SHAPES order."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, N_PARAMS)
+    out = []
+    for (name, shape), k in zip(PARAM_SHAPES, ks):
+        if name == "logstd":
+            out.append(jnp.full(shape, -1.0, jnp.float32))
+        elif len(shape) == 2:
+            scale = jnp.sqrt(2.0 / shape[0])
+            out.append(scale * jax.random.normal(k, shape, jnp.float32))
+        else:
+            out.append(jnp.zeros(shape, jnp.float32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# 1. Distance / rerank entry points (call the Pallas kernels).
+# ---------------------------------------------------------------------------
+
+def scan_block(q, b, *, metric: str):
+    """[QUERY_BATCH, D] x [BASE_BLOCK, D] -> [QUERY_BATCH, BASE_BLOCK]."""
+    return (dk.batch_distances(q, b, metric=metric),)
+
+
+def rerank_block(q, c, *, metric: str):
+    """[QUERY_BATCH, D] x [QUERY_BATCH, RERANK_CANDS, D] -> [QB, RC]."""
+    return (dk.rerank_distances(q, c, metric=metric),)
+
+
+# ---------------------------------------------------------------------------
+# 2. Policy network.
+# ---------------------------------------------------------------------------
+
+def _mlp(params, feats):
+    w1, b1, w2, b2, wm, bm, logstd = params
+    h = jnp.tanh(feats @ w1 + b1)
+    h = jnp.tanh(h @ w2 + b2)
+    mean = jnp.tanh(h @ wm + bm)  # knobs live in [-1, 1]; Rust maps to ranges
+    return mean, logstd
+
+
+def policy_forward(*args):
+    """params..., feats[G, F] -> (mean[G, A], logstd_broadcast[G, A]).
+
+    Batched over the group so one call serves a whole GRPO rollout; for
+    single-candidate inference Rust pads the batch.
+    """
+    params, feats = list(args[:N_PARAMS]), args[N_PARAMS]
+    mean, logstd = _mlp(params, feats)
+    return mean, jnp.broadcast_to(logstd, mean.shape)
+
+
+def _gauss_logp(mean, logstd, actions):
+    """Sum of diagonal-Gaussian log-probs over the action dim. -> [G]."""
+    var = jnp.exp(2.0 * logstd)
+    ll = -0.5 * ((actions - mean) ** 2 / var + 2.0 * logstd + jnp.log(2.0 * jnp.pi))
+    return jnp.sum(ll, axis=-1)
+
+
+def _gauss_kl(mean_p, logstd_p, mean_q, logstd_q):
+    """KL(p || q) for diagonal Gaussians, summed over action dim. -> [G]."""
+    var_p = jnp.exp(2.0 * logstd_p)
+    var_q = jnp.exp(2.0 * logstd_q)
+    kl = (logstd_q - logstd_p) + (var_p + (mean_p - mean_q) ** 2) / (2.0 * var_q) - 0.5
+    return jnp.sum(kl, axis=-1)
+
+
+def grpo_loss(params, ref_params, feats, actions, advantages, old_logp,
+              clip_eps, kl_beta):
+    """Eq. 3: -E[min(ratio * Â, clip(ratio) * Â) - β KL(π‖π_ref)].
+
+    feats [G,F], actions [G,A], advantages [G] (already group-normalized per
+    Eq. 2 + smoothing, done in `crinn::grpo`), old_logp [G] from rollout
+    time. Scalars clip_eps / kl_beta arrive as 0-d tensors so one artifact
+    serves any hyperparameter setting.
+    """
+    mean, logstd = _mlp(params, feats)
+    logp = _gauss_logp(mean, logstd, actions)
+    ratio = jnp.exp(logp - old_logp)
+    unclipped = ratio * advantages
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * advantages
+    surrogate = jnp.minimum(unclipped, clipped)
+    ref_mean, ref_logstd = _mlp(ref_params, feats)
+    kl = _gauss_kl(mean, jnp.broadcast_to(logstd, mean.shape),
+                   ref_mean, jnp.broadcast_to(ref_logstd, ref_mean.shape))
+    return -jnp.mean(surrogate - kl_beta * kl)
+
+
+def grpo_step(*args):
+    """One fused GRPO update (loss -> grad -> Adam).
+
+    PJRT argument order:
+      params[7], adam_m[7], adam_v[7], ref_params[7],
+      feats[G,F], actions[G,A], advantages[G], old_logp[G],
+      lr, clip_eps, kl_beta, t (Adam step counter, float)
+    Returns: new_params[7] ++ new_m[7] ++ new_v[7] ++ (loss,)
+    """
+    i = 0
+    params = list(args[i:i + N_PARAMS]); i += N_PARAMS
+    m = list(args[i:i + N_PARAMS]); i += N_PARAMS
+    v = list(args[i:i + N_PARAMS]); i += N_PARAMS
+    ref_params = list(args[i:i + N_PARAMS]); i += N_PARAMS
+    feats, actions, advantages, old_logp, lr, clip_eps, kl_beta, t = args[i:i + 8]
+
+    loss, grads = jax.value_and_grad(grpo_loss)(
+        params, ref_params, feats, actions, advantages, old_logp,
+        clip_eps, kl_beta)
+
+    new_params, new_m, new_v = [], [], []
+    bc1 = 1.0 - ADAM_B1 ** t
+    bc2 = 1.0 - ADAM_B2 ** t
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+        step = lr * (mi / bc1) / (jnp.sqrt(vi / bc2) + ADAM_EPS)
+        new_params.append(p - step)
+        new_m.append(mi)
+        new_v.append(vi)
+    return tuple(new_params) + tuple(new_m) + tuple(new_v) + (loss,)
+
+
+def grpo_example_args():
+    """ShapeDtypeStructs for lowering grpo_step."""
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+    params = [sd(s, f32) for _, s in PARAM_SHAPES]
+    return (
+        params * 4  # params, m, v, ref_params
+        + [
+            sd((GROUP, FEAT_DIM), f32),
+            sd((GROUP, N_KNOBS), f32),
+            sd((GROUP,), f32),
+            sd((GROUP,), f32),
+            sd((), f32),
+            sd((), f32),
+            sd((), f32),
+            sd((), f32),
+        ]
+    )
+
+
+def policy_example_args():
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+    return [sd(s, f32) for _, s in PARAM_SHAPES] + [sd((GROUP, FEAT_DIM), f32)]

@@ -1,0 +1,75 @@
+"""AOT bridge tests: artifacts lower, parse as HLO text, manifest is sane.
+
+Lowering the full artifact set takes a little while, so these tests build a
+reduced set (one dim) into a tmpdir; the `make artifacts` output is checked
+structurally if present.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build_all(str(out), dims=(64,), verbose=False)
+    return str(out), manifest
+
+
+def test_manifest_fields(built):
+    out, m = built
+    assert m["query_batch"] == model.QUERY_BATCH
+    assert m["base_block"] == model.BASE_BLOCK
+    assert m["feat_dim"] == model.FEAT_DIM
+    assert m["group"] == model.GROUP
+    assert [tuple(s) for _, s in
+            [(n, tuple(sh)) for n, sh in m["param_shapes"]]]
+    assert set(m["metrics"]) == {"l2", "angular"}
+
+
+def test_expected_artifacts_present(built):
+    out, m = built
+    names = set(m["artifacts"])
+    for metric in ("l2", "angular"):
+        assert f"scan_{metric}_d64" in names
+        assert f"rerank_{metric}_d64" in names
+    assert "policy_fwd" in names
+    assert "grpo_step" in names
+    for fname in m["artifacts"].values():
+        path = os.path.join(out, fname)
+        assert os.path.exists(path)
+        head = open(path).read(200)
+        # HLO text modules start with `HloModule`.
+        assert head.startswith("HloModule"), head[:40]
+
+
+def test_hlo_text_has_entry_computation(built):
+    out, m = built
+    text = open(os.path.join(out, m["artifacts"]["scan_l2_d64"])).read()
+    assert "ENTRY" in text
+    # No Mosaic custom-calls may leak into CPU artifacts (interpret=True).
+    assert "tpu_custom_call" not in text
+    assert "mosaic" not in text.lower()
+
+
+def test_init_params_roundtrip(built):
+    _, m = built
+    flat = m["init_params"]
+    assert len(flat) == model.N_PARAMS
+    for vals, (_, shape) in zip(flat, model.PARAM_SHAPES):
+        n = 1
+        for s in shape:
+            n *= s
+        assert len(vals) == n
+        assert all(isinstance(v, float) for v in vals[:3])
+
+
+def test_manifest_json_roundtrip(built):
+    out, _ = built
+    with open(os.path.join(out, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["dims"] == [64]

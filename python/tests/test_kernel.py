@@ -1,0 +1,144 @@
+"""L1 correctness gate: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes/metrics/value ranges; fixed cases pin the exact
+shapes the AOT artifacts are compiled at (the ones the Rust runtime will
+execute).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import distance as dk
+from compile.kernels import ref
+
+
+RNG = np.random.default_rng(0)
+
+
+def _rand(shape, scale=1.0, dtype=np.float32):
+    return (RNG.standard_normal(shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Fixed AOT shapes (what the Rust runtime actually runs).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric", dk.METRICS)
+@pytest.mark.parametrize("d", [25, 64, 128, 960])
+def test_batch_distances_aot_shapes(metric, d):
+    q = _rand((64, d))
+    b = _rand((4096, d))
+    if metric == "angular":
+        q /= np.linalg.norm(q, axis=1, keepdims=True)
+        b /= np.linalg.norm(b, axis=1, keepdims=True)
+    got = dk.batch_distances(jnp.asarray(q), jnp.asarray(b), metric=metric)
+    want = ref.DIST_REFS[metric](jnp.asarray(q), jnp.asarray(b))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("metric", ["l2", "angular"])
+@pytest.mark.parametrize("d", [25, 128])
+def test_rerank_aot_shapes(metric, d):
+    q = _rand((64, d))
+    c = _rand((64, 128, d))
+    if metric == "angular":
+        q /= np.linalg.norm(q, axis=1, keepdims=True)
+        c /= np.linalg.norm(c, axis=2, keepdims=True)
+    got = dk.rerank_distances(jnp.asarray(q), jnp.asarray(c), metric=metric)
+    rfn = ref.rerank_l2_ref if metric == "l2" else ref.rerank_angular_ref
+    want = rfn(jnp.asarray(q), jnp.asarray(c))
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Semantic pins.
+# ---------------------------------------------------------------------------
+
+def test_l2_is_squared_euclidean():
+    q = np.array([[0.0, 0.0], [1.0, 2.0]], np.float32)
+    b = np.array([[3.0, 4.0], [1.0, 2.0]], np.float32)
+    got = np.asarray(dk.batch_distances(jnp.asarray(q), jnp.asarray(b),
+                                        metric="l2", tile_q=1, tile_b=1))
+    np.testing.assert_allclose(got, [[25.0, 5.0], [8.0, 0.0]], atol=1e-5)
+
+
+def test_angular_zero_for_identical_unit_vectors():
+    v = _rand((8, 16))
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    got = np.asarray(dk.batch_distances(jnp.asarray(v), jnp.asarray(v),
+                                        metric="angular", tile_q=8, tile_b=8))
+    np.testing.assert_allclose(np.diag(got), 0.0, atol=1e-5)
+    assert (got >= -1e-5).all() and (got <= 2.0 + 1e-5).all()
+
+
+def test_ip_is_negated_dot():
+    q = _rand((4, 8))
+    b = _rand((4, 8))
+    got = np.asarray(dk.batch_distances(jnp.asarray(q), jnp.asarray(b),
+                                        metric="ip", tile_q=4, tile_b=4))
+    np.testing.assert_allclose(got, -(q @ b.T), rtol=1e-5, atol=1e-5)
+
+
+def test_unknown_metric_rejected():
+    q = jnp.zeros((4, 8))
+    with pytest.raises(ValueError):
+        dk.batch_distances(q, q, metric="hamming", tile_q=4, tile_b=4)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: shape/tiling space.
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    tq=st.sampled_from([1, 2, 4, 8]),
+    nq_tiles=st.integers(1, 3),
+    tb=st.sampled_from([1, 4, 16, 64]),
+    nb_tiles=st.integers(1, 3),
+    d=st.integers(1, 70),
+    metric=st.sampled_from(list(dk.METRICS)),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_batch_distances_property(tq, nq_tiles, tb, nb_tiles, d, metric, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((tq * nq_tiles, d)).astype(np.float32)
+    b = rng.standard_normal((tb * nb_tiles, d)).astype(np.float32)
+    got = dk.batch_distances(jnp.asarray(q), jnp.asarray(b),
+                             metric=metric, tile_q=tq, tile_b=tb)
+    want = ref.DIST_REFS[metric](jnp.asarray(q), jnp.asarray(b))
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    tq=st.sampled_from([1, 2, 4]),
+    nq_tiles=st.integers(1, 3),
+    c=st.integers(1, 24),
+    d=st.integers(1, 48),
+    metric=st.sampled_from(["l2", "angular"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rerank_property(tq, nq_tiles, c, d, metric, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.standard_normal((tq * nq_tiles, d)).astype(np.float32)
+    cd = rng.standard_normal((tq * nq_tiles, c, d)).astype(np.float32)
+    got = dk.rerank_distances(jnp.asarray(q), jnp.asarray(cd),
+                              metric=metric, tile_q=tq)
+    rfn = ref.rerank_l2_ref if metric == "l2" else ref.rerank_angular_ref
+    want = rfn(jnp.asarray(q), jnp.asarray(cd))
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=st.integers(2, 32))
+def test_l2_nonnegative_and_symmetric_on_self(seed, d):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((8, d)).astype(np.float32)
+    got = np.asarray(dk.batch_distances(jnp.asarray(x), jnp.asarray(x),
+                                        metric="l2", tile_q=8, tile_b=8))
+    assert (got >= -1e-3).all()
+    np.testing.assert_allclose(got, got.T, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.diag(got), 0.0, atol=1e-4)

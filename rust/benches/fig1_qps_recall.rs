@@ -1,0 +1,37 @@
+//! Figure 1: QPS versus recall curves across six datasets × seven systems.
+//!
+//! Regenerates the paper's headline figure at sandbox scale: for every
+//! Table-2 dataset, builds {CRINN, GLASS, ParlayANN, NNDescent,
+//! PyNNDescent, Vearch-IVF, Voyager}, sweeps ef, and emits
+//! `reports/fig1_qps_recall.csv` + per-dataset ASCII panels.
+//!
+//! Expected *shape* (what the paper claims and we check in EXPERIMENTS.md):
+//! CRINN ≥ GLASS everywhere; graph methods dominate IVF at high recall;
+//! the nytimes-like high-noise angular dataset is the hardest.
+
+use crinn::eval::harness;
+use crinn::eval::report;
+
+fn main() {
+    let ef_grid = harness::bench_ef_grid();
+    let datasets = harness::bench_dataset_names();
+    let mut all = Vec::new();
+    for name in &datasets {
+        eprintln!("[fig1] dataset {name}");
+        let ds = harness::bench_dataset(name, crinn::DEFAULT_K);
+        let mut panel = Vec::new();
+        for (label, builder) in harness::algorithms() {
+            let sweep = harness::run_algorithm(&ds, label, builder, &ef_grid);
+            panel.push(sweep.clone());
+            all.push(sweep);
+        }
+        println!(
+            "{}",
+            report::ascii_plot(&format!("Figure 1 — {name}"), &panel, 64, 16)
+        );
+    }
+    let csv = report::sweeps_to_csv(&all);
+    let path = harness::reports_dir().join("fig1_qps_recall.csv");
+    report::save(&path, &csv).expect("write csv");
+    println!("wrote {} ({} rows)", path.display(), csv.lines().count() - 1);
+}

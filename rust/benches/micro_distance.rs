@@ -1,0 +1,65 @@
+//! Micro-bench: distance kernels (f32 vs SQ8) across the Table-2 dims —
+//! the innermost hot path of every index, and the first §Perf target.
+//! Also times the PJRT batch-scan artifact per 64x4096 block for the
+//! batch-path comparison in EXPERIMENTS.md §Perf.
+
+use crinn::distance::{dot, l2_sq, quant::QuantizedStore, Metric};
+use crinn::util::bench::{report_row, time_adaptive};
+use crinn::util::rng::Rng;
+use std::hint::black_box;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    println!("## micro_distance — per-pair distance kernels\n");
+    for &dim in &[25usize, 100, 128, 256, 784, 960] {
+        let n = 1024;
+        let data: Vec<f32> = (0..n * dim).map(|_| rng.next_gaussian_f32()).collect();
+        let q: Vec<f32> = (0..dim).map(|_| rng.next_gaussian_f32()).collect();
+        let store = QuantizedStore::build(&data, dim);
+        let qc = store.encode_query(&q);
+
+        let mut i = 0;
+        let s = time_adaptive(0.3, 1000, || {
+            i = (i + 1) % n;
+            black_box(l2_sq(&q, &data[i * dim..(i + 1) * dim]));
+        });
+        report_row(&format!("l2_sq f32 d={dim}"), &s);
+        let flops = 3.0 * dim as f64;
+        println!(
+            "{:>60}",
+            format!("~{:.2} GFLOP/s", flops / s.mean / 1e9)
+        );
+
+        let mut i = 0;
+        let s = time_adaptive(0.3, 1000, || {
+            i = (i + 1) % n;
+            black_box(dot(&q, &data[i * dim..(i + 1) * dim]));
+        });
+        report_row(&format!("dot f32 d={dim}"), &s);
+
+        let mut i = 0;
+        let s = time_adaptive(0.3, 1000, || {
+            i = (i + 1) % n;
+            black_box(store.distance(Metric::L2, &qc, i));
+        });
+        report_row(&format!("l2 sq8 d={dim}"), &s);
+    }
+
+    // PJRT batch scan (one compiled 64x4096 block per call).
+    println!("\n## PJRT batch scan artifact (64 x 4096 block)\n");
+    match crinn::runtime::Engine::from_default_artifacts() {
+        Err(e) => println!("(skipped: {e})"),
+        Ok(engine) => {
+            for &dim in &[128usize, 960] {
+                let q: Vec<f32> = (0..64 * dim).map(|_| rng.next_gaussian_f32()).collect();
+                let b: Vec<f32> = (0..4096 * dim).map(|_| rng.next_gaussian_f32()).collect();
+                let s = time_adaptive(0.5, 3, || {
+                    black_box(engine.scan(Metric::L2, &q, 64, &b, 4096, dim).unwrap());
+                });
+                report_row(&format!("pjrt scan_l2 d={dim}"), &s);
+                let pair_ns = s.mean / (64.0 * 4096.0) * 1e9;
+                println!("{:>60}", format!("~{pair_ns:.1} ns/pair amortized"));
+            }
+        }
+    }
+}

@@ -1,0 +1,104 @@
+//! Micro-bench: graph-search building blocks — visited-set strategies,
+//! heap ops, end-to-end beam search, and knob ablations (the §Perf
+//! evidence for the data-structure choices DESIGN.md §7 calls out).
+
+use crinn::anns::heap::{MinQueue, TopK};
+use crinn::anns::visited::VisitedSet;
+use crinn::anns::VectorSet;
+use crinn::dataset::synth;
+use crinn::util::bench::{report_row, time_adaptive};
+use crinn::util::rng::Rng;
+use crinn::variants::{ConstructionKnobs, SearchKnobs};
+use std::collections::HashSet;
+use std::hint::black_box;
+
+fn main() {
+    let mut rng = Rng::new(1);
+    let n = 100_000;
+
+    // --- visited set: epoch-stamped vs HashSet.
+    println!("## visited-set strategies ({n} nodes, 2000 marks/query)\n");
+    let ids: Vec<u32> = (0..2000).map(|_| rng.next_below(n) as u32).collect();
+    let mut vs = VisitedSet::new(n);
+    let s = time_adaptive(0.3, 200, || {
+        vs.clear();
+        for &i in &ids {
+            black_box(vs.insert(i));
+        }
+    });
+    report_row("epoch-stamped VisitedSet", &s);
+    let s = time_adaptive(0.3, 200, || {
+        let mut h = HashSet::with_capacity(2048);
+        for &i in &ids {
+            black_box(h.insert(i));
+        }
+    });
+    report_row("HashSet<u32>", &s);
+
+    // --- heaps.
+    println!("\n## heap ops (1000 push + drain)\n");
+    let vals: Vec<f32> = (0..1000).map(|_| rng.next_f32()).collect();
+    let s = time_adaptive(0.3, 200, || {
+        let mut q = MinQueue::with_capacity(1024);
+        for (i, &v) in vals.iter().enumerate() {
+            q.push(v, i as u32);
+        }
+        while let Some(x) = q.pop() {
+            black_box(x);
+        }
+    });
+    report_row("MinQueue push+drain", &s);
+    let s = time_adaptive(0.3, 200, || {
+        let mut t = TopK::new(64);
+        for (i, &v) in vals.iter().enumerate() {
+            t.push(v, i as u32);
+        }
+        black_box(t.bound());
+    });
+    report_row("TopK(64) stream", &s);
+
+    // --- end-to-end beam search knob ablation.
+    println!("\n## beam search knob ablation (demo-64, 8k nodes, ef=64)\n");
+    let sp = synth::spec("demo-64").unwrap();
+    let ds = synth::generate_counts(sp, 8_000, 64, 3);
+    let graph = crinn::anns::hnsw::builder::build(
+        VectorSet::from_dataset(&ds),
+        &ConstructionKnobs::default(),
+        7,
+    );
+    let mut ctx = crinn::anns::hnsw::search::SearchContext::new(graph.len());
+    for (label, knobs) in [
+        ("baseline knobs", SearchKnobs::default()),
+        (
+            "edge_batch",
+            SearchKnobs {
+                edge_batch: true,
+                batch_size: 32,
+                ..Default::default()
+            },
+        ),
+        (
+            "early_termination",
+            SearchKnobs {
+                early_termination: true,
+                patience: 4,
+                ..Default::default()
+            },
+        ),
+        ("crinn discovered", SearchKnobs::crinn_discovered()),
+    ] {
+        let mut qi = 0;
+        let s = time_adaptive(0.5, 200, || {
+            qi = (qi + 1) % ds.n_queries();
+            black_box(crinn::anns::hnsw::search::search(
+                &graph,
+                &knobs,
+                &mut ctx,
+                ds.query_vec(qi),
+                10,
+                64,
+            ));
+        });
+        report_row(label, &s);
+    }
+}

@@ -1,0 +1,56 @@
+//! Table 3: QPS at fixed recall levels — CRINN vs the best baseline.
+//!
+//! For each dataset and recall target ∈ {0.9, 0.95, 0.99, 0.999}:
+//! interpolate every system's QPS at the target from its sweep, report
+//! CRINN, the best baseline, and the improvement % — the paper's Table 3
+//! columns. Rows where no system reaches the target are dropped (the
+//! paper's "absent" convention). Output: stdout markdown +
+//! `reports/table3_fixed_recall.{md,csv}`.
+
+use crinn::eval::harness;
+use crinn::eval::{qps_at_recall, report};
+use std::fmt::Write as _;
+
+const TARGETS: [f64; 4] = [0.90, 0.95, 0.99, 0.999];
+
+fn main() {
+    let ef_grid = harness::bench_ef_grid();
+    let datasets = harness::bench_dataset_names();
+    let mut md = String::from(
+        "| Dataset | Recall | CRINN QPS | Best Baseline | Baseline QPS | Improvement |\n|---|---|---|---|---|---|\n",
+    );
+    let mut csv =
+        String::from("dataset,recall,crinn_qps,best_baseline,baseline_qps,improvement_pct\n");
+    for name in &datasets {
+        eprintln!("[table3] dataset {name}");
+        let ds = harness::bench_dataset(name, crinn::DEFAULT_K);
+        let sweeps: Vec<_> = harness::algorithms()
+            .into_iter()
+            .map(|(label, builder)| harness::run_algorithm(&ds, label, builder, &ef_grid))
+            .collect();
+        for &t in &TARGETS {
+            let crinn_q = sweeps
+                .iter()
+                .find(|s| s.index_name == "crinn")
+                .and_then(|s| qps_at_recall(&s.points, t));
+            let best_baseline = sweeps
+                .iter()
+                .filter(|s| s.index_name != "crinn")
+                .filter_map(|s| qps_at_recall(&s.points, t).map(|q| (q, s.index_name.clone())))
+                .max_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            if let (Some(cq), Some((bq, bname))) = (crinn_q, best_baseline) {
+                let imp = (cq / bq - 1.0) * 100.0;
+                let _ = writeln!(
+                    md,
+                    "| {name} | {t:.3} | {cq:.0} | {bname} | {bq:.0} | {imp:+.2}% |"
+                );
+                let _ = writeln!(csv, "{name},{t},{cq:.1},{bname},{bq:.1},{imp:.2}");
+            }
+        }
+    }
+    println!("\n## Table 3 — QPS at fixed recall (sandbox scale)\n\n{md}");
+    let dir = harness::reports_dir();
+    report::save(&dir.join("table3_fixed_recall.md"), &md).unwrap();
+    report::save(&dir.join("table3_fixed_recall.csv"), &csv).unwrap();
+    println!("wrote reports/table3_fixed_recall.{{md,csv}}");
+}

@@ -1,0 +1,77 @@
+//! Table 4: progressive per-module improvements (§5.3).
+//!
+//! For each dataset, evaluates the four cumulative stages
+//! (GLASS baseline → +graph-construction → +search → +refinement, the
+//! §3.5 optimization order) and reports the average QPS improvement over
+//! the recall targets {0.90, 0.95, 0.99, 0.999}, individual and
+//! cumulative — the paper's Table 4 columns.
+//! Output: stdout markdown + `reports/table4_progressive.{md,csv}`.
+
+use crinn::eval::harness;
+use crinn::eval::{qps_at_recall, report};
+use crinn::variants::VariantConfig;
+use std::fmt::Write as _;
+
+const TARGETS: [f64; 4] = [0.90, 0.95, 0.99, 0.999];
+
+fn main() {
+    let ef_grid = harness::bench_ef_grid();
+    let datasets = harness::bench_dataset_names();
+    let stages = VariantConfig::progressive_stages();
+    let mut md = String::from(
+        "| Dataset | +Construction (ind/cum) | +Search (ind/cum) | +Refinement (ind/cum) |\n|---|---|---|---|\n",
+    );
+    let mut csv = String::from("dataset,stage,individual_pct,cumulative_pct\n");
+    let mut overall: Vec<Vec<f64>> = vec![Vec::new(); 3];
+
+    for name in &datasets {
+        eprintln!("[table4] dataset {name}");
+        let ds = harness::bench_dataset(name, crinn::DEFAULT_K);
+        let mut stage_qps = Vec::new();
+        for (label, cfg) in &stages {
+            let idx = crinn::anns::glass::GlassIndex::build(
+                crinn::anns::VectorSet::from_dataset(&ds),
+                cfg.clone(),
+                42,
+            )
+            .with_label(label);
+            let sweep = crinn::eval::sweep_index(&idx, &ds, ds.gt_k, &ef_grid, 0.0);
+            let qs: Vec<f64> = TARGETS
+                .iter()
+                .filter_map(|&t| qps_at_recall(&sweep.points, t))
+                .collect();
+            let avg = if qs.is_empty() {
+                f64::NAN
+            } else {
+                qs.iter().sum::<f64>() / qs.len() as f64
+            };
+            eprintln!("  {label:<22} avg-QPS {avg:.0}");
+            stage_qps.push(avg);
+        }
+        let base = stage_qps[0];
+        let mut cells = Vec::new();
+        for s in 1..stages.len() {
+            let cum = (stage_qps[s] / base - 1.0) * 100.0;
+            let ind = (stage_qps[s] / stage_qps[s - 1] - 1.0) * 100.0;
+            cells.push(format!("{ind:+.2}% / {cum:+.2}%"));
+            let _ = writeln!(csv, "{name},{},{ind:.2},{cum:.2}", stages[s].0);
+            if ind.is_finite() {
+                overall[s - 1].push(ind);
+            }
+        }
+        let _ = writeln!(md, "| {name} | {} | {} | {} |", cells[0], cells[1], cells[2]);
+    }
+    let avg = |v: &Vec<f64>| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    let _ = writeln!(
+        md,
+        "| **average (individual)** | {:+.2}% | {:+.2}% | {:+.2}% |",
+        avg(&overall[0]),
+        avg(&overall[1]),
+        avg(&overall[2])
+    );
+    println!("\n## Table 4 — progressive per-module improvement (sandbox scale)\n\n{md}");
+    let dir = harness::reports_dir();
+    report::save(&dir.join("table4_progressive.md"), &md).unwrap();
+    report::save(&dir.join("table4_progressive.csv"), &csv).unwrap();
+    println!("wrote reports/table4_progressive.{{md,csv}}");
+}

@@ -1,0 +1,57 @@
+//! Exact brute-force baseline.
+//!
+//! Serves three roles: the exactness reference in Figure 1, the recall
+//! oracle in tests, and (via [`crate::runtime::Engine`]) a consumer of the
+//! AOT Pallas scan artifact — the integration tests cross-check the Rust
+//! scalar scan against the compiled kernel's results.
+
+use crate::anns::{AnnIndex, VectorSet};
+
+/// Brute-force index: just the vectors.
+pub struct BruteForceIndex {
+    pub vectors: VectorSet,
+}
+
+impl BruteForceIndex {
+    pub fn build(vectors: VectorSet) -> Self {
+        BruteForceIndex { vectors }
+    }
+}
+
+impl AnnIndex for BruteForceIndex {
+    fn name(&self) -> String {
+        "bruteforce".to_string()
+    }
+
+    fn search(&self, query: &[f32], k: usize, _ef: usize) -> Vec<u32> {
+        crate::dataset::gt::topk_for_query(
+            &self.vectors.data,
+            query,
+            self.vectors.dim,
+            self.vectors.metric,
+            k,
+        )
+    }
+
+    fn len(&self) -> usize {
+        self.vectors.len()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.vectors.data.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distance::Metric;
+
+    #[test]
+    fn exact_by_construction() {
+        let vs = VectorSet::new(vec![0.0, 1.0, 2.0, 10.0], 1, Metric::L2);
+        let idx = BruteForceIndex::build(vs);
+        assert_eq!(idx.search(&[1.4], 2, 0), vec![1, 2]);
+        assert_eq!(idx.len(), 4);
+    }
+}

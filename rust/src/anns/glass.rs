@@ -1,0 +1,389 @@
+//! GLASS-style index: HNSW graph + SQ8 quantized primary search + exact
+//! refinement — the paper's RL starting point (§3.5) and the index CRINN's
+//! three optimization modules act on.
+//!
+//! Search pipeline (§2.3 "Refinement"):
+//! 1. greedy upper-layer descent (full precision — the upper layers are
+//!    tiny and touched a handful of times);
+//! 2. layer-0 beam search over **int8 codes** (4–8x less memory traffic
+//!    than f32 — the quantized preliminary search);
+//! 3. exact re-rank of the top `rerank_count` survivors in full precision
+//!    (asymmetric refinement), honoring the §6.3 knobs: adaptive prefetch
+//!    with lookahead, and precomputed edge metadata during traversal.
+//!
+//! The batch rerank can also run through the AOT Pallas artifact
+//! (`runtime::Engine::rerank`) — used by the serving coordinator; the
+//! per-query path below stays in Rust.
+
+use crate::anns::heap::TopK;
+use crate::anns::hnsw::graph::HnswGraph;
+use crate::anns::hnsw::search::{greedy_descent, search, SearchContext};
+use crate::anns::hnsw::builder;
+use crate::anns::{AnnIndex, VectorSet};
+use crate::distance::prefetch;
+use crate::distance::quant::QuantizedStore;
+use crate::variants::VariantConfig;
+use std::sync::Mutex;
+
+/// GLASS index: graph + quantized codes + variant knobs.
+pub struct GlassIndex {
+    pub graph: HnswGraph,
+    pub quant: QuantizedStore,
+    pub config: VariantConfig,
+    label: String,
+    ctx_pool: Mutex<Vec<SearchContext>>,
+}
+
+impl GlassIndex {
+    /// Build from vectors under a full variant configuration.
+    pub fn build(vs: VectorSet, config: VariantConfig, seed: u64) -> Self {
+        let quant = QuantizedStore::build(&vs.data, vs.dim);
+        let graph = builder::build(vs, &config.construction, seed);
+        GlassIndex {
+            graph,
+            quant,
+            config,
+            label: "glass".to_string(),
+            ctx_pool: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn with_label(mut self, label: &str) -> Self {
+        self.label = label.to_string();
+        self
+    }
+
+    /// Reassemble from persisted parts (see [`crate::anns::persist`]).
+    pub fn from_parts(graph: HnswGraph, quant: QuantizedStore, config: VariantConfig) -> Self {
+        GlassIndex {
+            graph,
+            quant,
+            config,
+            label: "glass".to_string(),
+            ctx_pool: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Swap the search/refine knobs without rebuilding the graph — how the
+    /// CRINN trainer evaluates search- and refinement-module candidates
+    /// cheaply (§3.5: construction is only rebuilt in its own round).
+    pub fn set_runtime_knobs(&mut self, config: &VariantConfig) {
+        self.config.search = config.search.clone();
+        self.config.refine = config.refine.clone();
+    }
+
+    fn checkout_ctx(&self) -> SearchContext {
+        let mut ctx = self
+            .ctx_pool
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| SearchContext::new(self.graph.len()));
+        ctx.ensure(self.graph.len());
+        ctx
+    }
+
+    fn checkin_ctx(&self, ctx: SearchContext) {
+        self.ctx_pool.lock().unwrap().push(ctx);
+    }
+
+    /// Search returning `(exact_dist, id)` nearest-first.
+    pub fn search_with_dists(&self, query: &[f32], k: usize, ef: usize) -> Vec<(f32, u32)> {
+        if self.graph.is_empty() {
+            return Vec::new();
+        }
+        let refine = &self.config.refine;
+        if !refine.quantized_primary {
+            // Plain full-precision HNSW search (refinement disabled point
+            // in the action space).
+            let mut ctx = self.checkout_ctx();
+            let out = search(&self.graph, &self.config.search, &mut ctx, query, k, ef);
+            self.checkin_ctx(ctx);
+            return out;
+        }
+
+        let mut ctx = self.checkout_ctx();
+        let pool = self.quantized_beam(query, k, ef, &mut ctx);
+        let out = self.rerank(query, k, ef, pool);
+        self.checkin_ctx(ctx);
+        out
+    }
+
+    /// Layer-0 beam search over int8 codes (§2.3 quantized preliminary
+    /// search) with the search-module knobs.
+    fn quantized_beam(
+        &self,
+        query: &[f32],
+        k: usize,
+        ef: usize,
+        ctx: &mut SearchContext,
+    ) -> Vec<(f32, u32)> {
+        let g = &self.graph;
+        let knobs = &self.config.search;
+        let refine = &self.config.refine;
+        let ef = ef.max(k);
+        let qcode = self.quant.encode_query(query);
+        let metric = g.vectors.metric;
+
+        ctx.visited.clear();
+        ctx.frontier.clear();
+        let mut results = TopK::new(ef);
+
+        // Tier-1 entry from full-precision greedy descent.
+        let (_, e0) = greedy_descent(g, query);
+        let d0 = self.quant.distance(metric, &qcode, e0 as usize);
+        ctx.visited.insert(e0);
+        ctx.frontier.push(d0, e0);
+        results.push(d0, e0);
+        // Extra tiers (§6.2) from the diverse entry-point set.
+        let extra = match (knobs.entry_tiers, ef) {
+            (t, ef) if t >= 3 && ef >= knobs.tier_budget_2 => g.entry_points.len(),
+            (t, ef) if t >= 2 && ef >= knobs.tier_budget_1 => 3,
+            _ => 1,
+        };
+        for &ep in g.entry_points.iter().take(extra) {
+            if ctx.visited.insert(ep) {
+                let d = self.quant.distance(metric, &qcode, ep as usize);
+                ctx.frontier.push(d, ep);
+                results.push(d, ep);
+            }
+        }
+
+        let mut no_improve = 0usize;
+        let patience = knobs.patience.max(1) * 4;
+        while let Some((d, u)) = ctx.frontier.pop() {
+            if d > results.bound() {
+                break;
+            }
+            // §6.3 precomputed metadata vs sentinel scan.
+            let neighbors: &[u32] = if refine.precomputed_metadata {
+                g.neighbors0_meta(u)
+            } else {
+                g.neighbors0_scan(u)
+            };
+            let mut improved = false;
+            if knobs.edge_batch {
+                let bs = knobs.batch_size.max(1);
+                let mut idx = 0;
+                while idx < neighbors.len() {
+                    ctx.batch.clear();
+                    while idx < neighbors.len() && ctx.batch.len() < bs {
+                        let nb = neighbors[idx];
+                        idx += 1;
+                        if ctx.visited.insert(nb) {
+                            ctx.batch.push(nb);
+                        }
+                    }
+                    if refine.adaptive_prefetch {
+                        for &nb in ctx.batch.iter().take(knobs.prefetch_depth.max(1)) {
+                            prefetch_code(self.quant.code(nb as usize), knobs.prefetch_locality);
+                        }
+                    }
+                    for &nb in &ctx.batch {
+                        let dnb = self.quant.distance(metric, &qcode, nb as usize);
+                        if dnb < results.bound() {
+                            if results.push(dnb, nb) {
+                                improved = true;
+                            }
+                            ctx.frontier.push(dnb, nb);
+                        }
+                    }
+                }
+            } else {
+                for (j, &nb) in neighbors.iter().enumerate() {
+                    // §6.3 adaptive lookahead prefetch over future edges.
+                    if refine.adaptive_prefetch {
+                        let ahead = j + refine.lookahead.max(1);
+                        if ahead < neighbors.len() {
+                            prefetch_code(
+                                self.quant.code(neighbors[ahead] as usize),
+                                knobs.prefetch_locality,
+                            );
+                        }
+                    }
+                    if !ctx.visited.insert(nb) {
+                        continue;
+                    }
+                    let dnb = self.quant.distance(metric, &qcode, nb as usize);
+                    if dnb < results.bound() {
+                        if results.push(dnb, nb) {
+                            improved = true;
+                        }
+                        ctx.frontier.push(dnb, nb);
+                    }
+                }
+            }
+            if knobs.early_termination {
+                if improved {
+                    no_improve = 0;
+                } else {
+                    no_improve += 1;
+                    if no_improve >= patience && results.is_full() {
+                        break;
+                    }
+                }
+            }
+        }
+        results.into_sorted()
+    }
+
+    /// Exact re-rank of the quantized survivors (§6.3 knobs).
+    fn rerank(
+        &self,
+        query: &[f32],
+        k: usize,
+        ef: usize,
+        pool: Vec<(f32, u32)>,
+    ) -> Vec<(f32, u32)> {
+        let refine = &self.config.refine;
+        let take = refine.rerank_count(k, ef).min(pool.len());
+        let mut out: Vec<(f32, u32)> = Vec::with_capacity(take);
+        for (j, &(_, id)) in pool.iter().take(take).enumerate() {
+            if refine.adaptive_prefetch {
+                let ahead = j + refine.lookahead.max(1);
+                if ahead < take {
+                    prefetch(self.graph.vectors.vec(pool[ahead].1), 3);
+                }
+            }
+            out.push((self.graph.vectors.distance(query, id), id));
+        }
+        out.sort_by(crate::anns::heap::dist_cmp);
+        out.truncate(k);
+        out
+    }
+
+    /// The candidate pools for a batch of queries (pre-rerank) — feeds the
+    /// PJRT batch-rerank path in the serving coordinator.
+    pub fn candidates_for_rerank(&self, query: &[f32], k: usize, ef: usize) -> Vec<u32> {
+        let mut ctx = self.checkout_ctx();
+        let pool = self.quantized_beam(query, k, ef, &mut ctx);
+        self.checkin_ctx(ctx);
+        let take = self.config.refine.rerank_count(k, ef).min(pool.len());
+        pool.into_iter().take(take).map(|(_, i)| i).collect()
+    }
+}
+
+#[inline]
+fn prefetch_code(code: &[i8], locality: i32) {
+    // Reuse the f32 prefetch on the code bytes (cache lines are typeless).
+    let ptr = code.as_ptr() as *const f32;
+    let len = code.len() / 4;
+    // SAFETY: prefetch only reads the address; alignment is irrelevant for
+    // _mm_prefetch and the region is within the codes allocation.
+    let as_f32: &[f32] = unsafe { std::slice::from_raw_parts(ptr, len.max(1).min(code.len())) };
+    prefetch(as_f32, locality);
+}
+
+impl AnnIndex for GlassIndex {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn search(&self, query: &[f32], k: usize, ef: usize) -> Vec<u32> {
+        self.search_with_dists(query, k, ef)
+            .into_iter()
+            .map(|(_, i)| i)
+            .collect()
+    }
+
+    fn len(&self) -> usize {
+        self.graph.len()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.graph.memory_bytes() + self.quant.bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth;
+
+    fn dataset() -> crate::dataset::Dataset {
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 1500, 50, 21);
+        ds.compute_ground_truth(10);
+        ds
+    }
+
+    fn recall(idx: &GlassIndex, ds: &crate::dataset::Dataset, ef: usize) -> f64 {
+        let mut acc = 0.0;
+        for qi in 0..ds.n_queries() {
+            let found = idx.search(ds.query_vec(qi), 10, ef);
+            acc += crate::dataset::gt::recall_at_k(&found, &ds.gt[qi], 10);
+        }
+        acc / ds.n_queries() as f64
+    }
+
+    #[test]
+    fn glass_baseline_reaches_high_recall() {
+        let ds = dataset();
+        let idx = GlassIndex::build(
+            VectorSet::from_dataset(&ds),
+            VariantConfig::glass_baseline(),
+            3,
+        );
+        let r = recall(&idx, &ds, 128);
+        assert!(r > 0.85, "glass recall@10 ef=128: {r}");
+    }
+
+    #[test]
+    fn crinn_full_matches_or_beats_baseline_recall() {
+        let ds = dataset();
+        let base = GlassIndex::build(
+            VectorSet::from_dataset(&ds),
+            VariantConfig::glass_baseline(),
+            3,
+        );
+        let crinn = GlassIndex::build(VectorSet::from_dataset(&ds), VariantConfig::crinn_full(), 3);
+        let rb = recall(&base, &ds, 96);
+        let rc = recall(&crinn, &ds, 96);
+        assert!(rc > rb - 0.05, "baseline {rb} vs crinn {rc}");
+    }
+
+    #[test]
+    fn rerank_improves_over_raw_quantized_order() {
+        let ds = dataset();
+        let mut cfg = VariantConfig::glass_baseline();
+        cfg.refine.rerank_frac = 2.0; // deep rerank
+        let idx = GlassIndex::build(VectorSet::from_dataset(&ds), cfg, 3);
+        let deep = recall(&idx, &ds, 64);
+        let mut shallow_cfg = VariantConfig::glass_baseline();
+        shallow_cfg.refine.rerank_frac = 0.2;
+        let mut idx2 = GlassIndex::build(VectorSet::from_dataset(&ds), shallow_cfg, 3);
+        idx2.set_runtime_knobs(&idx2.config.clone());
+        let shallow = recall(&idx2, &ds, 64);
+        assert!(deep >= shallow, "deep {deep} shallow {shallow}");
+    }
+
+    #[test]
+    fn runtime_knob_swap_changes_behavior_without_rebuild() {
+        let ds = dataset();
+        let mut idx = GlassIndex::build(
+            VectorSet::from_dataset(&ds),
+            VariantConfig::glass_baseline(),
+            3,
+        );
+        let before = idx.search(ds.query_vec(0), 10, 64);
+        let mut cfg = idx.config.clone();
+        cfg.refine.quantized_primary = false;
+        idx.set_runtime_knobs(&cfg);
+        let after = idx.search(ds.query_vec(0), 10, 64);
+        // Same graph, different pipeline; both decent answers.
+        assert_eq!(before.len(), after.len());
+    }
+
+    #[test]
+    fn candidates_for_rerank_bounded() {
+        let ds = dataset();
+        let idx = GlassIndex::build(
+            VectorSet::from_dataset(&ds),
+            VariantConfig::glass_baseline(),
+            3,
+        );
+        let c = idx.candidates_for_rerank(ds.query_vec(0), 10, 64);
+        assert!(!c.is_empty());
+        assert!(c.len() <= 64);
+    }
+}

@@ -1,0 +1,269 @@
+//! Priority structures for beam search.
+//!
+//! Two complementary pieces:
+//! * [`MinQueue`] — the exploration frontier: pop the *closest* unexplored
+//!   candidate (binary min-heap on distance).
+//! * [`TopK`] — the bounded result pool of the `ef` best candidates seen:
+//!   a binary max-heap that evicts its worst element on overflow and
+//!   exposes the current worst distance as the pruning bound.
+//!
+//! Both order `(f32, u32)` by distance then id, so searches are fully
+//! deterministic (Table 1's "deterministic and reproducible" requirement).
+
+/// Distance-then-id ordering that treats NaN as +inf (defensive).
+#[inline]
+pub fn dist_cmp(a: &(f32, u32), b: &(f32, u32)) -> std::cmp::Ordering {
+    a.0.partial_cmp(&b.0)
+        .unwrap_or(std::cmp::Ordering::Equal)
+        .then(a.1.cmp(&b.1))
+}
+
+/// Binary min-heap on `(distance, id)`.
+#[derive(Clone, Debug, Default)]
+pub struct MinQueue {
+    items: Vec<(f32, u32)>,
+}
+
+impl MinQueue {
+    pub fn new() -> Self {
+        MinQueue { items: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        MinQueue {
+            items: Vec::with_capacity(n),
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.items.clear();
+    }
+
+    #[inline]
+    pub fn push(&mut self, dist: f32, id: u32) {
+        self.items.push((dist, id));
+        let mut i = self.items.len() - 1;
+        while i > 0 {
+            let p = (i - 1) / 2;
+            if dist_cmp(&self.items[i], &self.items[p]) == std::cmp::Ordering::Less {
+                self.items.swap(i, p);
+                i = p;
+            } else {
+                break;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn peek(&self) -> Option<(f32, u32)> {
+        self.items.first().copied()
+    }
+
+    #[inline]
+    pub fn pop(&mut self) -> Option<(f32, u32)> {
+        if self.items.is_empty() {
+            return None;
+        }
+        let top = self.items.swap_remove(0);
+        if !self.items.is_empty() {
+            self.sift_down(0);
+        }
+        Some(top)
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        let n = self.items.len();
+        loop {
+            let l = 2 * i + 1;
+            let r = 2 * i + 2;
+            let mut m = i;
+            if l < n && dist_cmp(&self.items[l], &self.items[m]) == std::cmp::Ordering::Less {
+                m = l;
+            }
+            if r < n && dist_cmp(&self.items[r], &self.items[m]) == std::cmp::Ordering::Less {
+                m = r;
+            }
+            if m == i {
+                break;
+            }
+            self.items.swap(i, m);
+            i = m;
+        }
+    }
+}
+
+/// Bounded max-heap keeping the `cap` smallest `(distance, id)` pairs.
+#[derive(Clone, Debug)]
+pub struct TopK {
+    cap: usize,
+    items: Vec<(f32, u32)>, // max-heap: items[0] is the WORST kept
+}
+
+impl TopK {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        TopK {
+            cap,
+            items: Vec::with_capacity(cap + 1),
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    #[inline]
+    pub fn is_full(&self) -> bool {
+        self.items.len() >= self.cap
+    }
+
+    /// Current worst kept distance, or +inf if not yet full.
+    #[inline]
+    pub fn bound(&self) -> f32 {
+        if self.is_full() {
+            self.items[0].0
+        } else {
+            f32::INFINITY
+        }
+    }
+
+    /// Offer a candidate; returns true if it entered the pool.
+    #[inline]
+    pub fn push(&mut self, dist: f32, id: u32) -> bool {
+        if self.is_full() {
+            if dist_cmp(&(dist, id), &self.items[0]) != std::cmp::Ordering::Less {
+                return false;
+            }
+            self.items[0] = (dist, id);
+            self.sift_down_max(0);
+            true
+        } else {
+            self.items.push((dist, id));
+            let mut i = self.items.len() - 1;
+            while i > 0 {
+                let p = (i - 1) / 2;
+                if dist_cmp(&self.items[p], &self.items[i]) == std::cmp::Ordering::Less {
+                    self.items.swap(i, p);
+                    i = p;
+                } else {
+                    break;
+                }
+            }
+            true
+        }
+    }
+
+    fn sift_down_max(&mut self, mut i: usize) {
+        let n = self.items.len();
+        loop {
+            let l = 2 * i + 1;
+            let r = 2 * i + 2;
+            let mut m = i;
+            if l < n && dist_cmp(&self.items[m], &self.items[l]) == std::cmp::Ordering::Less {
+                m = l;
+            }
+            if r < n && dist_cmp(&self.items[m], &self.items[r]) == std::cmp::Ordering::Less {
+                m = r;
+            }
+            if m == i {
+                break;
+            }
+            self.items.swap(i, m);
+            i = m;
+        }
+    }
+
+    /// Drain to a nearest-first sorted vector.
+    pub fn into_sorted(mut self) -> Vec<(f32, u32)> {
+        self.items.sort_by(dist_cmp);
+        self.items
+    }
+
+    /// Iterate over current (unsorted) contents.
+    pub fn iter(&self) -> impl Iterator<Item = &(f32, u32)> {
+        self.items.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn minqueue_pops_ascending() {
+        let mut q = MinQueue::new();
+        let mut rng = Rng::new(1);
+        let mut vals: Vec<f32> = (0..200).map(|_| rng.next_f32()).collect();
+        for (i, &v) in vals.iter().enumerate() {
+            q.push(v, i as u32);
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut out = Vec::new();
+        while let Some((d, _)) = q.pop() {
+            out.push(d);
+        }
+        assert_eq!(out, vals);
+    }
+
+    #[test]
+    fn topk_keeps_smallest() {
+        let mut t = TopK::new(5);
+        let mut rng = Rng::new(2);
+        let mut vals: Vec<f32> = (0..100).map(|_| rng.next_f32()).collect();
+        for (i, &v) in vals.iter().enumerate() {
+            t.push(v, i as u32);
+        }
+        vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let kept: Vec<f32> = t.into_sorted().iter().map(|x| x.0).collect();
+        assert_eq!(kept, &vals[..5]);
+    }
+
+    #[test]
+    fn topk_bound_tracks_worst() {
+        let mut t = TopK::new(2);
+        assert_eq!(t.bound(), f32::INFINITY);
+        t.push(3.0, 0);
+        assert_eq!(t.bound(), f32::INFINITY);
+        t.push(1.0, 1);
+        assert_eq!(t.bound(), 3.0);
+        assert!(t.push(2.0, 2)); // evicts 3.0
+        assert_eq!(t.bound(), 2.0);
+        assert!(!t.push(5.0, 3));
+    }
+
+    #[test]
+    fn deterministic_tie_break_by_id() {
+        let mut t = TopK::new(2);
+        t.push(1.0, 7);
+        t.push(1.0, 3);
+        t.push(1.0, 5); // same dist, id 5 < 7 => evicts 7
+        let ids: Vec<u32> = t.into_sorted().iter().map(|x| x.1).collect();
+        assert_eq!(ids, vec![3, 5]);
+    }
+
+    #[test]
+    fn minqueue_clear_and_reuse() {
+        let mut q = MinQueue::with_capacity(4);
+        q.push(1.0, 1);
+        q.clear();
+        assert!(q.is_empty());
+        q.push(2.0, 2);
+        assert_eq!(q.pop(), Some((2.0, 2)));
+    }
+}

@@ -1,0 +1,275 @@
+//! HNSW graph construction (§2.1) with the §6.1 knobs.
+//!
+//! Incremental insertion: each vector draws a level from the exponential
+//! distribution (`floor(-ln(U) * mL)`, `mL = 1/ln(M)` — the skip-list-like
+//! hierarchy the paper describes), greedy-descends from the current entry
+//! to its level, then beam-searches each layer down to 0 with the
+//! (possibly adaptive, §6.1) construction `ef`, linking to the
+//! heuristic-selected M (upper) / 2M (layer 0) neighbors and re-pruning
+//! overflowing adjacency lists.
+//!
+//! After insertion the §6.1 multi-entry-point architecture selects up to
+//! `num_entry_points` mutually-distant nodes for the search tiers.
+
+use crate::anns::heap::{dist_cmp, MinQueue};
+use crate::anns::hnsw::graph::HnswGraph;
+use crate::anns::hnsw::search::search_layer;
+use crate::anns::hnsw::select;
+use crate::anns::visited::VisitedSet;
+use crate::anns::VectorSet;
+use crate::util::rng::Rng;
+use crate::variants::ConstructionKnobs;
+
+/// Build an HNSW graph. Deterministic for a given `(vs, knobs, seed)`.
+pub fn build(vs: VectorSet, knobs: &ConstructionKnobs, seed: u64) -> HnswGraph {
+    let n = vs.len();
+    let mut graph = HnswGraph::new(vs, knobs.m.max(2));
+    if n == 0 {
+        return graph;
+    }
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    let ml = 1.0 / (graph.m as f64).ln();
+    let ef_c = knobs.effective_ef().max(8);
+
+    let mut visited = VisitedSet::new(n);
+    let mut frontier = MinQueue::with_capacity(ef_c * 2);
+
+    // Node 0 seeds the graph.
+    graph.entry = 0;
+    graph.levels[0] = sample_level(&mut rng, ml);
+    graph.max_level = graph.levels[0];
+
+    for i in 1..n as u32 {
+        let level = sample_level(&mut rng, ml);
+        graph.levels[i as usize] = level;
+        insert(&mut graph, knobs, i, level, ef_c, &mut visited, &mut frontier);
+        if level > graph.max_level {
+            graph.max_level = level;
+            graph.entry = i;
+        }
+    }
+
+    select_entry_points(&mut graph, knobs, &mut rng);
+    graph
+}
+
+fn sample_level(rng: &mut Rng, ml: f64) -> u8 {
+    let u = 1.0 - rng.next_f64(); // (0, 1]
+    ((-u.ln() * ml) as usize).min(31) as u8
+}
+
+fn insert(
+    graph: &mut HnswGraph,
+    knobs: &ConstructionKnobs,
+    i: u32,
+    level: u8,
+    ef_c: usize,
+    visited: &mut VisitedSet,
+    frontier: &mut MinQueue,
+) {
+    let q = graph.vectors.vec(i).to_vec();
+    // Greedy descent through layers above the node's level.
+    let mut cur = graph.entry;
+    let mut curd = graph.vectors.distance(&q, cur);
+    let top = graph.max_level;
+    for l in ((level + 1)..=top).rev() {
+        loop {
+            let mut improved = false;
+            for &nb in graph.neighbors_upper(l, cur) {
+                let d = graph.vectors.distance(&q, nb);
+                if dist_cmp(&(d, nb), &(curd, cur)) == std::cmp::Ordering::Less {
+                    cur = nb;
+                    curd = d;
+                    improved = true;
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+    }
+
+    // Connect at each layer from min(level, top) down to 0.
+    let mut entry = (curd, cur);
+    for l in (0..=level.min(top)).rev() {
+        let cands = search_layer(
+            graph,
+            &q,
+            entry,
+            ef_c,
+            l,
+            visited,
+            frontier,
+            knobs.prefetch_depth,
+            knobs.prefetch_locality,
+        );
+        let max_deg = if l == 0 { graph.m0 } else { graph.m };
+        let chosen = select::select_heuristic(&graph.vectors, &cands, max_deg.min(knobs.m), 1.0, true);
+
+        if l == 0 {
+            graph.set_neighbors0(i, &chosen);
+        } else {
+            graph.set_neighbors_upper(l, i, chosen.clone());
+        }
+        // Bidirectional links with overflow re-pruning.
+        for &nb in &chosen {
+            add_link(graph, l, nb, i);
+        }
+        if let Some(&(d, c)) = cands.first() {
+            entry = (d, c);
+        }
+    }
+}
+
+/// Add edge `from -> to` at layer `l`, re-pruning on overflow.
+fn add_link(graph: &mut HnswGraph, l: u8, from: u32, to: u32) {
+    if from == to {
+        return;
+    }
+    if l == 0 {
+        if !graph.push_neighbor0(from, to) {
+            let current: Vec<u32> = graph.neighbors0_meta(from).to_vec();
+            let pruned = select::reprune(&graph.vectors, from, &current, to, graph.m0, 1.0);
+            graph.set_neighbors0(from, &pruned);
+        }
+    } else {
+        let mut current = graph.neighbors_upper(l, from).to_vec();
+        if current.contains(&to) {
+            return;
+        }
+        if current.len() < graph.m {
+            current.push(to);
+            graph.set_neighbors_upper(l, from, current);
+        } else {
+            let pruned = select::reprune(&graph.vectors, from, &current, to, graph.m, 1.0);
+            graph.set_neighbors_upper(l, from, pruned);
+        }
+    }
+}
+
+/// §6.1 multi-entry-point selection: greedily pick nodes whose pairwise
+/// distance exceeds the `entry_diversity` quantile of sampled distances.
+fn select_entry_points(graph: &mut HnswGraph, knobs: &ConstructionKnobs, rng: &mut Rng) {
+    let n = graph.len();
+    graph.entry_points = vec![graph.entry];
+    let want = knobs.num_entry_points.clamp(1, 9);
+    if want == 1 || n < 4 {
+        return;
+    }
+    // Distance scale: sample random pairs.
+    let mut dists: Vec<f32> = (0..64.min(n * n))
+        .map(|_| {
+            let a = rng.next_below(n) as u32;
+            let b = rng.next_below(n) as u32;
+            graph.vectors.distance(graph.vectors.vec(a), b)
+        })
+        .collect();
+    dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let qi = ((dists.len() - 1) as f64 * knobs.entry_diversity.clamp(0.0, 0.99)) as usize;
+    let threshold = dists[qi];
+
+    // Candidates: prefer high-level nodes (cheap navigators), fall back to
+    // random samples.
+    let mut cands: Vec<u32> = (0..n as u32)
+        .filter(|&i| graph.levels[i as usize] >= 1)
+        .collect();
+    if cands.len() < want * 4 {
+        cands.extend(rng.sample_indices(n, (want * 8).min(n)).into_iter().map(|x| x as u32));
+    }
+    for &c in &cands {
+        if graph.entry_points.len() >= want {
+            break;
+        }
+        if graph.entry_points.contains(&c) {
+            continue;
+        }
+        let diverse = graph
+            .entry_points
+            .iter()
+            .all(|&ep| graph.vectors.distance(graph.vectors.vec(ep), c) > threshold);
+        if diverse {
+            graph.entry_points.push(c);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distance::Metric;
+
+    fn random_vs(n: usize, dim: usize, seed: u64) -> VectorSet {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..n * dim).map(|_| rng.next_gaussian_f32()).collect();
+        VectorSet::new(data, dim, Metric::L2)
+    }
+
+    #[test]
+    fn build_satisfies_invariants() {
+        let g = build(random_vs(800, 16, 1), &ConstructionKnobs::default(), 2);
+        g.validate().expect("invariants");
+        assert_eq!(g.len(), 800);
+    }
+
+    #[test]
+    fn build_deterministic() {
+        let k = ConstructionKnobs::default();
+        let a = build(random_vs(300, 8, 3), &k, 9);
+        let b = build(random_vs(300, 8, 3), &k, 9);
+        assert_eq!(a.layer0, b.layer0);
+        assert_eq!(a.levels, b.levels);
+        assert_eq!(a.entry, b.entry);
+        assert_eq!(a.entry_points, b.entry_points);
+    }
+
+    #[test]
+    fn layer0_connected_enough() {
+        // Every node must have at least one layer-0 neighbor (n > 1).
+        let g = build(random_vs(500, 12, 4), &ConstructionKnobs::default(), 5);
+        for i in 0..500u32 {
+            assert!(
+                !g.neighbors0_meta(i).is_empty(),
+                "node {i} disconnected at layer 0"
+            );
+        }
+    }
+
+    #[test]
+    fn level_distribution_decays() {
+        let g = build(random_vs(4000, 4, 6), &ConstructionKnobs::default(), 7);
+        let l0 = g.levels.iter().filter(|&&l| l == 0).count();
+        let l1 = g.levels.iter().filter(|&&l| l == 1).count();
+        let l2p = g.levels.iter().filter(|&&l| l >= 2).count();
+        assert!(l0 > l1 && l1 > l2p, "l0={l0} l1={l1} l2+={l2p}");
+        // Geometric-ish: level-1 fraction near 1/M ± slack.
+        let frac = l1 as f64 / 4000.0;
+        assert!(frac > 0.01 && frac < 0.2, "level-1 fraction {frac}");
+    }
+
+    #[test]
+    fn multi_entry_points_selected_and_diverse() {
+        let mut knobs = ConstructionKnobs::default();
+        knobs.num_entry_points = 5;
+        knobs.entry_diversity = 0.3;
+        let g = build(random_vs(600, 8, 8), &knobs, 9);
+        assert!(g.entry_points.len() > 1, "got {:?}", g.entry_points.len());
+        assert!(g.entry_points.len() <= 5);
+        assert_eq!(g.entry_points[0], g.entry);
+        let set: std::collections::HashSet<_> = g.entry_points.iter().collect();
+        assert_eq!(set.len(), g.entry_points.len());
+    }
+
+    #[test]
+    fn adaptive_ef_builds_valid_graph() {
+        let knobs = ConstructionKnobs::crinn_discovered();
+        let g = build(random_vs(400, 8, 10), &knobs, 11);
+        g.validate().expect("invariants with crinn knobs");
+    }
+
+    #[test]
+    fn single_point_graph() {
+        let g = build(random_vs(1, 4, 12), &ConstructionKnobs::default(), 13);
+        assert_eq!(g.len(), 1);
+        g.validate().unwrap();
+    }
+}

@@ -1,0 +1,256 @@
+//! HNSW graph storage.
+//!
+//! Layer 0 is a flat `[n * m0]` u32 array (CSR with fixed stride) — the
+//! search hot path walks it with sequential loads and optional prefetch.
+//! Upper layers are sparse (`HashMap` per level): only ~n/2^l nodes exist
+//! there and they're touched a handful of times per query.
+//!
+//! `degree0` stores the §6.3 "pre-computed edge metadata": per-node edge
+//! counts maintained at build time so searches avoid scanning for the
+//! `NONE` sentinel when the refinement knob enables it.
+
+use crate::anns::VectorSet;
+use std::collections::HashMap;
+
+/// Adjacency slot sentinel.
+pub const NONE: u32 = u32::MAX;
+
+/// Multi-layer navigable small-world graph.
+pub struct HnswGraph {
+    pub vectors: VectorSet,
+    /// Upper-layer max degree.
+    pub m: usize,
+    /// Layer-0 max degree (`2 * m`, §2.1).
+    pub m0: usize,
+    /// Level of each node (0 = base layer only).
+    pub levels: Vec<u8>,
+    /// Flat layer-0 adjacency `[n * m0]`, `NONE`-padded.
+    pub layer0: Vec<u32>,
+    /// Pre-computed layer-0 degrees (§6.3 metadata).
+    pub degree0: Vec<u16>,
+    /// Upper layers: `upper[l-1][node]` = neighbor list at level `l`.
+    pub upper: Vec<HashMap<u32, Vec<u32>>>,
+    /// Global entry point (highest-level node).
+    pub entry: u32,
+    pub max_level: u8,
+    /// Diverse entry points (§6.1 multi-entry architecture). `entry` first,
+    /// then by decreasing diversity; tiers for §6.2 slice this list.
+    pub entry_points: Vec<u32>,
+}
+
+impl HnswGraph {
+    pub fn new(vectors: VectorSet, m: usize) -> Self {
+        let n = vectors.len();
+        HnswGraph {
+            vectors,
+            m,
+            m0: m * 2,
+            levels: vec![0; n],
+            layer0: vec![NONE; n * m * 2],
+            degree0: vec![0; n],
+            upper: Vec::new(),
+            entry: 0,
+            max_level: 0,
+            entry_points: vec![0],
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.vectors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dim(&self) -> usize {
+        self.vectors.dim
+    }
+
+    /// Full layer-0 adjacency slots of `i` (may contain NONE padding).
+    #[inline]
+    pub fn neighbors0_slots(&self, i: u32) -> &[u32] {
+        let i = i as usize;
+        &self.layer0[i * self.m0..(i + 1) * self.m0]
+    }
+
+    /// Layer-0 neighbors using the precomputed degree (no sentinel scan).
+    #[inline]
+    pub fn neighbors0_meta(&self, i: u32) -> &[u32] {
+        let d = self.degree0[i as usize] as usize;
+        &self.layer0[i as usize * self.m0..i as usize * self.m0 + d]
+    }
+
+    /// Layer-0 neighbors by scanning for the sentinel (baseline path).
+    #[inline]
+    pub fn neighbors0_scan(&self, i: u32) -> &[u32] {
+        let slots = self.neighbors0_slots(i);
+        let mut d = 0;
+        while d < slots.len() && slots[d] != NONE {
+            d += 1;
+        }
+        &slots[..d]
+    }
+
+    /// Overwrite the layer-0 neighbor list of `i`.
+    pub fn set_neighbors0(&mut self, i: u32, neighbors: &[u32]) {
+        debug_assert!(neighbors.len() <= self.m0);
+        let start = i as usize * self.m0;
+        for (s, &nb) in self.layer0[start..start + self.m0]
+            .iter_mut()
+            .zip(neighbors.iter().chain(std::iter::repeat(&NONE)))
+        {
+            *s = nb;
+        }
+        self.degree0[i as usize] = neighbors.len() as u16;
+    }
+
+    /// Append one layer-0 edge if a slot is free; returns false when full.
+    pub fn push_neighbor0(&mut self, i: u32, nb: u32) -> bool {
+        let d = self.degree0[i as usize] as usize;
+        if d >= self.m0 {
+            return false;
+        }
+        self.layer0[i as usize * self.m0 + d] = nb;
+        self.degree0[i as usize] = (d + 1) as u16;
+        true
+    }
+
+    /// Neighbors of `i` at `level` (>= 1).
+    pub fn neighbors_upper(&self, level: u8, i: u32) -> &[u32] {
+        self.upper
+            .get(level as usize - 1)
+            .and_then(|m| m.get(&i))
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+
+    /// Set neighbors of `i` at `level` (>= 1), growing layers as needed.
+    pub fn set_neighbors_upper(&mut self, level: u8, i: u32, neighbors: Vec<u32>) {
+        let li = level as usize - 1;
+        while self.upper.len() <= li {
+            self.upper.push(HashMap::new());
+        }
+        self.upper[li].insert(i, neighbors);
+    }
+
+    /// Approximate resident memory.
+    pub fn memory_bytes(&self) -> usize {
+        let upper: usize = self
+            .upper
+            .iter()
+            .map(|m| m.values().map(|v| v.len() * 4 + 16).sum::<usize>())
+            .sum();
+        self.vectors.data.len() * 4 + self.layer0.len() * 4 + self.degree0.len() * 2 + upper
+    }
+
+    /// Graph invariants, checked by tests and the property harness:
+    /// degrees within bounds, no self-loops, ids valid, `degree0`
+    /// consistent with sentinel scan.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.len() as u32;
+        for i in 0..n {
+            let scan = self.neighbors0_scan(i);
+            let meta = self.neighbors0_meta(i);
+            if scan != meta {
+                return Err(format!("node {i}: degree metadata mismatch"));
+            }
+            if scan.len() > self.m0 {
+                return Err(format!("node {i}: layer0 degree {} > m0", scan.len()));
+            }
+            for &nb in scan {
+                if nb == i {
+                    return Err(format!("node {i}: self-loop at layer 0"));
+                }
+                if nb >= n {
+                    return Err(format!("node {i}: bad neighbor id {nb}"));
+                }
+            }
+        }
+        for (li, layer) in self.upper.iter().enumerate() {
+            for (&i, nbs) in layer {
+                if nbs.len() > self.m {
+                    return Err(format!("node {i}@L{}: degree {} > m", li + 1, nbs.len()));
+                }
+                if (self.levels[i as usize] as usize) < li + 1 {
+                    return Err(format!("node {i} present at L{} above its level", li + 1));
+                }
+                for &nb in nbs {
+                    if nb == i || nb >= n {
+                        return Err(format!("node {i}@L{}: bad neighbor {nb}", li + 1));
+                    }
+                }
+            }
+        }
+        if n > 0 {
+            if self.entry >= n {
+                return Err("entry out of range".into());
+            }
+            if self.levels[self.entry as usize] != self.max_level {
+                return Err("entry is not at max level".into());
+            }
+            for &ep in &self.entry_points {
+                if ep >= n {
+                    return Err(format!("entry point {ep} out of range"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distance::Metric;
+
+    fn empty_graph(n: usize) -> HnswGraph {
+        let data = vec![0f32; n * 4];
+        HnswGraph::new(VectorSet::new(data, 4, Metric::L2), 4)
+    }
+
+    #[test]
+    fn set_and_scan_neighbors() {
+        let mut g = empty_graph(10);
+        g.set_neighbors0(3, &[1, 2, 5]);
+        assert_eq!(g.neighbors0_scan(3), &[1, 2, 5]);
+        assert_eq!(g.neighbors0_meta(3), &[1, 2, 5]);
+        assert_eq!(g.neighbors0_slots(3).len(), 8);
+        g.set_neighbors0(3, &[7]);
+        assert_eq!(g.neighbors0_meta(3), &[7]);
+    }
+
+    #[test]
+    fn push_neighbor_respects_capacity() {
+        let mut g = empty_graph(10);
+        for nb in 0..8u32 {
+            assert!(g.push_neighbor0(0, nb + 1));
+        }
+        assert!(!g.push_neighbor0(0, 9));
+        assert_eq!(g.neighbors0_meta(0).len(), 8);
+    }
+
+    #[test]
+    fn upper_layers_grow_on_demand() {
+        let mut g = empty_graph(10);
+        g.set_neighbors_upper(3, 2, vec![1]);
+        assert_eq!(g.upper.len(), 3);
+        assert_eq!(g.neighbors_upper(3, 2), &[1]);
+        assert_eq!(g.neighbors_upper(2, 2), &[] as &[u32]);
+        assert_eq!(g.neighbors_upper(1, 9), &[] as &[u32]);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut g = empty_graph(5);
+        assert!(g.validate().is_ok());
+        // Self-loop.
+        g.set_neighbors0(2, &[2]);
+        assert!(g.validate().is_err());
+        g.set_neighbors0(2, &[]);
+        // Metadata mismatch.
+        g.layer0[0] = 1;
+        assert!(g.validate().is_err());
+    }
+}

@@ -1,0 +1,187 @@
+//! HNSW — the paper's §2 backbone.
+//!
+//! * [`graph`] — multi-layer graph storage (flat CSR-style layer 0, sparse
+//!   upper layers), entry-point sets, precomputed degree metadata.
+//! * [`builder`] — incremental insertion with exponential level sampling,
+//!   beam-searched neighbor candidates and diversity-heuristic pruning.
+//! * [`search`] — greedy upper-layer descent + layer-0 beam search, with
+//!   every §6 search-module knob (multi-tier entries, edge batching,
+//!   prefetch, early termination).
+//! * [`select`] — the neighbor-selection heuristic shared by build & prune.
+
+pub mod builder;
+pub mod graph;
+pub mod search;
+pub mod select;
+
+pub use graph::HnswGraph;
+
+use crate::anns::{AnnIndex, VectorSet};
+use crate::variants::{ConstructionKnobs, SearchKnobs};
+use std::sync::Mutex;
+
+/// A built HNSW index with an attached search configuration.
+///
+/// `search` reuses pooled [`search::SearchContext`]s (epoch visited set +
+/// heaps) — checkout/checkin through a mutex is ~2 lock ops per query,
+/// negligible against the beam search itself.
+pub struct HnswIndex {
+    pub graph: HnswGraph,
+    pub knobs: SearchKnobs,
+    label: String,
+    ctx_pool: Mutex<Vec<search::SearchContext>>,
+}
+
+impl HnswIndex {
+    /// Build from vectors with the given construction/search knobs.
+    pub fn build(
+        vs: VectorSet,
+        construction: &ConstructionKnobs,
+        search_knobs: SearchKnobs,
+        seed: u64,
+    ) -> Self {
+        let graph = builder::build(vs, construction, seed);
+        HnswIndex {
+            graph,
+            knobs: search_knobs,
+            label: "hnsw".to_string(),
+            ctx_pool: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn with_label(mut self, label: &str) -> Self {
+        self.label = label.to_string();
+        self
+    }
+
+    /// Run a search returning `(dist, id)` pairs (used by GLASS rerank).
+    pub fn search_with_dists(&self, query: &[f32], k: usize, ef: usize) -> Vec<(f32, u32)> {
+        let mut ctx = self
+            .ctx_pool
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| search::SearchContext::new(self.graph.len()));
+        ctx.ensure(self.graph.len());
+        let out = search::search(&self.graph, &self.knobs, &mut ctx, query, k, ef);
+        self.ctx_pool.lock().unwrap().push(ctx);
+        out
+    }
+}
+
+impl AnnIndex for HnswIndex {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn search(&self, query: &[f32], k: usize, ef: usize) -> Vec<u32> {
+        self.search_with_dists(query, k, ef)
+            .into_iter()
+            .map(|(_, i)| i)
+            .collect()
+    }
+
+    fn len(&self) -> usize {
+        self.graph.len()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.graph.memory_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth;
+    use crate::distance::Metric;
+
+    fn small_dataset() -> crate::dataset::Dataset {
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 1500, 50, 3);
+        ds.compute_ground_truth(10);
+        ds
+    }
+
+    fn recall_of(index: &dyn AnnIndex, ds: &crate::dataset::Dataset, ef: usize) -> f64 {
+        let mut acc = 0.0;
+        for qi in 0..ds.n_queries() {
+            let found = index.search(ds.query_vec(qi), 10, ef);
+            acc += crate::dataset::gt::recall_at_k(&found, &ds.gt[qi], 10);
+        }
+        acc / ds.n_queries() as f64
+    }
+
+    #[test]
+    fn hnsw_reaches_high_recall() {
+        let ds = small_dataset();
+        let idx = HnswIndex::build(
+            VectorSet::from_dataset(&ds),
+            &ConstructionKnobs::default(),
+            SearchKnobs::default(),
+            7,
+        );
+        let r = recall_of(&idx, &ds, 128);
+        assert!(r > 0.9, "recall@10 ef=128 was {r}");
+    }
+
+    #[test]
+    fn recall_monotone_in_ef() {
+        let ds = small_dataset();
+        let idx = HnswIndex::build(
+            VectorSet::from_dataset(&ds),
+            &ConstructionKnobs::default(),
+            SearchKnobs::default(),
+            7,
+        );
+        let lo = recall_of(&idx, &ds, 10);
+        let hi = recall_of(&idx, &ds, 200);
+        assert!(hi >= lo, "lo={lo} hi={hi}");
+        assert!(hi > 0.95, "hi={hi}");
+    }
+
+    #[test]
+    fn search_deterministic() {
+        let ds = small_dataset();
+        let idx = HnswIndex::build(
+            VectorSet::from_dataset(&ds),
+            &ConstructionKnobs::default(),
+            SearchKnobs::crinn_discovered(),
+            7,
+        );
+        for qi in 0..5 {
+            let a = idx.search(ds.query_vec(qi), 10, 64);
+            let b = idx.search(ds.query_vec(qi), 10, 64);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn crinn_knobs_do_not_break_recall() {
+        let ds = small_dataset();
+        let idx = HnswIndex::build(
+            VectorSet::from_dataset(&ds),
+            &ConstructionKnobs::crinn_discovered(),
+            SearchKnobs::crinn_discovered(),
+            7,
+        );
+        let r = recall_of(&idx, &ds, 128);
+        assert!(r > 0.9, "crinn-knob recall@10 was {r}");
+    }
+
+    #[test]
+    fn angular_metric_works() {
+        let sp = synth::spec("glove-25-angular").unwrap();
+        let mut ds = synth::generate_counts(sp, 1200, 40, 5);
+        ds.compute_ground_truth(10);
+        assert_eq!(ds.metric, Metric::Angular);
+        let idx = HnswIndex::build(
+            VectorSet::from_dataset(&ds),
+            &ConstructionKnobs::default(),
+            SearchKnobs::default(),
+            7,
+        );
+        let r = recall_of(&idx, &ds, 128);
+        assert!(r > 0.85, "angular recall {r}");
+    }
+}

@@ -1,0 +1,326 @@
+//! HNSW search: greedy upper-layer descent + layer-0 beam search.
+//!
+//! Implements every §6.2 knob:
+//! * **multi-tier entry selection** — `entry_tiers` + budget thresholds
+//!   admit additional diverse entry points as `ef` grows;
+//! * **batch edge processing** — unvisited neighbors are gathered, their
+//!   vectors prefetched, then evaluated (turns dependent random loads into
+//!   a software pipeline);
+//! * **early termination** — convergence detection on consecutive
+//!   non-improving expansions;
+//! * **prefetch depth/locality** — `_mm_prefetch` hints while walking
+//!   adjacency.
+//!
+//! The same layer search (minus the search-module knobs) backs graph
+//! construction via [`search_layer`].
+
+use crate::anns::heap::{dist_cmp, MinQueue, TopK};
+use crate::anns::hnsw::graph::HnswGraph;
+use crate::anns::visited::VisitedSet;
+use crate::distance::prefetch;
+use crate::variants::SearchKnobs;
+
+/// Reusable per-thread search state.
+pub struct SearchContext {
+    pub visited: VisitedSet,
+    pub frontier: MinQueue,
+    /// Batch buffer for the edge-batching knob.
+    pub batch: Vec<u32>,
+}
+
+impl SearchContext {
+    pub fn new(n: usize) -> Self {
+        SearchContext {
+            visited: VisitedSet::new(n),
+            frontier: MinQueue::with_capacity(256),
+            batch: Vec::with_capacity(64),
+        }
+    }
+
+    pub fn ensure(&mut self, n: usize) {
+        self.visited.resize(n);
+    }
+}
+
+/// Greedy 1-NN descent through levels `max..=1`, returning the layer-0
+/// entry and its distance.
+pub fn greedy_descent(graph: &HnswGraph, q: &[f32]) -> (f32, u32) {
+    let mut cur = graph.entry;
+    let mut curd = graph.vectors.distance(q, cur);
+    for level in (1..=graph.max_level).rev() {
+        loop {
+            let mut improved = false;
+            for &nb in graph.neighbors_upper(level, cur) {
+                let d = graph.vectors.distance(q, nb);
+                if dist_cmp(&(d, nb), &(curd, cur)) == std::cmp::Ordering::Less {
+                    cur = nb;
+                    curd = d;
+                    improved = true;
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+    }
+    (curd, cur)
+}
+
+/// Full k-NN query with the §6.2 knobs. Returns `(dist, id)` nearest-first.
+pub fn search(
+    graph: &HnswGraph,
+    knobs: &SearchKnobs,
+    ctx: &mut SearchContext,
+    q: &[f32],
+    k: usize,
+    ef: usize,
+) -> Vec<(f32, u32)> {
+    if graph.is_empty() {
+        return Vec::new();
+    }
+    let ef = ef.max(k);
+    ctx.visited.clear();
+    ctx.frontier.clear();
+    let mut results = TopK::new(ef);
+
+    // --- Multi-tier entry selection (§6.2). Tier 1: the greedy-descended
+    // global entry. Tiers 2/3 admit extra diverse entry points when the
+    // search budget crosses the thresholds.
+    let (d0, e0) = greedy_descent(graph, q);
+    ctx.visited.insert(e0);
+    ctx.frontier.push(d0, e0);
+    results.push(d0, e0);
+    let extra = match (knobs.entry_tiers, ef) {
+        (t, ef) if t >= 3 && ef >= knobs.tier_budget_2 => graph.entry_points.len(),
+        (t, ef) if t >= 2 && ef >= knobs.tier_budget_1 => 3,
+        _ => 1,
+    };
+    for &ep in graph.entry_points.iter().take(extra) {
+        if ctx.visited.insert(ep) {
+            let d = graph.vectors.distance(q, ep);
+            ctx.frontier.push(d, ep);
+            results.push(d, ep);
+        }
+    }
+
+    // --- Layer-0 beam search.
+    let mut no_improve = 0usize;
+    let patience = knobs.patience.max(1) * 4; // expansions, not single edges
+    while let Some((d, u)) = ctx.frontier.pop() {
+        if d > results.bound() {
+            break;
+        }
+        let neighbors = graph.neighbors0_meta(u);
+        let mut improved = false;
+
+        if knobs.edge_batch {
+            // Gather unvisited neighbors in batches, prefetch, evaluate.
+            let bs = knobs.batch_size.max(1);
+            let mut idx = 0;
+            while idx < neighbors.len() {
+                ctx.batch.clear();
+                while idx < neighbors.len() && ctx.batch.len() < bs {
+                    let nb = neighbors[idx];
+                    idx += 1;
+                    if ctx.visited.insert(nb) {
+                        ctx.batch.push(nb);
+                    }
+                }
+                for &nb in ctx.batch.iter().take(knobs.prefetch_depth) {
+                    prefetch(graph.vectors.vec(nb), knobs.prefetch_locality);
+                }
+                for &nb in &ctx.batch {
+                    let dnb = graph.vectors.distance(q, nb);
+                    if dnb < results.bound() {
+                        if results.push(dnb, nb) {
+                            improved = true;
+                        }
+                        ctx.frontier.push(dnb, nb);
+                    }
+                }
+            }
+        } else {
+            // Baseline: sequential scan with bounded lookahead prefetch
+            // (the paper's "old" fixed window of 5).
+            for (j, &nb) in neighbors.iter().enumerate() {
+                if j + 1 < neighbors.len() && j < knobs.prefetch_depth {
+                    prefetch(graph.vectors.vec(neighbors[j + 1]), knobs.prefetch_locality);
+                }
+                if !ctx.visited.insert(nb) {
+                    continue;
+                }
+                let dnb = graph.vectors.distance(q, nb);
+                if dnb < results.bound() {
+                    if results.push(dnb, nb) {
+                        improved = true;
+                    }
+                    ctx.frontier.push(dnb, nb);
+                }
+            }
+        }
+
+        // --- Early termination with convergence detection (§6.2).
+        if knobs.early_termination {
+            if improved {
+                no_improve = 0;
+            } else {
+                no_improve += 1;
+                if no_improve >= patience && results.is_full() {
+                    break;
+                }
+            }
+        }
+    }
+
+    let mut out = results.into_sorted();
+    out.truncate(k);
+    out
+}
+
+/// Construction-time layer search: beam search at an arbitrary `level`
+/// from a single entry, returning up to `ef` candidates sorted ascending.
+/// Prefetch knobs come from the construction module.
+#[allow(clippy::too_many_arguments)]
+pub fn search_layer(
+    graph: &HnswGraph,
+    q: &[f32],
+    entry: (f32, u32),
+    ef: usize,
+    level: u8,
+    visited: &mut VisitedSet,
+    frontier: &mut MinQueue,
+    prefetch_depth: usize,
+    prefetch_locality: i32,
+) -> Vec<(f32, u32)> {
+    visited.clear();
+    frontier.clear();
+    let mut results = TopK::new(ef.max(1));
+    visited.insert(entry.1);
+    frontier.push(entry.0, entry.1);
+    results.push(entry.0, entry.1);
+
+    while let Some((d, u)) = frontier.pop() {
+        if d > results.bound() {
+            break;
+        }
+        let neighbors: &[u32] = if level == 0 {
+            graph.neighbors0_meta(u)
+        } else {
+            graph.neighbors_upper(level, u)
+        };
+        for (j, &nb) in neighbors.iter().enumerate() {
+            if j + 1 < neighbors.len() && j < prefetch_depth {
+                prefetch(graph.vectors.vec(neighbors[j + 1]), prefetch_locality);
+            }
+            if !visited.insert(nb) {
+                continue;
+            }
+            let dnb = graph.vectors.distance(q, nb);
+            if dnb < results.bound() {
+                results.push(dnb, nb);
+                frontier.push(dnb, nb);
+            }
+        }
+    }
+    results.into_sorted()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::anns::VectorSet;
+    use crate::distance::Metric;
+    use crate::variants::ConstructionKnobs;
+
+    fn grid_graph() -> HnswGraph {
+        // 100 points on a 10x10 grid, built with default knobs.
+        let mut data = Vec::new();
+        for i in 0..10 {
+            for j in 0..10 {
+                data.push(i as f32);
+                data.push(j as f32);
+            }
+        }
+        let vs = VectorSet::new(data, 2, Metric::L2);
+        crate::anns::hnsw::builder::build(vs, &ConstructionKnobs::default(), 1)
+    }
+
+    #[test]
+    fn finds_exact_nn_on_grid() {
+        let g = grid_graph();
+        let mut ctx = SearchContext::new(g.len());
+        let knobs = SearchKnobs::default();
+        for (qx, qy, want) in [(0.1, 0.1, 0u32), (9.2, 8.9, 99), (4.9, 5.1, 55)] {
+            let out = search(&g, &knobs, &mut ctx, &[qx, qy], 1, 32);
+            assert_eq!(out[0].1, want, "query ({qx},{qy})");
+        }
+    }
+
+    #[test]
+    fn knob_combinations_preserve_correctness() {
+        let g = grid_graph();
+        let mut ctx = SearchContext::new(g.len());
+        let q = [3.4, 6.6];
+        let base = search(&g, &SearchKnobs::default(), &mut ctx, &q, 5, 64);
+        for knobs in [
+            SearchKnobs {
+                edge_batch: true,
+                batch_size: 8,
+                ..SearchKnobs::default()
+            },
+            SearchKnobs {
+                entry_tiers: 3,
+                tier_budget_1: 16,
+                tier_budget_2: 32,
+                ..SearchKnobs::default()
+            },
+            SearchKnobs::crinn_discovered(),
+        ] {
+            let got = search(&g, &knobs, &mut ctx, &q, 5, 64);
+            let base_ids: Vec<u32> = base.iter().map(|x| x.1).collect();
+            let got_ids: Vec<u32> = got.iter().map(|x| x.1).collect();
+            assert_eq!(base_ids, got_ids, "knobs {knobs:?}");
+        }
+    }
+
+    #[test]
+    fn early_termination_still_finds_nn() {
+        let g = grid_graph();
+        let mut ctx = SearchContext::new(g.len());
+        let knobs = SearchKnobs {
+            early_termination: true,
+            patience: 1,
+            ..SearchKnobs::default()
+        };
+        let out = search(&g, &knobs, &mut ctx, &[7.1, 2.0], 1, 16);
+        assert_eq!(out[0].1, 72);
+    }
+
+    #[test]
+    fn results_sorted_and_distinct() {
+        let g = grid_graph();
+        let mut ctx = SearchContext::new(g.len());
+        let out = search(
+            &g,
+            &SearchKnobs::crinn_discovered(),
+            &mut ctx,
+            &[5.0, 5.0],
+            10,
+            64,
+        );
+        assert_eq!(out.len(), 10);
+        for w in out.windows(2) {
+            assert!(dist_cmp(&w[0], &w[1]) != std::cmp::Ordering::Greater);
+        }
+        let ids: std::collections::HashSet<u32> = out.iter().map(|x| x.1).collect();
+        assert_eq!(ids.len(), 10);
+    }
+
+    #[test]
+    fn empty_graph_returns_empty() {
+        let vs = VectorSet::new(vec![], 2, Metric::L2);
+        let g = HnswGraph::new(vs, 4);
+        let mut ctx = SearchContext::new(0);
+        assert!(search(&g, &SearchKnobs::default(), &mut ctx, &[0.0, 0.0], 3, 8).is_empty());
+    }
+}

@@ -1,0 +1,161 @@
+//! Neighbor selection heuristic (§2.1's "heuristic pruning strategy").
+//!
+//! Given candidates sorted nearest-first, keep a candidate only if it is
+//! closer to the query/base point than to every already-kept neighbor —
+//! this trades pure proximity for angular diversity, preserving the
+//! small-world property. Identical logic serves (a) choosing the M links
+//! of a new node and (b) re-pruning a node whose adjacency overflowed.
+
+use crate::anns::VectorSet;
+
+/// Select up to `m` diverse neighbors from `candidates` (sorted ascending
+/// by distance to the anchor). Returns kept ids, still nearest-first.
+///
+/// `alpha` > 1 relaxes the diversity test (Vamana's RobustPrune uses the
+/// same shape with alpha ≈ 1.2; HNSW uses 1.0).
+pub fn select_heuristic(
+    vs: &VectorSet,
+    candidates: &[(f32, u32)],
+    m: usize,
+    alpha: f32,
+    keep_pruned: bool,
+) -> Vec<u32> {
+    if candidates.len() <= m {
+        return candidates.iter().map(|&(_, i)| i).collect();
+    }
+    let mut kept: Vec<(f32, u32)> = Vec::with_capacity(m);
+    let mut pruned: Vec<(f32, u32)> = Vec::new();
+    for &(dist, cand) in candidates {
+        if kept.len() >= m {
+            break;
+        }
+        let cv = vs.vec(cand);
+        // Diverse iff closer to the anchor than (alpha-scaled) to any kept.
+        let diverse = kept
+            .iter()
+            .all(|&(_, k)| vs.metric.distance(cv, vs.vec(k)) * alpha > dist);
+        if diverse {
+            kept.push((dist, cand));
+        } else if keep_pruned {
+            pruned.push((dist, cand));
+        }
+    }
+    // Optionally backfill with the nearest pruned candidates (keepPruned
+    // connections from the HNSW paper — maintains connectivity).
+    if keep_pruned {
+        for &(_, c) in pruned.iter() {
+            if kept.len() >= m {
+                break;
+            }
+            kept.push((0.0, c));
+        }
+    }
+    kept.into_iter().map(|(_, i)| i).collect()
+}
+
+/// Re-prune an overflowing adjacency list of `node`: gather current
+/// neighbors + the new arrival, sort by distance to `node`, re-select.
+pub fn reprune(
+    vs: &VectorSet,
+    node: u32,
+    current: &[u32],
+    arrival: u32,
+    m: usize,
+    alpha: f32,
+) -> Vec<u32> {
+    let nv = vs.vec(node);
+    let mut cands: Vec<(f32, u32)> = current
+        .iter()
+        .chain(std::iter::once(&arrival))
+        .map(|&c| (vs.metric.distance(nv, vs.vec(c)), c))
+        .collect();
+    cands.sort_by(crate::anns::heap::dist_cmp);
+    cands.dedup_by_key(|x| x.1);
+    select_heuristic(vs, &cands, m, alpha, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distance::Metric;
+
+    /// Points on a line: diversity heuristic must not keep redundant
+    /// same-direction neighbors when a closer one exists.
+    #[test]
+    fn prefers_diverse_directions() {
+        // Anchor at origin; candidates: two clustered right, one left.
+        let data = vec![
+            0.0, 0.0, // 0 anchor
+            1.0, 0.0, // 1 right near
+            1.2, 0.0, // 2 right (redundant with 1)
+            -1.5, 0.0, // 3 left (diverse)
+        ];
+        let vs = VectorSet::new(data, 2, Metric::L2);
+        let anchor = vs.vec(0);
+        let mut cands: Vec<(f32, u32)> = [1u32, 2, 3]
+            .iter()
+            .map(|&i| (vs.metric.distance(anchor, vs.vec(i)), i))
+            .collect();
+        cands.sort_by(crate::anns::heap::dist_cmp);
+        let kept = select_heuristic(&vs, &cands, 2, 1.0, false);
+        assert_eq!(kept, vec![1, 3]); // skips 2: closer to 1 than to anchor
+    }
+
+    #[test]
+    fn small_candidate_sets_pass_through() {
+        let data = vec![0.0, 0.0, 1.0, 0.0];
+        let vs = VectorSet::new(data, 2, Metric::L2);
+        let kept = select_heuristic(&vs, &[(1.0, 1)], 4, 1.0, false);
+        assert_eq!(kept, vec![1]);
+    }
+
+    #[test]
+    fn keep_pruned_backfills() {
+        let data = vec![
+            0.0, 0.0, // anchor
+            1.0, 0.0, 1.1, 0.0, 1.2, 0.0, 1.3, 0.0, // cluster
+        ];
+        let vs = VectorSet::new(data, 2, Metric::L2);
+        let anchor = vs.vec(0);
+        let mut cands: Vec<(f32, u32)> = [1u32, 2, 3, 4]
+            .iter()
+            .map(|&i| (vs.metric.distance(anchor, vs.vec(i)), i))
+            .collect();
+        cands.sort_by(crate::anns::heap::dist_cmp);
+        // Heuristic path (candidates > m): only the cluster head survives
+        // without backfill; keep_pruned tops the list back up to m.
+        let no_fill = select_heuristic(&vs, &cands, 3, 1.0, false);
+        assert_eq!(no_fill, vec![1]);
+        let filled = select_heuristic(&vs, &cands, 3, 1.0, true);
+        assert_eq!(filled.len(), 3);
+    }
+
+    #[test]
+    fn reprune_bounds_degree_and_dedups() {
+        let data: Vec<f32> = (0..12).flat_map(|i| vec![i as f32, 0.0]).collect();
+        let vs = VectorSet::new(data, 2, Metric::L2);
+        let current: Vec<u32> = (1..8).collect();
+        let out = reprune(&vs, 0, &current, 1, 4, 1.0);
+        assert!(out.len() <= 4);
+        let set: std::collections::HashSet<_> = out.iter().collect();
+        assert_eq!(set.len(), out.len());
+    }
+
+    #[test]
+    fn alpha_relaxes_pruning() {
+        let data = vec![
+            0.0, 0.0, // anchor
+            1.0, 0.0, 1.3, 0.1, // near-redundant pair
+        ];
+        let vs = VectorSet::new(data, 2, Metric::L2);
+        let anchor = vs.vec(0);
+        let mut cands: Vec<(f32, u32)> = [1u32, 2]
+            .iter()
+            .map(|&i| (vs.metric.distance(anchor, vs.vec(i)), i))
+            .collect();
+        cands.sort_by(crate::anns::heap::dist_cmp);
+        let strict = select_heuristic(&vs, &cands, 2, 1.0, false);
+        let relaxed = select_heuristic(&vs, &cands, 2, 14.0, false);
+        assert!(relaxed.len() >= strict.len());
+    }
+}

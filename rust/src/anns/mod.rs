@@ -1,0 +1,95 @@
+//! ANNS index implementations.
+//!
+//! [`hnsw`] is the optimization backbone (§2 of the paper); [`glass`] wraps
+//! it with SQ8 quantized search + exact refinement — the RL starting point
+//! (§3.5). The rest are the Figure-1 baselines: [`bruteforce`] (exact),
+//! [`nndescent`] (NNDescent / PyNNDescent), [`vamana`] (ParlayANN-like),
+//! [`ivf`] (Vearch-like). All implement [`AnnIndex`] so the eval harness
+//! and serving coordinator treat them uniformly.
+
+pub mod bruteforce;
+pub mod glass;
+pub mod heap;
+pub mod hnsw;
+pub mod ivf;
+pub mod nndescent;
+pub mod persist;
+pub mod vamana;
+pub mod visited;
+
+/// A built, queryable index.
+pub trait AnnIndex: Send + Sync {
+    /// Implementation name (appears in reports / Figure 1 legends).
+    fn name(&self) -> String;
+
+    /// k-NN search. `ef` is the beam/candidate budget (the recall↔speed
+    /// knob swept by the benchmarks; brute force ignores it). Returns ids
+    /// nearest-first.
+    fn search(&self, query: &[f32], k: usize, ef: usize) -> Vec<u32>;
+
+    /// Number of indexed vectors.
+    fn len(&self) -> usize;
+
+    /// True if no vectors are indexed.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Approximate resident bytes (memory reporting in EXPERIMENTS.md).
+    fn memory_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// Owned view of base vectors shared by index implementations.
+#[derive(Clone, Debug)]
+pub struct VectorSet {
+    pub dim: usize,
+    pub metric: crate::distance::Metric,
+    pub data: Vec<f32>,
+}
+
+impl VectorSet {
+    pub fn new(data: Vec<f32>, dim: usize, metric: crate::distance::Metric) -> Self {
+        assert!(dim > 0 && data.len() % dim == 0);
+        VectorSet { dim, metric, data }
+    }
+
+    pub fn from_dataset(ds: &crate::dataset::Dataset) -> Self {
+        VectorSet::new(ds.base.clone(), ds.dim, ds.metric)
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    #[inline]
+    pub fn vec(&self, i: u32) -> &[f32] {
+        let i = i as usize;
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    #[inline]
+    pub fn distance(&self, q: &[f32], i: u32) -> f32 {
+        self.metric.distance(q, self.vec(i))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distance::Metric;
+
+    #[test]
+    fn vectorset_accessors() {
+        let vs = VectorSet::new(vec![0.0, 0.0, 3.0, 4.0], 2, Metric::L2);
+        assert_eq!(vs.len(), 2);
+        assert_eq!(vs.vec(1), &[3.0, 4.0]);
+        assert_eq!(vs.distance(&[0.0, 0.0], 1), 25.0);
+    }
+}

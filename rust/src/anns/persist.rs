@@ -1,0 +1,282 @@
+//! Index persistence: save/load built GLASS/HNSW indexes.
+//!
+//! A deployment builds once and serves many times — ann-benchmarks and
+//! every production store persist their graphs. Format: a little-endian
+//! binary container (`CRNN` magic + version) carrying the vector set, the
+//! layered graph, the quantized codes, and the variant configuration
+//! (encoded through the same action space the RL uses, which keeps the
+//! format stable as knobs evolve).
+
+use crate::anns::hnsw::graph::HnswGraph;
+use crate::anns::VectorSet;
+use crate::distance::quant::QuantizedStore;
+use crate::distance::Metric;
+use crate::variants::{decode_action, encode_action, Module, VariantConfig};
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"CRNN";
+const VERSION: u32 = 1;
+
+struct W<'a, T: Write>(&'a mut T);
+
+impl<'a, T: Write> W<'a, T> {
+    fn u32(&mut self, v: u32) -> Result<()> {
+        self.0.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+    fn u64(&mut self, v: u64) -> Result<()> {
+        self.0.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+    fn f64(&mut self, v: f64) -> Result<()> {
+        self.0.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+    fn f32s(&mut self, v: &[f32]) -> Result<()> {
+        self.u64(v.len() as u64)?;
+        for x in v {
+            self.0.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+    fn u32s(&mut self, v: &[u32]) -> Result<()> {
+        self.u64(v.len() as u64)?;
+        for x in v {
+            self.0.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+    fn u8s(&mut self, v: &[u8]) -> Result<()> {
+        self.u64(v.len() as u64)?;
+        self.0.write_all(v)?;
+        Ok(())
+    }
+}
+
+struct R<'a, T: Read>(&'a mut T);
+
+impl<'a, T: Read> R<'a, T> {
+    fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.0.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.0.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        let mut b = [0u8; 8];
+        self.0.read_exact(&mut b)?;
+        Ok(f64::from_le_bytes(b))
+    }
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u64()? as usize;
+        let mut raw = vec![0u8; n * 4];
+        self.0.read_exact(&mut raw)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+    fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.u64()? as usize;
+        let mut raw = vec![0u8; n * 4];
+        self.0.read_exact(&mut raw)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+    fn u8s(&mut self) -> Result<Vec<u8>> {
+        let n = self.u64()? as usize;
+        let mut v = vec![0u8; n];
+        self.0.read_exact(&mut v)?;
+        Ok(v)
+    }
+}
+
+/// Save a built GLASS index (graph + codes + config) to `path`.
+pub fn save_glass(idx: &crate::anns::glass::GlassIndex, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut bw = BufWriter::new(f);
+    let mut w = W(&mut bw);
+    w.0.write_all(MAGIC)?;
+    w.u32(VERSION)?;
+    // Vector set.
+    let g = &idx.graph;
+    w.u32(g.vectors.dim as u32)?;
+    w.u32(match g.vectors.metric {
+        Metric::L2 => 0,
+        Metric::Angular => 1,
+        Metric::Ip => 2,
+    })?;
+    w.f32s(&g.vectors.data)?;
+    // Graph.
+    w.u32(g.m as u32)?;
+    w.u32(g.entry)?;
+    w.u32(g.max_level as u32)?;
+    w.u8s(&g.levels)?;
+    w.u32s(&g.layer0)?;
+    w.u32s(&g.entry_points)?;
+    w.u32(g.upper.len() as u32)?;
+    for layer in &g.upper {
+        w.u64(layer.len() as u64)?;
+        // Deterministic output: sort by node id.
+        let mut keys: Vec<u32> = layer.keys().copied().collect();
+        keys.sort_unstable();
+        for k in keys {
+            w.u32(k)?;
+            w.u32s(&layer[&k])?;
+        }
+    }
+    // Config (via the stable action encoding).
+    for module in Module::ALL {
+        let a = encode_action(&idx.config, module);
+        w.u64(a.len() as u64)?;
+        for v in a {
+            w.f64(v)?;
+        }
+    }
+    bw.flush()?;
+    Ok(())
+}
+
+/// Load a GLASS index saved with [`save_glass`]. Codes and degree
+/// metadata are rebuilt from the payload (cheaper than storing them and
+/// immune to quantizer-version drift).
+pub fn load_glass(path: &Path) -> Result<crate::anns::glass::GlassIndex> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut br = BufReader::new(f);
+    let mut r = R(&mut br);
+    let mut magic = [0u8; 4];
+    r.0.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a CRINN index file");
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        bail!("unsupported index version {version}");
+    }
+    let dim = r.u32()? as usize;
+    let metric = match r.u32()? {
+        0 => Metric::L2,
+        1 => Metric::Angular,
+        2 => Metric::Ip,
+        m => bail!("bad metric tag {m}"),
+    };
+    let data = r.f32s()?;
+    let vs = VectorSet::new(data, dim, metric);
+
+    let m = r.u32()? as usize;
+    let entry = r.u32()?;
+    let max_level = r.u32()? as u8;
+    let levels = r.u8s()?;
+    let layer0 = r.u32s()?;
+    let entry_points = r.u32s()?;
+    let n_layers = r.u32()? as usize;
+
+    let quant = QuantizedStore::build(&vs.data, dim);
+    let mut graph = HnswGraph::new(vs, m);
+    anyhow::ensure!(graph.layer0.len() == layer0.len(), "layer0 size mismatch");
+    graph.layer0 = layer0;
+    graph.levels = levels;
+    graph.entry = entry;
+    graph.max_level = max_level;
+    graph.entry_points = entry_points;
+    // Rebuild degree metadata from the sentinel layout.
+    for i in 0..graph.len() as u32 {
+        graph.degree0[i as usize] = graph.neighbors0_scan(i).len() as u16;
+    }
+    for l in 0..n_layers {
+        let count = r.u64()? as usize;
+        for _ in 0..count {
+            let k = r.u32()?;
+            let nbs = r.u32s()?;
+            graph.set_neighbors_upper((l + 1) as u8, k, nbs);
+        }
+    }
+    // Config.
+    let mut config = VariantConfig::glass_baseline();
+    for module in Module::ALL {
+        let len = r.u64()? as usize;
+        let mut a = Vec::with_capacity(len);
+        for _ in 0..len {
+            a.push(r.f64()?);
+        }
+        config = decode_action(&config, module, &a);
+    }
+    graph
+        .validate()
+        .map_err(|e| anyhow::anyhow!("loaded graph invalid: {e}"))?;
+    Ok(crate::anns::glass::GlassIndex::from_parts(graph, quant, config))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::anns::glass::GlassIndex;
+    use crate::anns::AnnIndex;
+    use crate::dataset::synth;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("crinn_{}_{}", std::process::id(), name))
+    }
+
+    #[test]
+    fn glass_roundtrip_identical_results() {
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 800, 30, 77);
+        ds.compute_ground_truth(10);
+        let idx = GlassIndex::build(
+            crate::anns::VectorSet::from_dataset(&ds),
+            VariantConfig::crinn_full(),
+            7,
+        );
+        let path = tmp("roundtrip.idx");
+        save_glass(&idx, &path).unwrap();
+        let loaded = load_glass(&path).unwrap();
+        assert_eq!(loaded.len(), idx.len());
+        for qi in 0..ds.n_queries() {
+            let a = idx.search(ds.query_vec(qi), 10, 64);
+            let b = loaded.search(ds.query_vec(qi), 10, 64);
+            assert_eq!(a, b, "query {qi} diverged after reload");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_garbage_file() {
+        let path = tmp("garbage.idx");
+        std::fs::write(&path, b"not an index").unwrap();
+        assert!(load_glass(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn config_survives_roundtrip() {
+        let sp = synth::spec("demo-64").unwrap();
+        let ds = synth::generate_counts(sp, 300, 5, 78);
+        let idx = GlassIndex::build(
+            crate::anns::VectorSet::from_dataset(&ds),
+            VariantConfig::crinn_full(),
+            7,
+        );
+        let path = tmp("config.idx");
+        save_glass(&idx, &path).unwrap();
+        let loaded = load_glass(&path).unwrap();
+        assert_eq!(
+            loaded.config.search.early_termination,
+            idx.config.search.early_termination
+        );
+        assert_eq!(loaded.config.construction.m, idx.config.construction.m);
+        assert_eq!(
+            loaded.config.refine.precomputed_metadata,
+            idx.config.refine.precomputed_metadata
+        );
+        std::fs::remove_file(&path).ok();
+    }
+}

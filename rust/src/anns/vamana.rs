@@ -1,0 +1,326 @@
+//! Vamana baseline (DiskANN's graph; ParlayANN's flagship implementation).
+//!
+//! Construction: two passes over a random insertion order; each node beam-
+//! searches from the medoid, then RobustPrune(α) selects its out-edges;
+//! reverse edges are added with the same pruning rule. α > 1 keeps longer
+//! "highway" edges that cut hop counts — the property that makes
+//! Vamana/ParlayANN fast at high recall.
+//!
+//! Search: single-layer beam from the medoid (no hierarchy).
+
+use crate::anns::heap::{dist_cmp, MinQueue, TopK};
+use crate::anns::visited::VisitedSet;
+use crate::anns::{AnnIndex, VectorSet};
+use crate::util::rng::Rng;
+use std::sync::Mutex;
+
+/// Build parameters (ParlayANN-ish defaults).
+#[derive(Clone, Debug)]
+pub struct VamanaParams {
+    /// Graph degree bound R.
+    pub degree: usize,
+    /// Construction beam width L.
+    pub build_beam: usize,
+    /// RobustPrune slack α.
+    pub alpha: f32,
+    /// Number of passes.
+    pub passes: usize,
+}
+
+impl Default for VamanaParams {
+    fn default() -> Self {
+        VamanaParams {
+            degree: 32,
+            build_beam: 128,
+            alpha: 1.2,
+            passes: 2,
+        }
+    }
+}
+
+/// Built Vamana index.
+pub struct VamanaIndex {
+    pub vectors: VectorSet,
+    /// Flat `[n * degree]` adjacency, `u32::MAX` padded.
+    graph: Vec<u32>,
+    /// Cached out-degrees (computed once at build; §Perf: recomputing per
+    /// query cost ~35% of query time at n=8k).
+    degrees: Vec<u16>,
+    degree: usize,
+    medoid: u32,
+    ctx_pool: Mutex<Vec<(VisitedSet, MinQueue)>>,
+}
+
+const NONE: u32 = u32::MAX;
+
+impl VamanaIndex {
+    pub fn build(vectors: VectorSet, params: VamanaParams, seed: u64) -> Self {
+        let n = vectors.len();
+        let r = params.degree.max(4);
+        let mut graph = vec![NONE; n * r];
+        let mut degrees = vec![0u16; n];
+        if n == 0 {
+            return VamanaIndex {
+                vectors,
+                graph,
+                degrees: Vec::new(),
+                degree: r,
+                medoid: 0,
+                ctx_pool: Mutex::new(Vec::new()),
+            };
+        }
+        let mut rng = Rng::new(seed ^ 0xABBA);
+
+        // Medoid approximation: the sampled point nearest the sample mean.
+        let medoid = approx_medoid(&vectors, &mut rng);
+
+        // Random initial graph.
+        for i in 0..n {
+            let mut got = 0;
+            while got < r.min(n - 1).min(8) {
+                let c = rng.next_below(n) as u32;
+                if c as usize != i
+                    && !graph[i * r..i * r + got].contains(&c)
+                {
+                    graph[i * r + got] = c;
+                    got += 1;
+                }
+            }
+            degrees[i] = got as u16;
+        }
+
+        let mut visited = VisitedSet::new(n);
+        let mut frontier = MinQueue::with_capacity(params.build_beam * 2);
+        let mut order: Vec<u32> = (0..n as u32).collect();
+
+        for _pass in 0..params.passes {
+            rng.shuffle(&mut order);
+            for &i in &order {
+                // Beam search for the candidate pool.
+                let pool = beam_from(
+                    &vectors,
+                    &graph,
+                    &degrees,
+                    r,
+                    medoid,
+                    vectors.vec(i),
+                    params.build_beam,
+                    &mut visited,
+                    &mut frontier,
+                );
+                let cands: Vec<(f32, u32)> =
+                    pool.into_iter().filter(|&(_, c)| c != i).collect();
+                let chosen = crate::anns::hnsw::select::select_heuristic(
+                    &vectors,
+                    &cands,
+                    r,
+                    params.alpha,
+                    true,
+                );
+                set_neighbors(&mut graph, &mut degrees, r, i, &chosen);
+                // Reverse edges with pruning on overflow.
+                for &nb in &chosen {
+                    add_reverse(&vectors, &mut graph, &mut degrees, r, nb, i, params.alpha);
+                }
+            }
+        }
+
+        VamanaIndex {
+            degrees: degrees.clone(),
+            vectors,
+            graph,
+            degree: r,
+            medoid,
+            ctx_pool: Mutex::new(Vec::new()),
+        }
+    }
+
+    #[inline]
+    /// Out-neighbors of node `i` (public for inspection/tests).
+    pub fn neighbors(&self, i: u32) -> &[u32] {
+        let s = &self.graph[i as usize * self.degree..(i as usize + 1) * self.degree];
+        let mut d = 0;
+        while d < s.len() && s[d] != NONE {
+            d += 1;
+        }
+        &s[..d]
+    }
+}
+
+fn approx_medoid(vs: &VectorSet, rng: &mut Rng) -> u32 {
+    let n = vs.len();
+    let sample = rng.sample_indices(n, n.min(256));
+    let dim = vs.dim;
+    let mut mean = vec![0f32; dim];
+    for &i in &sample {
+        for (m, v) in mean.iter_mut().zip(vs.vec(i as u32)) {
+            *m += v;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= sample.len() as f32;
+    }
+    sample
+        .iter()
+        .map(|&i| (vs.metric.distance(&mean, vs.vec(i as u32)), i as u32))
+        .min_by(|a, b| dist_cmp(a, b))
+        .map(|(_, i)| i)
+        .unwrap_or(0)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn beam_from(
+    vs: &VectorSet,
+    graph: &[u32],
+    degrees: &[u16],
+    r: usize,
+    entry: u32,
+    q: &[f32],
+    beam: usize,
+    visited: &mut VisitedSet,
+    frontier: &mut MinQueue,
+) -> Vec<(f32, u32)> {
+    visited.clear();
+    frontier.clear();
+    let mut results = TopK::new(beam.max(1));
+    let d0 = vs.distance(q, entry);
+    visited.insert(entry);
+    frontier.push(d0, entry);
+    results.push(d0, entry);
+    while let Some((d, u)) = frontier.pop() {
+        if d > results.bound() {
+            break;
+        }
+        let deg = degrees[u as usize] as usize;
+        for &nb in &graph[u as usize * r..u as usize * r + deg] {
+            if !visited.insert(nb) {
+                continue;
+            }
+            let dnb = vs.distance(q, nb);
+            if dnb < results.bound() {
+                results.push(dnb, nb);
+                frontier.push(dnb, nb);
+            }
+        }
+    }
+    results.into_sorted()
+}
+
+fn set_neighbors(graph: &mut [u32], degrees: &mut [u16], r: usize, i: u32, chosen: &[u32]) {
+    let i = i as usize;
+    for (slot, nb) in graph[i * r..(i + 1) * r]
+        .iter_mut()
+        .zip(chosen.iter().chain(std::iter::repeat(&NONE)))
+    {
+        *slot = *nb;
+    }
+    degrees[i] = chosen.len().min(r) as u16;
+}
+
+fn add_reverse(
+    vs: &VectorSet,
+    graph: &mut [u32],
+    degrees: &mut [u16],
+    r: usize,
+    from: u32,
+    to: u32,
+    alpha: f32,
+) {
+    let fi = from as usize;
+    let deg = degrees[fi] as usize;
+    if graph[fi * r..fi * r + deg].contains(&to) {
+        return;
+    }
+    if deg < r {
+        graph[fi * r + deg] = to;
+        degrees[fi] = (deg + 1) as u16;
+    } else {
+        let current: Vec<u32> = graph[fi * r..fi * r + deg].to_vec();
+        let pruned = crate::anns::hnsw::select::reprune(vs, from, &current, to, r, alpha);
+        set_neighbors(graph, degrees, r, from, &pruned);
+    }
+}
+
+impl AnnIndex for VamanaIndex {
+    fn name(&self) -> String {
+        "parlayann".to_string()
+    }
+
+    fn search(&self, query: &[f32], k: usize, ef: usize) -> Vec<u32> {
+        let n = self.vectors.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let beam = ef.max(k);
+        let (mut visited, mut frontier) = self
+            .ctx_pool
+            .lock()
+            .unwrap()
+            .pop()
+            .unwrap_or_else(|| (VisitedSet::new(n), MinQueue::new()));
+        visited.resize(n);
+        let out = beam_from(
+            &self.vectors,
+            &self.graph,
+            &self.degrees,
+            self.degree,
+            self.medoid,
+            query,
+            beam,
+            &mut visited,
+            &mut frontier,
+        );
+        self.ctx_pool.lock().unwrap().push((visited, frontier));
+        out.into_iter().take(k).map(|(_, i)| i).collect()
+    }
+
+    fn len(&self) -> usize {
+        self.vectors.len()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.vectors.data.len() * 4 + self.graph.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth;
+
+    #[test]
+    fn vamana_reaches_good_recall() {
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 1000, 40, 41);
+        ds.compute_ground_truth(10);
+        let idx = VamanaIndex::build(VectorSet::from_dataset(&ds), VamanaParams::default(), 1);
+        let mut acc = 0.0;
+        for qi in 0..ds.n_queries() {
+            let found = idx.search(ds.query_vec(qi), 10, 128);
+            acc += crate::dataset::gt::recall_at_k(&found, &ds.gt[qi], 10);
+        }
+        let recall = acc / ds.n_queries() as f64;
+        assert!(recall > 0.85, "vamana recall {recall}");
+    }
+
+    #[test]
+    fn degrees_bounded() {
+        let sp = synth::spec("demo-64").unwrap();
+        let ds = synth::generate_counts(sp, 500, 10, 42);
+        let idx = VamanaIndex::build(VectorSet::from_dataset(&ds), VamanaParams::default(), 2);
+        for i in 0..500u32 {
+            assert!(idx.neighbors(i).len() <= idx.degree);
+            assert!(!idx.neighbors(i).contains(&i), "self loop at {i}");
+        }
+    }
+
+    #[test]
+    fn deterministic_build() {
+        let sp = synth::spec("demo-64").unwrap();
+        let ds = synth::generate_counts(sp, 300, 10, 43);
+        let a = VamanaIndex::build(VectorSet::from_dataset(&ds), VamanaParams::default(), 7);
+        let b = VamanaIndex::build(VectorSet::from_dataset(&ds), VamanaParams::default(), 7);
+        assert_eq!(a.graph, b.graph);
+        assert_eq!(a.medoid, b.medoid);
+    }
+}

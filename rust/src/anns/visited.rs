@@ -1,0 +1,97 @@
+//! Epoch-stamped visited set.
+//!
+//! The classic ANNS trick: instead of clearing a bitset per query (O(n)) or
+//! hashing (cache-hostile), keep a `u32` stamp per node and bump the epoch
+//! each query. This sits on the innermost search loop — one of the §Perf
+//! targets (vs. `HashSet`, measured in `benches/micro_graph`).
+
+/// Visited-set with O(1) reset.
+#[derive(Clone, Debug)]
+pub struct VisitedSet {
+    stamps: Vec<u32>,
+    epoch: u32,
+}
+
+impl VisitedSet {
+    pub fn new(n: usize) -> Self {
+        VisitedSet {
+            stamps: vec![0; n],
+            epoch: 0,
+        }
+    }
+
+    /// Start a new query. O(1) except on epoch wraparound (every 2^32).
+    #[inline]
+    pub fn clear(&mut self) {
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            self.stamps.fill(0);
+            self.epoch = 1;
+        }
+    }
+
+    /// Mark `i`; returns true if it was not yet visited this epoch.
+    #[inline]
+    pub fn insert(&mut self, i: u32) -> bool {
+        let s = &mut self.stamps[i as usize];
+        if *s == self.epoch {
+            false
+        } else {
+            *s = self.epoch;
+            true
+        }
+    }
+
+    /// Check without marking.
+    #[inline]
+    pub fn contains(&self, i: u32) -> bool {
+        self.stamps[i as usize] == self.epoch
+    }
+
+    /// Grow to accommodate `n` nodes (incremental insertion).
+    pub fn resize(&mut self, n: usize) {
+        if n > self.stamps.len() {
+            self.stamps.resize(n, 0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_and_reset() {
+        let mut v = VisitedSet::new(8);
+        v.clear();
+        assert!(v.insert(3));
+        assert!(!v.insert(3));
+        assert!(v.contains(3));
+        assert!(!v.contains(4));
+        v.clear();
+        assert!(!v.contains(3));
+        assert!(v.insert(3));
+    }
+
+    #[test]
+    fn epoch_wraparound_is_correct() {
+        let mut v = VisitedSet::new(4);
+        v.epoch = u32::MAX - 1;
+        v.clear(); // -> MAX
+        assert!(v.insert(0));
+        v.clear(); // wraps -> full reset to epoch 1
+        assert_eq!(v.epoch, 1);
+        assert!(!v.contains(0));
+        assert!(v.insert(0));
+    }
+
+    #[test]
+    fn resize_preserves_semantics() {
+        let mut v = VisitedSet::new(2);
+        v.clear();
+        v.insert(1);
+        v.resize(10);
+        assert!(v.contains(1));
+        assert!(v.insert(9));
+    }
+}

@@ -1,0 +1,141 @@
+//! Dynamic batcher: vLLM-router-style accumulate-until-full-or-deadline.
+//!
+//! Requests arrive on a channel; the batching loop drains up to
+//! `max_batch` of them, waiting at most `max_wait` after the first arrival
+//! — the standard throughput/latency dial for batched ANN serving.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_batch: 64,
+            max_wait: Duration::from_millis(2),
+        }
+    }
+}
+
+/// Drain one batch from `rx`. Blocks for the first item (or returns `None`
+/// when the channel is closed), then collects follow-ups until the batch
+/// fills or the deadline passes.
+pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let mut batch = Vec::with_capacity(policy.max_batch);
+    batch.push(first);
+    let deadline = Instant::now() + policy.max_wait;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+/// Like [`next_batch`], but the wait for the *first* element polls `stop`:
+/// returns `None` once `stop` is set and the queue is drained, even while
+/// senders keep the channel open (live [`super::server::ServerHandle`]s).
+pub fn next_batch_or_stop<T>(
+    rx: &Receiver<T>,
+    policy: &BatchPolicy,
+    stop: &std::sync::atomic::AtomicBool,
+) -> Option<Vec<T>> {
+    use std::sync::atomic::Ordering;
+    let first = loop {
+        match rx.recv_timeout(Duration::from_millis(10)) {
+            Ok(item) => break item,
+            Err(RecvTimeoutError::Timeout) => {
+                if stop.load(Ordering::Relaxed) {
+                    return None;
+                }
+            }
+            Err(RecvTimeoutError::Disconnected) => return None,
+        }
+    };
+    let mut batch = Vec::with_capacity(policy.max_batch);
+    batch.push(first);
+    let deadline = Instant::now() + policy.max_wait;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(_) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn fills_batch_when_items_ready() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(50),
+        };
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b, vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn deadline_cuts_partial_batch() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let policy = BatchPolicy {
+            max_batch: 100,
+            max_wait: Duration::from_millis(5),
+        };
+        let t = Instant::now();
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b, vec![1]);
+        assert!(t.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn closed_channel_returns_none() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn closed_mid_batch_returns_partial() {
+        let (tx, rx) = channel();
+        tx.send(7).unwrap();
+        drop(tx);
+        let b = next_batch(
+            &rx,
+            &BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(50),
+            },
+        )
+        .unwrap();
+        assert_eq!(b, vec![7]);
+    }
+}

@@ -1,0 +1,94 @@
+//! Serving metrics: counters + latency reservoir (p50/p99), lock-light.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Shared serving metrics.
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub rejected: AtomicU64,
+    /// Reservoir of recent request latencies (seconds).
+    latencies: Mutex<Vec<f64>>,
+}
+
+const RESERVOIR: usize = 65_536;
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_request(&self, latency_s: f64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let mut l = self.latencies.lock().unwrap();
+        if l.len() >= RESERVOIR {
+            // Overwrite pseudo-randomly (cheap reservoir behavior).
+            let idx = (latency_s.to_bits() as usize) % RESERVOIR;
+            l[idx] = latency_s;
+        } else {
+            l.push(latency_s);
+        }
+    }
+
+    pub fn record_batch(&self) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot (requests, batches, rejected, latency stats).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let lat = self.latencies.lock().unwrap().clone();
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            latency: crate::util::bench::Stats::from_samples(lat),
+        }
+    }
+}
+
+/// Point-in-time view.
+#[derive(Debug)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub batches: u64,
+    pub rejected: u64,
+    pub latency: crate::util::bench::Stats,
+}
+
+impl MetricsSnapshot {
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_snapshots() {
+        let m = Metrics::new();
+        for i in 0..100 {
+            m.record_request(i as f64 * 1e-4);
+        }
+        m.record_batch();
+        m.record_batch();
+        m.record_rejected();
+        let s = m.snapshot();
+        assert_eq!(s.requests, 100);
+        assert_eq!(s.batches, 2);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.latency.n, 100);
+        assert_eq!(s.mean_batch_size(), 50.0);
+    }
+}

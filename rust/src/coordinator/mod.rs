@@ -1,0 +1,16 @@
+//! Serving coordinator: the L3 layer a deployment would actually run.
+//!
+//! * [`batcher`] — dynamic batching: requests accumulate until
+//!   `max_batch` or `max_wait` (amortizes cache-warm graph walks and
+//!   enables the PJRT batch-rerank path);
+//! * [`router`] — sharded indexes with fan-out + top-k merge;
+//! * [`server`] — thread-based request loop with bounded queues
+//!   (backpressure) and latency/throughput metrics.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+
+pub use router::ShardedRouter;
+pub use server::{QueryRequest, QueryResponse, Server, ServerConfig};

@@ -1,0 +1,142 @@
+//! Sharded router: partition the base across shard indexes, fan a query
+//! out, merge the per-shard top-k — how multi-tenant vector stores
+//! (Vearch/Milvus) scale past one index.
+
+use crate::anns::heap::dist_cmp;
+use crate::anns::AnnIndex;
+use crate::anns::VectorSet;
+use crate::dataset::Dataset;
+use crate::variants::VariantConfig;
+use std::sync::Arc;
+
+/// A router over contiguous shards; shard `s` owns base rows
+/// `[offsets[s], offsets[s+1])` and ids are remapped back to global.
+pub struct ShardedRouter {
+    shards: Vec<Arc<dyn AnnIndex>>,
+    offsets: Vec<u32>,
+    /// Per-shard full-precision vectors (for merge-time exact rescoring).
+    metric: crate::distance::Metric,
+}
+
+impl ShardedRouter {
+    /// Build GLASS shards over a dataset split into `n_shards` ranges.
+    pub fn build_glass(ds: &Dataset, config: &VariantConfig, n_shards: usize, seed: u64) -> Self {
+        let n = ds.n_base();
+        let n_shards = n_shards.clamp(1, n.max(1));
+        let mut shards: Vec<Arc<dyn AnnIndex>> = Vec::with_capacity(n_shards);
+        let mut offsets = vec![0u32];
+        for s in 0..n_shards {
+            let lo = n * s / n_shards;
+            let hi = n * (s + 1) / n_shards;
+            let data = ds.base[lo * ds.dim..hi * ds.dim].to_vec();
+            let vs = VectorSet::new(data, ds.dim, ds.metric);
+            shards.push(Arc::new(
+                crate::anns::glass::GlassIndex::build(vs, config.clone(), seed ^ s as u64)
+                    .with_label(&format!("glass-shard{s}")),
+            ));
+            offsets.push(hi as u32);
+        }
+        ShardedRouter {
+            shards,
+            offsets,
+            metric: ds.metric,
+        }
+    }
+
+    /// Wrap pre-built shards (ids remapped by the given offsets; the last
+    /// offset is the total size).
+    pub fn from_shards(shards: Vec<Arc<dyn AnnIndex>>, metric: crate::distance::Metric) -> Self {
+        let mut offsets = vec![0u32];
+        for s in &shards {
+            offsets.push(offsets.last().unwrap() + s.len() as u32);
+        }
+        ShardedRouter {
+            shards,
+            offsets,
+            metric,
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Fan out and merge. Each shard returns its local top-k with ids
+    /// remapped to global; results re-sorted by exact distance computed
+    /// against the caller-provided scorer.
+    pub fn search(
+        &self,
+        query: &[f32],
+        k: usize,
+        ef: usize,
+        score: impl Fn(u32) -> f32,
+    ) -> Vec<u32> {
+        let mut merged: Vec<(f32, u32)> = Vec::with_capacity(k * self.shards.len());
+        for (s, shard) in self.shards.iter().enumerate() {
+            let base = self.offsets[s];
+            for local in shard.search(query, k, ef) {
+                let global = base + local;
+                merged.push((score(global), global));
+            }
+        }
+        merged.sort_by(dist_cmp);
+        merged.truncate(k);
+        merged.into_iter().map(|(_, i)| i).collect()
+    }
+
+    pub fn metric(&self) -> crate::distance::Metric {
+        self.metric
+    }
+
+    pub fn len(&self) -> usize {
+        *self.offsets.last().unwrap() as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth;
+
+    #[test]
+    fn sharded_matches_unsharded_recall() {
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 1200, 40, 91);
+        ds.compute_ground_truth(10);
+        let cfg = VariantConfig::glass_baseline();
+        let router = ShardedRouter::build_glass(&ds, &cfg, 3, 5);
+        assert_eq!(router.n_shards(), 3);
+        assert_eq!(router.len(), 1200);
+        let mut acc = 0.0;
+        for qi in 0..ds.n_queries() {
+            let q = ds.query_vec(qi);
+            let found = router.search(q, 10, 96, |gid| {
+                ds.metric.distance(q, ds.base_vec(gid as usize))
+            });
+            acc += crate::dataset::gt::recall_at_k(&found, &ds.gt[qi], 10);
+        }
+        let recall = acc / ds.n_queries() as f64;
+        assert!(recall > 0.85, "sharded recall {recall}");
+    }
+
+    #[test]
+    fn ids_remapped_to_global_range() {
+        let sp = synth::spec("demo-64").unwrap();
+        let ds = synth::generate_counts(sp, 600, 10, 92);
+        let router =
+            ShardedRouter::build_glass(&ds, &VariantConfig::glass_baseline(), 4, 5);
+        let q = ds.query_vec(0);
+        let found = router.search(q, 10, 64, |gid| {
+            ds.metric.distance(q, ds.base_vec(gid as usize))
+        });
+        assert_eq!(found.len(), 10);
+        assert!(found.iter().all(|&i| (i as usize) < 600));
+        // Distinct ids.
+        let set: std::collections::HashSet<_> = found.iter().collect();
+        assert_eq!(set.len(), found.len());
+    }
+}

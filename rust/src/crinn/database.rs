@@ -1,0 +1,186 @@
+//! §3.2 performance-indexed exemplar database + Eq. 1 contrastive sampling.
+//!
+//! "We maintain a performance-indexed database of all successful code
+//! samples" and draw exemplars with the temperature-scaled softmax
+//!
+//! `P(B_i) = exp((s_i - μ)/τ) / Σ_j exp((s_j - μ)/τ)`           (Eq. 1)
+//!
+//! τ governs exploration↔exploitation: low τ shows the LLM/policy only the
+//! best implementations, high τ keeps diverse (including slow) exemplars in
+//! the prompt for contrast.
+
+use crate::util::rng::Rng;
+use crate::variants::{Module, VariantConfig};
+
+/// One stored implementation with its measured speed score.
+#[derive(Clone, Debug)]
+pub struct Exemplar {
+    pub config: VariantConfig,
+    pub module: Module,
+    /// Baseline-normalized speed score (1.0 = GLASS starting point).
+    pub score: f64,
+    /// Training iteration that produced it.
+    pub iteration: usize,
+}
+
+/// Performance-indexed database, per paper kept append-only over the run.
+#[derive(Default)]
+pub struct CodeDatabase {
+    entries: Vec<Exemplar>,
+}
+
+impl CodeDatabase {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Insert a successful sample (score > 0; failures score 0 per Table 1
+    /// and are not stored as exemplars).
+    pub fn insert(&mut self, e: Exemplar) {
+        if e.score > 0.0 {
+            self.entries.push(e);
+        }
+    }
+
+    /// All entries for a module (most recent last).
+    pub fn for_module(&self, module: Module) -> Vec<&Exemplar> {
+        self.entries
+            .iter()
+            .filter(|e| e.module == module)
+            .collect()
+    }
+
+    /// Best entry for a module.
+    pub fn best(&self, module: Module) -> Option<&Exemplar> {
+        self.for_module(module)
+            .into_iter()
+            .max_by(|a, b| a.score.partial_cmp(&b.score).unwrap())
+    }
+
+    /// Eq. 1: sample `k` distinct exemplars for `module` with temperature
+    /// `tau`. Returns fewer when the database is small.
+    pub fn sample(&self, module: Module, k: usize, tau: f64, rng: &mut Rng) -> Vec<&Exemplar> {
+        let pool = self.for_module(module);
+        if pool.len() <= k {
+            return pool;
+        }
+        let mu = pool.iter().map(|e| e.score).sum::<f64>() / pool.len() as f64;
+        let tau = tau.max(1e-6);
+        let mut weights: Vec<f64> = pool
+            .iter()
+            .map(|e| ((e.score - mu) / tau).min(50.0).exp())
+            .collect();
+        let mut picked: Vec<usize> = Vec::with_capacity(k);
+        for _ in 0..k {
+            let total: f64 = weights.iter().sum();
+            if total <= 0.0 {
+                break;
+            }
+            let mut t = rng.next_f64() * total;
+            let mut idx = weights.len() - 1;
+            for (i, &w) in weights.iter().enumerate() {
+                t -= w;
+                if t <= 0.0 {
+                    idx = i;
+                    break;
+                }
+            }
+            picked.push(idx);
+            weights[idx] = 0.0; // without replacement
+        }
+        picked.into_iter().map(|i| pool[i]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ex(score: f64, module: Module) -> Exemplar {
+        Exemplar {
+            config: VariantConfig::glass_baseline(),
+            module,
+            score,
+            iteration: 0,
+        }
+    }
+
+    #[test]
+    fn insert_filters_failures() {
+        let mut db = CodeDatabase::new();
+        db.insert(ex(0.0, Module::Search));
+        db.insert(ex(-1.0, Module::Search));
+        db.insert(ex(1.2, Module::Search));
+        assert_eq!(db.len(), 1);
+    }
+
+    #[test]
+    fn best_per_module() {
+        let mut db = CodeDatabase::new();
+        db.insert(ex(1.0, Module::Search));
+        db.insert(ex(2.0, Module::Search));
+        db.insert(ex(9.0, Module::Refinement));
+        assert_eq!(db.best(Module::Search).unwrap().score, 2.0);
+        assert!(db.best(Module::Construction).is_none());
+    }
+
+    #[test]
+    fn low_temperature_prefers_high_scores() {
+        let mut db = CodeDatabase::new();
+        for i in 0..50 {
+            db.insert(ex(1.0 + i as f64 * 0.02, Module::Construction));
+        }
+        let mut rng = Rng::new(3);
+        let mut mean_low = 0.0;
+        let mut mean_high = 0.0;
+        for _ in 0..50 {
+            mean_low += db
+                .sample(Module::Construction, 4, 0.02, &mut rng)
+                .iter()
+                .map(|e| e.score)
+                .sum::<f64>()
+                / 4.0;
+            mean_high += db
+                .sample(Module::Construction, 4, 10.0, &mut rng)
+                .iter()
+                .map(|e| e.score)
+                .sum::<f64>()
+                / 4.0;
+        }
+        assert!(
+            mean_low > mean_high,
+            "low-tau mean {mean_low} should exceed high-tau mean {mean_high}"
+        );
+    }
+
+    #[test]
+    fn sample_without_replacement() {
+        let mut db = CodeDatabase::new();
+        for i in 0..10 {
+            db.insert(Exemplar {
+                iteration: i,
+                ..ex(1.0 + i as f64, Module::Search)
+            });
+        }
+        let mut rng = Rng::new(5);
+        let s = db.sample(Module::Search, 5, 1.0, &mut rng);
+        let iters: std::collections::HashSet<usize> = s.iter().map(|e| e.iteration).collect();
+        assert_eq!(iters.len(), 5);
+    }
+
+    #[test]
+    fn small_pool_returned_whole() {
+        let mut db = CodeDatabase::new();
+        db.insert(ex(1.0, Module::Search));
+        let mut rng = Rng::new(1);
+        assert_eq!(db.sample(Module::Search, 4, 1.0, &mut rng).len(), 1);
+    }
+}

@@ -1,0 +1,167 @@
+//! §3.4 GRPO optimizer state.
+//!
+//! Holds the policy parameters, Adam moments and the frozen reference
+//! policy; each [`GrpoOptimizer::step`] is one execution of the fused
+//! `grpo_step` artifact (Eq. 3: clipped importance-weighted surrogate with
+//! group-normalized advantages and a KL penalty toward the reference).
+
+use crate::runtime::Engine;
+use anyhow::Result;
+
+/// GRPO hyperparameters (paper notation: ε clip, β KL weight).
+#[derive(Clone, Debug)]
+pub struct GrpoHyper {
+    pub lr: f32,
+    pub clip_eps: f32,
+    pub kl_beta: f32,
+}
+
+impl Default for GrpoHyper {
+    fn default() -> Self {
+        GrpoHyper {
+            lr: 3e-3,
+            clip_eps: 0.2,
+            kl_beta: 0.02,
+        }
+    }
+}
+
+/// Policy + optimizer state living on the Rust side; math runs via PJRT.
+pub struct GrpoOptimizer<'e> {
+    engine: &'e Engine,
+    pub hyper: GrpoHyper,
+    pub params: Vec<Vec<f32>>,
+    pub ref_params: Vec<Vec<f32>>,
+    adam_m: Vec<Vec<f32>>,
+    adam_v: Vec<Vec<f32>>,
+    /// Adam step counter.
+    pub t: usize,
+    /// Loss history (diagnostics / EXPERIMENTS.md).
+    pub losses: Vec<f32>,
+}
+
+impl<'e> GrpoOptimizer<'e> {
+    /// Initialize from the manifest's init params (the π_ref snapshot).
+    pub fn new(engine: &'e Engine, hyper: GrpoHyper) -> Self {
+        let params = engine.manifest.init_params.clone();
+        let zeros: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        GrpoOptimizer {
+            engine,
+            hyper,
+            ref_params: params.clone(),
+            adam_m: zeros.clone(),
+            adam_v: zeros,
+            params,
+            t: 0,
+            losses: Vec::new(),
+        }
+    }
+
+    /// Policy forward pass for a feature batch `[G, F]`.
+    pub fn forward(&self, feats: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        self.engine.policy_forward(&self.params, feats)
+    }
+
+    /// One GRPO update. `advantages` are already Eq.-2 normalized.
+    pub fn step(
+        &mut self,
+        feats: &[f32],
+        actions: &[f32],
+        advantages: &[f32],
+        old_logp: &[f32],
+    ) -> Result<f32> {
+        self.t += 1;
+        let (p, m, v, loss) = self.engine.grpo_step(
+            &self.params,
+            &self.adam_m,
+            &self.adam_v,
+            &self.ref_params,
+            feats,
+            actions,
+            advantages,
+            old_logp,
+            self.hyper.lr,
+            self.hyper.clip_eps,
+            self.hyper.kl_beta,
+            self.t as f32,
+        )?;
+        self.params = p;
+        self.adam_m = m;
+        self.adam_v = v;
+        self.losses.push(loss);
+        Ok(loss)
+    }
+
+    /// Refresh the KL reference to the current policy (between modules,
+    /// mirroring per-round reference resets in GRPO practice).
+    pub fn refresh_reference(&mut self) {
+        self.ref_params = self.params.clone();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn engine() -> Option<Engine> {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Engine::new(&dir).unwrap())
+    }
+
+    /// End-to-end sanity: rewarding actions near +0.5 on every knob must
+    /// pull the policy mean toward +0.5. On-policy GRPO with G=8 is noisy,
+    /// so we assert on the best error reached during training rather than
+    /// the endpoint.
+    #[test]
+    fn policy_learns_synthetic_objective() {
+        let Some(e) = engine() else { return };
+        let m = e.manifest.clone();
+        let mut opt = GrpoOptimizer::new(&e, GrpoHyper { lr: 0.01, ..Default::default() });
+        let mut rng = Rng::new(13);
+        let feats = vec![0.0f32; m.group * m.feat_dim];
+
+        let mean_err = |opt: &GrpoOptimizer| -> f32 {
+            let (mean, _) = opt.forward(&feats).unwrap();
+            mean.iter().map(|x| (x - 0.5).abs()).sum::<f32>() / mean.len() as f32
+        };
+        let before = mean_err(&opt);
+        let mut best = before;
+        for _ in 0..30 {
+            let (mean, logstd) = opt.forward(&feats).unwrap();
+            let grp = crate::crinn::policy::sample_actions(
+                &mean, &logstd, m.group, m.n_knobs, &mut rng,
+            );
+            // Reward = negative distance of action from +0.5.
+            let rewards: Vec<f64> = (0..m.group)
+                .map(|g| {
+                    let s: f32 = (0..m.n_knobs)
+                        .map(|a| (grp.actions[g * m.n_knobs + a] - 0.5).abs())
+                        .sum();
+                    -(s as f64)
+                })
+                .collect();
+            let adv = crate::crinn::policy::normalize_advantages(&rewards);
+            opt.step(&feats, &grp.actions, &adv, &grp.logp).unwrap();
+            best = best.min(mean_err(&opt));
+        }
+        assert!(
+            best < before * 0.7,
+            "policy failed to learn: {before} -> best {best}"
+        );
+        assert!(opt.losses.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
+    fn reference_refresh_copies_params() {
+        let Some(e) = engine() else { return };
+        let mut opt = GrpoOptimizer::new(&e, GrpoHyper::default());
+        opt.params[0][0] += 1.0;
+        assert_ne!(opt.params[0][0], opt.ref_params[0][0]);
+        opt.refresh_reference();
+        assert_eq!(opt.params[0][0], opt.ref_params[0][0]);
+    }
+}

@@ -1,0 +1,32 @@
+//! CRINN: contrastive reinforcement learning over ANNS modules (§3).
+//!
+//! The training loop exactly mirrors the paper's:
+//!
+//! 1. **Sequential module optimization** (§3.1/§3.5): graph construction →
+//!    search → refinement, each optimized while the others stay fixed.
+//! 2. **Contrastive prompts** (§3.2 / Table 1): each step samples exemplar
+//!    implementations + speed scores from a performance-indexed database
+//!    with the temperature-softmax of Eq. 1 ([`database`]), renders the
+//!    Table-1 prompt verbatim ([`prompt`]) and encodes the same content as
+//!    the policy features ([`policy`]).
+//! 3. **Speed reward** (§3.3): candidates are *actually executed* — an ef
+//!    sweep on the training dataset, filtered to recall ∈ [0.85, 0.95],
+//!    area under the QPS curve ([`reward`]).
+//! 4. **GRPO** (§3.4, Eq. 2–3): G completions per prompt, group-normalized
+//!    advantages with smoothing, clipped surrogate + KL against the
+//!    reference policy — the update itself runs as the AOT `grpo_step`
+//!    artifact through [`crate::runtime::Engine`] ([`grpo`], [`trainer`]).
+//!
+//! The substitution of the paper's code-writing LLM by a policy over the
+//! structured variant space is documented in DESIGN.md §2.
+
+pub mod database;
+pub mod grpo;
+pub mod policy;
+pub mod prompt;
+pub mod reward;
+pub mod trainer;
+
+pub use database::{CodeDatabase, Exemplar};
+pub use reward::RewardSpec;
+pub use trainer::{CrinnTrainer, TrainerOptions};

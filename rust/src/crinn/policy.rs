@@ -1,0 +1,180 @@
+//! Policy feature encoding + Gaussian sampling.
+//!
+//! The contrastive prompt's information content — which module is being
+//! optimized, the exemplar implementations and their speed scores, and how
+//! far training has progressed — is encoded as the policy network's input
+//! features (the substitution for tokenized prompt text; DESIGN.md §2).
+//! Layout (must match `python/compile/model.py::FEAT_DIM`):
+//!
+//! ```text
+//! [ module one-hot (3) |
+//!   exemplar 0: knobs (8) + normalized score (1) | ... x N_EXEMPLARS |
+//!   progress (1) ]
+//! ```
+//!
+//! Actions are draws from the diagonal Gaussian `(mean, logstd)` returned
+//! by the AOT `policy_fwd` artifact, clamped to the knob box `[-1, 1]`.
+
+use crate::crinn::database::Exemplar;
+use crate::runtime::Manifest;
+use crate::util::rng::Rng;
+use crate::variants::{encode_action, Module, N_KNOBS};
+
+/// Encode one prompt's features (identical across the G group rows —
+/// GRPO's G completions share the prompt q).
+pub fn encode_features(
+    manifest: &Manifest,
+    module: Module,
+    exemplars: &[&Exemplar],
+    progress: f64,
+) -> Vec<f32> {
+    let f = manifest.feat_dim;
+    let mut row = vec![0f32; f];
+    row[module.index()] = 1.0;
+    let mut off = manifest.n_modules;
+    for slot in 0..manifest.n_exemplars {
+        if let Some(e) = exemplars.get(slot) {
+            let knobs = encode_action(&e.config, module);
+            for (j, &v) in knobs.iter().take(N_KNOBS).enumerate() {
+                row[off + j] = v as f32;
+            }
+            // Score feature: log-scale around the baseline (score 1.0 -> 0).
+            row[off + N_KNOBS] = (e.score.max(1e-3).ln()) as f32;
+        }
+        off += N_KNOBS + 1;
+    }
+    row[f - 1] = progress.clamp(0.0, 1.0) as f32;
+    // Tile to [G, F].
+    let mut out = Vec::with_capacity(manifest.group * f);
+    for _ in 0..manifest.group {
+        out.extend_from_slice(&row);
+    }
+    out
+}
+
+/// A sampled group of actions with their log-probs under the sampling
+/// policy (needed as `old_logp` in Eq. 3).
+pub struct ActionGroup {
+    /// `[G, A]` actions, clamped to [-1, 1].
+    pub actions: Vec<f32>,
+    /// `[G]` log-probs (of the *pre-clamp* draws — standard practice).
+    pub logp: Vec<f32>,
+}
+
+/// Sample G actions from the Gaussian `(mean, logstd)` (both `[G, A]`).
+pub fn sample_actions(
+    mean: &[f32],
+    logstd: &[f32],
+    group: usize,
+    n_knobs: usize,
+    rng: &mut Rng,
+) -> ActionGroup {
+    assert_eq!(mean.len(), group * n_knobs);
+    let mut actions = vec![0f32; group * n_knobs];
+    let mut logp = vec![0f32; group];
+    let ln2pi = (2.0 * std::f32::consts::PI).ln();
+    for g in 0..group {
+        let mut lp = 0f32;
+        for a in 0..n_knobs {
+            let i = g * n_knobs + a;
+            let std = logstd[i].exp();
+            let z = rng.next_gaussian_f32();
+            let x = mean[i] + std * z;
+            lp += -0.5 * (z * z + 2.0 * logstd[i] + ln2pi);
+            actions[i] = x.clamp(-1.0, 1.0);
+        }
+        logp[g] = lp;
+    }
+    ActionGroup { actions, logp }
+}
+
+/// Eq. 2: group-normalized advantages, with reward smoothing applied by
+/// the caller. Degenerate groups (zero std) get all-zero advantages.
+pub fn normalize_advantages(rewards: &[f64]) -> Vec<f32> {
+    let n = rewards.len() as f64;
+    let mean = rewards.iter().sum::<f64>() / n;
+    let var = rewards.iter().map(|r| (r - mean) * (r - mean)).sum::<f64>() / n;
+    let std = var.sqrt();
+    if std < 1e-9 {
+        return vec![0.0; rewards.len()];
+    }
+    rewards
+        .iter()
+        .map(|r| (((r - mean) / std) as f32).clamp(-5.0, 5.0))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::variants::VariantConfig;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Manifest::load(&dir).unwrap())
+    }
+
+    #[test]
+    fn features_layout() {
+        let Some(m) = manifest() else { return };
+        let e = Exemplar {
+            config: VariantConfig::crinn_full(),
+            module: Module::Search,
+            score: 1.5,
+            iteration: 0,
+        };
+        let feats = encode_features(&m, Module::Search, &[&e], 0.25);
+        assert_eq!(feats.len(), m.group * m.feat_dim);
+        // Module one-hot.
+        assert_eq!(feats[0], 0.0);
+        assert_eq!(feats[1], 1.0);
+        assert_eq!(feats[2], 0.0);
+        // Score feature is ln(1.5) in the first exemplar slot.
+        let score_idx = m.n_modules + N_KNOBS;
+        assert!((feats[score_idx] - 1.5f32.ln()).abs() < 1e-6);
+        // Progress in the last slot; rows tiled identically.
+        assert_eq!(feats[m.feat_dim - 1], 0.25);
+        assert_eq!(feats[..m.feat_dim], feats[m.feat_dim..2 * m.feat_dim]);
+    }
+
+    #[test]
+    fn empty_exemplars_zero_slots() {
+        let Some(m) = manifest() else { return };
+        let feats = encode_features(&m, Module::Construction, &[], 0.0);
+        // Everything except the module one-hot is zero.
+        let nonzero = feats[..m.feat_dim].iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(nonzero, 1);
+    }
+
+    #[test]
+    fn sampling_statistics() {
+        let g = 8;
+        let a = 8;
+        let mean = vec![0.25f32; g * a];
+        let logstd = vec![-1.0f32; g * a];
+        let mut rng = Rng::new(11);
+        let mut acc = 0.0;
+        let trials = 200;
+        for _ in 0..trials {
+            let grp = sample_actions(&mean, &logstd, g, a, &mut rng);
+            acc += grp.actions.iter().map(|&x| x as f64).sum::<f64>() / (g * a) as f64;
+            assert!(grp.actions.iter().all(|x| x.abs() <= 1.0));
+            assert!(grp.logp.iter().all(|l| l.is_finite()));
+        }
+        let emp_mean = acc / trials as f64;
+        assert!((emp_mean - 0.25).abs() < 0.05, "empirical mean {emp_mean}");
+    }
+
+    #[test]
+    fn advantages_zero_mean_unit_std() {
+        let adv = normalize_advantages(&[1.0, 2.0, 3.0, 4.0]);
+        let mean: f32 = adv.iter().sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-6);
+        assert!(adv[3] > adv[0]);
+        let degenerate = normalize_advantages(&[2.0, 2.0, 2.0]);
+        assert!(degenerate.iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,231 @@
+//! §3.3 Speed reward: area under the QPS curve over recall ∈ [0.85, 0.95].
+//!
+//! The paper's reasoning, implemented literally: sweep `ef`, collect
+//! (QPS, recall) points, keep the recall window where "most algorithms have
+//! sufficient data points and performance differences are most meaningful",
+//! integrate QPS over recall (trapezoid, with linear interpolation onto the
+//! window boundaries), and hand the scalar to GRPO. Scores are normalized
+//! by the baseline's AUC so rewards are dataset-scale-free, then smoothed
+//! (log1p, following the stabilization in [18]) before Eq. 2.
+
+use crate::anns::glass::GlassIndex;
+use crate::anns::VectorSet;
+use crate::dataset::Dataset;
+use crate::eval::sweep::{measure_point, CurvePoint};
+use crate::variants::{Module, VariantConfig};
+
+/// Reward window + sweep settings.
+#[derive(Clone, Debug)]
+pub struct RewardSpec {
+    pub recall_lo: f64,
+    pub recall_hi: f64,
+    pub k: usize,
+    pub ef_grid: Vec<usize>,
+    /// Build seed (fixed: determinism requirement).
+    pub seed: u64,
+}
+
+impl Default for RewardSpec {
+    fn default() -> Self {
+        RewardSpec {
+            recall_lo: 0.85,
+            recall_hi: 0.95,
+            k: 10,
+            ef_grid: vec![12, 16, 24, 32, 48, 64, 96, 128],
+            seed: 7,
+        }
+    }
+}
+
+/// Area under the QPS-over-recall curve restricted to `[lo, hi]`.
+///
+/// Points are sorted by recall; boundary values are linearly interpolated
+/// so two curves are integrated over the *same* interval. Returns 0 when
+/// the curve never enters the window (the paper's "score of 0" failure
+/// mode maps here too).
+pub fn window_auc(points: &[CurvePoint], lo: f64, hi: f64) -> f64 {
+    let mut pts: Vec<(f64, f64)> = points.iter().map(|p| (p.recall, p.qps)).collect();
+    pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    pts.dedup_by(|a, b| {
+        if a.0 == b.0 {
+            // Keep the faster point at equal recall.
+            b.1 = b.1.max(a.1);
+            true
+        } else {
+            false
+        }
+    });
+    if pts.is_empty() {
+        return 0.0;
+    }
+    // Interpolated QPS at a recall value (None outside the span).
+    let interp = |r: f64| -> Option<f64> {
+        if r < pts[0].0 || r > pts[pts.len() - 1].0 {
+            return None;
+        }
+        for w in pts.windows(2) {
+            let (r0, q0) = w[0];
+            let (r1, q1) = w[1];
+            if r >= r0 && r <= r1 {
+                if r1 == r0 {
+                    return Some(q0.max(q1));
+                }
+                let t = (r - r0) / (r1 - r0);
+                return Some(q0 + t * (q1 - q0));
+            }
+        }
+        Some(pts[pts.len() - 1].1)
+    };
+    // Clip the window to the measured span.
+    let span_lo = lo.max(pts[0].0);
+    let span_hi = hi.min(pts[pts.len() - 1].0);
+    if span_hi <= span_lo {
+        // Curve entirely above the window still deserves credit at its
+        // floor (it dominates the window); entirely below gets 0.
+        if pts[0].0 > hi {
+            return (hi - lo) * pts[0].1;
+        }
+        return 0.0;
+    }
+    // Integration knots: window bounds + interior measured points.
+    let mut knots = vec![span_lo];
+    knots.extend(
+        pts.iter()
+            .map(|p| p.0)
+            .filter(|&r| r > span_lo && r < span_hi),
+    );
+    knots.push(span_hi);
+    let mut auc = 0.0;
+    for w in knots.windows(2) {
+        let (r0, r1) = (w[0], w[1]);
+        let (Some(q0), Some(q1)) = (interp(r0), interp(r1)) else {
+            continue;
+        };
+        auc += (r1 - r0) * (q0 + q1) / 2.0;
+    }
+    auc
+}
+
+/// Sweep a GLASS candidate configuration and return its window AUC.
+///
+/// `prebuilt`: when optimizing search/refinement (§3.5), the graph from the
+/// frozen construction knobs is reused and only runtime knobs change —
+/// matching the paper's per-module evaluation granularity.
+pub fn evaluate_config(
+    ds: &Dataset,
+    config: &VariantConfig,
+    module: Module,
+    prebuilt: Option<&mut GlassIndex>,
+    spec: &RewardSpec,
+) -> (f64, Vec<CurvePoint>) {
+    let points = match (module, prebuilt) {
+        (Module::Construction, _) | (_, None) => {
+            let idx = GlassIndex::build(VectorSet::from_dataset(ds), config.clone(), spec.seed);
+            sweep_points(&idx, ds, spec)
+        }
+        (_, Some(idx)) => {
+            idx.set_runtime_knobs(config);
+            sweep_points(idx, ds, spec)
+        }
+    };
+    (window_auc(&points, spec.recall_lo, spec.recall_hi), points)
+}
+
+fn sweep_points(idx: &GlassIndex, ds: &Dataset, spec: &RewardSpec) -> Vec<CurvePoint> {
+    spec.ef_grid
+        .iter()
+        .map(|&ef| measure_point(idx, ds, spec.k, ef))
+        .collect()
+}
+
+/// Reward smoothing (§3.4 "rewards undergo smoothing following [18]"):
+/// log1p of the baseline-normalized score — compresses the occasional
+/// pathological-fast outlier that would otherwise dominate Eq. 2's std.
+pub fn smooth(score_over_baseline: f64) -> f64 {
+    score_over_baseline.max(0.0).ln_1p()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(recall: f64, qps: f64) -> CurvePoint {
+        CurvePoint {
+            ef: 0,
+            recall,
+            qps,
+            mean_latency_s: 0.0,
+            p99_latency_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn auc_of_flat_curve() {
+        // QPS constant 1000 across the window -> AUC = 0.1 * 1000.
+        let c = vec![pt(0.5, 1000.0), pt(0.99, 1000.0)];
+        let a = window_auc(&c, 0.85, 0.95);
+        assert!((a - 100.0).abs() < 1e-6, "a={a}");
+    }
+
+    #[test]
+    fn auc_orders_faster_curves_higher() {
+        let slow = vec![pt(0.8, 2000.0), pt(0.9, 1000.0), pt(0.97, 300.0)];
+        let fast = vec![pt(0.8, 4000.0), pt(0.9, 2000.0), pt(0.97, 600.0)];
+        assert!(
+            window_auc(&fast, 0.85, 0.95) > window_auc(&slow, 0.85, 0.95) * 1.5
+        );
+    }
+
+    #[test]
+    fn auc_zero_when_below_window() {
+        let c = vec![pt(0.2, 9000.0), pt(0.5, 5000.0)];
+        assert_eq!(window_auc(&c, 0.85, 0.95), 0.0);
+    }
+
+    #[test]
+    fn auc_credits_curves_entirely_above_window() {
+        // High-quality algorithms "cannot achieve low recall" (§3.3).
+        let c = vec![pt(0.97, 3000.0), pt(0.999, 1000.0)];
+        let a = window_auc(&c, 0.85, 0.95);
+        assert!((a - 0.1 * 3000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn auc_partial_window_overlap() {
+        let c = vec![pt(0.9, 1000.0), pt(0.99, 500.0)];
+        let a = window_auc(&c, 0.85, 0.95);
+        // Integrates only [0.9, 0.95].
+        assert!(a > 0.0 && a < 0.1 * 1000.0);
+    }
+
+    #[test]
+    fn smoothing_monotone_and_compressive() {
+        assert!(smooth(2.0) > smooth(1.0));
+        let gain_low = smooth(1.2) - smooth(1.0);
+        let gain_high = smooth(5.2) - smooth(5.0);
+        assert!(gain_low > gain_high);
+        assert_eq!(smooth(-3.0), 0.0);
+    }
+
+    #[test]
+    fn evaluate_config_runs_end_to_end() {
+        let sp = crate::dataset::synth::spec("demo-64").unwrap();
+        let mut ds = crate::dataset::synth::generate_counts(sp, 800, 30, 71);
+        ds.compute_ground_truth(10);
+        let spec = RewardSpec {
+            ef_grid: vec![16, 32, 64, 128],
+            ..Default::default()
+        };
+        let (auc, points) = evaluate_config(
+            &ds,
+            &VariantConfig::glass_baseline(),
+            Module::Construction,
+            None,
+            &spec,
+        );
+        assert_eq!(points.len(), 4);
+        assert!(auc >= 0.0);
+        // The sweep should reach the window on this easy dataset.
+        assert!(points.iter().any(|p| p.recall > 0.85), "{points:?}");
+    }
+}

@@ -1,0 +1,123 @@
+//! Exact ground truth via parallel brute force.
+//!
+//! Pure-Rust path (the AOT Pallas scan artifact offers the same computation
+//! through [`crate::runtime`]; `anns::bruteforce` can use either — the two
+//! are cross-checked in integration tests).
+
+use crate::distance::Metric;
+use crate::util::threadpool::parallel_map;
+
+/// For each query, the indices of its `k` nearest base vectors (nearest
+/// first, ties broken by lower index for determinism).
+pub fn brute_force_topk(
+    base: &[f32],
+    queries: &[f32],
+    dim: usize,
+    metric: Metric,
+    k: usize,
+) -> Vec<Vec<u32>> {
+    assert!(dim > 0);
+    let n = base.len() / dim;
+    let nq = queries.len() / dim;
+    let k = k.min(n);
+    parallel_map(nq, 1, |qi| {
+        let q = &queries[qi * dim..(qi + 1) * dim];
+        topk_for_query(base, q, dim, metric, k)
+    })
+}
+
+/// Top-k scan for one query over a sorted-ascending bounded pool:
+/// O(k) insertion on improvement, O(1) rejection against the current worst.
+pub fn topk_for_query(base: &[f32], q: &[f32], dim: usize, metric: Metric, k: usize) -> Vec<u32> {
+    let n = base.len() / dim;
+    let k = k.min(n);
+    if k == 0 {
+        return Vec::new();
+    }
+    // (dist, idx) sorted ascending; pool.last() is the current worst.
+    let mut pool: Vec<(f32, u32)> = Vec::with_capacity(k + 1);
+    for i in 0..n {
+        let d = metric.distance(q, &base[i * dim..(i + 1) * dim]);
+        let cand = (d, i as u32);
+        if pool.len() == k && cmp_asc(&cand, pool.last().unwrap()) != std::cmp::Ordering::Less {
+            continue;
+        }
+        let pos = pool
+            .binary_search_by(|probe| cmp_asc(probe, &cand))
+            .unwrap_or_else(|p| p);
+        pool.insert(pos, cand);
+        if pool.len() > k {
+            pool.pop();
+        }
+    }
+    pool.into_iter().map(|(_, i)| i).collect()
+}
+
+fn cmp_asc(a: &(f32, u32), b: &(f32, u32)) -> std::cmp::Ordering {
+    a.0.partial_cmp(&b.0)
+        .unwrap_or(std::cmp::Ordering::Equal)
+        .then(a.1.cmp(&b.1))
+}
+
+/// recall@k of `found` against exact `gt` (both nearest-first id lists).
+pub fn recall_at_k(found: &[u32], gt: &[u32], k: usize) -> f64 {
+    let k = k.min(gt.len());
+    if k == 0 {
+        return 1.0;
+    }
+    let gtset: std::collections::HashSet<u32> = gt[..k].iter().copied().collect();
+    let hits = found.iter().take(k).filter(|i| gtset.contains(i)).count();
+    hits as f64 / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matches_full_sort() {
+        let dim = 16;
+        let n = 300;
+        let mut rng = Rng::new(1);
+        let base: Vec<f32> = (0..n * dim).map(|_| rng.next_gaussian_f32()).collect();
+        let queries: Vec<f32> = (0..5 * dim).map(|_| rng.next_gaussian_f32()).collect();
+        for metric in [Metric::L2, Metric::Ip] {
+            let got = brute_force_topk(&base, &queries, dim, metric, 10);
+            for qi in 0..5 {
+                let q = &queries[qi * dim..(qi + 1) * dim];
+                let mut all: Vec<(f32, u32)> = (0..n)
+                    .map(|i| (metric.distance(q, &base[i * dim..(i + 1) * dim]), i as u32))
+                    .collect();
+                all.sort_by(super::cmp_asc);
+                let want: Vec<u32> = all.iter().take(10).map(|x| x.1).collect();
+                assert_eq!(got[qi], want, "metric={metric:?} q={qi}");
+            }
+        }
+    }
+
+    #[test]
+    fn k_larger_than_n() {
+        let base = vec![0.0, 1.0, 2.0, 3.0]; // 4 scalars dim=1
+        let q = vec![0.9];
+        let got = brute_force_topk(&base, &q, 1, Metric::L2, 10);
+        assert_eq!(got[0], vec![1, 0, 2, 3]);
+    }
+
+    #[test]
+    fn recall_computation() {
+        assert_eq!(recall_at_k(&[1, 2, 3], &[1, 2, 3], 3), 1.0);
+        assert_eq!(recall_at_k(&[1, 9, 8], &[1, 2, 3], 3), 1.0 / 3.0);
+        assert_eq!(recall_at_k(&[], &[1, 2], 2), 0.0);
+        assert_eq!(recall_at_k(&[7], &[], 0), 1.0);
+    }
+
+    #[test]
+    fn deterministic_ties() {
+        // Identical points: lower index wins.
+        let base = vec![1.0, 1.0, 1.0, 2.0]; // dim=1: [1,1,1,2]
+        let q = vec![1.0];
+        let got = brute_force_topk(&base, &q, 1, Metric::L2, 3);
+        assert_eq!(got[0], vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,231 @@
+//! Vector file IO: the `.fvecs` / `.ivecs` formats used by SIFT/GIST
+//! distributions, plus a compact binary dataset cache so generated synthetic
+//! datasets (and their ground truth) persist across benchmark runs.
+//!
+//! fvecs layout: for each vector, a little-endian i32 dimension followed by
+//! `dim` little-endian f32 components. ivecs is identical with i32 data.
+
+use crate::dataset::Dataset;
+use crate::distance::Metric;
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Read an entire `.fvecs` file. Returns (flat data, dim).
+pub fn read_fvecs(path: &Path) -> Result<(Vec<f32>, usize)> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(f);
+    let mut data = Vec::new();
+    let mut dim = 0usize;
+    loop {
+        let mut dbuf = [0u8; 4];
+        match r.read_exact(&mut dbuf) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e.into()),
+        }
+        let d = i32::from_le_bytes(dbuf);
+        if d <= 0 {
+            bail!("bad fvecs dim {d}");
+        }
+        let d = d as usize;
+        if dim == 0 {
+            dim = d;
+        } else if dim != d {
+            bail!("inconsistent fvecs dims {dim} vs {d}");
+        }
+        let mut vbuf = vec![0u8; d * 4];
+        r.read_exact(&mut vbuf)?;
+        data.extend(
+            vbuf.chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+        );
+    }
+    Ok((data, dim))
+}
+
+/// Write a `.fvecs` file from flat row-major data.
+pub fn write_fvecs(path: &Path, data: &[f32], dim: usize) -> Result<()> {
+    assert!(dim > 0 && data.len() % dim == 0);
+    let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    for row in data.chunks_exact(dim) {
+        w.write_all(&(dim as i32).to_le_bytes())?;
+        for v in row {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read an `.ivecs` file (ground-truth id lists). Returns (flat, dim).
+pub fn read_ivecs(path: &Path) -> Result<(Vec<i32>, usize)> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut r = BufReader::new(f);
+    let mut data = Vec::new();
+    let mut dim = 0usize;
+    loop {
+        let mut dbuf = [0u8; 4];
+        match r.read_exact(&mut dbuf) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+            Err(e) => return Err(e.into()),
+        }
+        let d = i32::from_le_bytes(dbuf);
+        if d <= 0 {
+            bail!("bad ivecs dim {d}");
+        }
+        let d = d as usize;
+        if dim == 0 {
+            dim = d;
+        } else if dim != d {
+            bail!("inconsistent ivecs dims {dim} vs {d}");
+        }
+        let mut vbuf = vec![0u8; d * 4];
+        r.read_exact(&mut vbuf)?;
+        data.extend(
+            vbuf.chunks_exact(4)
+                .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]])),
+        );
+    }
+    Ok((data, dim))
+}
+
+/// Write an `.ivecs` file.
+pub fn write_ivecs(path: &Path, data: &[i32], dim: usize) -> Result<()> {
+    assert!(dim > 0 && data.len() % dim == 0);
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    for row in data.chunks_exact(dim) {
+        w.write_all(&(dim as i32).to_le_bytes())?;
+        for v in row {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Persist a full dataset (base, queries, gt) under `dir/<name>.*`.
+pub fn save_dataset(ds: &Dataset, dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    write_fvecs(&dir.join(format!("{}.base.fvecs", ds.name)), &ds.base, ds.dim)?;
+    write_fvecs(
+        &dir.join(format!("{}.query.fvecs", ds.name)),
+        &ds.queries,
+        ds.dim,
+    )?;
+    if !ds.gt.is_empty() {
+        let k = ds.gt_k;
+        let flat: Vec<i32> = ds
+            .gt
+            .iter()
+            .flat_map(|row| {
+                let mut r: Vec<i32> = row.iter().map(|&x| x as i32).collect();
+                r.resize(k, -1);
+                r
+            })
+            .collect();
+        write_ivecs(&dir.join(format!("{}.gt.ivecs", ds.name)), &flat, k)?;
+    }
+    let meta = format!(
+        "{{\"name\":\"{}\",\"dim\":{},\"metric\":\"{}\",\"gt_k\":{}}}",
+        ds.name,
+        ds.dim,
+        ds.metric.name(),
+        ds.gt_k
+    );
+    std::fs::write(dir.join(format!("{}.meta.json", ds.name)), meta)?;
+    Ok(())
+}
+
+/// Load a dataset previously written by [`save_dataset`].
+pub fn load_dataset(name: &str, dir: &Path) -> Result<Dataset> {
+    let meta_raw = std::fs::read_to_string(dir.join(format!("{name}.meta.json")))?;
+    let meta = crate::util::json::parse(&meta_raw).map_err(anyhow::Error::msg)?;
+    let metric = Metric::from_name(
+        meta.get("metric")
+            .and_then(|m| m.as_str())
+            .context("metric")?,
+    )
+    .context("bad metric")?;
+    let (base, dim) = read_fvecs(&dir.join(format!("{name}.base.fvecs")))?;
+    let (queries, qdim) = read_fvecs(&dir.join(format!("{name}.query.fvecs")))?;
+    if dim != qdim {
+        bail!("base dim {dim} != query dim {qdim}");
+    }
+    let gt_k = meta.get("gt_k").and_then(|v| v.as_usize()).unwrap_or(0);
+    let gt = if gt_k > 0 {
+        let (flat, k) = read_ivecs(&dir.join(format!("{name}.gt.ivecs")))?;
+        flat.chunks_exact(k)
+            .map(|row| row.iter().filter(|&&x| x >= 0).map(|&x| x as u32).collect())
+            .collect()
+    } else {
+        vec![]
+    };
+    Ok(Dataset {
+        name: name.to_string(),
+        dim,
+        metric,
+        base,
+        queries,
+        gt,
+        gt_k,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth;
+
+    #[test]
+    fn fvecs_roundtrip() {
+        let dir = std::env::temp_dir().join("crinn_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.fvecs");
+        let data: Vec<f32> = (0..24).map(|i| i as f32 * 0.5).collect();
+        write_fvecs(&path, &data, 8).unwrap();
+        let (back, dim) = read_fvecs(&path).unwrap();
+        assert_eq!(dim, 8);
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn ivecs_roundtrip() {
+        let dir = std::env::temp_dir().join("crinn_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ivecs");
+        let data: Vec<i32> = (0..30).collect();
+        write_ivecs(&path, &data, 10).unwrap();
+        let (back, dim) = read_ivecs(&path).unwrap();
+        assert_eq!(dim, 10);
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn dataset_roundtrip_with_gt() {
+        let dir = std::env::temp_dir().join(format!("crinn_ds_{}", std::process::id()));
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 120, 6, 5);
+        ds.compute_ground_truth(5);
+        save_dataset(&ds, &dir).unwrap();
+        let back = load_dataset("demo-64", &dir).unwrap();
+        assert_eq!(back.dim, ds.dim);
+        assert_eq!(back.base, ds.base);
+        assert_eq!(back.queries, ds.queries);
+        assert_eq!(back.gt, ds.gt);
+        assert_eq!(back.metric, ds.metric);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn read_rejects_corrupt() {
+        let dir = std::env::temp_dir().join("crinn_test_io");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.fvecs");
+        std::fs::write(&path, [255u8, 255, 255, 255, 0, 0]).unwrap();
+        assert!(read_fvecs(&path).is_err());
+    }
+}

@@ -1,0 +1,127 @@
+//! Local intrinsic dimension (LID) estimation — Table 2's `LID` column.
+//!
+//! Levina–Bickel maximum-likelihood estimator: for a point x with sorted
+//! neighbor distances r_1 <= … <= r_k,
+//!
+//! `lid(x) = ( (1/(k-1)) * Σ_{i<k} ln(r_k / r_i) )^{-1}`
+//!
+//! averaged over a random sample of base points. Distances use the true
+//! Euclidean (sqrt of our squared-L2) or angular distance, matching how
+//! ann-benchmarks reports the column.
+
+use crate::distance::Metric;
+use crate::util::rng::Rng;
+
+/// Estimate the dataset's average LID from `sample` random points with
+/// `k` neighbors each.
+pub fn estimate_lid(
+    base: &[f32],
+    dim: usize,
+    metric: Metric,
+    k: usize,
+    sample: usize,
+    seed: u64,
+) -> f64 {
+    assert!(dim > 0 && k >= 2);
+    let n = base.len() / dim;
+    if n < k + 2 {
+        return f64::NAN;
+    }
+    let mut rng = Rng::new(seed);
+    let picks = rng.sample_indices(n, sample.min(n));
+    let mut acc = 0.0;
+    let mut cnt = 0usize;
+    for &pi in &picks {
+        let q = &base[pi * dim..(pi + 1) * dim];
+        // k+1 nearest including self; drop the self (distance 0).
+        let ids = crate::dataset::gt::topk_for_query(base, q, dim, metric, k + 1);
+        let mut dists: Vec<f64> = ids
+            .iter()
+            .filter(|&&i| i as usize != pi)
+            .map(|&i| {
+                let d = metric.distance(q, &base[i as usize * dim..(i as usize + 1) * dim]);
+                match metric {
+                    Metric::L2 => (d.max(0.0) as f64).sqrt(),
+                    _ => (d as f64).max(0.0),
+                }
+            })
+            .collect();
+        dists.truncate(k);
+        if dists.len() < k {
+            continue;
+        }
+        dists.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rk = dists[k - 1];
+        if rk <= 0.0 {
+            continue;
+        }
+        let mut s = 0.0;
+        let mut ok = true;
+        for &ri in &dists[..k - 1] {
+            if ri <= 0.0 {
+                ok = false;
+                break;
+            }
+            s += (rk / ri).ln();
+        }
+        if !ok || s <= 0.0 {
+            continue;
+        }
+        acc += (k as f64 - 1.0) / s;
+        cnt += 1;
+    }
+    if cnt == 0 {
+        f64::NAN
+    } else {
+        acc / cnt as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Points uniform in a d-dim ball embedded in higher dim: LID ≈ d.
+    fn ball_embedded(n: usize, d_int: usize, d_amb: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut out = vec![0f32; n * d_amb];
+        for i in 0..n {
+            // Gaussian direction, radius ~ U^{1/d}: uniform in the ball.
+            let mut v: Vec<f32> = (0..d_int).map(|_| rng.next_gaussian_f32()).collect();
+            let nv = crate::distance::norm(&v);
+            let r = rng.next_f64().powf(1.0 / d_int as f64) as f32;
+            for x in v.iter_mut() {
+                *x = *x / nv.max(1e-9) * r;
+            }
+            out[i * d_amb..i * d_amb + d_int].copy_from_slice(&v);
+        }
+        out
+    }
+
+    #[test]
+    fn recovers_intrinsic_dim_roughly() {
+        for &d_int in &[3usize, 8] {
+            let data = ball_embedded(3000, d_int, 32, 9);
+            let lid = estimate_lid(&data, 32, Metric::L2, 20, 150, 4);
+            assert!(
+                (lid - d_int as f64).abs() < d_int as f64 * 0.6 + 1.0,
+                "d_int={d_int} estimated LID={lid}"
+            );
+        }
+    }
+
+    #[test]
+    fn monotone_in_intrinsic_dim() {
+        let a = estimate_lid(&ball_embedded(2000, 3, 24, 1), 24, Metric::L2, 15, 100, 2);
+        let b = estimate_lid(&ball_embedded(2000, 12, 24, 1), 24, Metric::L2, 15, 100, 2);
+        assert!(b > a, "lid(3)={a} lid(12)={b}");
+    }
+
+    #[test]
+    fn degenerate_inputs() {
+        // Too few points -> NaN, not panic.
+        let lid = estimate_lid(&[0.0; 8], 2, Metric::L2, 4, 10, 0);
+        assert!(lid.is_nan());
+    }
+}

@@ -1,0 +1,155 @@
+//! Datasets: the six Table-2 benchmarks as synthetic equivalents, plus IO
+//! and ground truth.
+//!
+//! The real ann-benchmarks HDF5 files are not available in this sandbox;
+//! per DESIGN.md §2 we generate Gaussian-mixture datasets whose *measured*
+//! statistics match Table 2: ambient dimension `D`, local intrinsic
+//! dimension (`LID`, verified with the Levina–Bickel MLE in [`lid`]),
+//! metric, and (scaled) base/query counts. The standard `.fvecs`/`.ivecs`
+//! loaders in [`io`] let the real files drop in unchanged when present.
+
+pub mod gt;
+pub mod io;
+pub mod lid;
+pub mod synth;
+
+use crate::distance::Metric;
+
+/// An ANNS workload: base vectors, query vectors, and (optionally) the
+/// exact ground-truth neighbors for recall computation.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: String,
+    pub dim: usize,
+    pub metric: Metric,
+    /// Row-major `[n_base, dim]`.
+    pub base: Vec<f32>,
+    /// Row-major `[n_queries, dim]`.
+    pub queries: Vec<f32>,
+    /// `gt[q]` = indices of the exact k nearest base vectors of query `q`,
+    /// nearest first. Populated by [`Dataset::compute_ground_truth`].
+    pub gt: Vec<Vec<u32>>,
+    /// k used for the stored ground truth.
+    pub gt_k: usize,
+}
+
+impl Dataset {
+    pub fn n_base(&self) -> usize {
+        if self.dim == 0 {
+            0
+        } else {
+            self.base.len() / self.dim
+        }
+    }
+
+    pub fn n_queries(&self) -> usize {
+        if self.dim == 0 {
+            0
+        } else {
+            self.queries.len() / self.dim
+        }
+    }
+
+    /// Base vector `i`.
+    #[inline]
+    pub fn base_vec(&self, i: usize) -> &[f32] {
+        &self.base[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Query vector `q`.
+    #[inline]
+    pub fn query_vec(&self, q: usize) -> &[f32] {
+        &self.queries[q * self.dim..(q + 1) * self.dim]
+    }
+
+    /// L2-normalize all vectors (required for `Metric::Angular`).
+    pub fn normalize_all(&mut self) {
+        let dim = self.dim;
+        for v in self.base.chunks_mut(dim) {
+            crate::distance::normalize(v);
+        }
+        for v in self.queries.chunks_mut(dim) {
+            crate::distance::normalize(v);
+        }
+    }
+
+    /// Compute exact ground truth (parallel brute force) for recall@k.
+    pub fn compute_ground_truth(&mut self, k: usize) {
+        self.gt = gt::brute_force_topk(
+            &self.base,
+            &self.queries,
+            self.dim,
+            self.metric,
+            k,
+        );
+        self.gt_k = k;
+    }
+
+    /// Measured statistics in Table 2's columns.
+    pub fn stats(&self, lid_k: usize, lid_sample: usize, seed: u64) -> DatasetStats {
+        DatasetStats {
+            name: self.name.clone(),
+            dim: self.dim,
+            metric: self.metric,
+            n_base: self.n_base(),
+            n_queries: self.n_queries(),
+            lid: lid::estimate_lid(&self.base, self.dim, self.metric, lid_k, lid_sample, seed),
+        }
+    }
+}
+
+/// Table-2 row for a dataset (measured, not configured).
+#[derive(Clone, Debug)]
+pub struct DatasetStats {
+    pub name: String,
+    pub dim: usize,
+    pub metric: Metric,
+    pub n_base: usize,
+    pub n_queries: usize,
+    pub lid: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Dataset {
+        Dataset {
+            name: "tiny".into(),
+            dim: 2,
+            metric: Metric::L2,
+            base: vec![0.0, 0.0, 1.0, 0.0, 0.0, 1.0, 5.0, 5.0],
+            queries: vec![0.1, 0.0],
+            gt: vec![],
+            gt_k: 0,
+        }
+    }
+
+    #[test]
+    fn accessors() {
+        let d = tiny();
+        assert_eq!(d.n_base(), 4);
+        assert_eq!(d.n_queries(), 1);
+        assert_eq!(d.base_vec(3), &[5.0, 5.0]);
+        assert_eq!(d.query_vec(0), &[0.1, 0.0]);
+    }
+
+    #[test]
+    fn ground_truth_ordering() {
+        let mut d = tiny();
+        d.compute_ground_truth(3);
+        assert_eq!(d.gt[0], vec![0, 1, 2]);
+        assert_eq!(d.gt_k, 3);
+    }
+
+    #[test]
+    fn normalize_all_unit() {
+        let mut d = tiny();
+        d.metric = Metric::Angular;
+        d.normalize_all();
+        for i in 1..d.n_base() {
+            let n = crate::distance::norm(d.base_vec(i));
+            assert!((n - 1.0).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! Int8 scalar quantization (SQ8) — the GLASS "quantized preliminary
+//! search" substrate (§2.3 of the paper).
+//!
+//! Vectors are quantized per-dataset with a symmetric linear code:
+//! `q_i = round(x_i / scale)` clipped to `[-127, 127]`, where `scale` is
+//! chosen from a high quantile of |x| over a sample (robust to outliers).
+//! Distances are computed in i32 and mapped back by the appropriate power
+//! of `scale`. The quantized estimates drive graph traversal; survivors are
+//! re-ranked in full precision (optionally through the AOT Pallas rerank
+//! artifact) — the asymmetric-refinement pattern HNSW libraries use.
+
+use crate::distance::Metric;
+
+/// A quantized vector store: row-major `[n, dim]` i8 codes + one scale.
+#[derive(Clone, Debug)]
+pub struct QuantizedStore {
+    pub dim: usize,
+    pub scale: f32,
+    codes: Vec<i8>,
+}
+
+impl QuantizedStore {
+    /// Quantize `data` (row-major `[n, dim]` f32).
+    pub fn build(data: &[f32], dim: usize) -> QuantizedStore {
+        assert!(dim > 0 && data.len() % dim == 0);
+        let scale = choose_scale(data);
+        let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+        let codes = data
+            .iter()
+            .map(|&x| (x * inv).round().clamp(-127.0, 127.0) as i8)
+            .collect();
+        QuantizedStore { dim, scale, codes }
+    }
+
+    pub fn len(&self) -> usize {
+        if self.dim == 0 {
+            0
+        } else {
+            self.codes.len() / self.dim
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+
+    /// Codes of vector `i`.
+    #[inline]
+    pub fn code(&self, i: usize) -> &[i8] {
+        &self.codes[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Quantize a query once per search (symmetric computation).
+    pub fn encode_query(&self, q: &[f32]) -> Vec<i8> {
+        let inv = if self.scale > 0.0 { 1.0 / self.scale } else { 0.0 };
+        q.iter()
+            .map(|&x| (x * inv).round().clamp(-127.0, 127.0) as i8)
+            .collect()
+    }
+
+    /// Approximate distance between an encoded query and stored vector `i`,
+    /// in the same units as the f32 metric (so thresholds transfer).
+    #[inline]
+    pub fn distance(&self, metric: Metric, qcode: &[i8], i: usize) -> f32 {
+        let code = self.code(i);
+        match metric {
+            Metric::L2 => l2_sq_i8(qcode, code) as f32 * self.scale * self.scale,
+            Metric::Angular => 1.0 - dot_i8(qcode, code) as f32 * self.scale * self.scale,
+            Metric::Ip => -(dot_i8(qcode, code) as f32) * self.scale * self.scale,
+        }
+    }
+
+    /// Bytes used by the codes (for memory reporting).
+    pub fn bytes(&self) -> usize {
+        self.codes.len()
+    }
+}
+
+/// Robust scale: 99.9th percentile of |x| over a strided sample, / 127.
+fn choose_scale(data: &[f32]) -> f32 {
+    if data.is_empty() {
+        return 1.0;
+    }
+    let stride = (data.len() / 65_536).max(1);
+    let mut sample: Vec<f32> = data.iter().step_by(stride).map(|x| x.abs()).collect();
+    sample.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((sample.len() as f64 - 1.0) * 0.999) as usize;
+    let q = sample[idx].max(1e-12);
+    q / 127.0
+}
+
+/// i8 squared-L2 accumulated in i32.
+///
+/// §Perf: 32-wide chunks with an i16 difference (`pmaddwd`-shaped for the
+/// vectorizer) measured 1.7x faster than the naive 16-wide i32 form with
+/// `target-cpu=native` (EXPERIMENTS.md §Perf/L3: 18.1 → 10.4 ns/pair at
+/// d=128 on this box).
+#[inline]
+pub fn l2_sq_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0i32; 32];
+    let chunks = a.len() / 32;
+    for c in 0..chunks {
+        let ao = &a[c * 32..c * 32 + 32];
+        let bo = &b[c * 32..c * 32 + 32];
+        for i in 0..32 {
+            let d = (ao[i] as i16 - bo[i] as i16) as i32;
+            acc[i] += d * d;
+        }
+    }
+    let mut sum: i32 = acc.iter().sum();
+    for i in chunks * 32..a.len() {
+        let d = a[i] as i32 - b[i] as i32;
+        sum += d * d;
+    }
+    sum
+}
+
+/// i8 inner product accumulated in i32 (same `pmaddwd`-shaped pattern —
+/// 2.3x over the naive form, see §Perf).
+#[inline]
+pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0i32; 32];
+    let chunks = a.len() / 32;
+    for c in 0..chunks {
+        let ao = &a[c * 32..c * 32 + 32];
+        let bo = &b[c * 32..c * 32 + 32];
+        for i in 0..32 {
+            acc[i] += (ao[i] as i16 as i32) * (bo[i] as i16 as i32);
+        }
+    }
+    let mut sum: i32 = acc.iter().sum();
+    for i in chunks * 32..a.len() {
+        sum += a[i] as i32 * b[i] as i32;
+    }
+    sum
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_data(n: usize, dim: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n * dim).map(|_| rng.next_gaussian_f32()).collect()
+    }
+
+    #[test]
+    fn quantized_l2_close_to_exact() {
+        let dim = 64;
+        let data = random_data(200, dim, 1);
+        let store = QuantizedStore::build(&data, dim);
+        let q = &data[0..dim];
+        let qc = store.encode_query(q);
+        let mut max_rel = 0f32;
+        for i in 1..200 {
+            let exact = crate::distance::l2_sq(q, &data[i * dim..(i + 1) * dim]);
+            let approx = store.distance(Metric::L2, &qc, i);
+            let rel = (exact - approx).abs() / exact.max(1e-6);
+            max_rel = max_rel.max(rel);
+        }
+        assert!(max_rel < 0.05, "max relative error {max_rel}");
+    }
+
+    #[test]
+    fn quantized_preserves_ranking_mostly() {
+        // SQ8 must keep the true nearest neighbor inside its top-5.
+        let dim = 128;
+        let n = 500;
+        let data = random_data(n, dim, 2);
+        let store = QuantizedStore::build(&data, dim);
+        let mut rng = Rng::new(3);
+        for _ in 0..20 {
+            let qi = rng.next_below(n);
+            let q = &data[qi * dim..(qi + 1) * dim];
+            let qc = store.encode_query(q);
+            let mut exact: Vec<(f32, usize)> = (0..n)
+                .filter(|&i| i != qi)
+                .map(|i| (crate::distance::l2_sq(q, &data[i * dim..(i + 1) * dim]), i))
+                .collect();
+            exact.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let true_nn = exact[0].1;
+            let mut approx: Vec<(f32, usize)> = (0..n)
+                .filter(|&i| i != qi)
+                .map(|i| (store.distance(Metric::L2, &qc, i), i))
+                .collect();
+            approx.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let top5: Vec<usize> = approx.iter().take(5).map(|x| x.1).collect();
+            assert!(top5.contains(&true_nn));
+        }
+    }
+
+    #[test]
+    fn self_distance_zero() {
+        let dim = 32;
+        let data = random_data(10, dim, 4);
+        let store = QuantizedStore::build(&data, dim);
+        let qc = store.encode_query(&data[3 * dim..4 * dim]);
+        assert_eq!(store.distance(Metric::L2, &qc, 3), 0.0);
+    }
+
+    #[test]
+    fn i8_kernels_match_naive() {
+        let mut rng = Rng::new(5);
+        for len in [0usize, 1, 15, 16, 17, 64, 100] {
+            let a: Vec<i8> = (0..len).map(|_| (rng.next_below(255) as i32 - 127) as i8).collect();
+            let b: Vec<i8> = (0..len).map(|_| (rng.next_below(255) as i32 - 127) as i8).collect();
+            let l2_naive: i32 = a
+                .iter()
+                .zip(&b)
+                .map(|(x, y)| {
+                    let d = *x as i32 - *y as i32;
+                    d * d
+                })
+                .sum();
+            let dot_naive: i32 = a.iter().zip(&b).map(|(x, y)| *x as i32 * *y as i32).sum();
+            assert_eq!(l2_sq_i8(&a, &b), l2_naive, "len={len}");
+            assert_eq!(dot_i8(&a, &b), dot_naive, "len={len}");
+        }
+    }
+
+    #[test]
+    fn store_accessors() {
+        let data = random_data(7, 16, 6);
+        let s = QuantizedStore::build(&data, 16);
+        assert_eq!(s.len(), 7);
+        assert!(!s.is_empty());
+        assert_eq!(s.code(6).len(), 16);
+        assert_eq!(s.bytes(), 7 * 16);
+    }
+}

@@ -1,0 +1,150 @@
+//! Shared machinery for the paper-table bench targets (`rust/benches/`).
+//!
+//! Scale control: the paper ran million-vector datasets on a large
+//! multicore testbed; this sandbox is single-core, so the default bench
+//! scale is reduced (counts below). Env overrides:
+//! `CRINN_BENCH_N` (base vectors cap), `CRINN_BENCH_QUERIES`,
+//! `CRINN_BENCH_EF` (comma list), `CRINN_BENCH_DATASETS` (comma list).
+
+use crate::anns::{AnnIndex, VectorSet};
+use crate::dataset::synth;
+use crate::dataset::Dataset;
+use crate::eval::sweep::{sweep_index, SweepResult};
+use crate::variants::VariantConfig;
+use std::sync::Arc;
+
+/// Default per-dataset base count for benches (single-core budget).
+pub const DEFAULT_BENCH_N: usize = 8_000;
+pub const DEFAULT_BENCH_QUERIES: usize = 120;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default)
+}
+
+/// The ef grid used by the paper benches.
+pub fn bench_ef_grid() -> Vec<usize> {
+    if let Ok(s) = std::env::var("CRINN_BENCH_EF") {
+        return s.split(',').filter_map(|t| t.trim().parse().ok()).collect();
+    }
+    vec![10, 16, 24, 32, 48, 64, 96, 128, 192, 256]
+}
+
+/// Dataset names to bench (default: the six Table-2 datasets).
+pub fn bench_dataset_names() -> Vec<String> {
+    if let Ok(s) = std::env::var("CRINN_BENCH_DATASETS") {
+        return s.split(',').map(|t| t.trim().to_string()).collect();
+    }
+    synth::paper_dataset_names()
+        .into_iter()
+        .map(String::from)
+        .collect()
+}
+
+/// Generate one bench dataset with ground truth at the bench scale.
+pub fn bench_dataset(name: &str, k: usize) -> Dataset {
+    let sp = synth::spec(name).unwrap_or_else(|| panic!("unknown dataset {name}"));
+    let n = env_usize("CRINN_BENCH_N", DEFAULT_BENCH_N).min(sp.full_base);
+    let nq = env_usize("CRINN_BENCH_QUERIES", DEFAULT_BENCH_QUERIES).min(sp.full_queries);
+    synth::generate_with_gt(name, n, nq, k, 42)
+}
+
+/// The Figure-1 algorithm roster: `(label, builder)`.
+pub fn algorithms() -> Vec<(&'static str, fn(&Dataset, u64) -> Arc<dyn AnnIndex>)> {
+    fn crinn(ds: &Dataset, seed: u64) -> Arc<dyn AnnIndex> {
+        Arc::new(
+            crate::anns::glass::GlassIndex::build(
+                VectorSet::from_dataset(ds),
+                VariantConfig::crinn_full(),
+                seed,
+            )
+            .with_label("crinn"),
+        )
+    }
+    fn glass(ds: &Dataset, seed: u64) -> Arc<dyn AnnIndex> {
+        Arc::new(crate::anns::glass::GlassIndex::build(
+            VectorSet::from_dataset(ds),
+            VariantConfig::glass_baseline(),
+            seed,
+        ))
+    }
+    fn parlayann(ds: &Dataset, seed: u64) -> Arc<dyn AnnIndex> {
+        Arc::new(crate::anns::vamana::VamanaIndex::build(
+            VectorSet::from_dataset(ds),
+            crate::anns::vamana::VamanaParams::default(),
+            seed,
+        ))
+    }
+    fn nndescent(ds: &Dataset, seed: u64) -> Arc<dyn AnnIndex> {
+        Arc::new(crate::anns::nndescent::NnDescentIndex::build(
+            VectorSet::from_dataset(ds),
+            crate::anns::nndescent::NnDescentParams::default(),
+            seed,
+        ))
+    }
+    fn pynndescent(ds: &Dataset, seed: u64) -> Arc<dyn AnnIndex> {
+        Arc::new(crate::anns::nndescent::NnDescentIndex::build(
+            VectorSet::from_dataset(ds),
+            crate::anns::nndescent::NnDescentParams::pynndescent(),
+            seed,
+        ))
+    }
+    fn vearch(ds: &Dataset, seed: u64) -> Arc<dyn AnnIndex> {
+        Arc::new(crate::anns::ivf::IvfIndex::build(
+            VectorSet::from_dataset(ds),
+            crate::anns::ivf::IvfParams::default(),
+            seed,
+        ))
+    }
+    fn voyager(ds: &Dataset, seed: u64) -> Arc<dyn AnnIndex> {
+        Arc::new(
+            crate::anns::hnsw::HnswIndex::build(
+                VectorSet::from_dataset(ds),
+                &crate::variants::ConstructionKnobs {
+                    m: 12,
+                    ef_construction: 200,
+                    ..Default::default()
+                },
+                crate::variants::SearchKnobs::default(),
+                seed,
+            )
+            .with_label("voyager"),
+        )
+    }
+    vec![
+        ("crinn", crinn),
+        ("glass", glass),
+        ("parlayann", parlayann),
+        ("nndescent", nndescent),
+        ("pynndescent", pynndescent),
+        ("vearch-ivf", vearch),
+        ("voyager", voyager),
+    ]
+}
+
+/// Build + sweep one algorithm on one dataset.
+pub fn run_algorithm(
+    ds: &Dataset,
+    label: &str,
+    builder: fn(&Dataset, u64) -> Arc<dyn AnnIndex>,
+    ef_grid: &[usize],
+) -> SweepResult {
+    let (build_s, index) = crate::util::bench::time_once(|| builder(ds, 42));
+    eprintln!(
+        "  [{}] {} built in {:.2}s ({:.1} MiB)",
+        ds.name,
+        label,
+        build_s,
+        index.memory_bytes() as f64 / 1048576.0
+    );
+    sweep_index(index.as_ref(), ds, ds.gt_k, ef_grid, build_s)
+}
+
+/// Reports directory.
+pub fn reports_dir() -> std::path::PathBuf {
+    let p = std::path::PathBuf::from("reports");
+    std::fs::create_dir_all(&p).ok();
+    p
+}

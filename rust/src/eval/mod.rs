@@ -1,0 +1,133 @@
+//! Evaluation harness: ann-benchmarks-style ef sweeps, QPS/recall curves,
+//! fixed-recall interpolation (Table 3), and report writers.
+
+pub mod harness;
+pub mod report;
+pub mod sweep;
+
+pub use sweep::{sweep_index, CurvePoint, SweepResult};
+
+/// Default ef sweep grid (ann-benchmarks-like spacing).
+pub const DEFAULT_EF_GRID: &[usize] = &[10, 16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512];
+
+/// Interpolate QPS at a fixed recall from a (recall-sorted) curve.
+/// Linear in (recall, log QPS) between the bracketing points — the
+/// standard way Table-3-style numbers are read off Figure-1-style curves.
+/// Returns `None` when the curve never reaches `target`.
+pub fn qps_at_recall(points: &[CurvePoint], target: f64) -> Option<f64> {
+    let mut pts: Vec<&CurvePoint> = points.iter().collect();
+    pts.sort_by(|a, b| a.recall.partial_cmp(&b.recall).unwrap());
+    // Best (max) QPS among points at/above target, interpolated at the
+    // crossing for fairness.
+    let above: Vec<&&CurvePoint> = pts.iter().filter(|p| p.recall >= target).collect();
+    if above.is_empty() {
+        return None;
+    }
+    // Find bracketing pair (last below, first above).
+    let below: Option<&&CurvePoint> = pts.iter().rev().find(|p| p.recall < target);
+    let hi = above
+        .iter()
+        .max_by(|a, b| a.qps.partial_cmp(&b.qps).unwrap())
+        .unwrap();
+    match below {
+        None => Some(hi.qps),
+        Some(lo) => {
+            // Interpolate between lo and the *first* point above target in
+            // recall order (the pareto neighbor), in log-QPS space.
+            let first_above = above
+                .iter()
+                .min_by(|a, b| a.recall.partial_cmp(&b.recall).unwrap())
+                .unwrap();
+            if first_above.recall == lo.recall {
+                return Some(first_above.qps);
+            }
+            let t = (target - lo.recall) / (first_above.recall - lo.recall);
+            let lq = lo.qps.max(1e-9).ln();
+            let hq = first_above.qps.max(1e-9).ln();
+            let interp = (lq + t * (hq - lq)).exp();
+            // Never report more than the best measured point above target.
+            Some(interp.max(first_above.qps.min(hi.qps)))
+        }
+    }
+}
+
+/// Reduce a curve to its pareto frontier (max QPS per recall level),
+/// recall-ascending. Matches how ann-benchmarks plots Figure 1.
+pub fn pareto_frontier(points: &[CurvePoint]) -> Vec<CurvePoint> {
+    let mut pts = points.to_vec();
+    pts.sort_by(|a, b| {
+        a.recall
+            .partial_cmp(&b.recall)
+            .unwrap()
+            .then(b.qps.partial_cmp(&a.qps).unwrap())
+    });
+    // One point per recall level: the fastest.
+    pts.dedup_by(|b, a| {
+        if a.recall == b.recall {
+            if b.qps > a.qps {
+                a.qps = b.qps;
+            }
+            true
+        } else {
+            false
+        }
+    });
+    let mut out: Vec<CurvePoint> = Vec::new();
+    for p in pts.into_iter().rev() {
+        // iterate recall-descending; keep if QPS exceeds all kept so far
+        if out.last().map(|l: &CurvePoint| p.qps > l.qps).unwrap_or(true) {
+            out.push(p);
+        }
+    }
+    out.reverse();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(recall: f64, qps: f64) -> CurvePoint {
+        CurvePoint {
+            ef: 0,
+            recall,
+            qps,
+            mean_latency_s: 1.0 / qps,
+            p99_latency_s: 1.0 / qps,
+        }
+    }
+
+    #[test]
+    fn qps_at_recall_interpolates() {
+        let curve = vec![pt(0.80, 10_000.0), pt(0.90, 5_000.0), pt(0.99, 1_000.0)];
+        let q = qps_at_recall(&curve, 0.85).unwrap();
+        assert!(q < 10_000.0 && q > 5_000.0, "q={q}");
+        assert_eq!(qps_at_recall(&curve, 0.999), None);
+        let exact = qps_at_recall(&curve, 0.90).unwrap();
+        assert!((exact - 5_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn qps_at_recall_all_above() {
+        let curve = vec![pt(0.95, 4_000.0), pt(0.99, 1_000.0)];
+        assert_eq!(qps_at_recall(&curve, 0.90), Some(4_000.0));
+    }
+
+    #[test]
+    fn pareto_removes_dominated() {
+        let curve = vec![
+            pt(0.8, 9_000.0),
+            pt(0.85, 10_000.0), // dominates the previous
+            pt(0.9, 6_000.0),
+            pt(0.92, 7_000.0), // dominates the previous
+            pt(0.99, 1_000.0),
+        ];
+        let front = pareto_frontier(&curve);
+        let recalls: Vec<f64> = front.iter().map(|p| p.recall).collect();
+        assert_eq!(recalls, vec![0.85, 0.92, 0.99]);
+        for w in front.windows(2) {
+            assert!(w[0].qps > w[1].qps);
+            assert!(w[0].recall < w[1].recall);
+        }
+    }
+}

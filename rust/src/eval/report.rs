@@ -1,0 +1,179 @@
+//! Report writers: CSV, markdown tables, and ASCII QPS–recall plots — the
+//! bench targets regenerate each paper table/figure through these.
+
+use crate::eval::sweep::{CurvePoint, SweepResult};
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Write sweep results as CSV (one row per point; Figure-1 data file).
+pub fn sweeps_to_csv(sweeps: &[SweepResult]) -> String {
+    let mut out = String::from("dataset,algorithm,k,ef,recall,qps,mean_latency_s,p99_latency_s,build_seconds,memory_bytes\n");
+    for s in sweeps {
+        for p in &s.points {
+            let _ = writeln!(
+                out,
+                "{},{},{},{},{:.6},{:.2},{:.9},{:.9},{:.3},{}",
+                s.dataset, s.index_name, s.k, p.ef, p.recall, p.qps,
+                p.mean_latency_s, p.p99_latency_s, s.build_seconds, s.memory_bytes
+            );
+        }
+    }
+    out
+}
+
+/// Save a string to a file, creating parent dirs.
+pub fn save(path: &Path, content: &str) -> anyhow::Result<()> {
+    if let Some(p) = path.parent() {
+        std::fs::create_dir_all(p)?;
+    }
+    std::fs::write(path, content)?;
+    Ok(())
+}
+
+/// ASCII QPS-recall plot (log-y), one letter per algorithm — the terminal
+/// rendition of one Figure-1 panel.
+pub fn ascii_plot(title: &str, sweeps: &[SweepResult], width: usize, height: usize) -> String {
+    let mut out = format!("## {title}\n");
+    let fronts: Vec<(char, &SweepResult, Vec<CurvePoint>)> = sweeps
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            (
+                (b'A' + (i % 26) as u8) as char,
+                s,
+                crate::eval::pareto_frontier(&s.points),
+            )
+        })
+        .collect();
+    let all: Vec<&CurvePoint> = fronts.iter().flat_map(|(_, _, f)| f.iter()).collect();
+    if all.is_empty() {
+        return out + "(no data)\n";
+    }
+    let rmin: f64 = 0.5_f64.min(
+        all.iter()
+            .map(|p| p.recall)
+            .fold(f64::INFINITY, f64::min),
+    );
+    let rmax = 1.0;
+    let qmin = all.iter().map(|p| p.qps.max(1.0)).fold(f64::INFINITY, f64::min);
+    let qmax = all.iter().map(|p| p.qps.max(1.0)).fold(0.0_f64, f64::max);
+    let (lqmin, lqmax) = (qmin.ln(), (qmax * 1.2).ln());
+    let mut grid = vec![vec![' '; width]; height];
+    for (ch, _, front) in &fronts {
+        for p in front {
+            let x = ((p.recall - rmin) / (rmax - rmin) * (width as f64 - 1.0))
+                .round()
+                .clamp(0.0, width as f64 - 1.0) as usize;
+            let y = if lqmax > lqmin {
+                ((p.qps.max(1.0).ln() - lqmin) / (lqmax - lqmin) * (height as f64 - 1.0))
+                    .round()
+                    .clamp(0.0, height as f64 - 1.0) as usize
+            } else {
+                0
+            };
+            grid[height - 1 - y][x] = *ch;
+        }
+    }
+    let _ = writeln!(out, "QPS (log) {:>10.0} ┐", qmax);
+    for row in &grid {
+        let _ = writeln!(out, "           {} │", row.iter().collect::<String>());
+    }
+    let _ = writeln!(out, "{:>10.0} ┘{}", qmin, "─".repeat(width));
+    let _ = writeln!(
+        out,
+        "            recall: {:.2} → 1.00   legend: {}",
+        rmin,
+        fronts
+            .iter()
+            .map(|(c, s, _)| format!("{c}={}", s.index_name))
+            .collect::<Vec<_>>()
+            .join("  ")
+    );
+    out
+}
+
+/// Markdown table of QPS at fixed recall targets (Table-3 shape):
+/// rows = (dataset, recall target), columns = algorithms.
+pub fn fixed_recall_table(
+    sweeps: &[SweepResult],
+    targets: &[f64],
+) -> String {
+    let mut algos: Vec<String> = sweeps.iter().map(|s| s.index_name.clone()).collect();
+    algos.dedup();
+    let mut datasets: Vec<String> = sweeps.iter().map(|s| s.dataset.clone()).collect();
+    datasets.dedup();
+    let mut out = String::new();
+    let _ = write!(out, "| dataset | recall |");
+    for a in &algos {
+        let _ = write!(out, " {a} |");
+    }
+    out.push('\n');
+    let _ = write!(out, "|---|---|");
+    for _ in &algos {
+        let _ = write!(out, "---|");
+    }
+    out.push('\n');
+    for d in &datasets {
+        for &t in targets {
+            let _ = write!(out, "| {d} | {t:.3} |");
+            for a in &algos {
+                let q = sweeps
+                    .iter()
+                    .find(|s| &s.dataset == d && &s.index_name == a)
+                    .and_then(|s| crate::eval::qps_at_recall(&s.points, t));
+                match q {
+                    Some(q) => {
+                        let _ = write!(out, " {q:.0} |");
+                    }
+                    None => {
+                        let _ = write!(out, " — |");
+                    }
+                }
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_sweep(name: &str, dataset: &str) -> SweepResult {
+        SweepResult {
+            index_name: name.into(),
+            dataset: dataset.into(),
+            k: 10,
+            points: vec![
+                CurvePoint { ef: 10, recall: 0.8, qps: 10_000.0, mean_latency_s: 1e-4, p99_latency_s: 2e-4 },
+                CurvePoint { ef: 50, recall: 0.95, qps: 4_000.0, mean_latency_s: 2.5e-4, p99_latency_s: 4e-4 },
+            ],
+            build_seconds: 1.0,
+            memory_bytes: 1024,
+        }
+    }
+
+    #[test]
+    fn csv_contains_all_points() {
+        let csv = sweeps_to_csv(&[fake_sweep("a", "d1"), fake_sweep("b", "d1")]);
+        assert_eq!(csv.lines().count(), 1 + 4);
+        assert!(csv.contains("d1,a,10,10,"));
+    }
+
+    #[test]
+    fn ascii_plot_renders() {
+        let plot = ascii_plot("demo", &[fake_sweep("hnsw", "d1")], 40, 10);
+        assert!(plot.contains("A"));
+        assert!(plot.contains("legend: A=hnsw"));
+    }
+
+    #[test]
+    fn fixed_recall_table_shape() {
+        let t = fixed_recall_table(&[fake_sweep("a", "d1"), fake_sweep("b", "d1")], &[0.9, 0.99]);
+        assert!(t.contains("| d1 | 0.900 |"));
+        assert!(t.contains("—")); // 0.99 unreachable
+        let header_cols = t.lines().next().unwrap().matches('|').count();
+        assert_eq!(header_cols, 5); // | dataset | recall | a | b |
+    }
+}

@@ -1,0 +1,138 @@
+//! ef sweeps: measure (recall, QPS) points for an index over a query set —
+//! the measurement protocol behind Figure 1, Table 3, Table 4 and the
+//! CRINN reward (§3.3).
+
+use crate::anns::AnnIndex;
+use crate::dataset::{gt::recall_at_k, Dataset};
+use std::time::Instant;
+
+/// One measured point on a QPS-recall curve.
+#[derive(Clone, Debug)]
+pub struct CurvePoint {
+    pub ef: usize,
+    pub recall: f64,
+    pub qps: f64,
+    pub mean_latency_s: f64,
+    pub p99_latency_s: f64,
+}
+
+/// A full sweep for one index on one dataset.
+#[derive(Clone, Debug)]
+pub struct SweepResult {
+    pub index_name: String,
+    pub dataset: String,
+    pub k: usize,
+    pub points: Vec<CurvePoint>,
+    pub build_seconds: f64,
+    pub memory_bytes: usize,
+}
+
+impl SweepResult {
+    /// Pareto frontier of the measured points.
+    pub fn frontier(&self) -> Vec<CurvePoint> {
+        crate::eval::pareto_frontier(&self.points)
+    }
+}
+
+/// Measure one ef setting: runs every query once (timed, single thread —
+/// ann-benchmarks' protocol), returns the curve point.
+pub fn measure_point(index: &dyn AnnIndex, ds: &Dataset, k: usize, ef: usize) -> CurvePoint {
+    assert!(!ds.gt.is_empty(), "dataset needs ground truth");
+    let nq = ds.n_queries();
+    let mut lat = Vec::with_capacity(nq * 2);
+    let mut recall_acc = 0.0;
+    // Warmup on a few queries (pays one-time lazy costs).
+    for qi in 0..nq.min(5) {
+        std::hint::black_box(index.search(ds.query_vec(qi), k, ef));
+    }
+    // Repeat the full query set until >= MIN_SECS of measurement has
+    // accumulated (up to MAX_PASSES) — a single 100-query pass is ~2 ms at
+    // small scale and VM jitter dominates it.
+    const MIN_SECS: f64 = 0.04;
+    const MAX_PASSES: usize = 8;
+    let mut passes = 0usize;
+    let mut total = 0.0f64;
+    while passes < MAX_PASSES && (passes == 0 || total < MIN_SECS) {
+        for qi in 0..nq {
+            let q = ds.query_vec(qi);
+            let t = Instant::now();
+            let found = index.search(q, k, ef);
+            let dt = t.elapsed().as_secs_f64();
+            lat.push(dt);
+            total += dt;
+            if passes == 0 {
+                recall_acc += recall_at_k(&found, &ds.gt[qi], k);
+            }
+        }
+        passes += 1;
+    }
+    let stats = crate::util::bench::Stats::from_samples(lat);
+    CurvePoint {
+        ef,
+        recall: recall_acc / nq as f64,
+        qps: if stats.mean > 0.0 { 1.0 / stats.mean } else { 0.0 },
+        mean_latency_s: stats.mean,
+        p99_latency_s: stats.p99,
+    }
+}
+
+/// Sweep an index over an ef grid.
+pub fn sweep_index(
+    index: &dyn AnnIndex,
+    ds: &Dataset,
+    k: usize,
+    ef_grid: &[usize],
+    build_seconds: f64,
+) -> SweepResult {
+    let points = ef_grid
+        .iter()
+        .map(|&ef| measure_point(index, ds, k, ef))
+        .collect();
+    SweepResult {
+        index_name: index.name(),
+        dataset: ds.name.clone(),
+        k,
+        points,
+        build_seconds,
+        memory_bytes: index.memory_bytes(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::anns::bruteforce::BruteForceIndex;
+    use crate::anns::VectorSet;
+    use crate::dataset::synth;
+
+    #[test]
+    fn bruteforce_sweep_has_recall_one() {
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 300, 20, 61);
+        ds.compute_ground_truth(10);
+        let idx = BruteForceIndex::build(VectorSet::from_dataset(&ds));
+        let res = sweep_index(&idx, &ds, 10, &[10, 20], 0.0);
+        assert_eq!(res.points.len(), 2);
+        for p in &res.points {
+            assert!((p.recall - 1.0).abs() < 1e-9, "brute force recall {}", p.recall);
+            assert!(p.qps > 0.0);
+            assert!(p.mean_latency_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn hnsw_sweep_recall_increases_with_ef() {
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 1200, 40, 62);
+        ds.compute_ground_truth(10);
+        let idx = crate::anns::hnsw::HnswIndex::build(
+            VectorSet::from_dataset(&ds),
+            &crate::variants::ConstructionKnobs::default(),
+            crate::variants::SearchKnobs::default(),
+            1,
+        );
+        let res = sweep_index(&idx, &ds, 10, &[10, 64, 256], 0.0);
+        assert!(res.points[2].recall >= res.points[0].recall);
+        assert!(res.points[2].recall > 0.9);
+    }
+}

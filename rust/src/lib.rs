@@ -1,0 +1,46 @@
+//! # CRINN — Contrastive Reinforcement Learning for ANNS (reproduction)
+//!
+//! Full-system reproduction of *CRINN: Contrastive Reinforcement Learning
+//! for Approximate Nearest Neighbor Search* (cs.LG 2025) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the request-path coordinator: a complete ANNS
+//!   engine (HNSW / GLASS / NN-Descent / Vamana / IVF / brute force), the
+//!   CRINN contrastive-RL optimization loop (reward, exemplar database,
+//!   GRPO trainer), a batching/sharding serving layer, and the
+//!   ann-benchmarks-style evaluation harness.
+//! * **L2/L1 (python/, build-time only)** — JAX compute graphs calling
+//!   Pallas kernels, AOT-lowered to HLO text in `artifacts/` and executed
+//!   from [`runtime`] via the PJRT C API. Python never runs at request
+//!   time.
+//!
+//! Module map (see DESIGN.md for the full inventory):
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | substrates rebuilt from scratch (rng, json, threadpool, cli, bench) |
+//! | [`distance`] | f32 + int8-quantized distance kernels (Rust hot path) |
+//! | [`dataset`] | Table-2-matched synthetic generators, IO, LID, ground truth |
+//! | [`anns`] | index implementations incl. the GLASS starting point |
+//! | [`variants`] | the §6 optimization-knob space (CRINN's action space) |
+//! | [`crinn`] | the paper's contribution: contrastive RL over ANNS modules |
+//! | [`runtime`] | PJRT engine: loads `artifacts/*.hlo.txt`, executes |
+//! | [`coordinator`] | dynamic batcher + sharded router + query server |
+//! | [`eval`] | ef sweeps, recall/QPS curves, fixed-recall tables, reports |
+
+pub mod anns;
+pub mod coordinator;
+pub mod crinn;
+pub mod dataset;
+pub mod distance;
+pub mod eval;
+pub mod runtime;
+pub mod util;
+pub mod variants;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Default number of neighbors (k) used across benches — matches
+/// ann-benchmarks' k=10 protocol that the paper's Figure 1 uses.
+pub const DEFAULT_K: usize = 10;

@@ -1,0 +1,446 @@
+//! PJRT execution engine.
+//!
+//! Compiles HLO-text artifacts lazily (first use) and caches the loaded
+//! executables. Exposes the three batch entry points the coordinator and
+//! trainer need:
+//! * [`Engine::scan`] — `[QB, D] x [BB, D] -> [QB, BB]` distance blocks
+//!   (brute-force ground truth / IVF coarse scoring);
+//! * [`Engine::rerank`] — `[QB, D] x [QB, C, D] -> [QB, C]` exact
+//!   refinement distances for gathered candidates;
+//! * [`Engine::policy_forward`] / [`Engine::grpo_step`] — the CRINN policy
+//!   network and its fused GRPO+Adam update (Eq. 3).
+//!
+//! All inputs are padded to the compiled shapes; helpers slice the valid
+//! region back out.
+
+use crate::distance::Metric;
+use crate::runtime::manifest::Manifest;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Cached PJRT client + compiled executables.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+// SAFETY: the xla crate's client/executable wrap thread-safe XLA objects;
+// the raw pointers lack auto-impls. Access is serialized through &self and
+// the executables are internally synchronized by PJRT's CPU client.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Create from an artifacts directory (see [`crate::runtime::artifacts_dir`]).
+    pub fn new(dir: &std::path::Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+        Ok(Engine {
+            manifest,
+            client,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Create from the default artifacts location.
+    pub fn from_default_artifacts() -> Result<Engine> {
+        Engine::new(&crate::runtime::artifacts_dir())
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.artifact_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path utf8")?,
+        )
+        .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {name}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on f32 tensors; returns the flattened outputs.
+    /// `inputs` are `(data, dims)`; the lowered modules return tuples.
+    pub fn run_f32(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let exe = self.executable(name)?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                let n: usize = dims.iter().product();
+                anyhow::ensure!(
+                    data.len() == n,
+                    "input size {} != shape {:?} for {name}",
+                    data.len(),
+                    dims
+                );
+                let lit = xla::Literal::vec1(data);
+                if dims.len() == 1 {
+                    Ok(lit)
+                } else if dims.is_empty() {
+                    // 0-d scalar.
+                    Ok(xla::Literal::scalar(data[0]))
+                } else {
+                    let d: Vec<i64> = dims.iter().map(|&x| x as i64).collect();
+                    lit.reshape(&d).map_err(Into::into)
+                }
+            })
+            .collect::<Result<_>>()?;
+        let result = exe.execute::<xla::Literal>(&lits)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let parts = tuple.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+
+    // -- Batch distance paths -------------------------------------------
+
+    fn metric_tag(metric: Metric) -> &'static str {
+        match metric {
+            Metric::L2 => "l2",
+            // The angular artifact computes 1 - q·b; Ip reuses it shifted.
+            Metric::Angular | Metric::Ip => "angular",
+        }
+    }
+
+    /// Distance block: queries `[nq, dim]` (nq <= query_batch) against a
+    /// base block `[nb, dim]` (nb <= base_block). Returns `[nq][nb]`.
+    pub fn scan(
+        &self,
+        metric: Metric,
+        queries: &[f32],
+        nq: usize,
+        base: &[f32],
+        nb: usize,
+        dim: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let qb = self.manifest.query_batch;
+        let bb = self.manifest.base_block;
+        anyhow::ensure!(nq <= qb && nb <= bb, "batch too large ({nq}x{nb})");
+        anyhow::ensure!(self.manifest.has_dim(dim), "no artifact for dim {dim}");
+        let name = format!("scan_{}_d{}", Self::metric_tag(metric), dim);
+        let mut qpad = vec![0f32; qb * dim];
+        qpad[..nq * dim].copy_from_slice(&queries[..nq * dim]);
+        let mut bpad = vec![0f32; bb * dim];
+        bpad[..nb * dim].copy_from_slice(&base[..nb * dim]);
+        let out = self.run_f32(&name, &[(&qpad, &[qb, dim]), (&bpad, &[bb, dim])])?;
+        let flat = &out[0];
+        let shift = matches!(metric, Metric::Ip); // -q·b = (1 - q·b) - 1
+        Ok((0..nq)
+            .map(|qi| {
+                flat[qi * bb..qi * bb + nb]
+                    .iter()
+                    .map(|&d| if shift { d - 1.0 } else { d })
+                    .collect()
+            })
+            .collect())
+    }
+
+    /// Exact top-k over the whole base via blocked scans (the PJRT
+    /// brute-force path; cross-checked against `dataset::gt` in tests).
+    pub fn brute_force_topk(
+        &self,
+        metric: Metric,
+        queries: &[f32],
+        base: &[f32],
+        dim: usize,
+        k: usize,
+    ) -> Result<Vec<Vec<u32>>> {
+        let nq_total = queries.len() / dim;
+        let n = base.len() / dim;
+        let qb = self.manifest.query_batch;
+        let bb = self.manifest.base_block;
+        let mut out = Vec::with_capacity(nq_total);
+        for q0 in (0..nq_total).step_by(qb) {
+            let nq = (nq_total - q0).min(qb);
+            let mut pools: Vec<crate::anns::heap::TopK> =
+                (0..nq).map(|_| crate::anns::heap::TopK::new(k.min(n).max(1))).collect();
+            for b0 in (0..n).step_by(bb) {
+                let nb = (n - b0).min(bb);
+                let block = self.scan(
+                    metric,
+                    &queries[q0 * dim..(q0 + nq) * dim],
+                    nq,
+                    &base[b0 * dim..(b0 + nb) * dim],
+                    nb,
+                    dim,
+                )?;
+                for (qi, row) in block.iter().enumerate() {
+                    for (bi, &d) in row.iter().enumerate() {
+                        pools[qi].push(d, (b0 + bi) as u32);
+                    }
+                }
+            }
+            for p in pools {
+                out.push(p.into_sorted().into_iter().map(|(_, i)| i).collect());
+            }
+        }
+        Ok(out)
+    }
+
+    /// Rerank gathered candidates: `queries [nq, dim]`, `cands [nq, c, dim]`
+    /// with `nq <= query_batch`, `c <= rerank_cands`. Returns `[nq][c]`.
+    pub fn rerank(
+        &self,
+        metric: Metric,
+        queries: &[f32],
+        nq: usize,
+        cands: &[f32],
+        c: usize,
+        dim: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let qb = self.manifest.query_batch;
+        let rc = self.manifest.rerank_cands;
+        anyhow::ensure!(nq <= qb && c <= rc, "rerank batch too large ({nq}x{c})");
+        anyhow::ensure!(self.manifest.has_dim(dim), "no artifact for dim {dim}");
+        let name = format!("rerank_{}_d{}", Self::metric_tag(metric), dim);
+        let mut qpad = vec![0f32; qb * dim];
+        qpad[..nq * dim].copy_from_slice(&queries[..nq * dim]);
+        let mut cpad = vec![0f32; qb * rc * dim];
+        for qi in 0..nq {
+            let src = &cands[qi * c * dim..(qi + 1) * c * dim];
+            cpad[qi * rc * dim..qi * rc * dim + c * dim].copy_from_slice(src);
+        }
+        let out = self.run_f32(&name, &[(&qpad, &[qb, dim]), (&cpad, &[qb, rc, dim])])?;
+        let flat = &out[0];
+        let shift = matches!(metric, Metric::Ip);
+        Ok((0..nq)
+            .map(|qi| {
+                flat[qi * rc..qi * rc + c]
+                    .iter()
+                    .map(|&d| if shift { d - 1.0 } else { d })
+                    .collect()
+            })
+            .collect())
+    }
+
+    // -- Policy / GRPO paths --------------------------------------------
+
+    /// Policy forward: params (7 tensors) + features `[G, F]` ->
+    /// `(mean [G, A], logstd [G, A])`.
+    pub fn policy_forward(
+        &self,
+        params: &[Vec<f32>],
+        feats: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let m = &self.manifest;
+        anyhow::ensure!(params.len() == m.param_shapes.len(), "param arity");
+        anyhow::ensure!(feats.len() == m.group * m.feat_dim, "feature shape");
+        let mut inputs: Vec<(&[f32], Vec<usize>)> = params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.as_slice(), m.param_shapes[i].1.clone()))
+            .collect();
+        inputs.push((feats, vec![m.group, m.feat_dim]));
+        let refs: Vec<(&[f32], &[usize])> =
+            inputs.iter().map(|(d, s)| (*d, s.as_slice())).collect();
+        let out = self.run_f32("policy_fwd", &refs)?;
+        anyhow::ensure!(out.len() == 2, "policy_fwd outputs");
+        Ok((out[0].clone(), out[1].clone()))
+    }
+
+    /// One fused GRPO update. Returns `(new_params, new_m, new_v, loss)`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn grpo_step(
+        &self,
+        params: &[Vec<f32>],
+        adam_m: &[Vec<f32>],
+        adam_v: &[Vec<f32>],
+        ref_params: &[Vec<f32>],
+        feats: &[f32],
+        actions: &[f32],
+        advantages: &[f32],
+        old_logp: &[f32],
+        lr: f32,
+        clip_eps: f32,
+        kl_beta: f32,
+        t: f32,
+    ) -> Result<(Vec<Vec<f32>>, Vec<Vec<f32>>, Vec<Vec<f32>>, f32)> {
+        let m = &self.manifest;
+        let np = m.param_shapes.len();
+        let scalars = [lr, clip_eps, kl_beta, t];
+        let mut inputs: Vec<(&[f32], Vec<usize>)> = Vec::with_capacity(4 * np + 8);
+        for group in [params, adam_m, adam_v, ref_params] {
+            anyhow::ensure!(group.len() == np, "param group arity");
+            for (i, p) in group.iter().enumerate() {
+                inputs.push((p.as_slice(), m.param_shapes[i].1.clone()));
+            }
+        }
+        inputs.push((feats, vec![m.group, m.feat_dim]));
+        inputs.push((actions, vec![m.group, m.n_knobs]));
+        inputs.push((advantages, vec![m.group]));
+        inputs.push((old_logp, vec![m.group]));
+        for s in &scalars {
+            inputs.push((std::slice::from_ref(s), vec![]));
+        }
+        let refs: Vec<(&[f32], &[usize])> =
+            inputs.iter().map(|(d, s)| (*d, s.as_slice())).collect();
+        let out = self.run_f32("grpo_step", &refs)?;
+        anyhow::ensure!(out.len() == 3 * np + 1, "grpo_step outputs {}", out.len());
+        let new_params = out[..np].to_vec();
+        let new_m = out[np..2 * np].to_vec();
+        let new_v = out[2 * np..3 * np].to_vec();
+        let loss = out[3 * np][0];
+        Ok((new_params, new_m, new_v, loss))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn engine() -> Option<Engine> {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Engine::new(&dir).expect("engine"))
+    }
+
+    #[test]
+    fn scan_matches_rust_distances() {
+        let Some(e) = engine() else { return };
+        let dim = 64;
+        let mut rng = Rng::new(1);
+        let q: Vec<f32> = (0..5 * dim).map(|_| rng.next_gaussian_f32()).collect();
+        let b: Vec<f32> = (0..37 * dim).map(|_| rng.next_gaussian_f32()).collect();
+        let got = e.scan(Metric::L2, &q, 5, &b, 37, dim).unwrap();
+        for qi in 0..5 {
+            for bi in 0..37 {
+                let want =
+                    crate::distance::l2_sq(&q[qi * dim..(qi + 1) * dim], &b[bi * dim..(bi + 1) * dim]);
+                assert!(
+                    (got[qi][bi] - want).abs() < 1e-2 * (1.0 + want.abs()),
+                    "q{qi} b{bi}: {} vs {want}",
+                    got[qi][bi]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn brute_force_topk_matches_rust_gt() {
+        let Some(e) = engine() else { return };
+        let dim = 64;
+        let mut rng = Rng::new(2);
+        let base: Vec<f32> = (0..500 * dim).map(|_| rng.next_gaussian_f32()).collect();
+        let q: Vec<f32> = (0..3 * dim).map(|_| rng.next_gaussian_f32()).collect();
+        let got = e.brute_force_topk(Metric::L2, &q, &base, dim, 10).unwrap();
+        let want = crate::dataset::gt::brute_force_topk(&base, &q, dim, Metric::L2, 10);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn rerank_matches_rust_distances() {
+        let Some(e) = engine() else { return };
+        let dim = 64;
+        let mut rng = Rng::new(3);
+        let nq = 4;
+        let c = 17;
+        let q: Vec<f32> = (0..nq * dim).map(|_| rng.next_gaussian_f32()).collect();
+        let cands: Vec<f32> = (0..nq * c * dim).map(|_| rng.next_gaussian_f32()).collect();
+        let got = e.rerank(Metric::L2, &q, nq, &cands, c, dim).unwrap();
+        for qi in 0..nq {
+            for ci in 0..c {
+                let want = crate::distance::l2_sq(
+                    &q[qi * dim..(qi + 1) * dim],
+                    &cands[(qi * c + ci) * dim..(qi * c + ci + 1) * dim],
+                );
+                assert!(
+                    (got[qi][ci] - want).abs() < 1e-2 * (1.0 + want.abs()),
+                    "{} vs {want}",
+                    got[qi][ci]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn policy_forward_shapes_and_determinism() {
+        let Some(e) = engine() else { return };
+        let m = &e.manifest;
+        let params = m.init_params.clone();
+        let feats = vec![0.1f32; m.group * m.feat_dim];
+        let (mean, logstd) = e.policy_forward(&params, &feats).unwrap();
+        assert_eq!(mean.len(), m.group * m.n_knobs);
+        assert_eq!(logstd.len(), m.group * m.n_knobs);
+        assert!(mean.iter().all(|x| x.abs() <= 1.0 + 1e-5));
+        let (mean2, _) = e.policy_forward(&params, &feats).unwrap();
+        assert_eq!(mean, mean2);
+    }
+
+    #[test]
+    fn grpo_step_updates_params_toward_advantage() {
+        let Some(e) = engine() else { return };
+        let m = &e.manifest;
+        let mut params = m.init_params.clone();
+        let zeros: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        let mut adam_m = zeros.clone();
+        let mut adam_v = zeros;
+        let refp = params.clone();
+        let mut rng = Rng::new(4);
+        let feats: Vec<f32> = (0..m.group * m.feat_dim)
+            .map(|_| rng.next_gaussian_f32() * 0.3)
+            .collect();
+        let actions: Vec<f32> = (0..m.group * m.n_knobs)
+            .map(|_| (rng.next_f32() - 0.5).clamp(-1.0, 1.0))
+            .collect();
+        let mut adv = vec![-0.5f32; m.group];
+        adv[0] = 2.0;
+        // old_logp from the initial policy (ratio starts at 1).
+        let (mean, logstd) = e.policy_forward(&params, &feats).unwrap();
+        let old_logp: Vec<f32> = (0..m.group)
+            .map(|g| {
+                (0..m.n_knobs)
+                    .map(|a| {
+                        let mu = mean[g * m.n_knobs + a];
+                        let ls = logstd[g * m.n_knobs + a];
+                        let var = (2.0 * ls).exp();
+                        let x = actions[g * m.n_knobs + a];
+                        -0.5 * ((x - mu) * (x - mu) / var
+                            + 2.0 * ls
+                            + (2.0 * std::f32::consts::PI).ln())
+                    })
+                    .sum()
+            })
+            .collect();
+        let mut last_loss = f32::INFINITY;
+        for t in 1..=5 {
+            let (np, nm, nv, loss) = e
+                .grpo_step(
+                    &params, &adam_m, &adam_v, &refp, &feats, &actions, &adv, &old_logp,
+                    0.01, 0.2, 0.01, t as f32,
+                )
+                .unwrap();
+            params = np;
+            adam_m = nm;
+            adam_v = nv;
+            assert!(loss.is_finite());
+            last_loss = loss;
+        }
+        assert!(last_loss.is_finite());
+        // Params actually moved.
+        let delta: f32 = params
+            .iter()
+            .zip(&refp)
+            .map(|(a, b)| a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum::<f32>())
+            .sum();
+        assert!(delta > 1e-4, "params did not move: {delta}");
+    }
+}

@@ -1,0 +1,153 @@
+//! `artifacts/manifest.json` — the shape contract between `aot.py` and the
+//! Rust runtime. Single source of truth for batch shapes, policy network
+//! dimensions, and the initial policy parameters.
+
+use crate::util::json::{parse, Json};
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    /// Rows per scan/rerank call (queries padded to this).
+    pub query_batch: usize,
+    /// Base vectors per scan block.
+    pub base_block: usize,
+    /// Candidates per query in the rerank artifact.
+    pub rerank_cands: usize,
+    pub n_knobs: usize,
+    pub n_exemplars: usize,
+    pub n_modules: usize,
+    pub feat_dim: usize,
+    pub hidden: usize,
+    pub group: usize,
+    /// `(name, shape)` for each policy parameter tensor, in PJRT order.
+    pub param_shapes: Vec<(String, Vec<usize>)>,
+    /// Vector dims with compiled scan/rerank artifacts.
+    pub dims: Vec<usize>,
+    /// artifact name -> file name.
+    pub artifacts: std::collections::BTreeMap<String, String>,
+    /// Flat initial policy parameters (PJRT order).
+    pub init_params: Vec<Vec<f32>>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let raw = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("read {dir:?}/manifest.json — run `make artifacts`"))?;
+        let j = parse(&raw).map_err(anyhow::Error::msg)?;
+        let u = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("manifest field {k}"))
+        };
+        let param_shapes = j
+            .get("param_shapes")
+            .and_then(Json::as_arr)
+            .context("param_shapes")?
+            .iter()
+            .map(|e| {
+                let a = e.as_arr().context("param shape entry")?;
+                let name = a[0].as_str().context("param name")?.to_string();
+                let shape = a[1]
+                    .as_arr()
+                    .context("param dims")?
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect();
+                Ok((name, shape))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let artifacts = j
+            .get("artifacts")
+            .map(|a| match a {
+                Json::Obj(m) => m
+                    .iter()
+                    .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                    .collect(),
+                _ => Default::default(),
+            })
+            .unwrap_or_default();
+        let init_params = j
+            .get("init_params")
+            .and_then(Json::as_arr)
+            .context("init_params")?
+            .iter()
+            .map(|p| {
+                p.as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(|v| v.as_f64().map(|f| f as f32))
+                    .collect()
+            })
+            .collect();
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            query_batch: u("query_batch")?,
+            base_block: u("base_block")?,
+            rerank_cands: u("rerank_cands")?,
+            n_knobs: u("n_knobs")?,
+            n_exemplars: u("n_exemplars")?,
+            n_modules: u("n_modules")?,
+            feat_dim: u("feat_dim")?,
+            hidden: u("hidden")?,
+            group: u("group")?,
+            param_shapes,
+            dims: j
+                .get("dims")
+                .and_then(Json::as_arr)
+                .context("dims")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            artifacts,
+            init_params,
+        })
+    }
+
+    /// Path of an artifact by name.
+    pub fn artifact_path(&self, name: &str) -> Result<PathBuf> {
+        let f = self
+            .artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name} not in manifest (dims compiled: {:?})", self.dims))?;
+        Ok(self.dir.join(f))
+    }
+
+    /// Whether scan/rerank artifacts exist for a vector dim.
+    pub fn has_dim(&self, dim: usize) -> bool {
+        self.dims.contains(&dim)
+    }
+
+    /// Element count of policy parameter `i`.
+    pub fn param_len(&self, i: usize) -> usize {
+        self.param_shapes[i].1.iter().product()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.query_batch, 64);
+        assert_eq!(m.base_block, 4096);
+        assert_eq!(m.n_knobs, crate::variants::N_KNOBS);
+        assert_eq!(m.param_shapes.len(), 7);
+        assert_eq!(m.init_params.len(), 7);
+        for i in 0..7 {
+            assert_eq!(m.init_params[i].len(), m.param_len(i), "param {i}");
+        }
+        assert!(m.has_dim(128));
+        assert!(m.artifact_path("grpo_step").unwrap().exists());
+        assert!(m.artifact_path("scan_l2_d128").unwrap().exists());
+    }
+}

@@ -1,0 +1,33 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `python/compile/aot.py`) and executes them on the CPU PJRT
+//! client. This is the only bridge between the Rust request path and the
+//! JAX/Pallas compute — Python never runs here.
+//!
+//! Interchange is HLO *text*: jax ≥ 0.5 emits protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::Engine;
+pub use manifest::Manifest;
+
+/// Default artifacts directory (overridable with `CRINN_ARTIFACTS`).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("CRINN_ARTIFACTS") {
+        return p.into();
+    }
+    // Walk up from cwd looking for artifacts/manifest.json (works from
+    // target/, examples, tests).
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}

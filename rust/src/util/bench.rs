@@ -1,0 +1,171 @@
+//! Measurement harness (the `criterion` substitute).
+//!
+//! Provides warmup + repeated timing with robust statistics, used both by
+//! the `rust/benches/*` targets (compiled with `harness = false`) and by
+//! the QPS measurements inside `eval::sweep` (where per-query latencies
+//! feed p50/p99 service metrics).
+
+use std::time::Instant;
+
+/// Summary statistics over a set of per-iteration durations (seconds).
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+    pub total: f64,
+}
+
+impl Stats {
+    /// Build from raw per-iteration seconds.
+    pub fn from_samples(mut xs: Vec<f64>) -> Stats {
+        if xs.is_empty() {
+            return Stats::default();
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let total: f64 = xs.iter().sum();
+        let mean = total / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let pct = |p: f64| -> f64 {
+            let idx = ((n as f64 - 1.0) * p).round() as usize;
+            xs[idx.min(n - 1)]
+        };
+        Stats {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: xs[0],
+            p50: pct(0.50),
+            p95: pct(0.95),
+            p99: pct(0.99),
+            max: xs[n - 1],
+            total,
+        }
+    }
+
+    /// Iterations per second implied by the mean.
+    pub fn rate(&self) -> f64 {
+        if self.mean > 0.0 {
+            1.0 / self.mean
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` untimed ones.
+pub fn time_iters<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(samples)
+}
+
+/// Time a single run of `f`, returning (seconds, result).
+pub fn time_once<T, F: FnOnce() -> T>(f: F) -> (f64, T) {
+    let t = Instant::now();
+    let out = f();
+    (t.elapsed().as_secs_f64(), out)
+}
+
+/// Adaptive measurement: run batches of `f` until at least `min_time_s`
+/// elapsed and `min_iters` iterations accumulated. Returns per-iteration
+/// stats. This is how the benches keep wall-clock bounded regardless of
+/// workload cost.
+pub fn time_adaptive<F: FnMut()>(min_time_s: f64, min_iters: usize, mut f: F) -> Stats {
+    // Warmup one iteration (pays lazy-init costs).
+    f();
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while samples.len() < min_iters || start.elapsed().as_secs_f64() < min_time_s {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+        if samples.len() > 1_000_000 {
+            break;
+        }
+    }
+    Stats::from_samples(samples)
+}
+
+/// Pretty-print a benchmark row (used by the custom bench targets).
+pub fn report_row(name: &str, s: &Stats) {
+    println!(
+        "{name:<44} mean {:>10}  p50 {:>10}  p99 {:>10}  ({} iters)",
+        fmt_duration(s.mean),
+        fmt_duration(s.p50),
+        fmt_duration(s.p99),
+        s.n
+    );
+}
+
+/// Human-format a duration in seconds.
+pub fn fmt_duration(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}us", s * 1e6)
+    } else {
+        format!("{:.1}ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles_ordered() {
+        let s = Stats::from_samples((1..=100).map(|i| i as f64).collect());
+        assert_eq!(s.n, 100);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        assert!((s.mean - 50.5).abs() < 1e-9);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+    }
+
+    #[test]
+    fn stats_empty_is_zeroed() {
+        let s = Stats::from_samples(vec![]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.rate(), 0.0);
+    }
+
+    #[test]
+    fn time_iters_counts() {
+        let mut calls = 0;
+        let s = time_iters(2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(s.n, 5);
+    }
+
+    #[test]
+    fn adaptive_respects_min_iters() {
+        let s = time_adaptive(0.0, 10, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(s.n >= 10);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert!(fmt_duration(2.0).ends_with('s'));
+        assert!(fmt_duration(2e-3).ends_with("ms"));
+        assert!(fmt_duration(2e-6).ends_with("us"));
+        assert!(fmt_duration(2e-9).ends_with("ns"));
+    }
+}

@@ -1,0 +1,162 @@
+//! Flag parser (the `clap` substitute).
+//!
+//! Grammar: `crinn <subcommand> [positional...] [--key value | --flag]`.
+//! Typed getters with defaults keep call sites terse; unknown-flag detection
+//! catches typos (a real footgun in benchmark sweeps).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First non-flag token (after the binary name).
+    pub command: Option<String>,
+    /// Remaining non-flag tokens.
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags read so far — for unknown-flag reporting.
+    seen: std::cell::RefCell<BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (not including the binary name).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Args {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().insert(key.to_string());
+    }
+
+    /// Raw string flag.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.mark(key);
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {s:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {s:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {s:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn bool_flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list of usize (e.g. `--ef 10,20,40`).
+    pub fn usize_list(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            None => default.to_vec(),
+            Some(s) => s
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{key}: bad integer {t:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Flags present on the command line but never read by the command.
+    pub fn unknown_flags(&self) -> Vec<String> {
+        let seen = self.seen.borrow();
+        self.flags
+            .keys()
+            .filter(|k| !seen.contains(*k))
+            .cloned()
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse("bench fig1 extra");
+        assert_eq!(a.command.as_deref(), Some("bench"));
+        assert_eq!(a.positional, vec!["fig1", "extra"]);
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse("run --n 100 --name=sift --verbose");
+        assert_eq!(a.usize_or("n", 0), 100);
+        assert_eq!(a.str_or("name", ""), "sift");
+        assert!(a.bool_flag("verbose"));
+        assert!(!a.bool_flag("quiet"));
+    }
+
+    #[test]
+    fn lists_and_defaults() {
+        let a = parse("x --ef 10,20,40");
+        assert_eq!(a.usize_list("ef", &[1]), vec![10, 20, 40]);
+        assert_eq!(a.usize_list("absent", &[7, 8]), vec![7, 8]);
+        assert_eq!(a.f64_or("tau", 0.5), 0.5);
+    }
+
+    #[test]
+    fn unknown_flags_reported() {
+        let a = parse("x --used 1 --typo 2");
+        let _ = a.get("used");
+        assert_eq!(a.unknown_flags(), vec!["typo".to_string()]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_integer_panics() {
+        let a = parse("x --n abc");
+        let _ = a.usize_or("n", 0);
+    }
+}

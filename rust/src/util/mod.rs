@@ -1,0 +1,17 @@
+//! Substrates rebuilt from scratch.
+//!
+//! The offline environment has no `rand`, `rayon`, `serde`, `clap`, or
+//! `criterion`, so this module provides the pieces of those the rest of the
+//! crate needs: a counter-based PRNG ([`rng`]), a scoped parallel-for
+//! ([`threadpool`]), a JSON writer/parser ([`json`]), a flag parser
+//! ([`cli`]), and a measurement harness ([`bench`]).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod threadpool;
+
+/// `std::hint::black_box` re-export so benches don't reach into `std::hint`
+/// everywhere (and so a fallback is centralized if the hint ever changes).
+pub use std::hint::black_box;

@@ -1,0 +1,120 @@
+//! Scoped data-parallel helpers (the `rayon` substitute).
+//!
+//! ANNS benchmarking needs two patterns: chunked `parallel_for` over index
+//! ranges (graph build, batch queries) and a `parallel_map` that preserves
+//! order. Both are built on `std::thread::scope`, sized by
+//! [`effective_threads`]. On a single-core sandbox they degrade gracefully
+//! to sequential execution with zero thread overhead.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use: `CRINN_THREADS` env override, else the
+/// machine's available parallelism.
+pub fn effective_threads() -> usize {
+    if let Ok(s) = std::env::var("CRINN_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `f(start, end)` over `[0, n)` split into contiguous chunks across
+/// threads. `f` must be `Sync`; chunks are claimed dynamically (atomic
+/// cursor) so uneven work self-balances.
+pub fn parallel_for<F>(n: usize, min_chunk: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = effective_threads();
+    if threads <= 1 || n <= min_chunk {
+        f(0, n);
+        return;
+    }
+    let chunk = min_chunk.max(n / (threads * 4)).max(1);
+    let cursor = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads.min(n.div_ceil(chunk)) {
+            s.spawn(|| loop {
+                let start = cursor.fetch_add(chunk, Ordering::Relaxed);
+                if start >= n {
+                    break;
+                }
+                let end = (start + chunk).min(n);
+                f(start, end);
+            });
+        }
+    });
+}
+
+/// Order-preserving parallel map over `0..n`.
+pub fn parallel_map<T, F>(n: usize, min_chunk: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots = SyncSlice(out.as_mut_ptr());
+        let slots_ref = &slots; // capture the Sync wrapper, not the raw ptr
+        parallel_for(n, min_chunk, move |start, end| {
+            for i in start..end {
+                // SAFETY: each index is written by exactly one chunk owner.
+                unsafe { *slots_ref.0.add(i) = f(i) };
+            }
+        });
+    }
+    out
+}
+
+/// Pointer wrapper asserting disjoint-index writes are safe to share.
+struct SyncSlice<T>(*mut T);
+unsafe impl<T: Send> Sync for SyncSlice<T> {}
+unsafe impl<T: Send> Send for SyncSlice<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_for_covers_every_index_once() {
+        let n = 10_000;
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(n, 64, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn parallel_for_empty_and_tiny() {
+        parallel_for(0, 8, |_, _| panic!("must not run"));
+        let sum = AtomicUsize::new(0);
+        parallel_for(3, 8, |s, e| {
+            sum.fetch_add(e - s, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(1000, 16, |i| i * i);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn threads_env_override() {
+        // effective_threads is >= 1 regardless of environment.
+        assert!(effective_threads() >= 1);
+    }
+}

@@ -1,0 +1,492 @@
+//! The CRINN action space: every optimization §6 reports the RL discovering,
+//! as parametric knobs over the HNSW/GLASS modules.
+//!
+//! The paper's LLM rewrites module *source*; the observable effect of every
+//! rewrite it reports is a configuration of these mechanisms (DESIGN.md §2
+//! documents the substitution). Knob defaults = the GLASS baseline; the
+//! `crinn_*` constructors give the paper's discovered settings; the GRPO
+//! policy explores the full space via [`decode_action`]/[`encode_action`].
+
+/// Graph-construction module knobs (§6.1).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConstructionKnobs {
+    /// Max connections per node on upper layers (layer 0 gets `2*m`).
+    pub m: usize,
+    /// Baseline construction beam width.
+    pub ef_construction: usize,
+    /// §6.1 "Adaptive Search with Dynamic EF Scaling".
+    pub adaptive_ef: bool,
+    /// ef multiplier slope (paper's snippet uses 14.5).
+    pub ef_scale: f64,
+    /// recall target driving the adaptive scaling.
+    pub target_recall: f64,
+    /// critical threshold above which scaling kicks in.
+    pub recall_threshold: f64,
+    /// §6.1 "Multi-Entry Point Search Architecture" (1..=9).
+    pub num_entry_points: usize,
+    /// Minimum pairwise distance quantile for entry diversity.
+    pub entry_diversity: f64,
+    /// §6.1 "Zero-Overhead Multi-Level Prefetching": neighbors prefetched
+    /// ahead during construction-time searches (paper: 5 fixed → 24–48).
+    pub prefetch_depth: usize,
+    /// Cache level hint (1=L3 … 3=L1; paper's snippets use 1 and 3).
+    pub prefetch_locality: i32,
+}
+
+impl Default for ConstructionKnobs {
+    /// GLASS baseline: fixed ef, single entry point, fixed window of 5.
+    fn default() -> Self {
+        ConstructionKnobs {
+            m: 16,
+            ef_construction: 200,
+            adaptive_ef: false,
+            ef_scale: 0.0,
+            target_recall: 0.9,
+            recall_threshold: 0.88,
+            num_entry_points: 1,
+            entry_diversity: 0.5,
+            prefetch_depth: 5,
+            prefetch_locality: 1,
+        }
+    }
+}
+
+impl ConstructionKnobs {
+    /// The configuration §6.1 reports CRINN discovering.
+    pub fn crinn_discovered() -> Self {
+        ConstructionKnobs {
+            m: 24,
+            ef_construction: 180,
+            adaptive_ef: true,
+            ef_scale: 14.5,
+            target_recall: 0.95,
+            recall_threshold: 0.9,
+            num_entry_points: 5,
+            entry_diversity: 0.6,
+            prefetch_depth: 32,
+            prefetch_locality: 3,
+            }
+    }
+
+    /// Effective construction ef under the adaptive rule (§6.1 snippet:
+    /// `ef * (1 + recall_excess * scale)` above the critical threshold).
+    pub fn effective_ef(&self) -> usize {
+        if self.adaptive_ef && self.target_recall > self.recall_threshold {
+            let excess = self.target_recall - self.recall_threshold;
+            (self.ef_construction as f64 * (1.0 + excess * self.ef_scale)) as usize
+        } else {
+            self.ef_construction
+        }
+    }
+}
+
+/// Search module knobs (§6.2).
+#[derive(Clone, Debug, PartialEq)]
+pub struct SearchKnobs {
+    /// §6.2 "Multi-Tier Entry Point Selection": 1..=3 tiers.
+    pub entry_tiers: usize,
+    /// ef budget above which tier 2 entries join.
+    pub tier_budget_1: usize,
+    /// ef budget above which tier 3 entries join.
+    pub tier_budget_2: usize,
+    /// §6.2 "Batch Processing with Adaptive Prefetching".
+    pub edge_batch: bool,
+    /// Neighbors gathered per batch before distance evaluation.
+    pub batch_size: usize,
+    /// §6.2 "Intelligent Early Termination with Convergence Detection".
+    pub early_termination: bool,
+    /// Consecutive non-improving expansions tolerated (scaled by ef).
+    pub patience: usize,
+    /// Prefetch lookahead while scanning adjacency.
+    pub prefetch_depth: usize,
+    pub prefetch_locality: i32,
+}
+
+impl Default for SearchKnobs {
+    /// GLASS baseline: single entry, sequential edges, exhaust the pool.
+    fn default() -> Self {
+        SearchKnobs {
+            entry_tiers: 1,
+            tier_budget_1: 64,
+            tier_budget_2: 192,
+            edge_batch: false,
+            batch_size: 16,
+            early_termination: false,
+            patience: 3,
+            prefetch_depth: 4,
+            prefetch_locality: 1,
+        }
+    }
+}
+
+impl SearchKnobs {
+    /// The configuration §6.2 reports CRINN discovering.
+    pub fn crinn_discovered() -> Self {
+        SearchKnobs {
+            entry_tiers: 3,
+            tier_budget_1: 48,
+            tier_budget_2: 160,
+            edge_batch: true,
+            batch_size: 32,
+            early_termination: true,
+            patience: 4,
+            prefetch_depth: 16,
+            prefetch_locality: 3,
+        }
+    }
+}
+
+/// Refinement module knobs (§6.3) — the quantized-primary + exact-rerank
+/// stage of GLASS.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RefineKnobs {
+    /// Quantized primary search + full-precision rerank enabled.
+    pub quantized_primary: bool,
+    /// §6.3 "Adaptive Memory Prefetching" during rerank gathers.
+    pub adaptive_prefetch: bool,
+    /// Lookahead edges prefetched (paper's `edges[i + lookahead]`).
+    pub lookahead: usize,
+    /// §6.3 "Pre-computed Edge Metadata": stored degree counts instead of
+    /// sentinel scans.
+    pub precomputed_metadata: bool,
+    /// Rerank pool = `max(k, ef * rerank_frac)` candidates.
+    pub rerank_frac: f64,
+}
+
+impl Default for RefineKnobs {
+    fn default() -> Self {
+        RefineKnobs {
+            quantized_primary: true,
+            adaptive_prefetch: false,
+            lookahead: 1,
+            precomputed_metadata: false,
+            rerank_frac: 1.0,
+        }
+    }
+}
+
+impl RefineKnobs {
+    /// The configuration §6.3 reports CRINN discovering.
+    pub fn crinn_discovered() -> Self {
+        RefineKnobs {
+            quantized_primary: true,
+            adaptive_prefetch: true,
+            lookahead: 4,
+            precomputed_metadata: true,
+            rerank_frac: 0.55,
+        }
+    }
+
+    pub fn rerank_count(&self, k: usize, ef: usize) -> usize {
+        ((ef as f64 * self.rerank_frac) as usize).max(k)
+    }
+}
+
+/// Full variant: one point in CRINN's optimization space.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct VariantConfig {
+    pub construction: ConstructionKnobs,
+    pub search: SearchKnobs,
+    pub refine: RefineKnobs,
+}
+
+impl VariantConfig {
+    /// GLASS baseline (RL starting point, §3.5).
+    pub fn glass_baseline() -> Self {
+        VariantConfig::default()
+    }
+
+    /// All three modules at the paper's discovered settings.
+    pub fn crinn_full() -> Self {
+        VariantConfig {
+            construction: ConstructionKnobs::crinn_discovered(),
+            search: SearchKnobs::crinn_discovered(),
+            refine: RefineKnobs::crinn_discovered(),
+        }
+    }
+
+    /// Progressive stages for Table 4: baseline, +construction, +search,
+    /// +refinement (cumulative, in the paper's optimization order §3.5).
+    pub fn progressive_stages() -> Vec<(&'static str, VariantConfig)> {
+        let base = VariantConfig::glass_baseline();
+        let mut s1 = base.clone();
+        s1.construction = ConstructionKnobs::crinn_discovered();
+        let mut s2 = s1.clone();
+        s2.search = SearchKnobs::crinn_discovered();
+        let mut s3 = s2.clone();
+        s3.refine = RefineKnobs::crinn_discovered();
+        vec![
+            ("glass-baseline", base),
+            ("+graph-construction", s1),
+            ("+search", s2),
+            ("+refinement", s3),
+        ]
+    }
+}
+
+/// Which module a GRPO round is optimizing (§3.5 sequential order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Module {
+    Construction,
+    Search,
+    Refinement,
+}
+
+impl Module {
+    pub const ALL: [Module; 3] = [Module::Construction, Module::Search, Module::Refinement];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Module::Construction => "graph_construction",
+            Module::Search => "search",
+            Module::Refinement => "refinement",
+        }
+    }
+
+    pub fn index(&self) -> usize {
+        match self {
+            Module::Construction => 0,
+            Module::Search => 1,
+            Module::Refinement => 2,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Action encoding: the policy's A=8 dims per module, each in [-1, 1].
+// ---------------------------------------------------------------------------
+
+#[inline]
+fn lerp(a: f64, b: f64, t: f64) -> f64 {
+    a + (b - a) * (t.clamp(-1.0, 1.0) + 1.0) / 2.0
+}
+
+#[inline]
+fn unlerp(a: f64, b: f64, v: f64) -> f64 {
+    (((v - a) / (b - a)) * 2.0 - 1.0).clamp(-1.0, 1.0)
+}
+
+/// Number of action dims per module — must equal `model.N_KNOBS` (checked
+/// against the artifact manifest at trainer startup).
+pub const N_KNOBS: usize = 8;
+
+/// Decode a policy action vector into the given module's knobs, leaving the
+/// other modules of `base` untouched (sequential optimization).
+pub fn decode_action(base: &VariantConfig, module: Module, a: &[f64]) -> VariantConfig {
+    assert!(a.len() >= N_KNOBS);
+    let mut cfg = base.clone();
+    match module {
+        Module::Construction => {
+            let c = &mut cfg.construction;
+            c.m = lerp(8.0, 48.0, a[0]).round() as usize;
+            c.ef_construction = lerp(80.0, 500.0, a[1]).round() as usize;
+            c.adaptive_ef = a[2] > 0.0;
+            c.ef_scale = lerp(0.0, 20.0, a[3]);
+            c.num_entry_points = lerp(1.0, 9.0, a[4]).round() as usize;
+            c.entry_diversity = lerp(0.0, 1.0, a[5]);
+            c.prefetch_depth = lerp(0.0, 48.0, a[6]).round() as usize;
+            c.prefetch_locality = lerp(1.0, 3.0, a[7]).round() as i32;
+        }
+        Module::Search => {
+            let s = &mut cfg.search;
+            s.entry_tiers = lerp(1.0, 3.0, a[0]).round() as usize;
+            s.tier_budget_1 = lerp(16.0, 128.0, a[1]).round() as usize;
+            s.tier_budget_2 = lerp(128.0, 384.0, a[2]).round() as usize;
+            s.edge_batch = a[3] > 0.0;
+            s.batch_size = lerp(4.0, 64.0, a[4]).round() as usize;
+            s.early_termination = a[5] > 0.0;
+            s.patience = lerp(1.0, 8.0, a[6]).round() as usize;
+            s.prefetch_depth = lerp(0.0, 32.0, a[7]).round() as usize;
+        }
+        Module::Refinement => {
+            let r = &mut cfg.refine;
+            r.quantized_primary = a[0] > -0.5; // mostly on; off is a valid point
+            r.adaptive_prefetch = a[1] > 0.0;
+            r.lookahead = lerp(1.0, 8.0, a[2]).round() as usize;
+            r.precomputed_metadata = a[3] > 0.0;
+            r.rerank_frac = lerp(0.2, 2.0, a[4]);
+            // dims 5..8 reserved (kept for artifact-shape stability)
+        }
+    }
+    cfg
+}
+
+/// Encode a module's knobs back to the action space (for exemplar features
+/// in the contrastive prompt — Eq. 1's database entries).
+pub fn encode_action(cfg: &VariantConfig, module: Module) -> Vec<f64> {
+    let mut a = vec![0.0; N_KNOBS];
+    match module {
+        Module::Construction => {
+            let c = &cfg.construction;
+            a[0] = unlerp(8.0, 48.0, c.m as f64);
+            a[1] = unlerp(80.0, 500.0, c.ef_construction as f64);
+            a[2] = if c.adaptive_ef { 0.8 } else { -0.8 };
+            a[3] = unlerp(0.0, 20.0, c.ef_scale);
+            a[4] = unlerp(1.0, 9.0, c.num_entry_points as f64);
+            a[5] = unlerp(0.0, 1.0, c.entry_diversity);
+            a[6] = unlerp(0.0, 48.0, c.prefetch_depth as f64);
+            a[7] = unlerp(1.0, 3.0, c.prefetch_locality as f64);
+        }
+        Module::Search => {
+            let s = &cfg.search;
+            a[0] = unlerp(1.0, 3.0, s.entry_tiers as f64);
+            a[1] = unlerp(16.0, 128.0, s.tier_budget_1 as f64);
+            a[2] = unlerp(128.0, 384.0, s.tier_budget_2 as f64);
+            a[3] = if s.edge_batch { 0.8 } else { -0.8 };
+            a[4] = unlerp(4.0, 64.0, s.batch_size as f64);
+            a[5] = if s.early_termination { 0.8 } else { -0.8 };
+            a[6] = unlerp(1.0, 8.0, s.patience as f64);
+            a[7] = unlerp(0.0, 32.0, s.prefetch_depth as f64);
+        }
+        Module::Refinement => {
+            let r = &cfg.refine;
+            a[0] = if r.quantized_primary { 0.8 } else { -0.8 };
+            a[1] = if r.adaptive_prefetch { 0.8 } else { -0.8 };
+            a[2] = unlerp(1.0, 8.0, r.lookahead as f64);
+            a[3] = if r.precomputed_metadata { 0.8 } else { -0.8 };
+            a[4] = unlerp(0.2, 2.0, r.rerank_frac);
+        }
+    }
+    a
+}
+
+/// Render a config compactly (prompt construction, logs).
+pub fn describe(cfg: &VariantConfig, module: Module) -> String {
+    match module {
+        Module::Construction => {
+            let c = &cfg.construction;
+            format!(
+                "M={} efC={} adaptive_ef={} scale={:.1} entries={} diversity={:.2} prefetch={}@L{}",
+                c.m, c.ef_construction, c.adaptive_ef, c.ef_scale, c.num_entry_points,
+                c.entry_diversity, c.prefetch_depth, c.prefetch_locality
+            )
+        }
+        Module::Search => {
+            let s = &cfg.search;
+            format!(
+                "tiers={} budgets=({},{}) batch={}x{} early_term={} patience={} prefetch={}",
+                s.entry_tiers, s.tier_budget_1, s.tier_budget_2, s.edge_batch, s.batch_size,
+                s.early_termination, s.patience, s.prefetch_depth
+            )
+        }
+        Module::Refinement => {
+            let r = &cfg.refine;
+            format!(
+                "sq8={} adaptive_prefetch={} lookahead={} metadata={} rerank_frac={:.2}",
+                r.quantized_primary, r.adaptive_prefetch, r.lookahead,
+                r.precomputed_metadata, r.rerank_frac
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_glass_baseline() {
+        let v = VariantConfig::glass_baseline();
+        assert!(!v.construction.adaptive_ef);
+        assert_eq!(v.construction.num_entry_points, 1);
+        assert!(!v.search.edge_batch);
+        assert!(!v.search.early_termination);
+        assert!(v.refine.quantized_primary);
+    }
+
+    #[test]
+    fn adaptive_ef_raises_effective_ef() {
+        let mut c = ConstructionKnobs::default();
+        assert_eq!(c.effective_ef(), c.ef_construction);
+        c.adaptive_ef = true;
+        c.ef_scale = 14.5;
+        c.target_recall = 0.95;
+        c.recall_threshold = 0.9;
+        assert!(c.effective_ef() > c.ef_construction);
+    }
+
+    #[test]
+    fn decode_respects_bounds_at_extremes() {
+        let base = VariantConfig::glass_baseline();
+        for module in Module::ALL {
+            let lo = decode_action(&base, module, &[-1.0; N_KNOBS]);
+            let hi = decode_action(&base, module, &[1.0; N_KNOBS]);
+            match module {
+                Module::Construction => {
+                    assert_eq!(lo.construction.m, 8);
+                    assert_eq!(hi.construction.m, 48);
+                    assert_eq!(lo.construction.num_entry_points, 1);
+                    assert_eq!(hi.construction.num_entry_points, 9);
+                }
+                Module::Search => {
+                    assert_eq!(lo.search.entry_tiers, 1);
+                    assert_eq!(hi.search.entry_tiers, 3);
+                    assert!(!lo.search.edge_batch && hi.search.edge_batch);
+                }
+                Module::Refinement => {
+                    assert!((lo.refine.rerank_frac - 0.2).abs() < 1e-9);
+                    assert!((hi.refine.rerank_frac - 2.0).abs() < 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_only_touches_target_module() {
+        let base = VariantConfig::glass_baseline();
+        let out = decode_action(&base, Module::Search, &[0.5; N_KNOBS]);
+        assert_eq!(out.construction, base.construction);
+        assert_eq!(out.refine, base.refine);
+        assert_ne!(out.search, base.search);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_close() {
+        let cfg = VariantConfig::crinn_full();
+        for module in Module::ALL {
+            let a = encode_action(&cfg, module);
+            let back = decode_action(&cfg, module, &a);
+            match module {
+                Module::Construction => {
+                    assert_eq!(back.construction.m, cfg.construction.m);
+                    assert_eq!(
+                        back.construction.num_entry_points,
+                        cfg.construction.num_entry_points
+                    );
+                    assert_eq!(back.construction.adaptive_ef, cfg.construction.adaptive_ef);
+                }
+                Module::Search => {
+                    assert_eq!(back.search.entry_tiers, cfg.search.entry_tiers);
+                    assert_eq!(back.search.early_termination, cfg.search.early_termination);
+                    assert_eq!(back.search.batch_size, cfg.search.batch_size);
+                }
+                Module::Refinement => {
+                    assert_eq!(back.refine.lookahead, cfg.refine.lookahead);
+                    assert!((back.refine.rerank_frac - cfg.refine.rerank_frac).abs() < 0.02);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn progressive_stages_monotone_config() {
+        let stages = VariantConfig::progressive_stages();
+        assert_eq!(stages.len(), 4);
+        assert_eq!(stages[0].1, VariantConfig::glass_baseline());
+        assert_eq!(stages[3].1, VariantConfig::crinn_full());
+        // Stage 2 has construction optimized but search still baseline.
+        assert_eq!(
+            stages[1].1.construction,
+            ConstructionKnobs::crinn_discovered()
+        );
+        assert_eq!(stages[1].1.search, SearchKnobs::default());
+    }
+
+    #[test]
+    fn describe_mentions_key_fields() {
+        let cfg = VariantConfig::crinn_full();
+        assert!(describe(&cfg, Module::Construction).contains("adaptive_ef=true"));
+        assert!(describe(&cfg, Module::Search).contains("early_term=true"));
+        assert!(describe(&cfg, Module::Refinement).contains("sq8=true"));
+    }
+}

@@ -1,0 +1,194 @@
+//! Cross-layer integration tests: Rust coordinator ⇄ PJRT artifacts ⇄
+//! ANNS engines ⇄ eval harness, on real (small) workloads.
+
+use crinn::anns::{AnnIndex, VectorSet};
+use crinn::dataset::synth;
+use crinn::distance::Metric;
+use crinn::variants::VariantConfig;
+use std::sync::Arc;
+
+fn engine() -> Option<crinn::runtime::Engine> {
+    let dir = crinn::runtime::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(crinn::runtime::Engine::new(&dir).expect("engine"))
+}
+
+/// L1⇄L3: the Pallas scan artifact and the Rust scalar path must agree on
+/// exact ground truth for every paper dataset dimension.
+#[test]
+fn pjrt_ground_truth_matches_rust_across_dims() {
+    let Some(e) = engine() else { return };
+    for name in ["sift-128-euclidean", "glove-25-angular"] {
+        let sp = synth::spec(name).unwrap();
+        let ds = synth::generate_counts(sp, 600, 10, 5);
+        let got = e
+            .brute_force_topk(ds.metric, &ds.queries, &ds.base, ds.dim, 10)
+            .unwrap();
+        let want =
+            crinn::dataset::gt::brute_force_topk(&ds.base, &ds.queries, ds.dim, ds.metric, 10);
+        let agree = got.iter().zip(&want).filter(|(a, b)| a == b).count();
+        assert!(
+            agree >= 9,
+            "{name}: only {agree}/10 queries agree between PJRT and Rust"
+        );
+    }
+}
+
+/// L1⇄L3 rerank: PJRT rerank distances must reproduce the Rust rerank
+/// ordering inside the GLASS pipeline.
+#[test]
+fn pjrt_rerank_consistent_with_glass() {
+    let Some(e) = engine() else { return };
+    let sp = synth::spec("sift-128-euclidean").unwrap();
+    let mut ds = synth::generate_counts(sp, 1500, 20, 6);
+    ds.compute_ground_truth(10);
+    let idx = crinn::anns::glass::GlassIndex::build(
+        VectorSet::from_dataset(&ds),
+        VariantConfig::glass_baseline(),
+        7,
+    );
+    let dim = ds.dim;
+    for qi in 0..5 {
+        let q = ds.query_vec(qi);
+        let cands = idx.candidates_for_rerank(q, 10, 64);
+        let c = cands.len().min(e.manifest.rerank_cands);
+        let mut gathered = vec![0f32; c * dim];
+        for (ci, &id) in cands.iter().take(c).enumerate() {
+            gathered[ci * dim..(ci + 1) * dim].copy_from_slice(ds.base_vec(id as usize));
+        }
+        let dists = e.rerank(ds.metric, q, 1, &gathered, c, dim).unwrap();
+        // PJRT distances must match Rust distances on the same pairs.
+        for (ci, &id) in cands.iter().take(c).enumerate() {
+            let want = ds.metric.distance(q, ds.base_vec(id as usize));
+            assert!(
+                (dists[0][ci] - want).abs() < 1e-2 * (1.0 + want.abs()),
+                "q{qi} cand{ci}: pjrt {} vs rust {want}",
+                dists[0][ci]
+            );
+        }
+    }
+}
+
+/// Full Figure-1-shaped comparison on one dataset: CRINN's discovered
+/// configuration must not lose to the GLASS baseline in window AUC
+/// (the paper's §5.1 CRINN-vs-GLASS claim, at sandbox scale).
+#[test]
+fn crinn_beats_or_matches_glass_in_reward_window() {
+    let sp = synth::spec("sift-128-euclidean").unwrap();
+    let mut ds = synth::generate_counts(sp, 4000, 60, 7);
+    ds.compute_ground_truth(10);
+    let ef_grid = [16, 24, 32, 48, 64, 96, 128];
+    let mut aucs = std::collections::HashMap::new();
+    for (label, cfg) in [
+        ("glass", VariantConfig::glass_baseline()),
+        ("crinn", VariantConfig::crinn_full()),
+    ] {
+        let idx = crinn::anns::glass::GlassIndex::build(
+            VectorSet::from_dataset(&ds),
+            cfg,
+            7,
+        );
+        let sweep = crinn::eval::sweep_index(&idx, &ds, 10, &ef_grid, 0.0);
+        aucs.insert(
+            label,
+            crinn::crinn::reward::window_auc(&sweep.points, 0.85, 0.95),
+        );
+    }
+    let glass = aucs["glass"];
+    let crinn_auc = aucs["crinn"];
+    assert!(glass > 0.0, "glass never reached the window");
+    assert!(
+        crinn_auc >= glass * 0.9,
+        "crinn {crinn_auc:.0} vs glass {glass:.0} — discovered config regressed"
+    );
+}
+
+/// Serving stack over a real index: batched, sharded, concurrent — recall
+/// must survive the full coordinator path.
+#[test]
+fn coordinator_end_to_end_recall() {
+    let sp = synth::spec("demo-64").unwrap();
+    let mut ds = synth::generate_counts(sp, 2000, 50, 8);
+    ds.compute_ground_truth(10);
+    let ds = Arc::new(ds);
+    let router = crinn::coordinator::ShardedRouter::build_glass(
+        &ds,
+        &VariantConfig::crinn_full(),
+        2,
+        7,
+    );
+    struct RI(crinn::coordinator::ShardedRouter, Arc<crinn::dataset::Dataset>);
+    impl AnnIndex for RI {
+        fn name(&self) -> String {
+            "t".into()
+        }
+        fn search(&self, q: &[f32], k: usize, ef: usize) -> Vec<u32> {
+            self.0
+                .search(q, k, ef, |g| self.1.metric.distance(q, self.1.base_vec(g as usize)))
+        }
+        fn len(&self) -> usize {
+            self.0.len()
+        }
+    }
+    let server = crinn::coordinator::Server::start(
+        Arc::new(RI(router, ds.clone())),
+        Default::default(),
+    );
+    let h = server.handle();
+    let mut recall = 0.0;
+    for qi in 0..ds.n_queries() {
+        let resp = h.query(ds.query_vec(qi).to_vec(), 10, 96).unwrap();
+        recall += crinn::dataset::gt::recall_at_k(&resp.ids, &ds.gt[qi], 10);
+    }
+    recall /= ds.n_queries() as f64;
+    let snap = server.shutdown();
+    assert!(recall > 0.85, "served recall {recall}");
+    assert_eq!(snap.requests as usize, ds.n_queries());
+}
+
+/// The eval harness end to end: sweep → pareto → fixed-recall lookup.
+#[test]
+fn eval_pipeline_produces_consistent_tables() {
+    let sp = synth::spec("demo-64").unwrap();
+    let mut ds = synth::generate_counts(sp, 1500, 40, 9);
+    ds.compute_ground_truth(10);
+    let idx = crinn::anns::glass::GlassIndex::build(
+        VectorSet::from_dataset(&ds),
+        VariantConfig::glass_baseline(),
+        3,
+    );
+    let sweep = crinn::eval::sweep_index(&idx, &ds, 10, &[16, 48, 128, 256], 0.0);
+    let front = sweep.frontier();
+    assert!(!front.is_empty());
+    for w in front.windows(2) {
+        assert!(w[0].recall < w[1].recall && w[0].qps > w[1].qps);
+    }
+    // Fixed-recall lookups are monotone: QPS@0.8 >= QPS@0.95 when both exist.
+    let q80 = crinn::eval::qps_at_recall(&sweep.points, 0.80);
+    let q95 = crinn::eval::qps_at_recall(&sweep.points, 0.95);
+    if let (Some(a), Some(b)) = (q80, q95) {
+        assert!(a >= b * 0.99, "QPS@0.80 {a} < QPS@0.95 {b}");
+    }
+    let csv = crinn::eval::report::sweeps_to_csv(std::slice::from_ref(&sweep));
+    assert_eq!(csv.lines().count(), 1 + sweep.points.len());
+}
+
+/// Metric conventions agree between Python oracle and Rust across the
+/// bridge: angular dataset distances stay in [0, 2].
+#[test]
+fn angular_scan_range_via_pjrt() {
+    let Some(e) = engine() else { return };
+    let sp = synth::spec("glove-25-angular").unwrap();
+    let ds = synth::generate_counts(sp, 300, 5, 11);
+    let rows = e
+        .scan(Metric::Angular, &ds.queries, 5, &ds.base, 300, ds.dim)
+        .unwrap();
+    for row in rows {
+        for d in row {
+            assert!((-1e-3..=2.001).contains(&d), "angular distance {d}");
+        }
+    }
+}

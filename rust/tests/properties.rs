@@ -1,0 +1,249 @@
+//! Property-based tests (hand-rolled proptest substitute): randomized
+//! inputs over many seeds, shrunk manually by the failing-seed printout.
+//! Focus: coordinator/graph invariants the paper's Critical Requirements
+//! demand (determinism, bounded degrees, exactness of substrate pieces).
+
+use crinn::anns::{AnnIndex, VectorSet};
+use crinn::dataset::synth;
+use crinn::distance::Metric;
+use crinn::util::rng::Rng;
+use crinn::variants::{decode_action, encode_action, Module, VariantConfig, N_KNOBS};
+
+/// Mini property harness: run `f` for `cases` seeds, reporting the seed on
+/// failure (the "shrunk" reproducer).
+fn forall(cases: u64, f: impl Fn(u64)) {
+    for seed in 0..cases {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(seed)));
+        if let Err(e) = result {
+            eprintln!(">>> property failed at seed {seed}");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn random_vs(seed: u64, n: usize, dim: usize) -> VectorSet {
+    let mut rng = Rng::new(seed);
+    let data: Vec<f32> = (0..n * dim).map(|_| rng.next_gaussian_f32()).collect();
+    VectorSet::new(data, dim, Metric::L2)
+}
+
+/// HNSW graph invariants hold for random shapes, degrees and seeds.
+#[test]
+fn prop_hnsw_invariants() {
+    forall(8, |seed| {
+        let mut rng = Rng::new(seed ^ 0xFEED);
+        let n = 100 + rng.next_below(400);
+        let dim = 2 + rng.next_below(24);
+        let m = 4 + rng.next_below(12);
+        let knobs = crinn::variants::ConstructionKnobs {
+            m,
+            ef_construction: 40 + rng.next_below(100),
+            num_entry_points: 1 + rng.next_below(9),
+            ..Default::default()
+        };
+        let g = crinn::anns::hnsw::builder::build(random_vs(seed, n, dim), &knobs, seed);
+        g.validate().unwrap_or_else(|e| panic!("n={n} dim={dim} m={m}: {e}"));
+    });
+}
+
+/// Search results are: sorted by distance, distinct, within id range, and
+/// deterministic across calls — for every knob combination sampled.
+#[test]
+fn prop_search_results_wellformed() {
+    forall(6, |seed| {
+        let mut rng = Rng::new(seed ^ 0xBEEF);
+        let n = 300 + rng.next_below(700);
+        let dim = 4 + rng.next_below(28);
+        let vs = random_vs(seed, n, dim);
+        let data = vs.data.clone();
+        let action: Vec<f64> = (0..N_KNOBS).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
+        let mut cfg = decode_action(&VariantConfig::glass_baseline(), Module::Search, &action);
+        let raction: Vec<f64> = (0..N_KNOBS).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
+        cfg = decode_action(&cfg, Module::Refinement, &raction);
+        let idx = crinn::anns::glass::GlassIndex::build(vs, cfg, seed);
+        for t in 0..5 {
+            let qi = rng.next_below(n);
+            let mut q = data[qi * dim..(qi + 1) * dim].to_vec();
+            q[0] += 0.01;
+            let k = 1 + rng.next_below(10);
+            let ef = k + rng.next_below(100);
+            let a = idx.search_with_dists(&q, k, ef);
+            let b = idx.search_with_dists(&q, k, ef);
+            assert_eq!(a, b, "nondeterministic at trial {t}");
+            assert!(a.len() <= k);
+            for w in a.windows(2) {
+                assert!(
+                    crinn::anns::heap::dist_cmp(&w[0], &w[1]) != std::cmp::Ordering::Greater
+                );
+            }
+            let ids: std::collections::HashSet<u32> = a.iter().map(|x| x.1).collect();
+            assert_eq!(ids.len(), a.len(), "duplicate ids");
+            assert!(a.iter().all(|x| (x.1 as usize) < n));
+        }
+    });
+}
+
+/// Action encode/decode round-trips stay in the box and are idempotent
+/// (decode(encode(cfg)) == decode(encode(decode(encode(cfg))))).
+#[test]
+fn prop_action_roundtrip_stable() {
+    forall(20, |seed| {
+        let mut rng = Rng::new(seed);
+        for module in Module::ALL {
+            let a: Vec<f64> = (0..N_KNOBS).map(|_| rng.next_f64() * 2.0 - 1.0).collect();
+            let cfg1 = decode_action(&VariantConfig::glass_baseline(), module, &a);
+            let e1 = encode_action(&cfg1, module);
+            let cfg2 = decode_action(&VariantConfig::glass_baseline(), module, &e1);
+            let e2 = encode_action(&cfg2, module);
+            for (x, y) in e1.iter().zip(&e2) {
+                assert!((x - y).abs() < 1e-6, "module {module:?}: {e1:?} vs {e2:?}");
+            }
+            assert!(e1.iter().all(|v| (-1.0..=1.0).contains(v)));
+        }
+    });
+}
+
+/// Brute-force top-k is exactly the sorted prefix, any metric/shape.
+#[test]
+fn prop_bruteforce_exactness() {
+    forall(10, |seed| {
+        let mut rng = Rng::new(seed ^ 0xACE);
+        let n = 20 + rng.next_below(300);
+        let dim = 1 + rng.next_below(40);
+        let metric = [Metric::L2, Metric::Angular, Metric::Ip][rng.next_below(3)];
+        let mut vs = random_vs(seed, n, dim);
+        vs.metric = metric;
+        if metric == Metric::Angular {
+            for row in vs.data.chunks_mut(dim) {
+                crinn::distance::normalize(row);
+            }
+        }
+        let data = vs.data.clone();
+        let idx = crinn::anns::bruteforce::BruteForceIndex::build(vs);
+        let q: Vec<f32> = (0..dim).map(|_| rng.next_gaussian_f32()).collect();
+        let k = 1 + rng.next_below(n.min(20));
+        let got = idx.search(&q, k, 0);
+        let mut all: Vec<(f32, u32)> = (0..n)
+            .map(|i| (metric.distance(&q, &data[i * dim..(i + 1) * dim]), i as u32))
+            .collect();
+        all.sort_by(crinn::anns::heap::dist_cmp);
+        let want: Vec<u32> = all.iter().take(k).map(|x| x.1).collect();
+        assert_eq!(got, want, "n={n} dim={dim} metric={metric:?} k={k}");
+    });
+}
+
+/// Quantized distance error is bounded and order-preserving "in the
+/// large": the exact NN is within the quantized top-10 of 200 points.
+#[test]
+fn prop_quantization_preserves_neighborhoods() {
+    forall(8, |seed| {
+        let mut rng = Rng::new(seed ^ 0x5141);
+        let n = 200;
+        let dim = 8 + rng.next_below(120);
+        let vs = random_vs(seed, n, dim);
+        let store = crinn::distance::quant::QuantizedStore::build(&vs.data, dim);
+        let qi = rng.next_below(n);
+        let mut q = vs.vec(qi as u32).to_vec();
+        q[0] += 0.05;
+        let qc = store.encode_query(&q);
+        let mut exact: Vec<(f32, u32)> = (0..n)
+            .map(|i| (crinn::distance::l2_sq(&q, vs.vec(i as u32)), i as u32))
+            .collect();
+        exact.sort_by(crinn::anns::heap::dist_cmp);
+        let mut approx: Vec<(f32, u32)> = (0..n)
+            .map(|i| (store.distance(Metric::L2, &qc, i), i as u32))
+            .collect();
+        approx.sort_by(crinn::anns::heap::dist_cmp);
+        let top10: Vec<u32> = approx.iter().take(10).map(|x| x.1).collect();
+        assert!(
+            top10.contains(&exact[0].1),
+            "dim={dim}: true NN missing from quantized top-10"
+        );
+    });
+}
+
+/// The reward window AUC is monotone under uniform QPS scaling and
+/// invariant to point order.
+#[test]
+fn prop_reward_auc_properties() {
+    use crinn::eval::sweep::CurvePoint;
+    forall(15, |seed| {
+        let mut rng = Rng::new(seed ^ 0xA0C);
+        let n = 3 + rng.next_below(10);
+        let mut pts: Vec<CurvePoint> = (0..n)
+            .map(|_| CurvePoint {
+                ef: 0,
+                recall: 0.5 + rng.next_f64() * 0.5,
+                qps: 100.0 + rng.next_f64() * 10_000.0,
+                mean_latency_s: 0.0,
+                p99_latency_s: 0.0,
+            })
+            .collect();
+        let auc = crinn::crinn::reward::window_auc(&pts, 0.85, 0.95);
+        assert!(auc >= 0.0);
+        // Scale QPS by 2: AUC scales by 2 (when nonzero).
+        let scaled: Vec<CurvePoint> = pts
+            .iter()
+            .map(|p| CurvePoint { qps: p.qps * 2.0, ..p.clone() })
+            .collect();
+        let auc2 = crinn::crinn::reward::window_auc(&scaled, 0.85, 0.95);
+        assert!((auc2 - 2.0 * auc).abs() < 1e-6 * (1.0 + auc), "scaling");
+        // Shuffle invariance.
+        rng.shuffle(&mut pts);
+        let auc3 = crinn::crinn::reward::window_auc(&pts, 0.85, 0.95);
+        assert!((auc3 - auc).abs() < 1e-9 * (1.0 + auc), "order dependence");
+    });
+}
+
+/// Server under random load: every accepted request is answered, with the
+/// right k, and counts balance.
+#[test]
+fn prop_server_accounting() {
+    forall(3, |seed| {
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 300, 20, seed);
+        ds.compute_ground_truth(5);
+        let idx: std::sync::Arc<dyn AnnIndex> = std::sync::Arc::new(
+            crinn::anns::bruteforce::BruteForceIndex::build(VectorSet::from_dataset(&ds)),
+        );
+        let server = crinn::coordinator::Server::start(
+            idx,
+            crinn::coordinator::ServerConfig {
+                workers: 2,
+                queue_depth: 8,
+                ..Default::default()
+            },
+        );
+        let h = server.handle();
+        let mut rng = Rng::new(seed);
+        let mut accepted = 0u64;
+        let mut answered = 0u64;
+        let mut pending = Vec::new();
+        for _ in 0..100 {
+            let qi = rng.next_below(ds.n_queries());
+            let k = 1 + rng.next_below(5);
+            match h.submit(ds.query_vec(qi).to_vec(), k, 0) {
+                Some(rx) => {
+                    accepted += 1;
+                    pending.push((rx, k));
+                }
+                None => {}
+            }
+            if pending.len() > 4 {
+                for (rx, k) in pending.drain(..) {
+                    let resp = rx.recv().expect("accepted request must be answered");
+                    assert_eq!(resp.ids.len(), k);
+                    answered += 1;
+                }
+            }
+        }
+        for (rx, k) in pending.drain(..) {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.ids.len(), k);
+            answered += 1;
+        }
+        let snap = server.shutdown();
+        assert_eq!(accepted, answered);
+        assert_eq!(snap.requests, accepted);
+    });
+}
