@@ -1,0 +1,21 @@
+# Convenience targets. Rust work happens in rust/ (see README.md §Quickstart).
+
+.PHONY: build test bench artifacts clean
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+bench:
+	cd rust && cargo bench
+
+# Lower the L2 JAX graphs + L1 Pallas kernels to HLO text artifacts
+# consumed by rust/src/runtime. Needs JAX; see DESIGN.md §Hardware-Adaptation.
+artifacts:
+	cd python && python -m compile.aot --out ../artifacts
+
+clean:
+	cd rust && cargo clean
+	rm -rf artifacts reports

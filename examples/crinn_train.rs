@@ -21,7 +21,7 @@ fn env_usize(k: &str, d: usize) -> usize {
     std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> crinn::Result<()> {
     let engine = Engine::from_default_artifacts()?;
     let n = env_usize("CRINN_TRAIN_N", 6_000);
     let iters = env_usize("CRINN_TRAIN_ITERS", 4);

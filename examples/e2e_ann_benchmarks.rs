@@ -29,7 +29,7 @@ fn env_usize(k: &str, d: usize) -> usize {
     std::env::var(k).ok().and_then(|v| v.parse().ok()).unwrap_or(d)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> crinn::Result<()> {
     let engine = Engine::from_default_artifacts()?;
     let n = env_usize("CRINN_E2E_N", 6_000);
     let nq = env_usize("CRINN_E2E_QUERIES", 80);

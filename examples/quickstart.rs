@@ -10,7 +10,7 @@ use crinn::anns::{AnnIndex, VectorSet};
 use crinn::dataset::synth;
 use crinn::variants::VariantConfig;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> crinn::Result<()> {
     // 1. A small workload: 10k vectors, 64-dim, Euclidean.
     let ds = synth::generate_with_gt("demo-64", 10_000, 100, 10, 42);
     println!("dataset: {} ({} base, dim {})", ds.name, ds.n_base(), ds.dim);

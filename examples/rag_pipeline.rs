@@ -20,7 +20,7 @@ use crinn::runtime::Engine;
 use crinn::util::rng::Rng;
 use crinn::variants::VariantConfig;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> crinn::Result<()> {
     let engine = Engine::from_default_artifacts()?;
 
     // --- Corpus: 20k "documents" as 100-dim angular embeddings.

@@ -30,7 +30,7 @@ impl AnnIndex for RouterIndex {
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> crinn::Result<()> {
     let ds = Arc::new(synth::generate_with_gt("sift-128-euclidean", 15_000, 200, 10, 42));
     println!("dataset: {} base vectors", ds.n_base());
 

@@ -4,7 +4,7 @@ Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
 emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
 published ``xla`` 0.1.6 crate binds) rejects (`proto.id() <= INT_MAX`). The
 text parser reassigns ids, so text round-trips cleanly. See
-/opt/xla-example/gen_hlo.py and its README.
+DESIGN.md §Hardware-Adaptation at the repo root.
 
 Artifacts written (manifest.json indexes them for the Rust runtime):
   scan_{metric}_d{D}.hlo.txt    [64, D] x [4096, D]    -> [64, 4096]

@@ -12,7 +12,8 @@ use crate::anns::VectorSet;
 use crate::distance::quant::QuantizedStore;
 use crate::distance::Metric;
 use crate::variants::{decode_action, encode_action, Module, VariantConfig};
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Error, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
@@ -181,7 +182,7 @@ pub fn load_glass(path: &Path) -> Result<crate::anns::glass::GlassIndex> {
 
     let quant = QuantizedStore::build(&vs.data, dim);
     let mut graph = HnswGraph::new(vs, m);
-    anyhow::ensure!(graph.layer0.len() == layer0.len(), "layer0 size mismatch");
+    crate::ensure!(graph.layer0.len() == layer0.len(), "layer0 size mismatch");
     graph.layer0 = layer0;
     graph.levels = levels;
     graph.entry = entry;
@@ -211,7 +212,7 @@ pub fn load_glass(path: &Path) -> Result<crate::anns::glass::GlassIndex> {
     }
     graph
         .validate()
-        .map_err(|e| anyhow::anyhow!("loaded graph invalid: {e}"))?;
+        .map_err(|e| Error::msg(format!("loaded graph invalid: {e}")))?;
     Ok(crate::anns::glass::GlassIndex::from_parts(graph, quant, config))
 }
 

@@ -6,7 +6,7 @@
 //! group-normalized advantages and a KL penalty toward the reference).
 
 use crate::runtime::Engine;
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// GRPO hyperparameters (paper notation: ε clip, β KL weight).
 #[derive(Clone, Debug)]
@@ -109,7 +109,14 @@ mod tests {
         if !dir.join("manifest.json").exists() {
             return None;
         }
-        Some(Engine::new(&dir).unwrap())
+        match Engine::new(&dir) {
+            Ok(e) => Some(e),
+            Err(e) if format!("{e:#}").contains("offline stub") => {
+                eprintln!("skipping: PJRT backend is the offline stub");
+                None
+            }
+            Err(e) => panic!("engine failed with artifacts present: {e:#}"),
+        }
     }
 
     /// End-to-end sanity: rewarding actions near +0.5 on every knob must

@@ -21,7 +21,7 @@ use crate::dataset::Dataset;
 use crate::runtime::Engine;
 use crate::util::rng::Rng;
 use crate::variants::{decode_action, Module, VariantConfig};
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Trainer options.
 #[derive(Clone, Debug)]
@@ -115,7 +115,7 @@ impl<'e> CrinnTrainer<'e> {
             None,
             &self.opts.reward,
         );
-        anyhow::ensure!(
+        crate::ensure!(
             baseline_auc > 0.0,
             "baseline never reaches the reward window on {}; enlarge ef grid",
             self.ds.name
@@ -266,7 +266,14 @@ mod tests {
             eprintln!("skipping: artifacts not built");
             return;
         }
-        let engine = Engine::new(&dir).unwrap();
+        let engine = match Engine::new(&dir) {
+            Ok(e) => e,
+            Err(e) if format!("{e:#}").contains("offline stub") => {
+                eprintln!("skipping: PJRT backend is the offline stub");
+                return;
+            }
+            Err(e) => panic!("engine failed with artifacts present: {e:#}"),
+        };
         let sp = synth::spec("demo-64").unwrap();
         let mut ds = synth::generate_counts(sp, 900, 40, 81);
         ds.compute_ground_truth(10);

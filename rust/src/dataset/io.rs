@@ -7,7 +7,8 @@
 
 use crate::dataset::Dataset;
 use crate::distance::Metric;
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Error, Result};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
@@ -143,7 +144,7 @@ pub fn save_dataset(ds: &Dataset, dir: &Path) -> Result<()> {
 /// Load a dataset previously written by [`save_dataset`].
 pub fn load_dataset(name: &str, dir: &Path) -> Result<Dataset> {
     let meta_raw = std::fs::read_to_string(dir.join(format!("{name}.meta.json")))?;
-    let meta = crate::util::json::parse(&meta_raw).map_err(anyhow::Error::msg)?;
+    let meta = crate::util::json::parse(&meta_raw).map_err(Error::msg)?;
     let metric = Metric::from_name(
         meta.get("metric")
             .and_then(|m| m.as_str())

@@ -22,7 +22,7 @@ pub fn sweeps_to_csv(sweeps: &[SweepResult]) -> String {
 }
 
 /// Save a string to a file, creating parent dirs.
-pub fn save(path: &Path, content: &str) -> anyhow::Result<()> {
+pub fn save(path: &Path, content: &str) -> crate::Result<()> {
     if let Some(p) = path.parent() {
         std::fs::create_dir_all(p)?;
     }

@@ -27,6 +27,20 @@
 //! | [`runtime`] | PJRT engine: loads `artifacts/*.hlo.txt`, executes |
 //! | [`coordinator`] | dynamic batcher + sharded router + query server |
 //! | [`eval`] | ef sweeps, recall/QPS curves, fixed-recall tables, reports |
+//!
+//! ## Example
+//!
+//! Build an exact index over four 2-d points and query it:
+//!
+//! ```
+//! use crinn::anns::{bruteforce::BruteForceIndex, AnnIndex, VectorSet};
+//! use crinn::distance::Metric;
+//!
+//! let vs = VectorSet::new(vec![0.0, 0.0, 1.0, 0.0, 0.0, 1.0, 5.0, 5.0], 2, Metric::L2);
+//! let index = BruteForceIndex::build(vs);
+//! assert_eq!(index.len(), 4);
+//! assert_eq!(index.search(&[0.2, 0.1], 2, 0), vec![0, 1]);
+//! ```
 
 pub mod anns;
 pub mod coordinator;
@@ -38,8 +52,10 @@ pub mod runtime;
 pub mod util;
 pub mod variants;
 
+pub use util::error::Error;
+
 /// Crate-wide result type.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = util::error::Result<T>;
 
 /// Default number of neighbors (k) used across benches — matches
 /// ann-benchmarks' k=10 protocol that the paper's Figure 1 uses.

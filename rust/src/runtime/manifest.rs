@@ -2,8 +2,8 @@
 //! Rust runtime. Single source of truth for batch shapes, policy network
 //! dimensions, and the initial policy parameters.
 
+use crate::util::error::{Context, Error, Result};
 use crate::util::json::{parse, Json};
-use anyhow::{Context, Result};
 use std::path::{Path, PathBuf};
 
 /// Parsed manifest.
@@ -36,7 +36,7 @@ impl Manifest {
     pub fn load(dir: &Path) -> Result<Manifest> {
         let raw = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("read {dir:?}/manifest.json — run `make artifacts`"))?;
-        let j = parse(&raw).map_err(anyhow::Error::msg)?;
+        let j = parse(&raw).map_err(Error::msg)?;
         let u = |k: &str| -> Result<usize> {
             j.get(k)
                 .and_then(Json::as_usize)

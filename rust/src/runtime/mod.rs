@@ -5,10 +5,15 @@
 //!
 //! Interchange is HLO *text*: jax ≥ 0.5 emits protos with 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md).
+//! reassigns ids (see DESIGN.md §Hardware-Adaptation).
+//!
+//! This build links the offline [`xla`] stub in place of the real PJRT
+//! bindings, so [`Engine`] construction reports the backend as
+//! unavailable; every caller handles that path (DESIGN.md §8).
 
 pub mod engine;
 pub mod manifest;
+pub mod xla;
 
 pub use engine::Engine;
 pub use manifest::Manifest;

@@ -1,0 +1,145 @@
+//! Offline stub for the `xla`/PJRT bindings.
+//!
+//! The real runtime binds the `xla` crate (xla-rs over `xla_extension`),
+//! whose native library cannot be vendored into this zero-dependency
+//! offline build (DESIGN.md §8, §Hardware-Adaptation). This module mirrors
+//! the exact API surface [`crate::runtime::engine`] consumes so the crate
+//! compiles and tests everywhere; at runtime, [`PjRtClient::cpu`] reports
+//! the backend as unavailable and every engine-dependent path degrades
+//! gracefully (the trainer/bench targets print a skip notice, tests
+//! gate on `artifacts/manifest.json`).
+//!
+//! Swapping in the real backend is a two-line change: add the `xla`
+//! dependency and point `use crate::runtime::xla;` in `engine.rs` at the
+//! external crate instead.
+
+use std::fmt;
+
+/// Error type for the stub backend; implements `std::error::Error` so the
+/// engine's `.context(...)` calls work unchanged against the real crate.
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable<T>() -> Result<T, XlaError> {
+    Err(XlaError(
+        "XLA/PJRT backend not built into this binary (offline stub; see \
+         DESIGN.md §Hardware-Adaptation) — engine paths require the real \
+         `xla` bindings plus `make artifacts`"
+            .to_string(),
+    ))
+}
+
+/// PJRT client handle (stub).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// The real binding constructs a CPU PJRT client; the stub always
+    /// reports the backend as unavailable.
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        unavailable()
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Host tensor (stub).
+#[derive(Clone)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn scalar(_v: f32) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, XlaError> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        unavailable()
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        unavailable()
+    }
+}
+
+/// Device buffer (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let err = PjRtClient::cpu().err().expect("stub must not succeed");
+        assert!(err.to_string().contains("offline stub"));
+    }
+
+    #[test]
+    fn engine_construction_fails_cleanly_without_backend() {
+        // Engine::new goes through Manifest::load first; point it at a
+        // directory with a valid manifest-shaped file to reach the client.
+        let dir = std::env::temp_dir().join(format!("crinn_xla_stub_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"query_batch":64,"base_block":4096,"rerank_cands":128,
+                "n_knobs":8,"n_exemplars":4,"n_modules":3,"feat_dim":40,
+                "hidden":64,"group":8,"param_shapes":[],"dims":[128],
+                "artifacts":{},"init_params":[]}"#,
+        )
+        .unwrap();
+        let err = crate::runtime::Engine::new(&dir).err().expect("no backend");
+        assert!(format!("{err:#}").contains("PJRT"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

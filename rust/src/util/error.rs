@@ -1,0 +1,207 @@
+//! Error type + context plumbing (the `anyhow` substitute).
+//!
+//! Offline builds cannot pull `anyhow` (DESIGN.md §8), so this module
+//! provides the slice of its API the crate uses: an opaque [`Error`] that
+//! any `std::error::Error` converts into via `?`, a [`Context`] extension
+//! for `Result`/`Option`, and the [`crate::bail!`]/[`crate::ensure!`]
+//! macros. `{:#}` formatting renders the full cause chain, `{}` only the
+//! outermost message — matching the conventions call sites rely on.
+
+use std::fmt;
+
+/// Crate-wide result alias (re-exported as [`crate::Result`]).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An opaque error: a message plus an optional chain of causes.
+///
+/// Deliberately does **not** implement `std::error::Error`, so the blanket
+/// `From<E: std::error::Error>` impl below can coexist with the reflexive
+/// `From<Error> for Error` from core (the same trick `anyhow` uses).
+pub struct Error {
+    msg: String,
+    cause: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Build an error from any displayable message (e.g. the `String`
+    /// errors of [`crate::util::json::parse`]).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error {
+            msg: m.to_string(),
+            cause: None,
+        }
+    }
+
+    /// Wrap `self` with an outer context message.
+    pub fn context<C: fmt::Display>(self, ctx: C) -> Error {
+        Error {
+            msg: ctx.to_string(),
+            cause: Some(Box::new(self)),
+        }
+    }
+
+    /// The cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut next = Some(self);
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.cause.as_deref();
+            Some(cur.msg.as_str())
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    /// `{}` prints the outermost message; `{:#}` the full chain separated
+    /// by `": "` (anyhow's alternate convention).
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            for (i, m) in self.chain().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{m}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let causes: Vec<&str> = self.chain().skip(1).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in causes {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    /// `?`-conversion from any std error, flattening its source chain.
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut out: Option<Box<Error>> = None;
+        for msg in msgs.into_iter().rev() {
+            out = Some(Box::new(Error { msg, cause: out }));
+        }
+        *out.expect("at least one message")
+    }
+}
+
+/// Context extension for fallible values (`anyhow::Context` equivalent).
+pub trait Context<T> {
+    /// Attach a fixed context message on failure.
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+    /// Attach a lazily-built context message on failure.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::util::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless `cond` holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::util::error::Error::msg(format!($($arg)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing file")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing file"));
+    }
+
+    #[test]
+    fn context_wraps_and_alternate_prints_chain() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("opening dataset").unwrap_err();
+        assert_eq!(format!("{e}"), "opening dataset");
+        let full = format!("{e:#}");
+        assert!(full.starts_with("opening dataset: "), "{full}");
+        assert!(full.contains("missing file"));
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("metric").unwrap_err();
+        assert_eq!(e.to_string(), "metric");
+        assert_eq!(Some(1u32).with_context(|| "x").unwrap(), 1);
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 100 {
+                bail!("too big: {x}");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(5).unwrap(), 5);
+        assert!(f(-1).unwrap_err().to_string().contains("negative input -1"));
+        assert!(f(101).unwrap_err().to_string().contains("too big: 101"));
+    }
+
+    #[test]
+    fn debug_renders_cause_chain() {
+        let e = Error::msg("inner").context("outer");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("outer"));
+        assert!(dbg.contains("Caused by:"));
+        assert!(dbg.contains("inner"));
+    }
+}

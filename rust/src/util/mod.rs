@@ -1,13 +1,15 @@
 //! Substrates rebuilt from scratch.
 //!
-//! The offline environment has no `rand`, `rayon`, `serde`, `clap`, or
-//! `criterion`, so this module provides the pieces of those the rest of the
-//! crate needs: a counter-based PRNG ([`rng`]), a scoped parallel-for
-//! ([`threadpool`]), a JSON writer/parser ([`json`]), a flag parser
-//! ([`cli`]), and a measurement harness ([`bench`]).
+//! The offline environment has no `rand`, `rayon`, `serde`, `clap`,
+//! `criterion`, or `anyhow`, so this module provides the pieces of those
+//! the rest of the crate needs: a counter-based PRNG ([`rng`]), a scoped
+//! parallel-for ([`threadpool`]), a JSON writer/parser ([`json`]), a flag
+//! parser ([`cli`]), a measurement harness ([`bench`]), and an error type
+//! with context chaining ([`error`]).
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod rng;
 pub mod threadpool;

@@ -65,7 +65,7 @@ impl ConstructionKnobs {
             entry_diversity: 0.6,
             prefetch_depth: 32,
             prefetch_locality: 3,
-            }
+        }
     }
 
     /// Effective construction ef under the adaptive rule (§6.1 snippet:

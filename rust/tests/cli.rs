@@ -1,0 +1,62 @@
+//! Build-wiring smoke tests: the `crinn` binary links against the library,
+//! prints its usage text, and the engine-free subcommands run. Uses the
+//! `CARGO_BIN_EXE_<name>` env Cargo sets for integration tests, which also
+//! forces the bin target to build under `cargo test`.
+
+use std::process::Command;
+
+fn crinn_cmd() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_crinn"))
+}
+
+#[test]
+fn no_args_prints_usage_and_exits_2() {
+    let out = crinn_cmd().output().expect("run crinn");
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(
+        stderr.contains("usage: crinn <datasets|sweep|train|serve|prompt>"),
+        "stderr was: {stderr}"
+    );
+    // Every subcommand README.md §Quickstart documents is listed.
+    for sub in ["datasets", "sweep", "train", "serve", "prompt"] {
+        assert!(stderr.contains(sub), "usage is missing `{sub}`");
+    }
+}
+
+#[test]
+fn unknown_subcommand_prints_usage_and_exits_2() {
+    let out = crinn_cmd().arg("frobnicate").output().expect("run crinn");
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("usage: crinn"), "stderr was: {stderr}");
+}
+
+#[test]
+fn prompt_subcommand_renders_table1_prompt() {
+    // `crinn prompt` needs no dataset, no artifacts, and no engine — the
+    // cheapest end-to-end path through the binary.
+    let out = crinn_cmd()
+        .args(["prompt", "--module", "search"])
+        .output()
+        .expect("run crinn prompt");
+    assert_eq!(out.status.code(), Some(0), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for section in [
+        "## Task Description",
+        "## Previous Implementations with Speed",
+        "## Generation Protocol",
+        "## Critical Requirements",
+    ] {
+        assert!(stdout.contains(section), "prompt missing {section}");
+    }
+}
+
+#[test]
+fn prompt_rejects_unknown_module() {
+    let out = crinn_cmd()
+        .args(["prompt", "--module", "bogus"])
+        .output()
+        .expect("run crinn prompt");
+    assert_eq!(out.status.code(), Some(2));
+}
