@@ -1,6 +1,6 @@
 # Convenience targets. Rust work happens in rust/ (see README.md §Quickstart).
 
-.PHONY: build test bench artifacts clean
+.PHONY: build test bench bench-distance artifacts clean
 
 build:
 	cd rust && cargo build --release
@@ -10,6 +10,11 @@ test:
 
 bench:
 	cd rust && cargo bench
+
+# Quick kernel iteration: only the distance micro-bench (scalar vs SIMD vs
+# batch vs SQ8 rows for EXPERIMENTS.md §Perf).
+bench-distance:
+	cd rust && cargo bench --bench micro_distance
 
 # Lower the L2 JAX graphs + L1 Pallas kernels to HLO text artifacts
 # consumed by rust/src/runtime. Needs JAX; see DESIGN.md §Hardware-Adaptation.

@@ -18,7 +18,13 @@ fn main() {
     let mut all = Vec::new();
     for name in &datasets {
         eprintln!("[fig1] dataset {name}");
-        let ds = harness::bench_dataset(name, crinn::DEFAULT_K);
+        let ds = match harness::bench_dataset(name, crinn::DEFAULT_K) {
+            Ok(ds) => ds,
+            Err(e) => {
+                eprintln!("[fig1] skipping {name}: {e:#}");
+                continue;
+            }
+        };
         let mut panel = Vec::new();
         for (label, builder) in harness::algorithms() {
             let sweep = harness::run_algorithm(&ds, label, builder, &ef_grid);

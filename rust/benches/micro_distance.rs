@@ -1,16 +1,25 @@
-//! Micro-bench: distance kernels (f32 vs SQ8) across the Table-2 dims —
-//! the innermost hot path of every index, and the first §Perf target.
-//! Also times the PJRT batch-scan artifact per 64x4096 block for the
-//! batch-path comparison in EXPERIMENTS.md §Perf.
+//! Micro-bench: distance kernels (portable scalar vs dispatched SIMD vs
+//! one-to-many batch, plus SQ8) across the Table-2 dims — the innermost
+//! hot path of every index, and the first §Perf target. Also times the
+//! PJRT batch-scan artifact per 64x4096 block for the batch-path
+//! comparison in EXPERIMENTS.md §Perf.
+//!
+//! Quick iteration: `make bench-distance` from the repo root runs only
+//! this target.
 
-use crinn::distance::{dot, l2_sq, quant::QuantizedStore, Metric};
+use crinn::distance::{dot, l2_sq, l2_sq_batch, quant::QuantizedStore, simd, Metric};
 use crinn::util::bench::{report_row, time_adaptive};
 use crinn::util::rng::Rng;
 use std::hint::black_box;
 
+const BATCH: usize = 64;
+
 fn main() {
     let mut rng = Rng::new(1);
-    println!("## micro_distance — per-pair distance kernels\n");
+    println!(
+        "## micro_distance — per-pair distance kernels (dispatch: {})\n",
+        simd::kernels().name
+    );
     for &dim in &[25usize, 100, 128, 256, 784, 960] {
         let n = 1024;
         let data: Vec<f32> = (0..n * dim).map(|_| rng.next_gaussian_f32()).collect();
@@ -18,16 +27,40 @@ fn main() {
         let store = QuantizedStore::build(&data, dim);
         let qc = store.encode_query(&q);
 
+        // Portable scalar reference (what the dispatcher falls back to).
+        let mut i = 0;
+        let s = time_adaptive(0.3, 1000, || {
+            i = (i + 1) % n;
+            black_box(simd::portable::l2_sq(&q, &data[i * dim..(i + 1) * dim]));
+        });
+        report_row(&format!("l2_sq portable d={dim}"), &s);
+
+        // Dispatched SIMD kernel (AVX2+FMA where detected).
         let mut i = 0;
         let s = time_adaptive(0.3, 1000, || {
             i = (i + 1) % n;
             black_box(l2_sq(&q, &data[i * dim..(i + 1) * dim]));
         });
-        report_row(&format!("l2_sq f32 d={dim}"), &s);
+        report_row(&format!("l2_sq simd d={dim}"), &s);
         let flops = 3.0 * dim as f64;
+        println!("{:>60}", format!("~{:.2} GFLOP/s", flops / s.mean / 1e9));
+
+        // One-to-many batch kernel over a gathered (shuffled) id list —
+        // the HNSW edge-batch / rerank shape. Reported per call; per-pair
+        // cost is mean / BATCH.
+        let mut ids: Vec<u32> = (0..n as u32).collect();
+        rng.shuffle(&mut ids);
+        let mut out: Vec<f32> = Vec::with_capacity(BATCH);
+        let mut b = 0;
+        let s = time_adaptive(0.3, 1000, || {
+            b = (b + 1) % (n / BATCH);
+            l2_sq_batch(&q, &ids[b * BATCH..(b + 1) * BATCH], &data, dim, &mut out);
+            black_box(out.last().copied());
+        });
+        report_row(&format!("l2_sq_batch x{BATCH} d={dim}"), &s);
         println!(
             "{:>60}",
-            format!("~{:.2} GFLOP/s", flops / s.mean / 1e9)
+            format!("~{:.1} ns/pair amortized", s.mean / BATCH as f64 * 1e9)
         );
 
         let mut i = 0;
@@ -35,7 +68,7 @@ fn main() {
             i = (i + 1) % n;
             black_box(dot(&q, &data[i * dim..(i + 1) * dim]));
         });
-        report_row(&format!("dot f32 d={dim}"), &s);
+        report_row(&format!("dot simd d={dim}"), &s);
 
         let mut i = 0;
         let s = time_adaptive(0.3, 1000, || {

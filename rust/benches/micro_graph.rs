@@ -57,8 +57,13 @@ fn main() {
     });
     report_row("TopK(64) stream", &s);
 
-    // --- end-to-end beam search knob ablation.
-    println!("\n## beam search knob ablation (demo-64, 8k nodes, ef=64)\n");
+    // --- end-to-end beam search knob ablation. The edge_batch rows go
+    // through the one-to-many SIMD kernel (distance::simd), so the active
+    // dispatch matters when comparing against the baseline rows.
+    println!(
+        "\n## beam search knob ablation (demo-64, 8k nodes, ef=64, dispatch: {})\n",
+        crinn::distance::simd::kernels().name
+    );
     let sp = synth::spec("demo-64").unwrap();
     let ds = synth::generate_counts(sp, 8_000, 64, 3);
     let graph = crinn::anns::hnsw::builder::build(

@@ -23,7 +23,13 @@ fn main() {
         String::from("dataset,recall,crinn_qps,best_baseline,baseline_qps,improvement_pct\n");
     for name in &datasets {
         eprintln!("[table3] dataset {name}");
-        let ds = harness::bench_dataset(name, crinn::DEFAULT_K);
+        let ds = match harness::bench_dataset(name, crinn::DEFAULT_K) {
+            Ok(ds) => ds,
+            Err(e) => {
+                eprintln!("[table3] skipping {name}: {e:#}");
+                continue;
+            }
+        };
         let sweeps: Vec<_> = harness::algorithms()
             .into_iter()
             .map(|(label, builder)| harness::run_algorithm(&ds, label, builder, &ef_grid))

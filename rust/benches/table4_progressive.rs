@@ -26,7 +26,13 @@ fn main() {
 
     for name in &datasets {
         eprintln!("[table4] dataset {name}");
-        let ds = harness::bench_dataset(name, crinn::DEFAULT_K);
+        let ds = match harness::bench_dataset(name, crinn::DEFAULT_K) {
+            Ok(ds) => ds,
+            Err(e) => {
+                eprintln!("[table4] skipping {name}: {e:#}");
+                continue;
+            }
+        };
         let mut stage_qps = Vec::new();
         for (label, cfg) in &stages {
             let idx = crinn::anns::glass::GlassIndex::build(

@@ -104,7 +104,7 @@ impl GlassIndex {
 
         let mut ctx = self.checkout_ctx();
         let pool = self.quantized_beam(query, k, ef, &mut ctx);
-        let out = self.rerank(query, k, ef, pool);
+        let out = self.rerank(query, k, ef, pool, &mut ctx);
         self.checkin_ctx(ctx);
         out
     }
@@ -135,11 +135,13 @@ impl GlassIndex {
         ctx.visited.insert(e0);
         ctx.frontier.push(d0, e0);
         results.push(d0, e0);
-        // Extra tiers (§6.2) from the diverse entry-point set.
+        // Extra tiers (§6.2) from the diverse entry-point set. Tier 1 uses
+        // only the greedy-descended entry (same fix as `hnsw::search`: the
+        // old `_ => 1` fallback silently ran tier-2 behavior).
         let extra = match (knobs.entry_tiers, ef) {
             (t, ef) if t >= 3 && ef >= knobs.tier_budget_2 => g.entry_points.len(),
             (t, ef) if t >= 2 && ef >= knobs.tier_budget_1 => 3,
-            _ => 1,
+            _ => 0,
         };
         for &ep in g.entry_points.iter().take(extra) {
             if ctx.visited.insert(ep) {
@@ -227,25 +229,40 @@ impl GlassIndex {
         results.into_sorted()
     }
 
-    /// Exact re-rank of the quantized survivors (§6.3 knobs).
+    /// Exact re-rank of the quantized survivors (§6.3 knobs). With
+    /// `adaptive_prefetch` the gather runs through the one-to-many SIMD
+    /// kernel (prefetch pipelined, `refine.lookahead` deep) using the
+    /// pooled context's batch buffers — no per-query allocation beyond the
+    /// returned vector. Distances are bitwise identical either way, so
+    /// the knob stays a pure speed dial.
     fn rerank(
         &self,
         query: &[f32],
         k: usize,
         ef: usize,
         pool: Vec<(f32, u32)>,
+        ctx: &mut SearchContext,
     ) -> Vec<(f32, u32)> {
         let refine = &self.config.refine;
         let take = refine.rerank_count(k, ef).min(pool.len());
         let mut out: Vec<(f32, u32)> = Vec::with_capacity(take);
-        for (j, &(_, id)) in pool.iter().take(take).enumerate() {
-            if refine.adaptive_prefetch {
-                let ahead = j + refine.lookahead.max(1);
-                if ahead < take {
-                    prefetch(self.graph.vectors.vec(pool[ahead].1), 3);
-                }
-            }
-            out.push((self.graph.vectors.distance(query, id), id));
+        if refine.adaptive_prefetch {
+            ctx.batch.clear();
+            ctx.batch.extend(pool.iter().take(take).map(|&(_, id)| id));
+            self.graph.vectors.distance_batch_with(
+                query,
+                &ctx.batch,
+                refine.lookahead.max(1),
+                3,
+                &mut ctx.dists,
+            );
+            out.extend(ctx.batch.iter().zip(ctx.dists.iter()).map(|(&id, &d)| (d, id)));
+        } else {
+            out.extend(
+                pool.iter()
+                    .take(take)
+                    .map(|&(_, id)| (self.graph.vectors.distance(query, id), id)),
+            );
         }
         out.sort_by(crate::anns::heap::dist_cmp);
         out.truncate(k);
@@ -372,6 +389,25 @@ mod tests {
         let after = idx.search(ds.query_vec(0), 10, 64);
         // Same graph, different pipeline; both decent answers.
         assert_eq!(before.len(), after.len());
+    }
+
+    #[test]
+    fn adaptive_prefetch_is_result_invariant() {
+        // The §6.3 prefetch knob now routes the rerank gather through the
+        // one-to-many SIMD kernel; it must stay a pure speed dial.
+        let ds = dataset();
+        let mut cfg = VariantConfig::glass_baseline();
+        cfg.refine.adaptive_prefetch = false;
+        let mut idx = GlassIndex::build(VectorSet::from_dataset(&ds), cfg.clone(), 3);
+        let before: Vec<_> = (0..ds.n_queries())
+            .map(|qi| idx.search_with_dists(ds.query_vec(qi), 10, 64))
+            .collect();
+        cfg.refine.adaptive_prefetch = true;
+        idx.set_runtime_knobs(&cfg);
+        let after: Vec<_> = (0..ds.n_queries())
+            .map(|qi| idx.search_with_dists(ds.query_vec(qi), 10, 64))
+            .collect();
+        assert_eq!(before, after);
     }
 
     #[test]

@@ -3,9 +3,10 @@
 //! Implements every §6.2 knob:
 //! * **multi-tier entry selection** — `entry_tiers` + budget thresholds
 //!   admit additional diverse entry points as `ef` grows;
-//! * **batch edge processing** — unvisited neighbors are gathered, their
-//!   vectors prefetched, then evaluated (turns dependent random loads into
-//!   a software pipeline);
+//! * **batch edge processing** — unvisited neighbors are gathered, then the
+//!   whole batch is evaluated with one one-to-many SIMD kernel call
+//!   ([`crate::distance::simd`]) whose internal prefetch pipelining turns
+//!   dependent random loads into a software pipeline;
 //! * **early termination** — convergence detection on consecutive
 //!   non-improving expansions;
 //! * **prefetch depth/locality** — `_mm_prefetch` hints while walking
@@ -26,6 +27,9 @@ pub struct SearchContext {
     pub frontier: MinQueue,
     /// Batch buffer for the edge-batching knob.
     pub batch: Vec<u32>,
+    /// Distance buffer filled by the one-to-many kernel, aligned with
+    /// `batch`.
+    pub dists: Vec<f32>,
 }
 
 impl SearchContext {
@@ -34,6 +38,7 @@ impl SearchContext {
             visited: VisitedSet::new(n),
             frontier: MinQueue::with_capacity(256),
             batch: Vec::with_capacity(64),
+            dists: Vec::with_capacity(64),
         }
     }
 
@@ -93,7 +98,10 @@ pub fn search(
     let extra = match (knobs.entry_tiers, ef) {
         (t, ef) if t >= 3 && ef >= knobs.tier_budget_2 => graph.entry_points.len(),
         (t, ef) if t >= 2 && ef >= knobs.tier_budget_1 => 3,
-        _ => 1,
+        // Tier 1 must use only the greedy-descended entry: admitting
+        // `entry_points[0]` here silently ran tier-2 behavior and skewed
+        // every entry_tiers ablation.
+        _ => 0,
     };
     for &ep in graph.entry_points.iter().take(extra) {
         if ctx.visited.insert(ep) {
@@ -114,7 +122,10 @@ pub fn search(
         let mut improved = false;
 
         if knobs.edge_batch {
-            // Gather unvisited neighbors in batches, prefetch, evaluate.
+            // Gather unvisited neighbors in batches, then evaluate each
+            // batch with one one-to-many kernel call — prefetch is
+            // pipelined inside the kernel (§6.2), turning the dependent
+            // random loads into a software pipeline.
             let bs = knobs.batch_size.max(1);
             let mut idx = 0;
             while idx < neighbors.len() {
@@ -126,11 +137,14 @@ pub fn search(
                         ctx.batch.push(nb);
                     }
                 }
-                for &nb in ctx.batch.iter().take(knobs.prefetch_depth) {
-                    prefetch(graph.vectors.vec(nb), knobs.prefetch_locality);
-                }
-                for &nb in &ctx.batch {
-                    let dnb = graph.vectors.distance(q, nb);
+                graph.vectors.distance_batch_with(
+                    q,
+                    &ctx.batch,
+                    knobs.prefetch_depth,
+                    knobs.prefetch_locality,
+                    &mut ctx.dists,
+                );
+                for (&nb, &dnb) in ctx.batch.iter().zip(ctx.dists.iter()) {
                     if dnb < results.bound() {
                         if results.push(dnb, nb) {
                             improved = true;
@@ -140,11 +154,22 @@ pub fn search(
                 }
             }
         } else {
-            // Baseline: sequential scan with bounded lookahead prefetch
-            // (the paper's "old" fixed window of 5).
+            // Baseline: sequential scan with a sliding `prefetch_depth`-deep
+            // lookahead window — warm the first `depth` vectors, then keep
+            // prefetching `neighbors[j + depth]` while evaluating
+            // `neighbors[j]` (the old code only prefetched the first
+            // `depth` neighbors one step ahead).
+            let depth = knobs.prefetch_depth;
+            if depth > 0 {
+                for &nb in neighbors.iter().take(depth) {
+                    prefetch(graph.vectors.vec(nb), knobs.prefetch_locality);
+                }
+            }
             for (j, &nb) in neighbors.iter().enumerate() {
-                if j + 1 < neighbors.len() && j < knobs.prefetch_depth {
-                    prefetch(graph.vectors.vec(neighbors[j + 1]), knobs.prefetch_locality);
+                if depth > 0 {
+                    if let Some(&ahead) = neighbors.get(j + depth) {
+                        prefetch(graph.vectors.vec(ahead), knobs.prefetch_locality);
+                    }
                 }
                 if !ctx.visited.insert(nb) {
                     continue;
@@ -208,9 +233,17 @@ pub fn search_layer(
         } else {
             graph.neighbors_upper(level, u)
         };
+        // Sliding lookahead window (same shape as the query path above).
+        if prefetch_depth > 0 {
+            for &nb in neighbors.iter().take(prefetch_depth) {
+                prefetch(graph.vectors.vec(nb), prefetch_locality);
+            }
+        }
         for (j, &nb) in neighbors.iter().enumerate() {
-            if j + 1 < neighbors.len() && j < prefetch_depth {
-                prefetch(graph.vectors.vec(neighbors[j + 1]), prefetch_locality);
+            if prefetch_depth > 0 {
+                if let Some(&ahead) = neighbors.get(j + prefetch_depth) {
+                    prefetch(graph.vectors.vec(ahead), prefetch_locality);
+                }
             }
             if !visited.insert(nb) {
                 continue;
@@ -314,6 +347,64 @@ mod tests {
         }
         let ids: std::collections::HashSet<u32> = out.iter().map(|x| x.1).collect();
         assert_eq!(ids.len(), 10);
+    }
+
+    #[test]
+    fn tier1_ignores_extra_entry_points() {
+        // Two structurally identical multi-entry graphs, one with its
+        // entry-point set emptied. A tier-1 search must not touch
+        // `graph.entry_points` at all, so results AND visited-node counts
+        // must match exactly (the old `_ => 1` fallback admitted
+        // `entry_points[0]` and silently ran tier-2 behavior).
+        let mut data = Vec::new();
+        for i in 0..10 {
+            for j in 0..10 {
+                data.push(i as f32);
+                data.push(j as f32);
+            }
+        }
+        let knobs_build = ConstructionKnobs {
+            num_entry_points: 5,
+            ..Default::default()
+        };
+        let g = crate::anns::hnsw::builder::build(
+            VectorSet::new(data.clone(), 2, Metric::L2),
+            &knobs_build,
+            1,
+        );
+        assert!(g.entry_points.len() >= 2, "need a multi-entry graph");
+        let mut bare = crate::anns::hnsw::builder::build(
+            VectorSet::new(data, 2, Metric::L2),
+            &knobs_build,
+            1,
+        );
+        bare.entry_points.clear();
+
+        let tier1 = SearchKnobs::default();
+        assert_eq!(tier1.entry_tiers, 1);
+        let mut ctx = SearchContext::new(g.len());
+        for q in [[0.3f32, 9.1], [5.2, 4.8], [9.7, 0.2]] {
+            let a = search(&g, &tier1, &mut ctx, &q, 5, 32);
+            let va = ctx.visited.count();
+            let b = search(&bare, &tier1, &mut ctx, &q, 5, 32);
+            let vb = ctx.visited.count();
+            assert_eq!(a, b, "tier-1 results depend on entry_points");
+            assert_eq!(va, vb, "tier-1 search visited entry_points nodes");
+        }
+
+        // Sanity: tier 3 with crossed budgets really does seed the extra
+        // entries (visits at least as many nodes as the bare graph).
+        let tier3 = SearchKnobs {
+            entry_tiers: 3,
+            tier_budget_1: 8,
+            tier_budget_2: 16,
+            ..Default::default()
+        };
+        search(&g, &tier3, &mut ctx, &[0.3, 9.1], 5, 32);
+        let v3 = ctx.visited.count();
+        search(&bare, &tier3, &mut ctx, &[0.3, 9.1], 5, 32);
+        let v3_bare = ctx.visited.count();
+        assert!(v3 >= v3_bare, "tier-3 should seed extra entries ({v3} < {v3_bare})");
     }
 
     #[test]

@@ -220,12 +220,13 @@ impl AnnIndex for IvfIndex {
                 pool.push(d, i);
             }
         }
-        // Exact rerank.
-        let mut exact: Vec<(f32, u32)> = pool
-            .into_sorted()
-            .into_iter()
-            .map(|(_, i)| (self.vectors.distance(query, i), i))
-            .collect();
+        // Exact rerank of the quantized survivors through the one-to-many
+        // SIMD kernel (prefetch pipelined gather over the f32 rows).
+        let ids: Vec<u32> = pool.into_sorted().into_iter().map(|(_, i)| i).collect();
+        let mut dists = Vec::with_capacity(ids.len());
+        self.vectors.distance_batch(query, &ids, &mut dists);
+        let mut exact: Vec<(f32, u32)> =
+            ids.into_iter().zip(dists).map(|(i, d)| (d, i)).collect();
         exact.sort_by(dist_cmp);
         exact.truncate(k);
         exact.into_iter().map(|(_, i)| i).collect()

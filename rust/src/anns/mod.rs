@@ -78,6 +78,38 @@ impl VectorSet {
     pub fn distance(&self, q: &[f32], i: u32) -> f32 {
         self.metric.distance(q, self.vec(i))
     }
+
+    /// Distances from `q` to a gathered id list through the one-to-many
+    /// SIMD kernels (prefetch pipelined; clears and refills `out`). Bitwise
+    /// identical to per-pair [`VectorSet::distance`] calls.
+    #[inline]
+    pub fn distance_batch(&self, q: &[f32], ids: &[u32], out: &mut Vec<f32>) {
+        self.metric.distance_batch(q, ids, &self.data, self.dim, out);
+    }
+
+    /// [`VectorSet::distance_batch`] with an explicit prefetch schedule —
+    /// how the §6 prefetch knobs reach the batched paths (`lookahead == 0`
+    /// disables prefetch; results are identical for every schedule).
+    #[inline]
+    pub fn distance_batch_with(
+        &self,
+        q: &[f32],
+        ids: &[u32],
+        lookahead: usize,
+        locality: i32,
+        out: &mut Vec<f32>,
+    ) {
+        crate::distance::distance_batch_with(
+            self.metric,
+            q,
+            ids,
+            &self.data,
+            self.dim,
+            lookahead,
+            locality,
+            out,
+        );
+    }
 }
 
 #[cfg(test)]
@@ -91,5 +123,14 @@ mod tests {
         assert_eq!(vs.len(), 2);
         assert_eq!(vs.vec(1), &[3.0, 4.0]);
         assert_eq!(vs.distance(&[0.0, 0.0], 1), 25.0);
+    }
+
+    #[test]
+    fn vectorset_distance_batch_matches_per_pair() {
+        let vs = VectorSet::new(vec![0.0, 0.0, 3.0, 4.0, 1.0, 1.0], 2, Metric::L2);
+        let q = [0.5, 0.5];
+        let mut out = Vec::new();
+        vs.distance_batch(&q, &[2, 0, 1], &mut out);
+        assert_eq!(out, vec![vs.distance(&q, 2), vs.distance(&q, 0), vs.distance(&q, 1)]);
     }
 }

@@ -48,6 +48,12 @@ impl VisitedSet {
         self.stamps[i as usize] == self.epoch
     }
 
+    /// Number of nodes visited this epoch. O(n) scan — for tests and
+    /// search statistics, not the hot path.
+    pub fn count(&self) -> usize {
+        self.stamps.iter().filter(|&&s| s == self.epoch).count()
+    }
+
     /// Grow to accommodate `n` nodes (incremental insertion).
     pub fn resize(&mut self, n: usize) {
         if n > self.stamps.len() {
@@ -68,8 +74,10 @@ mod tests {
         assert!(!v.insert(3));
         assert!(v.contains(3));
         assert!(!v.contains(4));
+        assert_eq!(v.count(), 1);
         v.clear();
         assert!(!v.contains(3));
+        assert_eq!(v.count(), 0);
         assert!(v.insert(3));
     }
 

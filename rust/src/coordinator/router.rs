@@ -9,6 +9,11 @@ use crate::dataset::Dataset;
 use crate::variants::VariantConfig;
 use std::sync::Arc;
 
+/// Below this many total vectors the shard fan-out runs sequentially:
+/// per-query scoped-thread spawn (~tens of µs) would rival the per-shard
+/// search cost and regress serving latency.
+pub const PARALLEL_FANOUT_MIN: usize = 10_000;
+
 /// A router over contiguous shards; shard `s` owns base rows
 /// `[offsets[s], offsets[s+1])` and ids are remapped back to global.
 pub struct ShardedRouter {
@@ -61,9 +66,15 @@ impl ShardedRouter {
         self.shards.len()
     }
 
-    /// Fan out and merge. Each shard returns its local top-k with ids
-    /// remapped to global; results re-sorted by exact distance computed
-    /// against the caller-provided scorer.
+    /// Fan out and merge. For large indexes the shard searches (which are
+    /// independent) run through the thread pool; below
+    /// [`PARALLEL_FANOUT_MIN`] total vectors — where a per-shard search is
+    /// only ~tens of µs, comparable to scoped-thread spawn cost — the
+    /// fan-out stays sequential, as it does under `CRINN_THREADS=1`. The
+    /// merge walks shards in index order either way, so results are
+    /// identical for every thread count. Each shard returns its local
+    /// top-k with ids remapped to global; results re-sorted by exact
+    /// distance computed against the caller-provided scorer.
     pub fn search(
         &self,
         query: &[f32],
@@ -71,10 +82,21 @@ impl ShardedRouter {
         ef: usize,
         score: impl Fn(u32) -> f32,
     ) -> Vec<u32> {
+        let per_shard: Vec<Vec<u32>> = if self.shards.len() > 1 && self.len() >= PARALLEL_FANOUT_MIN
+        {
+            crate::util::threadpool::parallel_map(self.shards.len(), 1, |s| {
+                self.shards[s].search(query, k, ef)
+            })
+        } else {
+            self.shards
+                .iter()
+                .map(|shard| shard.search(query, k, ef))
+                .collect()
+        };
         let mut merged: Vec<(f32, u32)> = Vec::with_capacity(k * self.shards.len());
-        for (s, shard) in self.shards.iter().enumerate() {
+        for (s, locals) in per_shard.into_iter().enumerate() {
             let base = self.offsets[s];
-            for local in shard.search(query, k, ef) {
+            for local in locals {
                 let global = base + local;
                 merged.push((score(global), global));
             }

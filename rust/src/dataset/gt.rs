@@ -27,28 +27,42 @@ pub fn brute_force_topk(
 }
 
 /// Top-k scan for one query over a sorted-ascending bounded pool:
-/// O(k) insertion on improvement, O(1) rejection against the current worst.
+/// distances come in blocks from the one-to-many SIMD kernel (prefetch
+/// pipelined), then O(k) insertion on improvement / O(1) rejection against
+/// the current worst. Iteration order matches the plain scan, so results
+/// (and tie-breaks) are identical to the per-pair path.
 pub fn topk_for_query(base: &[f32], q: &[f32], dim: usize, metric: Metric, k: usize) -> Vec<u32> {
     let n = base.len() / dim;
     let k = k.min(n);
     if k == 0 {
         return Vec::new();
     }
+    const BLOCK: usize = 64;
     // (dist, idx) sorted ascending; pool.last() is the current worst.
     let mut pool: Vec<(f32, u32)> = Vec::with_capacity(k + 1);
-    for i in 0..n {
-        let d = metric.distance(q, &base[i * dim..(i + 1) * dim]);
-        let cand = (d, i as u32);
-        if pool.len() == k && cmp_asc(&cand, pool.last().unwrap()) != std::cmp::Ordering::Less {
-            continue;
+    let mut ids: Vec<u32> = Vec::with_capacity(BLOCK);
+    let mut dists: Vec<f32> = Vec::with_capacity(BLOCK);
+    let mut start = 0usize;
+    while start < n {
+        let end = (start + BLOCK).min(n);
+        ids.clear();
+        ids.extend(start as u32..end as u32);
+        metric.distance_batch(q, &ids, base, dim, &mut dists);
+        for (&i, &d) in ids.iter().zip(&dists) {
+            let cand = (d, i);
+            if pool.len() == k && cmp_asc(&cand, pool.last().unwrap()) != std::cmp::Ordering::Less
+            {
+                continue;
+            }
+            let pos = pool
+                .binary_search_by(|probe| cmp_asc(probe, &cand))
+                .unwrap_or_else(|p| p);
+            pool.insert(pos, cand);
+            if pool.len() > k {
+                pool.pop();
+            }
         }
-        let pos = pool
-            .binary_search_by(|probe| cmp_asc(probe, &cand))
-            .unwrap_or_else(|p| p);
-        pool.insert(pos, cand);
-        if pool.len() > k {
-            pool.pop();
-        }
+        start = end;
     }
     pool.into_iter().map(|(_, i)| i).collect()
 }

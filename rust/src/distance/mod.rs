@@ -9,11 +9,17 @@
 //! * `Angular` — `1 - <q, b>` on unit vectors (ann-benchmarks angular),
 //! * `Ip`      — negated inner product.
 //!
-//! The f32 kernels are written as 8-wide chunked loops so LLVM reliably
-//! auto-vectorizes them (verified in the §Perf pass); [`quant`] provides the
-//! int8 scalar-quantized path used by the GLASS refinement stage.
+//! The f32 kernels live in [`simd`]: explicit AVX2+FMA implementations with
+//! a portable 8-wide fallback, selected once at startup into function
+//! pointers (`is_x86_feature_detected!` — DESIGN.md §SIMD-Dispatch), plus
+//! one-to-many batch kernels ([`l2_sq_batch`]/[`dot_batch`]) that interleave
+//! software prefetch with evaluation. [`quant`] provides the int8
+//! scalar-quantized path used by the GLASS refinement stage.
 
 pub mod quant;
+pub mod simd;
+
+pub use simd::{distance_batch, distance_batch_with, dot_batch, l2_sq_batch};
 
 /// Distance metric. Mirrors the dataset metric in Table 2.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -58,48 +64,35 @@ impl Metric {
             Metric::Ip => -dot(a, b),
         }
     }
+
+    /// Distances from `q` to each `ids[i]` row of `data` (row-major, `dim`
+    /// columns) via the prefetch-pipelined batch kernels. Clears and
+    /// refills `out`, index-aligned with `ids`; results are bitwise
+    /// identical to calling [`Metric::distance`] per pair.
+    #[inline]
+    pub fn distance_batch(
+        &self,
+        q: &[f32],
+        ids: &[u32],
+        data: &[f32],
+        dim: usize,
+        out: &mut Vec<f32>,
+    ) {
+        simd::distance_batch(*self, q, ids, data, dim, out);
+    }
 }
 
-/// Squared L2 distance, 8-wide chunked for auto-vectorization.
+/// Squared L2 distance through the runtime-dispatched kernel (AVX2+FMA
+/// where detected, portable 8-wide otherwise — see [`simd::kernels`]).
 #[inline]
 pub fn l2_sq(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0f32; 8];
-    let chunks = a.len() / 8;
-    for c in 0..chunks {
-        let ao = &a[c * 8..c * 8 + 8];
-        let bo = &b[c * 8..c * 8 + 8];
-        for i in 0..8 {
-            let d = ao[i] - bo[i];
-            acc[i] += d * d;
-        }
-    }
-    let mut sum = acc.iter().sum::<f32>();
-    for i in chunks * 8..a.len() {
-        let d = a[i] - b[i];
-        sum += d * d;
-    }
-    sum
+    (simd::kernels().l2_sq)(a, b)
 }
 
-/// Inner product, 8-wide chunked.
+/// Inner product through the runtime-dispatched kernel.
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0f32; 8];
-    let chunks = a.len() / 8;
-    for c in 0..chunks {
-        let ao = &a[c * 8..c * 8 + 8];
-        let bo = &b[c * 8..c * 8 + 8];
-        for i in 0..8 {
-            acc[i] += ao[i] * bo[i];
-        }
-    }
-    let mut sum = acc.iter().sum::<f32>();
-    for i in chunks * 8..a.len() {
-        sum += a[i] * b[i];
-    }
-    sum
+    (simd::kernels().dot)(a, b)
 }
 
 /// Euclidean norm.

@@ -10,6 +10,7 @@ use crate::anns::{AnnIndex, VectorSet};
 use crate::dataset::synth;
 use crate::dataset::Dataset;
 use crate::eval::sweep::{sweep_index, SweepResult};
+use crate::util::error::{Context, Result};
 use crate::variants::VariantConfig;
 use std::sync::Arc;
 
@@ -24,10 +25,37 @@ fn env_usize(key: &str, default: usize) -> usize {
         .unwrap_or(default)
 }
 
-/// The ef grid used by the paper benches.
+/// Parse a comma-separated ef list. Empty tokens (trailing commas) are
+/// skipped; any non-empty unparsable token rejects the whole value — a
+/// typo must not silently shrink the sweep grid.
+fn parse_ef_list(s: &str) -> Option<Vec<usize>> {
+    let mut grid = Vec::new();
+    for t in s.split(',') {
+        let t = t.trim();
+        if t.is_empty() {
+            continue;
+        }
+        grid.push(t.parse().ok()?);
+    }
+    if grid.is_empty() {
+        None
+    } else {
+        Some(grid)
+    }
+}
+
+/// The ef grid used by the paper benches. An unparsable `CRINN_BENCH_EF`
+/// (e.g. empty) falls back to the default grid with a warning — the old
+/// behavior returned an empty grid and sweeps silently emitted zero rows.
 pub fn bench_ef_grid() -> Vec<usize> {
     if let Ok(s) = std::env::var("CRINN_BENCH_EF") {
-        return s.split(',').filter_map(|t| t.trim().parse().ok()).collect();
+        match parse_ef_list(&s) {
+            Some(grid) => return grid,
+            None => eprintln!(
+                "warning: CRINN_BENCH_EF={s:?} is empty or has an unparsable token; \
+                 using the default ef grid"
+            ),
+        }
     }
     vec![10, 16, 24, 32, 48, 64, 96, 128, 192, 256]
 }
@@ -43,12 +71,17 @@ pub fn bench_dataset_names() -> Vec<String> {
         .collect()
 }
 
-/// Generate one bench dataset with ground truth at the bench scale.
-pub fn bench_dataset(name: &str, k: usize) -> Dataset {
-    let sp = synth::spec(name).unwrap_or_else(|| panic!("unknown dataset {name}"));
+/// Generate one bench dataset with ground truth at the bench scale. An
+/// unknown name (e.g. a typo in `CRINN_BENCH_DATASETS`) is an `Err`
+/// listing the valid names, not a panic.
+pub fn bench_dataset(name: &str, k: usize) -> Result<Dataset> {
+    let sp = synth::spec(name).with_context(|| {
+        let valid: Vec<&str> = synth::SPECS.iter().map(|s| s.name).collect();
+        format!("unknown dataset {name:?}; valid names: {}", valid.join(", "))
+    })?;
     let n = env_usize("CRINN_BENCH_N", DEFAULT_BENCH_N).min(sp.full_base);
     let nq = env_usize("CRINN_BENCH_QUERIES", DEFAULT_BENCH_QUERIES).min(sp.full_queries);
-    synth::generate_with_gt(name, n, nq, k, 42)
+    Ok(synth::generate_with_gt(name, n, nq, k, 42))
 }
 
 /// The Figure-1 algorithm roster: `(label, builder)`.
@@ -147,4 +180,29 @@ pub fn reports_dir() -> std::path::PathBuf {
     let p = std::path::PathBuf::from("reports");
     std::fs::create_dir_all(&p).ok();
     p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_ef_list_rejects_empty_or_garbage() {
+        assert_eq!(parse_ef_list("10, 32,128"), Some(vec![10, 32, 128]));
+        assert_eq!(parse_ef_list("64"), Some(vec![64]));
+        assert_eq!(parse_ef_list("10,32,"), Some(vec![10, 32]));
+        assert_eq!(parse_ef_list(""), None);
+        assert_eq!(parse_ef_list("a,b"), None);
+        // A typo rejects the whole value (silently dropping the token
+        // would shrink the grid without a diagnostic).
+        assert_eq!(parse_ef_list("10,1O0,32"), None);
+    }
+
+    #[test]
+    fn bench_dataset_unknown_name_lists_valid_names() {
+        let err = bench_dataset("bogus-dataset", 10).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("bogus-dataset"), "{msg}");
+        assert!(msg.contains("sift-128-euclidean"), "{msg}");
+    }
 }

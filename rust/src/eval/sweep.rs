@@ -1,9 +1,20 @@
 //! ef sweeps: measure (recall, QPS) points for an index over a query set —
 //! the measurement protocol behind Figure 1, Table 3, Table 4 and the
 //! CRINN reward (§3.3).
+//!
+//! Query evaluation is parallel: each pass runs the query set through
+//! [`parallel_map`] (sized by `CRINN_THREADS`), with per-worker
+//! [`crate::anns::hnsw::search::SearchContext`]s supplied by the index
+//! implementations' internal context pools. The map is order-preserving
+//! and every index search is deterministic, so recall and per-query
+//! results are **bit-identical** for every thread count —
+//! `CRINN_THREADS=1` reproduces the sequential ann-benchmarks protocol
+//! exactly (asserted by `tests/properties.rs` and the CLI determinism
+//! test).
 
 use crate::anns::AnnIndex;
 use crate::dataset::{gt::recall_at_k, Dataset};
+use crate::util::threadpool::parallel_map;
 use std::time::Instant;
 
 /// One measured point on a QPS-recall curve.
@@ -34,43 +45,52 @@ impl SweepResult {
     }
 }
 
-/// Measure one ef setting: runs every query once (timed, single thread —
-/// ann-benchmarks' protocol), returns the curve point.
+/// Measure one ef setting: runs every query once per pass through the
+/// parallel worker pool, returns the curve point. QPS is aggregate
+/// wall-clock throughput across the pool (with `CRINN_THREADS=1` this
+/// degrades to ann-benchmarks' sequential single-thread protocol);
+/// latencies are always per-query.
 pub fn measure_point(index: &dyn AnnIndex, ds: &Dataset, k: usize, ef: usize) -> CurvePoint {
     assert!(!ds.gt.is_empty(), "dataset needs ground truth");
     let nq = ds.n_queries();
-    let mut lat = Vec::with_capacity(nq * 2);
-    let mut recall_acc = 0.0;
-    // Warmup on a few queries (pays one-time lazy costs).
-    for qi in 0..nq.min(5) {
-        std::hint::black_box(index.search(ds.query_vec(qi), k, ef));
-    }
+    // Untimed recall pass — keeps recall_at_k out of the timed window (it
+    // would bias QPS low for fast configurations) and doubles as warmup
+    // (pays one-time lazy costs: SIMD kernel dispatch, context-pool
+    // growth, page faults). Order-preserving map: the sequential sum below
+    // is identical for every thread count.
+    let recalls: Vec<f64> = parallel_map(nq, 4, |qi| {
+        let found = index.search(ds.query_vec(qi), k, ef);
+        recall_at_k(&found, &ds.gt[qi], k)
+    });
+    let recall_acc: f64 = recalls.iter().sum();
     // Repeat the full query set until >= MIN_SECS of measurement has
     // accumulated (up to MAX_PASSES) — a single 100-query pass is ~2 ms at
     // small scale and VM jitter dominates it.
     const MIN_SECS: f64 = 0.04;
     const MAX_PASSES: usize = 8;
+    let mut lat = Vec::with_capacity(nq * 2);
     let mut passes = 0usize;
-    let mut total = 0.0f64;
-    while passes < MAX_PASSES && (passes == 0 || total < MIN_SECS) {
-        for qi in 0..nq {
-            let q = ds.query_vec(qi);
+    let mut wall = 0.0f64;
+    while passes < MAX_PASSES && (passes == 0 || wall < MIN_SECS) {
+        let t_pass = Instant::now();
+        let pass: Vec<f64> = parallel_map(nq, 4, |qi| {
             let t = Instant::now();
-            let found = index.search(q, k, ef);
-            let dt = t.elapsed().as_secs_f64();
-            lat.push(dt);
-            total += dt;
-            if passes == 0 {
-                recall_acc += recall_at_k(&found, &ds.gt[qi], k);
-            }
-        }
+            std::hint::black_box(index.search(ds.query_vec(qi), k, ef));
+            t.elapsed().as_secs_f64()
+        });
+        wall += t_pass.elapsed().as_secs_f64();
+        lat.extend(pass);
         passes += 1;
     }
     let stats = crate::util::bench::Stats::from_samples(lat);
     CurvePoint {
         ef,
         recall: recall_acc / nq as f64,
-        qps: if stats.mean > 0.0 { 1.0 / stats.mean } else { 0.0 },
+        qps: if wall > 0.0 {
+            (nq * passes) as f64 / wall
+        } else {
+            0.0
+        },
         mean_latency_s: stats.mean,
         p99_latency_s: stats.p99,
     }
@@ -117,6 +137,32 @@ mod tests {
             assert!((p.recall - 1.0).abs() < 1e-9, "brute force recall {}", p.recall);
             assert!(p.qps > 0.0);
             assert!(p.mean_latency_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn sweep_recall_matches_sequential_reference() {
+        // Whatever CRINN_THREADS the ambient environment sets (CI runs the
+        // suite at 2), the parallel sweep's recall must equal the plain
+        // sequential loop bit-for-bit.
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 900, 40, 63);
+        ds.compute_ground_truth(10);
+        let idx = crate::anns::hnsw::HnswIndex::build(
+            VectorSet::from_dataset(&ds),
+            &crate::variants::ConstructionKnobs::default(),
+            crate::variants::SearchKnobs::default(),
+            1,
+        );
+        for ef in [16usize, 64] {
+            let mut acc = 0.0;
+            for qi in 0..ds.n_queries() {
+                let found = idx.search(ds.query_vec(qi), 10, ef);
+                acc += crate::dataset::gt::recall_at_k(&found, &ds.gt[qi], 10);
+            }
+            let want = acc / ds.n_queries() as f64;
+            let got = measure_point(&idx, &ds, 10, ef).recall;
+            assert_eq!(got, want, "ef={ef}");
         }
     }
 

@@ -19,7 +19,7 @@
 //! | module | role |
 //! |---|---|
 //! | [`util`] | substrates rebuilt from scratch (rng, json, threadpool, cli, bench) |
-//! | [`distance`] | f32 + int8-quantized distance kernels (Rust hot path) |
+//! | [`distance`] | runtime-dispatched SIMD f32 + int8-quantized kernels, one-to-many batch API |
 //! | [`dataset`] | Table-2-matched synthetic generators, IO, LID, ground truth |
 //! | [`anns`] | index implementations incl. the GLASS starting point |
 //! | [`variants`] | the §6 optimization-knob space (CRINN's action space) |

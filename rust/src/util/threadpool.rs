@@ -22,16 +22,26 @@ pub fn effective_threads() -> usize {
 }
 
 /// Run `f(start, end)` over `[0, n)` split into contiguous chunks across
-/// threads. `f` must be `Sync`; chunks are claimed dynamically (atomic
+/// threads (sized by [`effective_threads`], i.e. the `CRINN_THREADS`
+/// override). `f` must be `Sync`; chunks are claimed dynamically (atomic
 /// cursor) so uneven work self-balances.
 pub fn parallel_for<F>(n: usize, min_chunk: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    parallel_for_threads(n, min_chunk, effective_threads(), f);
+}
+
+/// [`parallel_for`] with an explicit worker count — the seam tests use to
+/// exercise the threaded path without touching process environment.
+/// `threads <= 1` runs `f(0, n)` on the calling thread.
+pub fn parallel_for_threads<F>(n: usize, min_chunk: usize, threads: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
 {
     if n == 0 {
         return;
     }
-    let threads = effective_threads();
     if threads <= 1 || n <= min_chunk {
         f(0, n);
         return;
@@ -58,11 +68,22 @@ where
     T: Send + Default + Clone,
     F: Fn(usize) -> T + Sync,
 {
+    parallel_map_threads(n, min_chunk, effective_threads(), f)
+}
+
+/// [`parallel_map`] with an explicit worker count. Output order is by
+/// index regardless of which thread computed which chunk, so results are
+/// identical for every `threads` value (given a deterministic `f`).
+pub fn parallel_map_threads<T, F>(n: usize, min_chunk: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
     let mut out = vec![T::default(); n];
     {
         let slots = SyncSlice(out.as_mut_ptr());
         let slots_ref = &slots; // capture the Sync wrapper, not the raw ptr
-        parallel_for(n, min_chunk, move |start, end| {
+        parallel_for_threads(n, min_chunk, threads, move |start, end| {
             for i in start..end {
                 // SAFETY: each index is written by exactly one chunk owner.
                 unsafe { *slots_ref.0.add(i) = f(i) };
@@ -116,5 +137,14 @@ mod tests {
     fn threads_env_override() {
         // effective_threads is >= 1 regardless of environment.
         assert!(effective_threads() >= 1);
+    }
+
+    #[test]
+    fn explicit_thread_counts_agree() {
+        let want: Vec<usize> = (0..500).map(|i| i * 3 + 1).collect();
+        for threads in [1, 2, 4, 8] {
+            let got = parallel_map_threads(500, 8, threads, |i| i * 3 + 1);
+            assert_eq!(got, want, "threads={threads}");
+        }
     }
 }

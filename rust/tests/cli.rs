@@ -53,6 +53,57 @@ fn prompt_subcommand_renders_table1_prompt() {
 }
 
 #[test]
+fn sweep_results_identical_across_thread_counts() {
+    // The acceptance contract for the parallel sweep path: `crinn sweep`
+    // must emit bit-identical ef/recall rows under CRINN_THREADS=1 (the
+    // sequential ann-benchmarks protocol) and a threaded run. Subprocess
+    // env is per-run, so this is race-free unlike in-process set_var.
+    let run = |threads: &str| -> Vec<(String, String)> {
+        let out = crinn_cmd()
+            .args([
+                "sweep",
+                "--dataset",
+                "demo-64",
+                "--algo",
+                "hnsw",
+                "--n",
+                "600",
+                "--queries",
+                "30",
+                "--ef",
+                "16,64",
+            ])
+            .env("CRINN_THREADS", threads)
+            .output()
+            .expect("run crinn sweep");
+        assert_eq!(
+            out.status.code(),
+            Some(0),
+            "stderr: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        // Keep only the deterministic columns (ef, recall) — qps and the
+        // latency percentiles are timing-dependent.
+        stdout
+            .lines()
+            .skip(1) // CSV header
+            .map(|l| {
+                let mut f = l.split(',');
+                (
+                    f.next().expect("ef column").to_string(),
+                    f.next().expect("recall column").to_string(),
+                )
+            })
+            .collect()
+    };
+    let sequential = run("1");
+    let threaded = run("4");
+    assert_eq!(sequential.len(), 2, "expected one row per ef value");
+    assert_eq!(sequential, threaded);
+}
+
+#[test]
 fn prompt_rejects_unknown_module() {
     let out = crinn_cmd()
         .args(["prompt", "--module", "bogus"])

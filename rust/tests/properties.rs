@@ -103,6 +103,100 @@ fn prop_action_roundtrip_stable() {
     });
 }
 
+/// The runtime-dispatched SIMD kernels agree with the portable 8-wide
+/// reference within 1e-4 relative tolerance across the full dim set
+/// (below/at/above the 8- and 16-lane boundaries and the Table-2 dims).
+#[test]
+fn prop_simd_matches_portable_kernels() {
+    use crinn::distance::{self, simd};
+    forall(5, |seed| {
+        let mut rng = Rng::new(seed ^ 0x51D);
+        for dim in [1usize, 7, 8, 15, 25, 100, 128, 200, 784, 960] {
+            let a: Vec<f32> = (0..dim).map(|_| rng.next_gaussian_f32()).collect();
+            let b: Vec<f32> = (0..dim).map(|_| rng.next_gaussian_f32()).collect();
+            let (got, want) = (distance::l2_sq(&a, &b), simd::portable::l2_sq(&a, &b));
+            assert!(
+                (got - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                "l2_sq dim={dim}: dispatched {got} vs portable {want}"
+            );
+            let (got, want) = (distance::dot(&a, &b), simd::portable::dot(&a, &b));
+            assert!(
+                (got - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                "dot dim={dim}: dispatched {got} vs portable {want}"
+            );
+        }
+    });
+}
+
+/// The one-to-many batch kernels match the per-pair kernels exactly
+/// (bitwise), for every metric, over random gathered id lists.
+#[test]
+fn prop_batch_kernels_match_per_pair() {
+    use crinn::distance::{self, Metric};
+    forall(5, |seed| {
+        let mut rng = Rng::new(seed ^ 0xBA7C);
+        for dim in [1usize, 7, 25, 128, 200] {
+            let n = 50 + rng.next_below(100);
+            let data: Vec<f32> = (0..n * dim).map(|_| rng.next_gaussian_f32()).collect();
+            let q: Vec<f32> = (0..dim).map(|_| rng.next_gaussian_f32()).collect();
+            let ids: Vec<u32> = (0..n as u32).filter(|_| rng.next_f64() < 0.5).collect();
+            let mut out = Vec::new();
+            distance::l2_sq_batch(&q, &ids, &data, dim, &mut out);
+            assert_eq!(out.len(), ids.len());
+            for (&id, &d) in ids.iter().zip(&out) {
+                let row = &data[id as usize * dim..(id as usize + 1) * dim];
+                assert_eq!(d, distance::l2_sq(&q, row), "l2 batch dim={dim} id={id}");
+            }
+            distance::dot_batch(&q, &ids, &data, dim, &mut out);
+            for (&id, &d) in ids.iter().zip(&out) {
+                let row = &data[id as usize * dim..(id as usize + 1) * dim];
+                assert_eq!(d, distance::dot(&q, row), "dot batch dim={dim} id={id}");
+            }
+            for metric in [Metric::L2, Metric::Angular, Metric::Ip] {
+                metric.distance_batch(&q, &ids, &data, dim, &mut out);
+                for (&id, &d) in ids.iter().zip(&out) {
+                    let row = &data[id as usize * dim..(id as usize + 1) * dim];
+                    assert_eq!(d, metric.distance(&q, row), "{metric:?} dim={dim} id={id}");
+                }
+            }
+        }
+    });
+}
+
+/// Parallel query evaluation is bit-identical to sequential: the same
+/// index answers the same query set through a forced 4-thread
+/// `parallel_map_threads` and a plain 1-thread loop with equal ids (and
+/// therefore equal recall), for both HNSW and the full CRINN GLASS config.
+#[test]
+fn prop_parallel_query_evaluation_bit_identical() {
+    use crinn::util::threadpool::parallel_map_threads;
+    let sp = synth::spec("demo-64").unwrap();
+    let mut ds = synth::generate_counts(sp, 900, 40, 77);
+    ds.compute_ground_truth(10);
+    let indexes: Vec<Box<dyn AnnIndex>> = vec![
+        Box::new(crinn::anns::hnsw::HnswIndex::build(
+            VectorSet::from_dataset(&ds),
+            &crinn::variants::ConstructionKnobs::default(),
+            crinn::variants::SearchKnobs::default(),
+            7,
+        )),
+        Box::new(crinn::anns::glass::GlassIndex::build(
+            VectorSet::from_dataset(&ds),
+            VariantConfig::crinn_full(),
+            7,
+        )),
+    ];
+    let nq = ds.n_queries();
+    for idx in &indexes {
+        let seq: Vec<Vec<u32>> = (0..nq)
+            .map(|qi| idx.search(ds.query_vec(qi), 10, 64))
+            .collect();
+        let par: Vec<Vec<u32>> =
+            parallel_map_threads(nq, 1, 4, |qi| idx.search(ds.query_vec(qi), 10, 64));
+        assert_eq!(seq, par, "index {}", idx.name());
+    }
+}
+
 /// Brute-force top-k is exactly the sorted prefix, any metric/shape.
 #[test]
 fn prop_bruteforce_exactness() {
