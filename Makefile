@@ -11,8 +11,9 @@ test:
 bench:
 	cd rust && cargo bench
 
-# Quick kernel iteration: only the distance micro-bench (scalar vs SIMD vs
-# batch vs SQ8 rows for EXPERIMENTS.md §Perf).
+# Quick kernel iteration: only the distance micro-bench (f32 scalar vs
+# SIMD vs batch, plus the i8 portable/simd/batch SQ8 rows for
+# EXPERIMENTS.md §Perf).
 bench-distance:
 	cd rust && cargo bench --bench micro_distance
 

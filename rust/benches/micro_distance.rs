@@ -17,8 +17,9 @@ const BATCH: usize = 64;
 fn main() {
     let mut rng = Rng::new(1);
     println!(
-        "## micro_distance — per-pair distance kernels (dispatch: {})\n",
-        simd::kernels().name
+        "## micro_distance — per-pair distance kernels (dispatch: f32 {}, i8 {})\n",
+        simd::kernels().name,
+        simd::kernels_i8().name
     );
     for &dim in &[25usize, 100, 128, 256, 784, 960] {
         let n = 1024;
@@ -76,6 +77,48 @@ fn main() {
             black_box(store.distance(Metric::L2, &qc, i));
         });
         report_row(&format!("l2 sq8 d={dim}"), &s);
+
+        // i8 kernels: portable 32-wide scalar vs dispatched SIMD vs
+        // one-to-many batch (the GLASS quantized-beam / IVF posting-list
+        // shape). Raw code distances, no scale mapping.
+        let mut i = 0;
+        let s = time_adaptive(0.3, 1000, || {
+            i = (i + 1) % n;
+            black_box(simd::portable_i8::l2_sq(&qc, store.code(i)));
+        });
+        report_row(&format!("l2_i8 portable d={dim}"), &s);
+
+        let mut i = 0;
+        let s = time_adaptive(0.3, 1000, || {
+            i = (i + 1) % n;
+            black_box((simd::kernels_i8().l2_sq)(&qc, store.code(i)));
+        });
+        report_row(&format!("l2_i8 simd d={dim}"), &s);
+
+        let mut i = 0;
+        let s = time_adaptive(0.3, 1000, || {
+            i = (i + 1) % n;
+            black_box((simd::kernels_i8().dot)(&qc, store.code(i)));
+        });
+        report_row(&format!("dot_i8 simd d={dim}"), &s);
+
+        let mut qdists: Vec<f32> = Vec::with_capacity(BATCH);
+        let mut b = 0;
+        let s = time_adaptive(0.3, 1000, || {
+            b = (b + 1) % (n / BATCH);
+            store.distance_batch(
+                Metric::L2,
+                &qc,
+                &ids[b * BATCH..(b + 1) * BATCH],
+                &mut qdists,
+            );
+            black_box(qdists.last().copied());
+        });
+        report_row(&format!("l2_i8_batch x{BATCH} d={dim}"), &s);
+        println!(
+            "{:>60}",
+            format!("~{:.1} ns/pair amortized", s.mean / BATCH as f64 * 1e9)
+        );
     }
 
     // PJRT batch scan (one compiled 64x4096 block per call).

@@ -20,7 +20,6 @@ use crate::anns::hnsw::graph::HnswGraph;
 use crate::anns::hnsw::search::{greedy_descent, search, SearchContext};
 use crate::anns::hnsw::builder;
 use crate::anns::{AnnIndex, VectorSet};
-use crate::distance::prefetch;
 use crate::distance::quant::QuantizedStore;
 use crate::variants::VariantConfig;
 use std::sync::Mutex;
@@ -165,7 +164,19 @@ impl GlassIndex {
             };
             let mut improved = false;
             if knobs.edge_batch {
+                // Gather unvisited neighbors, then evaluate each batch with
+                // one one-to-many i8 kernel call into the pooled `dists`
+                // buffer (same shape as the f32 HNSW edge batching) —
+                // prefetch of code row `i + depth` is pipelined inside the
+                // kernel while row `i` is evaluated. Distances are exactly
+                // equal to the per-pair path (i32 accumulation), so batching
+                // never changes search results.
                 let bs = knobs.batch_size.max(1);
+                let lookahead = if refine.adaptive_prefetch {
+                    knobs.prefetch_depth.max(1)
+                } else {
+                    0
+                };
                 let mut idx = 0;
                 while idx < neighbors.len() {
                     ctx.batch.clear();
@@ -176,13 +187,15 @@ impl GlassIndex {
                             ctx.batch.push(nb);
                         }
                     }
-                    if refine.adaptive_prefetch {
-                        for &nb in ctx.batch.iter().take(knobs.prefetch_depth.max(1)) {
-                            prefetch_code(self.quant.code(nb as usize), knobs.prefetch_locality);
-                        }
-                    }
-                    for &nb in &ctx.batch {
-                        let dnb = self.quant.distance(metric, &qcode, nb as usize);
+                    self.quant.distance_batch_with(
+                        metric,
+                        &qcode,
+                        &ctx.batch,
+                        lookahead,
+                        knobs.prefetch_locality,
+                        &mut ctx.dists,
+                    );
+                    for (&nb, &dnb) in ctx.batch.iter().zip(ctx.dists.iter()) {
                         if dnb < results.bound() {
                             if results.push(dnb, nb) {
                                 improved = true;
@@ -270,10 +283,19 @@ impl GlassIndex {
     }
 
     /// The candidate pools for a batch of queries (pre-rerank) — feeds the
-    /// PJRT batch-rerank path in the serving coordinator.
+    /// PJRT batch-rerank path in the serving coordinator. Honors
+    /// `refine.quantized_primary` exactly like [`Self::search_with_dists`]:
+    /// when the knob is off the pool comes from the full-precision HNSW
+    /// search (with `k = ef` so the whole beam pool survives — `search`
+    /// truncates to `k`), so an exact rerank of these candidates reproduces
+    /// `search_with_dists` at both points of the action space.
     pub fn candidates_for_rerank(&self, query: &[f32], k: usize, ef: usize) -> Vec<u32> {
         let mut ctx = self.checkout_ctx();
-        let pool = self.quantized_beam(query, k, ef, &mut ctx);
+        let pool = if self.config.refine.quantized_primary {
+            self.quantized_beam(query, k, ef, &mut ctx)
+        } else {
+            search(&self.graph, &self.config.search, &mut ctx, query, ef.max(k), ef)
+        };
         self.checkin_ctx(ctx);
         let take = self.config.refine.rerank_count(k, ef).min(pool.len());
         pool.into_iter().take(take).map(|(_, i)| i).collect()
@@ -282,13 +304,12 @@ impl GlassIndex {
 
 #[inline]
 fn prefetch_code(code: &[i8], locality: i32) {
-    // Reuse the f32 prefetch on the code bytes (cache lines are typeless).
-    let ptr = code.as_ptr() as *const f32;
-    let len = code.len() / 4;
-    // SAFETY: prefetch only reads the address; alignment is irrelevant for
-    // _mm_prefetch and the region is within the codes allocation.
-    let as_f32: &[f32] = unsafe { std::slice::from_raw_parts(ptr, len.max(1).min(code.len())) };
-    prefetch(as_f32, locality);
+    // Hint the raw byte address — cache lines are typeless. The previous
+    // version reinterpreted the codes as `&[f32]` with a fudged length,
+    // which constructed an out-of-bounds slice whenever `dim < 4` (UB even
+    // though prefetch never dereferences); `prefetch_ptr` takes the pointer
+    // directly, valid for every dim.
+    crate::distance::prefetch_ptr(code.as_ptr().cast(), locality);
 }
 
 impl AnnIndex for GlassIndex {
@@ -421,5 +442,145 @@ mod tests {
         let c = idx.candidates_for_rerank(ds.query_vec(0), 10, 64);
         assert!(!c.is_empty());
         assert!(c.len() <= 64);
+    }
+
+    /// One dataset per metric for the cross-metric quantized-path tests.
+    fn metric_datasets() -> Vec<crate::dataset::Dataset> {
+        let mut out = Vec::new();
+        let sp = synth::spec("demo-64").unwrap();
+        let mut l2 = synth::generate_counts(sp, 1200, 30, 31);
+        l2.compute_ground_truth(10);
+        out.push(l2);
+        let sp = synth::spec("glove-25-angular").unwrap();
+        let mut ang = synth::generate_counts(sp, 1200, 30, 32);
+        ang.compute_ground_truth(10);
+        out.push(ang);
+        // No Ip preset: reuse the demo manifold under the Ip convention.
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ip = synth::generate_counts(sp, 1200, 30, 33);
+        ip.metric = crate::distance::Metric::Ip;
+        ip.compute_ground_truth(10);
+        out.push(ip);
+        out
+    }
+
+    #[test]
+    fn edge_batch_rewrite_is_result_identical_all_metrics() {
+        // Acceptance criterion: the one-batch-call-per-gathered-batch
+        // quantized beam must return exactly what the per-pair loop
+        // returns — ids AND distances — for L2, Angular, and Ip. The i8
+        // kernels accumulate in i32, so this is exact, not approximate.
+        for ds in metric_datasets() {
+            let mut cfg = VariantConfig::glass_baseline();
+            cfg.search.edge_batch = false;
+            let mut idx = GlassIndex::build(VectorSet::from_dataset(&ds), cfg.clone(), 3);
+            let per_pair: Vec<_> = (0..ds.n_queries())
+                .map(|qi| idx.search_with_dists(ds.query_vec(qi), 10, 64))
+                .collect();
+            cfg.search.edge_batch = true;
+            cfg.search.batch_size = 8;
+            idx.set_runtime_knobs(&cfg);
+            let batched: Vec<_> = (0..ds.n_queries())
+                .map(|qi| idx.search_with_dists(ds.query_vec(qi), 10, 64))
+                .collect();
+            assert_eq!(per_pair, batched, "metric {:?}", ds.metric);
+            // And with the adaptive-prefetch schedule wired into the batch
+            // kernel — prefetch must stay a pure speed dial.
+            cfg.refine.adaptive_prefetch = true;
+            cfg.search.prefetch_depth = 6;
+            idx.set_runtime_knobs(&cfg);
+            let prefetched: Vec<_> = (0..ds.n_queries())
+                .map(|qi| idx.search_with_dists(ds.query_vec(qi), 10, 64))
+                .collect();
+            assert_eq!(per_pair, prefetched, "prefetch changed results ({:?})", ds.metric);
+        }
+    }
+
+    #[test]
+    fn quantized_beam_reaches_recall_on_angular_and_ip() {
+        // The quantized path was only ever recall-tested under L2; assert
+        // the Angular/Ip mappings also drive the beam to useful recall and
+        // stay consistent with the full-precision pipeline.
+        for ds in metric_datasets() {
+            let idx = GlassIndex::build(
+                VectorSet::from_dataset(&ds),
+                VariantConfig::glass_baseline(),
+                3,
+            );
+            let r = recall(&idx, &ds, 128);
+            // Absolute floor for the metrics HNSW is strong on; MIPS has no
+            // triangle inequality, so Ip only gets the parity bound below.
+            if ds.metric != crate::distance::Metric::Ip {
+                assert!(r > 0.8, "quantized recall@10 under {:?}: {r}", ds.metric);
+            }
+            let mut full = VariantConfig::glass_baseline();
+            full.refine.quantized_primary = false;
+            let fidx = GlassIndex::build(VectorSet::from_dataset(&ds), full, 3);
+            let rf = recall(&fidx, &ds, 128);
+            assert!(
+                r > rf - 0.1,
+                "quantized path lost too much recall under {:?}: {r} vs {rf}",
+                ds.metric
+            );
+        }
+    }
+
+    #[test]
+    fn prefetch_survives_tiny_dims() {
+        // Regression for the `prefetch_code` UB: dims 1..3 quantize to code
+        // rows shorter than one f32; the old slice reinterpretation built
+        // an out-of-bounds `&[f32]` for them. Run the full quantized
+        // pipeline with every prefetch knob on.
+        for dim in 1usize..=3 {
+            let n = 300;
+            let mut rng = crate::util::rng::Rng::new(dim as u64);
+            let data: Vec<f32> = (0..n * dim).map(|_| rng.next_gaussian_f32()).collect();
+            let vs = VectorSet::new(data.clone(), dim, crate::distance::Metric::L2);
+            let mut cfg = VariantConfig::glass_baseline();
+            cfg.refine.adaptive_prefetch = true;
+            cfg.refine.lookahead = 4;
+            cfg.search.prefetch_depth = 8;
+            let mut idx = GlassIndex::build(vs, cfg.clone(), 5);
+            // Both the sequential-scan and edge-batch beams touch the
+            // prefetch paths.
+            for edge_batch in [false, true] {
+                let mut c = cfg.clone();
+                c.search.edge_batch = edge_batch;
+                idx.set_runtime_knobs(&c);
+                let out = idx.search(&data[0..dim], 5, 32);
+                assert!(!out.is_empty(), "dim={dim} edge_batch={edge_batch}");
+            }
+        }
+    }
+
+    #[test]
+    fn candidates_for_rerank_honors_quantized_primary() {
+        // Pool parity at both points of the action space: reranking the
+        // returned candidates in full precision must reproduce
+        // `search_with_dists` exactly, whether the pool came from the
+        // quantized beam or the full-precision fallback.
+        let ds = dataset();
+        for quantized in [true, false] {
+            let mut cfg = VariantConfig::glass_baseline();
+            cfg.refine.quantized_primary = quantized;
+            let idx = GlassIndex::build(VectorSet::from_dataset(&ds), cfg, 3);
+            for qi in 0..ds.n_queries().min(10) {
+                let q = ds.query_vec(qi);
+                let want: Vec<u32> = idx
+                    .search_with_dists(q, 10, 64)
+                    .into_iter()
+                    .map(|(_, i)| i)
+                    .collect();
+                let cands = idx.candidates_for_rerank(q, 10, 64);
+                let mut reranked: Vec<(f32, u32)> = cands
+                    .iter()
+                    .map(|&id| (idx.graph.vectors.distance(q, id), id))
+                    .collect();
+                reranked.sort_by(crate::anns::heap::dist_cmp);
+                reranked.truncate(10);
+                let got: Vec<u32> = reranked.into_iter().map(|(_, i)| i).collect();
+                assert_eq!(got, want, "quantized_primary={quantized} query {qi}");
+            }
+        }
     }
 }

@@ -81,7 +81,9 @@ impl VectorSet {
 
     /// Distances from `q` to a gathered id list through the one-to-many
     /// SIMD kernels (prefetch pipelined; clears and refills `out`). Bitwise
-    /// identical to per-pair [`VectorSet::distance`] calls.
+    /// identical to per-pair [`VectorSet::distance`] calls. The SQ8
+    /// counterpart for code rows is
+    /// [`crate::distance::quant::QuantizedStore::distance_batch`].
     #[inline]
     pub fn distance_batch(&self, q: &[f32], ids: &[u32], out: &mut Vec<f32>) {
         self.metric.distance_batch(q, ids, &self.data, self.dim, out);

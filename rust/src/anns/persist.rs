@@ -56,46 +56,69 @@ impl<'a, T: Write> W<'a, T> {
     }
 }
 
-struct R<'a, T: Read>(&'a mut T);
+struct R<'a, T: Read> {
+    inner: &'a mut T,
+    /// Total file size in bytes — the sanity cap for every `u64` length
+    /// field. A valid field can never describe more payload than the file
+    /// holds, so anything larger is corruption (or a hostile header) and
+    /// must return `Err` instead of feeding `vec![0u8; huge]` and
+    /// OOM-aborting the process.
+    limit: u64,
+}
 
 impl<'a, T: Read> R<'a, T> {
     fn u32(&mut self) -> Result<u32> {
         let mut b = [0u8; 4];
-        self.0.read_exact(&mut b)?;
+        self.inner.read_exact(&mut b)?;
         Ok(u32::from_le_bytes(b))
     }
     fn u64(&mut self) -> Result<u64> {
         let mut b = [0u8; 8];
-        self.0.read_exact(&mut b)?;
+        self.inner.read_exact(&mut b)?;
         Ok(u64::from_le_bytes(b))
     }
     fn f64(&mut self) -> Result<f64> {
         let mut b = [0u8; 8];
-        self.0.read_exact(&mut b)?;
+        self.inner.read_exact(&mut b)?;
         Ok(f64::from_le_bytes(b))
     }
+    /// Read a `u64` element count and validate it against the file size
+    /// (overflow-checked multiply by the per-element byte width) before any
+    /// allocation sized by it.
+    fn len(&mut self, elem_bytes: u64) -> Result<usize> {
+        let n = self.u64()?;
+        let bytes = n
+            .checked_mul(elem_bytes)
+            .ok_or_else(|| Error::msg(format!("corrupt index: length field {n} overflows")))?;
+        crate::ensure!(
+            bytes <= self.limit,
+            "corrupt index: length field {n} ({bytes} bytes) exceeds file size {}",
+            self.limit
+        );
+        Ok(n as usize)
+    }
     fn f32s(&mut self) -> Result<Vec<f32>> {
-        let n = self.u64()? as usize;
+        let n = self.len(4)?;
         let mut raw = vec![0u8; n * 4];
-        self.0.read_exact(&mut raw)?;
+        self.inner.read_exact(&mut raw)?;
         Ok(raw
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
     }
     fn u32s(&mut self) -> Result<Vec<u32>> {
-        let n = self.u64()? as usize;
+        let n = self.len(4)?;
         let mut raw = vec![0u8; n * 4];
-        self.0.read_exact(&mut raw)?;
+        self.inner.read_exact(&mut raw)?;
         Ok(raw
             .chunks_exact(4)
             .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
     }
     fn u8s(&mut self) -> Result<Vec<u8>> {
-        let n = self.u64()? as usize;
+        let n = self.len(1)?;
         let mut v = vec![0u8; n];
-        self.0.read_exact(&mut v)?;
+        self.inner.read_exact(&mut v)?;
         Ok(v)
     }
 }
@@ -151,10 +174,14 @@ pub fn save_glass(idx: &crate::anns::glass::GlassIndex, path: &Path) -> Result<(
 /// immune to quantizer-version drift).
 pub fn load_glass(path: &Path) -> Result<crate::anns::glass::GlassIndex> {
     let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let limit = f
+        .metadata()
+        .with_context(|| format!("stat {path:?}"))?
+        .len();
     let mut br = BufReader::new(f);
-    let mut r = R(&mut br);
+    let mut r = R { inner: &mut br, limit };
     let mut magic = [0u8; 4];
-    r.0.read_exact(&mut magic)?;
+    r.inner.read_exact(&mut magic)?;
     if &magic != MAGIC {
         bail!("not a CRINN index file");
     }
@@ -193,7 +220,8 @@ pub fn load_glass(path: &Path) -> Result<crate::anns::glass::GlassIndex> {
         graph.degree0[i as usize] = graph.neighbors0_scan(i).len() as u16;
     }
     for l in 0..n_layers {
-        let count = r.u64()? as usize;
+        // Each upper-layer entry is at least 12 bytes (u32 key + u64 len).
+        let count = r.len(12)?;
         for _ in 0..count {
             let k = r.u32()?;
             let nbs = r.u32s()?;
@@ -203,7 +231,7 @@ pub fn load_glass(path: &Path) -> Result<crate::anns::glass::GlassIndex> {
     // Config.
     let mut config = VariantConfig::glass_baseline();
     for module in Module::ALL {
-        let len = r.u64()? as usize;
+        let len = r.len(8)?;
         let mut a = Vec::with_capacity(len);
         for _ in 0..len {
             a.push(r.f64()?);
@@ -255,6 +283,51 @@ mod tests {
         std::fs::write(&path, b"not an index").unwrap();
         assert!(load_glass(&path).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_truncated_file() {
+        // A valid index cut off at various points must error cleanly (no
+        // panic, no abort) — both mid-payload and mid-length-field.
+        let sp = synth::spec("demo-64").unwrap();
+        let ds = synth::generate_counts(sp, 300, 5, 79);
+        let idx = GlassIndex::build(
+            crate::anns::VectorSet::from_dataset(&ds),
+            VariantConfig::glass_baseline(),
+            7,
+        );
+        let path = tmp("truncated.idx");
+        save_glass(&idx, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        for frac in [0.05, 0.3, 0.6, 0.95] {
+            let cut = (full.len() as f64 * frac) as usize;
+            std::fs::write(&path, &full[..cut]).unwrap();
+            assert!(load_glass(&path).is_err(), "truncated at {cut}/{} loaded", full.len());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_huge_length_fields() {
+        // A hostile header whose u64 length field dwarfs the file must be
+        // rejected by the file-size sanity cap before any allocation — the
+        // old code fed it straight to `vec![0u8; n * 4]` and OOM-aborted.
+        // Also cover the overflow case where `n * 4` wraps u64.
+        for huge in [u64::MAX, u64::MAX / 2, 1u64 << 40] {
+            let mut f = Vec::new();
+            f.extend_from_slice(MAGIC);
+            f.extend_from_slice(&VERSION.to_le_bytes());
+            f.extend_from_slice(&64u32.to_le_bytes()); // dim
+            f.extend_from_slice(&0u32.to_le_bytes()); // metric = L2
+            f.extend_from_slice(&huge.to_le_bytes()); // f32s length field
+            let path = tmp(&format!("hugelen_{huge:x}.idx"));
+            std::fs::write(&path, &f).unwrap();
+            let err = load_glass(&path);
+            assert!(err.is_err(), "length {huge} accepted");
+            let msg = format!("{:#}", err.unwrap_err());
+            assert!(msg.contains("corrupt index"), "unexpected error: {msg}");
+            std::fs::remove_file(&path).ok();
+        }
     }
 
     #[test]

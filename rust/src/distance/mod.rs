@@ -13,13 +13,18 @@
 //! a portable 8-wide fallback, selected once at startup into function
 //! pointers (`is_x86_feature_detected!` — DESIGN.md §SIMD-Dispatch), plus
 //! one-to-many batch kernels ([`l2_sq_batch`]/[`dot_batch`]) that interleave
-//! software prefetch with evaluation. [`quant`] provides the int8
-//! scalar-quantized path used by the GLASS refinement stage.
+//! software prefetch with evaluation. The int8 SQ8 path ([`quant`], used by
+//! the GLASS quantized beam and the IVF posting-list scan) dispatches the
+//! same way ([`simd::kernels_i8`]) with exact-integer batch forms
+//! ([`l2_sq_i8_batch`]/[`dot_i8_batch`]/[`quant_distance_batch`]).
 
 pub mod quant;
 pub mod simd;
 
-pub use simd::{distance_batch, distance_batch_with, dot_batch, l2_sq_batch};
+pub use simd::{
+    distance_batch, distance_batch_with, dot_batch, dot_i8_batch, l2_sq_batch, l2_sq_i8_batch,
+    quant_distance_batch, quant_distance_batch_with,
+};
 
 /// Distance metric. Mirrors the dataset metric in Table 2.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -117,10 +122,19 @@ pub fn normalize(a: &mut [f32]) {
 /// 0 = non-temporal. No-op on non-x86 targets.
 #[inline(always)]
 pub fn prefetch(data: &[f32], locality: i32) {
+    prefetch_ptr(data.as_ptr().cast(), locality);
+}
+
+/// Typeless form of [`prefetch`]: hint the cache line at `p` (cache lines
+/// have no element type — this is how the i8 code rows are prefetched
+/// without reinterpreting them as `&[f32]`). Prefetch only inspects the
+/// address, so any pointer value is safe to pass; no-op off x86_64.
+#[inline(always)]
+pub fn prefetch_ptr(p: *const u8, locality: i32) {
     #[cfg(target_arch = "x86_64")]
     unsafe {
         use std::arch::x86_64::{_mm_prefetch, _MM_HINT_NTA, _MM_HINT_T0, _MM_HINT_T1, _MM_HINT_T2};
-        let p = data.as_ptr() as *const i8;
+        let p = p as *const i8;
         match locality {
             3 => _mm_prefetch(p, _MM_HINT_T0),
             2 => _mm_prefetch(p, _MM_HINT_T1),
@@ -130,7 +144,7 @@ pub fn prefetch(data: &[f32], locality: i32) {
     }
     #[cfg(not(target_arch = "x86_64"))]
     {
-        let _ = (data, locality);
+        let _ = (p, locality);
     }
 }
 
@@ -205,5 +219,17 @@ mod tests {
         let v = vec![0f32; 64];
         prefetch(&v, 3);
         prefetch(&v, 0);
+    }
+
+    #[test]
+    fn prefetch_ptr_is_safe_for_any_length() {
+        // Including buffers shorter than one f32 — the case the old GLASS
+        // code-prefetch slice reinterpretation got wrong.
+        for len in 0..5usize {
+            let v = vec![0i8; len];
+            for locality in 0..4 {
+                prefetch_ptr(v.as_ptr().cast(), locality);
+            }
+        }
     }
 }

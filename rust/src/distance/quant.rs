@@ -8,8 +8,15 @@
 //! of `scale`. The quantized estimates drive graph traversal; survivors are
 //! re-ranked in full precision (optionally through the AOT Pallas rerank
 //! artifact) — the asymmetric-refinement pattern HNSW libraries use.
+//!
+//! The i8 kernels are runtime-dispatched like the f32 ones
+//! ([`crate::distance::simd::kernels_i8`]: AVX2 `pmaddwd`-shaped with a
+//! portable 32-wide fallback). Because they accumulate in i32, the
+//! dispatched, portable, and one-to-many batch forms
+//! ([`QuantizedStore::distance_batch`]) produce **exactly** the same
+//! numbers — quantized search results never depend on which path ran.
 
-use crate::distance::Metric;
+use crate::distance::{simd, Metric};
 
 /// A quantized vector store: row-major `[n, dim]` i8 codes + one scale.
 #[derive(Clone, Debug)]
@@ -50,6 +57,14 @@ impl QuantizedStore {
         &self.codes[i * self.dim..(i + 1) * self.dim]
     }
 
+    /// The full row-major `[n, dim]` code matrix — the `codes` argument the
+    /// raw batch kernels ([`crate::distance::l2_sq_i8_batch`] /
+    /// [`crate::distance::dot_i8_batch`]) take.
+    #[inline]
+    pub fn codes(&self) -> &[i8] {
+        &self.codes
+    }
+
     /// Quantize a query once per search (symmetric computation).
     pub fn encode_query(&self, q: &[f32]) -> Vec<i8> {
         let inv = if self.scale > 0.0 { 1.0 / self.scale } else { 0.0 };
@@ -63,16 +78,74 @@ impl QuantizedStore {
     #[inline]
     pub fn distance(&self, metric: Metric, qcode: &[i8], i: usize) -> f32 {
         let code = self.code(i);
-        match metric {
-            Metric::L2 => l2_sq_i8(qcode, code) as f32 * self.scale * self.scale,
-            Metric::Angular => 1.0 - dot_i8(qcode, code) as f32 * self.scale * self.scale,
-            Metric::Ip => -(dot_i8(qcode, code) as f32) * self.scale * self.scale,
-        }
+        let raw = match metric {
+            Metric::L2 => l2_sq_i8(qcode, code),
+            Metric::Angular | Metric::Ip => dot_i8(qcode, code),
+        };
+        map_quant_raw(metric, raw, self.scale * self.scale)
+    }
+
+    /// Distances from an encoded query to a gathered id list through the
+    /// one-to-many i8 SIMD kernels (prefetch pipelined; clears and refills
+    /// `out`, index-aligned with `ids`). **Bitwise identical** to per-pair
+    /// [`QuantizedStore::distance`] calls — the raw distance is an exact
+    /// i32 and the `scale²` mapping is shared with the per-pair path.
+    #[inline]
+    pub fn distance_batch(&self, metric: Metric, qcode: &[i8], ids: &[u32], out: &mut Vec<f32>) {
+        self.distance_batch_with(
+            metric,
+            qcode,
+            ids,
+            simd::BATCH_LOOKAHEAD,
+            simd::BATCH_LOCALITY,
+            out,
+        );
+    }
+
+    /// [`QuantizedStore::distance_batch`] with an explicit prefetch
+    /// schedule — how the §6 prefetch knobs reach the quantized batched
+    /// paths (`lookahead == 0` disables prefetch; results are identical for
+    /// every schedule).
+    #[inline]
+    pub fn distance_batch_with(
+        &self,
+        metric: Metric,
+        qcode: &[i8],
+        ids: &[u32],
+        lookahead: usize,
+        locality: i32,
+        out: &mut Vec<f32>,
+    ) {
+        simd::quant_distance_batch_with(
+            metric,
+            qcode,
+            ids,
+            &self.codes,
+            self.dim,
+            self.scale,
+            lookahead,
+            locality,
+            out,
+        );
     }
 
     /// Bytes used by the codes (for memory reporting).
     pub fn bytes(&self) -> usize {
         self.codes.len()
+    }
+}
+
+/// Map a raw i32 code distance into f32 metric units with a precomputed
+/// `s2 = scale²`. Shared by the per-pair and batch paths — computing `s2`
+/// once and applying one multiply keeps the two bitwise identical (the old
+/// per-pair form multiplied by `scale` twice, which rounds differently
+/// from a batch-hoisted `scale²`).
+#[inline]
+pub fn map_quant_raw(metric: Metric, raw: i32, s2: f32) -> f32 {
+    match metric {
+        Metric::L2 => raw as f32 * s2,
+        Metric::Angular => 1.0 - raw as f32 * s2,
+        Metric::Ip => -(raw as f32) * s2,
     }
 }
 
@@ -89,52 +162,19 @@ fn choose_scale(data: &[f32]) -> f32 {
     q / 127.0
 }
 
-/// i8 squared-L2 accumulated in i32.
-///
-/// §Perf: 32-wide chunks with an i16 difference (`pmaddwd`-shaped for the
-/// vectorizer) measured 1.7x faster than the naive 16-wide i32 form with
-/// `target-cpu=native` (EXPERIMENTS.md §Perf/L3: 18.1 → 10.4 ns/pair at
-/// d=128 on this box).
+/// i8 squared-L2 through the runtime-dispatched kernel (AVX2 where
+/// detected, 32-wide `pmaddwd`-shaped portable loop otherwise — see
+/// [`simd::kernels_i8`]; EXPERIMENTS.md §Perf/L3 records the portable
+/// form's measured win over the naive loop).
 #[inline]
 pub fn l2_sq_i8(a: &[i8], b: &[i8]) -> i32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0i32; 32];
-    let chunks = a.len() / 32;
-    for c in 0..chunks {
-        let ao = &a[c * 32..c * 32 + 32];
-        let bo = &b[c * 32..c * 32 + 32];
-        for i in 0..32 {
-            let d = (ao[i] as i16 - bo[i] as i16) as i32;
-            acc[i] += d * d;
-        }
-    }
-    let mut sum: i32 = acc.iter().sum();
-    for i in chunks * 32..a.len() {
-        let d = a[i] as i32 - b[i] as i32;
-        sum += d * d;
-    }
-    sum
+    (simd::kernels_i8().l2_sq)(a, b)
 }
 
-/// i8 inner product accumulated in i32 (same `pmaddwd`-shaped pattern —
-/// 2.3x over the naive form, see §Perf).
+/// i8 inner product through the runtime-dispatched kernel.
 #[inline]
 pub fn dot_i8(a: &[i8], b: &[i8]) -> i32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut acc = [0i32; 32];
-    let chunks = a.len() / 32;
-    for c in 0..chunks {
-        let ao = &a[c * 32..c * 32 + 32];
-        let bo = &b[c * 32..c * 32 + 32];
-        for i in 0..32 {
-            acc[i] += (ao[i] as i16 as i32) * (bo[i] as i16 as i32);
-        }
-    }
-    let mut sum: i32 = acc.iter().sum();
-    for i in chunks * 32..a.len() {
-        sum += a[i] as i32 * b[i] as i32;
-    }
-    sum
+    (simd::kernels_i8().dot)(a, b)
 }
 
 #[cfg(test)]
@@ -228,6 +268,49 @@ mod tests {
         assert_eq!(s.len(), 7);
         assert!(!s.is_empty());
         assert_eq!(s.code(6).len(), 16);
+        assert_eq!(s.codes().len(), 7 * 16);
         assert_eq!(s.bytes(), 7 * 16);
+    }
+
+    #[test]
+    fn store_batch_bitwise_identical_to_per_pair_all_metrics() {
+        // Odd dim exercises the scalar tails; repeated + reversed ids
+        // exercise the gather. f32 equality must be exact (`assert_eq!`):
+        // the raw distance is an exact i32 and the scale mapping is shared.
+        for dim in [1usize, 3, 17, 33, 64] {
+            let n = 60;
+            let data = random_data(n, dim, 7 + dim as u64);
+            let store = QuantizedStore::build(&data, dim);
+            let qc = store.encode_query(&data[0..dim]);
+            let ids: Vec<u32> = (0..n as u32).rev().step_by(2).chain([0, 0]).collect();
+            let mut out = Vec::new();
+            for metric in [Metric::L2, Metric::Angular, Metric::Ip] {
+                store.distance_batch(metric, &qc, &ids, &mut out);
+                assert_eq!(out.len(), ids.len());
+                for (&id, &d) in ids.iter().zip(&out) {
+                    assert_eq!(
+                        d,
+                        store.distance(metric, &qc, id as usize),
+                        "{metric:?} dim={dim} id={id}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn store_batch_schedule_invariant() {
+        let dim = 48;
+        let data = random_data(40, dim, 9);
+        let store = QuantizedStore::build(&data, dim);
+        let qc = store.encode_query(&data[0..dim]);
+        let ids: Vec<u32> = (0..40).collect();
+        let mut want = Vec::new();
+        store.distance_batch_with(Metric::L2, &qc, &ids, 0, 3, &mut want);
+        for (lookahead, locality) in [(1usize, 1i32), (8, 3), (64, 0)] {
+            let mut got = Vec::new();
+            store.distance_batch_with(Metric::L2, &qc, &ids, lookahead, locality, &mut got);
+            assert_eq!(got, want, "lookahead={lookahead} locality={locality}");
+        }
     }
 }

@@ -18,6 +18,18 @@
 //!   results are **bitwise identical** to calling the per-pair kernel in a
 //!   loop — consumers may switch freely between the two paths without
 //!   changing search results.
+//!
+//! The same two layers exist for the **int8 SQ8 codes** that drive GLASS's
+//! quantized preliminary search (§2.3) and the IVF posting-list scan:
+//! [`portable_i8`] keeps the 32-wide i16-difference scalar loops (the
+//! `pmaddwd`-shaped forms the vectorizer likes — EXPERIMENTS.md §Perf/L3)
+//! as the fallback and correctness oracle, [`kernels_i8`] dispatches to
+//! hand-written AVX2 kernels (`_mm256_cvtepi8_epi16` widening +
+//! `_mm256_madd_epi16` accumulation), and
+//! [`l2_sq_i8_batch`]/[`dot_i8_batch`]/[`quant_distance_batch`] are the
+//! one-to-many forms. Because every i8 kernel accumulates in i32, SIMD,
+//! portable, and batch results are **exactly equal** (integer arithmetic is
+//! associative) — not merely within tolerance like the f32 kernels.
 
 use crate::distance::Metric;
 
@@ -196,6 +208,207 @@ mod avx2 {
     }
 }
 
+/// A selected per-pair int8 distance kernel (i32 accumulation — exact).
+pub type DistFnI8 = fn(&[i8], &[i8]) -> i32;
+
+/// The dispatched int8 kernel set.
+pub struct KernelsI8 {
+    pub l2_sq: DistFnI8,
+    pub dot: DistFnI8,
+    /// Which implementation was selected (`"avx2"` or `"portable32"`) —
+    /// reported by `benches/micro_distance`.
+    pub name: &'static str,
+}
+
+/// The process-wide int8 kernel set, selected once on first call. Unlike
+/// the f32 set this only needs AVX2 (the arithmetic is `pmaddwd`, no FMA).
+pub fn kernels_i8() -> &'static KernelsI8 {
+    static KERNELS: std::sync::OnceLock<KernelsI8> = std::sync::OnceLock::new();
+    KERNELS.get_or_init(select_i8)
+}
+
+fn select_i8() -> KernelsI8 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return KernelsI8 {
+                l2_sq: avx2_i8::l2_sq,
+                dot: avx2_i8::dot,
+                name: "avx2",
+            };
+        }
+    }
+    KernelsI8 {
+        l2_sq: portable_i8::l2_sq,
+        dot: portable_i8::dot,
+        name: "portable32",
+    }
+}
+
+/// Portable 32-wide chunked int8 kernels — the reference implementation on
+/// every target and the exact-equality oracle for the i8 property tests.
+/// i32 accumulation bounds exactness: safe for `dim * 254^2 < 2^31`, i.e.
+/// any dim below ~33k (Table 2 tops out at 960).
+pub mod portable_i8 {
+    /// i8 squared-L2 accumulated in i32.
+    ///
+    /// §Perf: 32-wide chunks with an i16 difference (`pmaddwd`-shaped for
+    /// the vectorizer) measured 1.7x faster than the naive 16-wide i32 form
+    /// with `target-cpu=native` (EXPERIMENTS.md §Perf/L3: 18.1 → 10.4
+    /// ns/pair at d=128 on this box).
+    #[inline]
+    pub fn l2_sq(a: &[i8], b: &[i8]) -> i32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = [0i32; 32];
+        let chunks = a.len() / 32;
+        for c in 0..chunks {
+            let ao = &a[c * 32..c * 32 + 32];
+            let bo = &b[c * 32..c * 32 + 32];
+            for i in 0..32 {
+                let d = (ao[i] as i16 - bo[i] as i16) as i32;
+                acc[i] += d * d;
+            }
+        }
+        let mut sum: i32 = acc.iter().sum();
+        for i in chunks * 32..a.len() {
+            let d = a[i] as i32 - b[i] as i32;
+            sum += d * d;
+        }
+        sum
+    }
+
+    /// i8 inner product accumulated in i32 (same `pmaddwd`-shaped pattern —
+    /// 2.3x over the naive form, see §Perf).
+    #[inline]
+    pub fn dot(a: &[i8], b: &[i8]) -> i32 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut acc = [0i32; 32];
+        let chunks = a.len() / 32;
+        for c in 0..chunks {
+            let ao = &a[c * 32..c * 32 + 32];
+            let bo = &b[c * 32..c * 32 + 32];
+            for i in 0..32 {
+                acc[i] += (ao[i] as i16 as i32) * (bo[i] as i16 as i32);
+            }
+        }
+        let mut sum: i32 = acc.iter().sum();
+        for i in chunks * 32..a.len() {
+            sum += a[i] as i32 * b[i] as i32;
+        }
+        sum
+    }
+}
+
+/// AVX2 int8 kernels: widen 16 codes at a time to i16 lanes
+/// (`_mm256_cvtepi8_epi16`), then `_mm256_madd_epi16` folds pairwise
+/// i16×i16 products into i32 lanes — the literal `pmaddwd` the portable
+/// form is shaped after. i32 lane accumulation means the result is the
+/// same integer the scalar loop computes, in any lane order.
+#[cfg(target_arch = "x86_64")]
+mod avx2_i8 {
+    use std::arch::x86_64::*;
+
+    pub fn l2_sq(a: &[i8], b: &[i8]) -> i32 {
+        // Hard assert: the impls read through raw pointers (see the f32
+        // kernels for the rationale).
+        assert_eq!(a.len(), b.len());
+        // SAFETY: `select_i8` gates this path on runtime AVX2 detection,
+        // and the lengths are checked above.
+        unsafe { l2_sq_impl(a, b) }
+    }
+
+    pub fn dot(a: &[i8], b: &[i8]) -> i32 {
+        assert_eq!(a.len(), b.len());
+        // SAFETY: as above.
+        unsafe { dot_impl(a, b) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn l2_sq_impl(a: &[i8], b: &[i8]) -> i32 {
+        let n = a.len();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        // Two accumulator chains over 16-code halves of a 32-code step.
+        let mut acc0 = _mm256_setzero_si256();
+        let mut acc1 = _mm256_setzero_si256();
+        let mut i = 0;
+        while i + 32 <= n {
+            let d0 = _mm256_sub_epi16(load_epi8_as_epi16(pa.add(i)), load_epi8_as_epi16(pb.add(i)));
+            let d1 = _mm256_sub_epi16(
+                load_epi8_as_epi16(pa.add(i + 16)),
+                load_epi8_as_epi16(pb.add(i + 16)),
+            );
+            acc0 = _mm256_add_epi32(acc0, _mm256_madd_epi16(d0, d0));
+            acc1 = _mm256_add_epi32(acc1, _mm256_madd_epi16(d1, d1));
+            i += 32;
+        }
+        if i + 16 <= n {
+            let d = _mm256_sub_epi16(load_epi8_as_epi16(pa.add(i)), load_epi8_as_epi16(pb.add(i)));
+            acc0 = _mm256_add_epi32(acc0, _mm256_madd_epi16(d, d));
+            i += 16;
+        }
+        let mut sum = hsum_epi32(_mm256_add_epi32(acc0, acc1));
+        while i < n {
+            let d = a[i] as i32 - b[i] as i32;
+            sum += d * d;
+            i += 1;
+        }
+        sum
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_impl(a: &[i8], b: &[i8]) -> i32 {
+        let n = a.len();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm256_setzero_si256();
+        let mut acc1 = _mm256_setzero_si256();
+        let mut i = 0;
+        while i + 32 <= n {
+            acc0 = _mm256_add_epi32(
+                acc0,
+                _mm256_madd_epi16(load_epi8_as_epi16(pa.add(i)), load_epi8_as_epi16(pb.add(i))),
+            );
+            acc1 = _mm256_add_epi32(
+                acc1,
+                _mm256_madd_epi16(
+                    load_epi8_as_epi16(pa.add(i + 16)),
+                    load_epi8_as_epi16(pb.add(i + 16)),
+                ),
+            );
+            i += 32;
+        }
+        if i + 16 <= n {
+            acc0 = _mm256_add_epi32(
+                acc0,
+                _mm256_madd_epi16(load_epi8_as_epi16(pa.add(i)), load_epi8_as_epi16(pb.add(i))),
+            );
+            i += 16;
+        }
+        let mut sum = hsum_epi32(_mm256_add_epi32(acc0, acc1));
+        while i < n {
+            sum += a[i] as i32 * b[i] as i32;
+            i += 1;
+        }
+        sum
+    }
+
+    /// Load 16 i8 codes and sign-extend to 16 i16 lanes.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn load_epi8_as_epi16(p: *const i8) -> __m256i {
+        _mm256_cvtepi8_epi16(_mm_loadu_si128(p as *const __m128i))
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_epi32(v: __m256i) -> i32 {
+        let lo = _mm256_castsi256_si128(v);
+        let hi = _mm256_extracti128_si256(v, 1);
+        let s = _mm_add_epi32(lo, hi);
+        let s = _mm_add_epi32(s, _mm_unpackhi_epi64(s, s));
+        let s = _mm_add_epi32(s, _mm_shuffle_epi32(s, 0b01));
+        _mm_cvtsi128_si32(s)
+    }
+}
+
 /// Default prefetch lookahead for the batch kernels: while pair `i` is
 /// evaluated, the vector of pair `i + lookahead` is pulled toward L1.
 /// Sized so the prefetch completes (~100ns DRAM) within a few kernel
@@ -207,16 +420,60 @@ pub const BATCH_LOOKAHEAD: usize = 4;
 /// Default prefetch locality for the batch kernels (3 = `_MM_HINT_T0`).
 pub const BATCH_LOCALITY: i32 = 3;
 
+/// Row `id` of a row-major `[n, dim]` matrix of any element type.
 #[inline]
-fn vec_at(data: &[f32], dim: usize, id: u32) -> &[f32] {
+fn row_at<E>(data: &[E], dim: usize, id: u32) -> &[E] {
     let i = id as usize * dim;
     &data[i..i + dim]
 }
 
-/// One-to-many kernel core: distances from `q` to each `ids[i]` row of
-/// `data`, prefetch pipelined (`lookahead == 0` disables prefetch, same
-/// convention as the `prefetch_depth` knob). Clears and refills `out`
-/// (index-aligned with `ids`).
+/// Test-only f32 alias of [`row_at`] (the batch paths call `row_at`
+/// directly through [`batch_core`]).
+#[cfg(test)]
+#[inline]
+fn vec_at(data: &[f32], dim: usize, id: u32) -> &[f32] {
+    row_at(data, dim, id)
+}
+
+/// One-to-many kernel core shared by the f32 and i8 paths: evaluate `q`
+/// against each `ids[i]` row of `data`, prefetch pipelined (`lookahead ==
+/// 0` disables prefetch, same convention as the `prefetch_depth` knob) —
+/// warm the first `lookahead` rows, then hint row `i + lookahead` (typeless
+/// byte-pointer prefetch) while evaluating row `i`. Clears and refills
+/// `out` (index-aligned with `ids`). ONE implementation of the schedule so
+/// a fix to the pipeline can never drift between element types.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn batch_core<E, T>(
+    q: &[E],
+    ids: &[u32],
+    data: &[E],
+    dim: usize,
+    lookahead: usize,
+    locality: i32,
+    out: &mut Vec<T>,
+    eval: impl Fn(&[E], &[E]) -> T,
+) {
+    out.clear();
+    out.reserve(ids.len());
+    if lookahead > 0 {
+        for &id in ids.iter().take(lookahead) {
+            crate::distance::prefetch_ptr(row_at(data, dim, id).as_ptr().cast(), locality);
+        }
+    }
+    for (i, &id) in ids.iter().enumerate() {
+        if lookahead > 0 {
+            if let Some(&ahead) = ids.get(i + lookahead) {
+                crate::distance::prefetch_ptr(row_at(data, dim, ahead).as_ptr().cast(), locality);
+            }
+        }
+        out.push(eval(q, row_at(data, dim, id)));
+    }
+}
+
+/// f32 instantiation of [`batch_core`] (kept as the narrow internal entry
+/// point the public f32 batch API calls).
+#[allow(clippy::too_many_arguments)]
 #[inline]
 fn batch(
     kern: DistFn,
@@ -228,21 +485,7 @@ fn batch(
     locality: i32,
     out: &mut Vec<f32>,
 ) {
-    out.clear();
-    out.reserve(ids.len());
-    if lookahead > 0 {
-        for &id in ids.iter().take(lookahead) {
-            crate::distance::prefetch(vec_at(data, dim, id), locality);
-        }
-    }
-    for (i, &id) in ids.iter().enumerate() {
-        if lookahead > 0 {
-            if let Some(&ahead) = ids.get(i + lookahead) {
-                crate::distance::prefetch(vec_at(data, dim, ahead), locality);
-            }
-        }
-        out.push(kern(q, vec_at(data, dim, id)));
-    }
+    batch_core(q, ids, data, dim, lookahead, locality, out, kern);
 }
 
 /// Squared-L2 distances from `q` to the `ids` rows of `data` (row-major,
@@ -305,6 +548,102 @@ pub fn distance_batch_with(
             }
         }
     }
+}
+
+/// Test-only i8 alias of [`row_at`].
+#[cfg(test)]
+#[inline]
+fn code_at(codes: &[i8], dim: usize, id: u32) -> &[i8] {
+    row_at(codes, dim, id)
+}
+
+/// int8 instantiation of [`batch_core`]: raw i32 distances, each mapped
+/// through `map` into `out` (identity for the raw batch API, the `scale²`
+/// metric mapping for [`quant_distance_batch_with`]).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn batch_i8<T>(
+    kern: DistFnI8,
+    q: &[i8],
+    ids: &[u32],
+    codes: &[i8],
+    dim: usize,
+    lookahead: usize,
+    locality: i32,
+    out: &mut Vec<T>,
+    map: impl Fn(i32) -> T,
+) {
+    batch_core(q, ids, codes, dim, lookahead, locality, out, |a, b| map(kern(a, b)));
+}
+
+/// Raw i8 squared-L2 distances from `q` to the `ids` rows of `codes`
+/// (row-major, `dim` columns), default prefetch schedule. Exactly equal to
+/// per-pair [`crate::distance::quant::l2_sq_i8`] calls.
+#[inline]
+pub fn l2_sq_i8_batch(q: &[i8], ids: &[u32], codes: &[i8], dim: usize, out: &mut Vec<i32>) {
+    batch_i8(kernels_i8().l2_sq, q, ids, codes, dim, BATCH_LOOKAHEAD, BATCH_LOCALITY, out, |r| r);
+}
+
+/// Raw i8 inner products of `q` with the `ids` rows of `codes`, default
+/// prefetch schedule. Exactly equal to per-pair
+/// [`crate::distance::quant::dot_i8`] calls.
+#[inline]
+pub fn dot_i8_batch(q: &[i8], ids: &[u32], codes: &[i8], dim: usize, out: &mut Vec<i32>) {
+    batch_i8(kernels_i8().dot, q, ids, codes, dim, BATCH_LOOKAHEAD, BATCH_LOCALITY, out, |r| r);
+}
+
+/// Metric-aware SQ8 batch distances with the default prefetch schedule.
+/// See [`quant_distance_batch_with`].
+#[allow(clippy::too_many_arguments)]
+pub fn quant_distance_batch(
+    metric: Metric,
+    q: &[i8],
+    ids: &[u32],
+    codes: &[i8],
+    dim: usize,
+    scale: f32,
+    out: &mut Vec<f32>,
+) {
+    quant_distance_batch_with(
+        metric,
+        q,
+        ids,
+        codes,
+        dim,
+        scale,
+        BATCH_LOOKAHEAD,
+        BATCH_LOCALITY,
+        out,
+    );
+}
+
+/// Metric-aware SQ8 batch distances in f32 metric units (same convention as
+/// [`crate::distance::quant::QuantizedStore::distance`]). The integer
+/// kernel runs per pair and the `scale²` factor is computed once per batch;
+/// because the raw distance is an exact i32 and the final mapping is the
+/// same one the per-pair path applies, results are **bitwise identical** to
+/// per-pair `QuantizedStore::distance` calls for every
+/// `lookahead`/`locality` — the quantized knob stays a pure speed dial.
+#[allow(clippy::too_many_arguments)]
+pub fn quant_distance_batch_with(
+    metric: Metric,
+    q: &[i8],
+    ids: &[u32],
+    codes: &[i8],
+    dim: usize,
+    scale: f32,
+    lookahead: usize,
+    locality: i32,
+    out: &mut Vec<f32>,
+) {
+    let s2 = scale * scale;
+    let kern = match metric {
+        Metric::L2 => kernels_i8().l2_sq,
+        Metric::Angular | Metric::Ip => kernels_i8().dot,
+    };
+    batch_i8(kern, q, ids, codes, dim, lookahead, locality, out, |raw| {
+        crate::distance::quant::map_quant_raw(metric, raw, s2)
+    });
 }
 
 #[cfg(test)]
@@ -407,5 +746,100 @@ mod tests {
         // Zero-length vectors: distance 0 / dot 0.
         assert_eq!((kernels().l2_sq)(&[], &[]), 0.0);
         assert_eq!((kernels().dot)(&[], &[]), 0.0);
+    }
+
+    fn random_codes(n: usize, rng: &mut Rng) -> Vec<i8> {
+        (0..n).map(|_| (rng.next_below(255) as i32 - 127) as i8).collect()
+    }
+
+    #[test]
+    fn i8_dispatch_selects_a_kernel() {
+        let k = kernels_i8();
+        assert!(k.name == "avx2" || k.name == "portable32");
+        assert_eq!(kernels_i8().name, k.name);
+    }
+
+    #[test]
+    fn i8_dispatched_exactly_equals_portable() {
+        // Integer accumulation: SIMD and portable must agree EXACTLY, at
+        // every length straddling the 16/32-lane boundaries — including the
+        // extreme code values where an i8-width accumulator would wrap.
+        let mut rng = Rng::new(0x18D);
+        for dim in [
+            1usize, 2, 3, 7, 8, 15, 16, 17, 31, 32, 33, 48, 63, 64, 65, 100, 127, 128, 129, 200,
+            784, 960,
+        ] {
+            let a = random_codes(dim, &mut rng);
+            let b = random_codes(dim, &mut rng);
+            assert_eq!(
+                (kernels_i8().l2_sq)(&a, &b),
+                portable_i8::l2_sq(&a, &b),
+                "l2_sq_i8 dim={dim}"
+            );
+            assert_eq!(
+                (kernels_i8().dot)(&a, &b),
+                portable_i8::dot(&a, &b),
+                "dot_i8 dim={dim}"
+            );
+        }
+        // Saturation corners: all-extreme codes maximize every partial sum.
+        for dim in [32usize, 960] {
+            let lo = vec![-127i8; dim];
+            let hi = vec![127i8; dim];
+            assert_eq!((kernels_i8().l2_sq)(&lo, &hi), portable_i8::l2_sq(&lo, &hi));
+            assert_eq!((kernels_i8().dot)(&lo, &hi), portable_i8::dot(&lo, &hi));
+        }
+    }
+
+    #[test]
+    fn i8_batch_exactly_equals_per_pair() {
+        let mut rng = Rng::new(0x18BA);
+        for dim in [1usize, 3, 16, 33, 128] {
+            let n = 90;
+            let codes = random_codes(n * dim, &mut rng);
+            let q = random_codes(dim, &mut rng);
+            let ids: Vec<u32> = (0..n as u32).rev().step_by(3).chain([0, 0]).collect();
+            let mut out = Vec::new();
+            l2_sq_i8_batch(&q, &ids, &codes, dim, &mut out);
+            assert_eq!(out.len(), ids.len());
+            for (&id, &d) in ids.iter().zip(&out) {
+                assert_eq!(d, (kernels_i8().l2_sq)(&q, code_at(&codes, dim, id)), "dim={dim}");
+            }
+            dot_i8_batch(&q, &ids, &codes, dim, &mut out);
+            for (&id, &d) in ids.iter().zip(&out) {
+                assert_eq!(d, (kernels_i8().dot)(&q, code_at(&codes, dim, id)), "dim={dim}");
+            }
+        }
+    }
+
+    #[test]
+    fn quant_batch_schedule_is_result_invariant() {
+        let mut rng = Rng::new(0x18FE);
+        let dim = 96;
+        let n = 70;
+        let codes = random_codes(n * dim, &mut rng);
+        let q = random_codes(dim, &mut rng);
+        let ids: Vec<u32> = (0..n as u32).collect();
+        let scale = 0.0173;
+        for metric in [Metric::L2, Metric::Angular, Metric::Ip] {
+            let mut want = Vec::new();
+            quant_distance_batch_with(metric, &q, &ids, &codes, dim, scale, 0, 3, &mut want);
+            for (lookahead, locality) in [(1usize, 1i32), (4, 3), (16, 0), (100, 2)] {
+                let mut got = Vec::new();
+                quant_distance_batch_with(
+                    metric, &q, &ids, &codes, dim, scale, lookahead, locality, &mut got,
+                );
+                assert_eq!(got, want, "{metric:?} lookahead={lookahead} locality={locality}");
+            }
+        }
+    }
+
+    #[test]
+    fn i8_empty_ids_and_empty_codes() {
+        let mut out = vec![7i32; 4];
+        l2_sq_i8_batch(&[1], &[], &[0, 2], 1, &mut out);
+        assert!(out.is_empty());
+        assert_eq!((kernels_i8().l2_sq)(&[], &[]), 0);
+        assert_eq!((kernels_i8().dot)(&[], &[]), 0);
     }
 }

@@ -128,6 +128,58 @@ fn prop_simd_matches_portable_kernels() {
     });
 }
 
+/// The runtime-dispatched i8 kernels agree with the portable 32-wide
+/// reference EXACTLY (`assert_eq!`, not tolerance — i32 accumulation is
+/// order-independent) across dims straddling the 16/32-lane boundaries.
+#[test]
+fn prop_i8_simd_matches_portable_exactly() {
+    use crinn::distance::quant::{dot_i8, l2_sq_i8};
+    use crinn::distance::simd::portable_i8;
+    forall(5, |seed| {
+        let mut rng = Rng::new(seed ^ 0x18D);
+        for dim in [1usize, 7, 15, 16, 17, 31, 32, 33, 100, 128, 200, 784, 960] {
+            let a: Vec<i8> =
+                (0..dim).map(|_| (rng.next_below(255) as i32 - 127) as i8).collect();
+            let b: Vec<i8> =
+                (0..dim).map(|_| (rng.next_below(255) as i32 - 127) as i8).collect();
+            assert_eq!(l2_sq_i8(&a, &b), portable_i8::l2_sq(&a, &b), "l2_sq_i8 dim={dim}");
+            assert_eq!(dot_i8(&a, &b), portable_i8::dot(&a, &b), "dot_i8 dim={dim}");
+        }
+    });
+}
+
+/// The SQ8 one-to-many batch path is bitwise identical to per-pair
+/// `QuantizedStore::distance` calls, for every metric, over random
+/// gathered id lists — the guarantee that lets the GLASS quantized beam
+/// and the IVF posting-list scan batch freely.
+#[test]
+fn prop_quant_batch_matches_per_pair_bitwise() {
+    use crinn::distance::quant::QuantizedStore;
+    forall(5, |seed| {
+        let mut rng = Rng::new(seed ^ 0x5BA7);
+        for dim in [1usize, 3, 17, 33, 128] {
+            let n = 40 + rng.next_below(80);
+            let data: Vec<f32> = (0..n * dim).map(|_| rng.next_gaussian_f32()).collect();
+            let store = QuantizedStore::build(&data, dim);
+            let q: Vec<f32> = (0..dim).map(|_| rng.next_gaussian_f32()).collect();
+            let qc = store.encode_query(&q);
+            let ids: Vec<u32> = (0..n as u32).filter(|_| rng.next_f64() < 0.5).collect();
+            let mut out = Vec::new();
+            for metric in [Metric::L2, Metric::Angular, Metric::Ip] {
+                store.distance_batch(metric, &qc, &ids, &mut out);
+                assert_eq!(out.len(), ids.len());
+                for (&id, &d) in ids.iter().zip(&out) {
+                    assert_eq!(
+                        d,
+                        store.distance(metric, &qc, id as usize),
+                        "{metric:?} dim={dim} id={id}"
+                    );
+                }
+            }
+        }
+    });
+}
+
 /// The one-to-many batch kernels match the per-pair kernels exactly
 /// (bitwise), for every metric, over random gathered id lists.
 #[test]
