@@ -17,7 +17,6 @@
 //! # scale up: CRINN_E2E_N=30000 cargo run --release --example e2e_ann_benchmarks
 //! ```
 
-use crinn::anns::AnnIndex;
 use crinn::coordinator::{Server, ServerConfig, ShardedRouter};
 use crinn::dataset::synth;
 use crinn::eval::harness;
@@ -95,20 +94,10 @@ fn main() -> crinn::Result<()> {
     // (4) Serving path on the SIFT-like dataset.
     println!("## serving (sift-128-like through the batching coordinator)");
     let ds = Arc::new(synth::generate_with_gt("sift-128-euclidean", n, nq, 10, 44));
-    struct RI(ShardedRouter, Arc<crinn::dataset::Dataset>);
-    impl AnnIndex for RI {
-        fn name(&self) -> String {
-            "crinn-sharded".into()
-        }
-        fn search(&self, q: &[f32], k: usize, ef: usize) -> Vec<u32> {
-            self.0.search(q, k, ef, |g| self.1.metric.distance(q, self.1.base_vec(g as usize)))
-        }
-        fn len(&self) -> usize {
-            self.0.len()
-        }
-    }
+    // The router is itself an AnnIndex — batched shard fan-out, merge on
+    // shard-carried exact distances — so it serves directly.
     let router = ShardedRouter::build_glass(&ds, &VariantConfig::crinn_full(), 2, 7);
-    let server = Server::start(Arc::new(RI(router, ds.clone())), ServerConfig::default());
+    let server = Server::start(Arc::new(router), ServerConfig::default());
     let h = server.handle();
     let t = std::time::Instant::now();
     let total = 1_000;

@@ -12,34 +12,16 @@ use crinn::dataset::synth;
 use crinn::variants::VariantConfig;
 use std::sync::Arc;
 
-struct RouterIndex {
-    router: ShardedRouter,
-    ds: Arc<crinn::dataset::Dataset>,
-}
-
-impl AnnIndex for RouterIndex {
-    fn name(&self) -> String {
-        "crinn-sharded".into()
-    }
-    fn search(&self, q: &[f32], k: usize, ef: usize) -> Vec<u32> {
-        self.router
-            .search(q, k, ef, |gid| self.ds.metric.distance(q, self.ds.base_vec(gid as usize)))
-    }
-    fn len(&self) -> usize {
-        self.router.len()
-    }
-}
-
 fn main() -> crinn::Result<()> {
     let ds = Arc::new(synth::generate_with_gt("sift-128-euclidean", 15_000, 200, 10, 42));
     println!("dataset: {} base vectors", ds.n_base());
 
+    // The router is itself an AnnIndex: dynamic batches fan out to every
+    // shard in one `search_batch` call each, and the merge sorts on the
+    // shard-carried exact distances — no wrapper/rescoring needed.
     let router = ShardedRouter::build_glass(&ds, &VariantConfig::crinn_full(), 2, 7);
     println!("router: {} shards", router.n_shards());
-    let index: Arc<dyn AnnIndex> = Arc::new(RouterIndex {
-        router,
-        ds: ds.clone(),
-    });
+    let index: Arc<dyn AnnIndex> = Arc::new(router);
 
     let server = Server::start(index, ServerConfig::default());
     let n_clients = 4;
@@ -83,9 +65,10 @@ fn main() -> crinn::Result<()> {
         crinn::util::bench::fmt_duration(snap.latency.p99),
     );
     println!(
-        "batches: {} (mean size {:.1}), rejected: {}",
+        "batches: {} (mean size {:.1}), batched queries: {}, rejected: {}",
         snap.batches,
         snap.mean_batch_size(),
+        snap.batched_queries,
         snap.rejected
     );
     Ok(())

@@ -13,6 +13,12 @@ use crinn::eval::harness;
 use crinn::eval::report;
 
 fn main() {
+    if let Some(b) = crinn::eval::batch_mode() {
+        eprintln!(
+            "[fig1] CRINN_BATCH={b}: sweeps use the batched-throughput protocol \
+             (recall identical to per-query; see eval::sweep)"
+        );
+    }
     let ef_grid = harness::bench_ef_grid();
     let datasets = harness::bench_dataset_names();
     let mut all = Vec::new();

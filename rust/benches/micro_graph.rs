@@ -4,7 +4,7 @@
 
 use crinn::anns::heap::{MinQueue, TopK};
 use crinn::anns::visited::VisitedSet;
-use crinn::anns::VectorSet;
+use crinn::anns::{AnnIndex, VectorSet};
 use crinn::dataset::synth;
 use crinn::util::bench::{report_row, time_adaptive};
 use crinn::util::rng::Rng;
@@ -105,5 +105,36 @@ fn main() {
             ));
         });
         report_row(label, &s);
+    }
+
+    // --- multi-query batch search: the per-query trait path (one scratch
+    // checkout per query) vs `search_batch` (one checkout per batch, warm
+    // context across the whole batch). Results are bitwise identical, so
+    // any gap is pure per-query overhead + cache effects — the speedup the
+    // batch-first serving pipeline banks on.
+    println!(
+        "\n## multi-query batch search (hnsw, 8k nodes, {} queries, k=10, ef=64)\n",
+        ds.n_queries()
+    );
+    let idx = crinn::anns::hnsw::HnswIndex::build(
+        VectorSet::from_dataset(&ds),
+        &ConstructionKnobs::default(),
+        SearchKnobs::crinn_discovered(),
+        7,
+    );
+    let queries: Vec<&[f32]> = (0..ds.n_queries()).map(|qi| ds.query_vec(qi)).collect();
+    let s = time_adaptive(0.5, 20, || {
+        for q in &queries {
+            black_box(idx.search_with_dists(q, 10, 64));
+        }
+    });
+    report_row("per-query search_with_dists", &s);
+    for bs in [8usize, 32, 64] {
+        let s = time_adaptive(0.5, 20, || {
+            for chunk in queries.chunks(bs) {
+                black_box(idx.search_batch(chunk, 10, 64));
+            }
+        });
+        report_row(&format!("search_batch B={bs}"), &s);
     }
 }

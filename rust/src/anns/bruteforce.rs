@@ -5,16 +5,40 @@
 //! AOT Pallas scan artifact — the integration tests cross-check the Rust
 //! scalar scan against the compiled kernel's results.
 
+use crate::anns::scratch::ScratchPool;
 use crate::anns::{AnnIndex, VectorSet};
 
-/// Brute-force index: just the vectors.
+/// Brute-force index: the vectors plus pooled scan buffers.
 pub struct BruteForceIndex {
     pub vectors: VectorSet,
+    scratch: ScratchPool,
 }
 
 impl BruteForceIndex {
     pub fn build(vectors: VectorSet) -> Self {
-        BruteForceIndex { vectors }
+        BruteForceIndex {
+            vectors,
+            scratch: ScratchPool::new(),
+        }
+    }
+
+    /// One blocked `distance_batch` scan with caller-provided scratch —
+    /// the shared body of `search_with_dists` and `search_batch`.
+    fn search_one(
+        &self,
+        query: &[f32],
+        k: usize,
+        ctx: &mut crate::anns::hnsw::search::SearchContext,
+    ) -> Vec<(f32, u32)> {
+        crate::dataset::gt::topk_pairs_for_query(
+            &self.vectors.data,
+            query,
+            self.vectors.dim,
+            self.vectors.metric,
+            k,
+            &mut ctx.batch,
+            &mut ctx.dists,
+        )
     }
 }
 
@@ -23,14 +47,19 @@ impl AnnIndex for BruteForceIndex {
         "bruteforce".to_string()
     }
 
-    fn search(&self, query: &[f32], k: usize, _ef: usize) -> Vec<u32> {
-        crate::dataset::gt::topk_for_query(
-            &self.vectors.data,
-            query,
-            self.vectors.dim,
-            self.vectors.metric,
-            k,
-        )
+    fn search_with_dists(&self, query: &[f32], k: usize, _ef: usize) -> Vec<(f32, u32)> {
+        let mut ctx = self.scratch.checkout(0);
+        self.search_one(query, k, &mut ctx)
+    }
+
+    fn search_batch(&self, queries: &[&[f32]], k: usize, _ef: usize) -> Vec<Vec<(f32, u32)>> {
+        // One scratch checkout: every query's blocked scan reuses the
+        // same id/distance block buffers.
+        let mut ctx = self.scratch.checkout(0);
+        queries
+            .iter()
+            .map(|q| self.search_one(q, k, &mut ctx))
+            .collect()
     }
 
     fn len(&self) -> usize {

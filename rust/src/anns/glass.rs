@@ -19,10 +19,10 @@ use crate::anns::heap::TopK;
 use crate::anns::hnsw::graph::HnswGraph;
 use crate::anns::hnsw::search::{greedy_descent, search, SearchContext};
 use crate::anns::hnsw::builder;
+use crate::anns::scratch::ScratchPool;
 use crate::anns::{AnnIndex, VectorSet};
 use crate::distance::quant::QuantizedStore;
 use crate::variants::VariantConfig;
-use std::sync::Mutex;
 
 /// GLASS index: graph + quantized codes + variant knobs.
 pub struct GlassIndex {
@@ -30,7 +30,7 @@ pub struct GlassIndex {
     pub quant: QuantizedStore,
     pub config: VariantConfig,
     label: String,
-    ctx_pool: Mutex<Vec<SearchContext>>,
+    scratch: ScratchPool,
 }
 
 impl GlassIndex {
@@ -43,7 +43,7 @@ impl GlassIndex {
             quant,
             config,
             label: "glass".to_string(),
-            ctx_pool: Mutex::new(Vec::new()),
+            scratch: ScratchPool::new(),
         }
     }
 
@@ -59,7 +59,7 @@ impl GlassIndex {
             quant,
             config,
             label: "glass".to_string(),
-            ctx_pool: Mutex::new(Vec::new()),
+            scratch: ScratchPool::new(),
         }
     }
 
@@ -71,41 +71,25 @@ impl GlassIndex {
         self.config.refine = config.refine.clone();
     }
 
-    fn checkout_ctx(&self) -> SearchContext {
-        let mut ctx = self
-            .ctx_pool
-            .lock()
-            .unwrap()
-            .pop()
-            .unwrap_or_else(|| SearchContext::new(self.graph.len()));
-        ctx.ensure(self.graph.len());
-        ctx
-    }
-
-    fn checkin_ctx(&self, ctx: SearchContext) {
-        self.ctx_pool.lock().unwrap().push(ctx);
-    }
-
-    /// Search returning `(exact_dist, id)` nearest-first.
-    pub fn search_with_dists(&self, query: &[f32], k: usize, ef: usize) -> Vec<(f32, u32)> {
+    /// One query through the full pipeline with caller-provided scratch —
+    /// the shared body of `search_with_dists` and `search_batch`.
+    fn search_one(
+        &self,
+        query: &[f32],
+        k: usize,
+        ef: usize,
+        ctx: &mut SearchContext,
+    ) -> Vec<(f32, u32)> {
         if self.graph.is_empty() {
             return Vec::new();
         }
-        let refine = &self.config.refine;
-        if !refine.quantized_primary {
+        if !self.config.refine.quantized_primary {
             // Plain full-precision HNSW search (refinement disabled point
             // in the action space).
-            let mut ctx = self.checkout_ctx();
-            let out = search(&self.graph, &self.config.search, &mut ctx, query, k, ef);
-            self.checkin_ctx(ctx);
-            return out;
+            return search(&self.graph, &self.config.search, ctx, query, k, ef);
         }
-
-        let mut ctx = self.checkout_ctx();
-        let pool = self.quantized_beam(query, k, ef, &mut ctx);
-        let out = self.rerank(query, k, ef, pool, &mut ctx);
-        self.checkin_ctx(ctx);
-        out
+        let pool = self.quantized_beam(query, k, ef, ctx);
+        self.rerank(query, k, ef, pool, ctx)
     }
 
     /// Layer-0 beam search over int8 codes (§2.3 quantized preliminary
@@ -290,13 +274,12 @@ impl GlassIndex {
     /// truncates to `k`), so an exact rerank of these candidates reproduces
     /// `search_with_dists` at both points of the action space.
     pub fn candidates_for_rerank(&self, query: &[f32], k: usize, ef: usize) -> Vec<u32> {
-        let mut ctx = self.checkout_ctx();
+        let mut ctx = self.scratch.checkout(self.graph.len());
         let pool = if self.config.refine.quantized_primary {
             self.quantized_beam(query, k, ef, &mut ctx)
         } else {
             search(&self.graph, &self.config.search, &mut ctx, query, ef.max(k), ef)
         };
-        self.checkin_ctx(ctx);
         let take = self.config.refine.rerank_count(k, ef).min(pool.len());
         pool.into_iter().take(take).map(|(_, i)| i).collect()
     }
@@ -317,10 +300,20 @@ impl AnnIndex for GlassIndex {
         self.label.clone()
     }
 
-    fn search(&self, query: &[f32], k: usize, ef: usize) -> Vec<u32> {
-        self.search_with_dists(query, k, ef)
-            .into_iter()
-            .map(|(_, i)| i)
+    /// Search returning `(exact_dist, id)` nearest-first.
+    fn search_with_dists(&self, query: &[f32], k: usize, ef: usize) -> Vec<(f32, u32)> {
+        let mut ctx = self.scratch.checkout(self.graph.len());
+        self.search_one(query, k, ef, &mut ctx)
+    }
+
+    fn search_batch(&self, queries: &[&[f32]], k: usize, ef: usize) -> Vec<Vec<(f32, u32)>> {
+        // One pooled context drives the whole batch (quantized beam +
+        // exact rerank both reset it per query), so the batch path is
+        // bitwise identical to per-query `search_with_dists`.
+        let mut ctx = self.scratch.checkout(self.graph.len());
+        queries
+            .iter()
+            .map(|q| self.search_one(q, k, ef, &mut ctx))
             .collect()
     }
 

@@ -16,20 +16,21 @@ pub mod select;
 
 pub use graph::HnswGraph;
 
+use crate::anns::scratch::ScratchPool;
 use crate::anns::{AnnIndex, VectorSet};
 use crate::variants::{ConstructionKnobs, SearchKnobs};
-use std::sync::Mutex;
 
 /// A built HNSW index with an attached search configuration.
 ///
-/// `search` reuses pooled [`search::SearchContext`]s (epoch visited set +
-/// heaps) — checkout/checkin through a mutex is ~2 lock ops per query,
-/// negligible against the beam search itself.
+/// Per-query state comes from the shared
+/// [`ScratchPool`]: a single RAII checkout per
+/// query (or per *batch* — [`AnnIndex::search_batch`] drives every query
+/// in a batch through one pooled [`search::SearchContext`]).
 pub struct HnswIndex {
     pub graph: HnswGraph,
     pub knobs: SearchKnobs,
     label: String,
-    ctx_pool: Mutex<Vec<search::SearchContext>>,
+    scratch: ScratchPool,
 }
 
 impl HnswIndex {
@@ -45,27 +46,13 @@ impl HnswIndex {
             graph,
             knobs: search_knobs,
             label: "hnsw".to_string(),
-            ctx_pool: Mutex::new(Vec::new()),
+            scratch: ScratchPool::new(),
         }
     }
 
     pub fn with_label(mut self, label: &str) -> Self {
         self.label = label.to_string();
         self
-    }
-
-    /// Run a search returning `(dist, id)` pairs (used by GLASS rerank).
-    pub fn search_with_dists(&self, query: &[f32], k: usize, ef: usize) -> Vec<(f32, u32)> {
-        let mut ctx = self
-            .ctx_pool
-            .lock()
-            .unwrap()
-            .pop()
-            .unwrap_or_else(|| search::SearchContext::new(self.graph.len()));
-        ctx.ensure(self.graph.len());
-        let out = search::search(&self.graph, &self.knobs, &mut ctx, query, k, ef);
-        self.ctx_pool.lock().unwrap().push(ctx);
-        out
     }
 }
 
@@ -74,10 +61,19 @@ impl AnnIndex for HnswIndex {
         self.label.clone()
     }
 
-    fn search(&self, query: &[f32], k: usize, ef: usize) -> Vec<u32> {
-        self.search_with_dists(query, k, ef)
-            .into_iter()
-            .map(|(_, i)| i)
+    fn search_with_dists(&self, query: &[f32], k: usize, ef: usize) -> Vec<(f32, u32)> {
+        let mut ctx = self.scratch.checkout(self.graph.len());
+        search::search(&self.graph, &self.knobs, &mut ctx, query, k, ef)
+    }
+
+    fn search_batch(&self, queries: &[&[f32]], k: usize, ef: usize) -> Vec<Vec<(f32, u32)>> {
+        // One scratch checkout for the whole batch; each search fully
+        // resets the context, so results are bitwise identical to the
+        // per-query path.
+        let mut ctx = self.scratch.checkout(self.graph.len());
+        queries
+            .iter()
+            .map(|q| search::search(&self.graph, &self.knobs, &mut ctx, q, k, ef))
             .collect()
     }
 

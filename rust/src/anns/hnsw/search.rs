@@ -21,15 +21,22 @@ use crate::anns::visited::VisitedSet;
 use crate::distance::prefetch;
 use crate::variants::SearchKnobs;
 
-/// Reusable per-thread search state.
+/// Reusable per-query search state, checked out of the shared
+/// [`crate::anns::scratch::ScratchPool`] by every index type (not just
+/// HNSW): the visited set and frontier back the graph beams, and the
+/// gather/distance buffers feed the one-to-many kernels in GLASS, IVF and
+/// brute force.
 pub struct SearchContext {
     pub visited: VisitedSet,
     pub frontier: MinQueue,
-    /// Batch buffer for the edge-batching knob.
+    /// Batch buffer for the edge-batching knob (and id gathers generally).
     pub batch: Vec<u32>,
     /// Distance buffer filled by the one-to-many kernel, aligned with
     /// `batch`.
     pub dists: Vec<f32>,
+    /// `(dist, id)` pair buffer — IVF cell ranking and similar gathers
+    /// that would otherwise allocate per query.
+    pub cands: Vec<(f32, u32)>,
 }
 
 impl SearchContext {
@@ -39,6 +46,7 @@ impl SearchContext {
             frontier: MinQueue::with_capacity(256),
             batch: Vec::with_capacity(64),
             dists: Vec::with_capacity(64),
+            cands: Vec::new(),
         }
     }
 

@@ -18,6 +18,8 @@
 //! same recall↔QPS dial as the graph methods in Figure 1.
 
 use crate::anns::heap::dist_cmp;
+use crate::anns::hnsw::search::SearchContext;
+use crate::anns::scratch::ScratchPool;
 use crate::anns::{AnnIndex, VectorSet};
 use crate::distance::quant::QuantizedStore;
 use crate::util::rng::Rng;
@@ -58,6 +60,9 @@ pub struct IvfIndex {
     members: Vec<u32>,
     offsets: Vec<u32>,
     rerank_mult: usize,
+    /// Shared scratch: cell-ranking, gather and distance buffers that the
+    /// old code allocated fresh on every query.
+    scratch: ScratchPool,
 }
 
 impl IvfIndex {
@@ -169,24 +174,24 @@ impl IvfIndex {
             members,
             offsets,
             rerank_mult: params.rerank_mult.max(1),
+            scratch: ScratchPool::new(),
         }
     }
 
-    /// Cells sorted by centroid distance to `q`.
-    fn ranked_cells(&self, q: &[f32]) -> Vec<(f32, u32)> {
+    /// Rank cells by centroid distance to `q` into the caller's buffer
+    /// (cleared and refilled; no per-query allocation once warm).
+    fn rank_cells(&self, q: &[f32], out: &mut Vec<(f32, u32)>) {
         let dim = self.vectors.dim;
-        let mut cells: Vec<(f32, u32)> = (0..self.nlist)
-            .map(|c| {
-                (
-                    self.vectors
-                        .metric
-                        .distance(q, &self.centroids[c * dim..(c + 1) * dim]),
-                    c as u32,
-                )
-            })
-            .collect();
-        cells.sort_by(dist_cmp);
-        cells
+        out.clear();
+        out.extend((0..self.nlist).map(|c| {
+            (
+                self.vectors
+                    .metric
+                    .distance(q, &self.centroids[c * dim..(c + 1) * dim]),
+                c as u32,
+            )
+        }));
+        out.sort_by(dist_cmp);
     }
 
     pub fn cell_sizes(&self) -> Vec<usize> {
@@ -202,6 +207,67 @@ impl IvfIndex {
         let s = self.offsets[c as usize] as usize;
         let e = self.offsets[c as usize + 1] as usize;
         &self.members[s..e]
+    }
+
+    /// One query with caller-provided scratch — the shared body of
+    /// `search_with_dists` and `search_batch`. `ef` maps to nprobe (≥1),
+    /// scaled down since cells ≫ beam widths.
+    fn search_one(
+        &self,
+        query: &[f32],
+        k: usize,
+        ef: usize,
+        ctx: &mut SearchContext,
+    ) -> Vec<(f32, u32)> {
+        let n = self.vectors.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        let nprobe = (ef / 8).clamp(1, self.nlist);
+        self.rank_cells(query, &mut ctx.cands);
+
+        let Some(quant) = &self.quant else {
+            // Exact IVFFlat: full-precision posting-list scan through the
+            // f32 one-to-many kernel; no rerank pass needed.
+            let mut pool = crate::anns::heap::TopK::new(k);
+            for &(_, c) in ctx.cands.iter().take(nprobe) {
+                let members = self.cell_members(c);
+                self.vectors.distance_batch(query, members, &mut ctx.dists);
+                for (&i, &d) in members.iter().zip(&ctx.dists) {
+                    pool.push(d, i);
+                }
+            }
+            return pool.into_sorted();
+        };
+
+        // SQ8 scan of probed cells: one i8 batch-kernel call per posting
+        // list (each cell's member ids are exactly a gathered id list, so
+        // the code-row prefetch pipeline applies unchanged).
+        let qc = quant.encode_query(query);
+        let metric = self.vectors.metric;
+        let mut pool = crate::anns::heap::TopK::new((k * self.rerank_mult).max(k));
+        for &(_, c) in ctx.cands.iter().take(nprobe) {
+            let members = self.cell_members(c);
+            quant.distance_batch(metric, &qc, members, &mut ctx.dists);
+            for (&i, &d) in members.iter().zip(&ctx.dists) {
+                pool.push(d, i);
+            }
+        }
+        // Exact rerank of the quantized survivors through the one-to-many
+        // SIMD kernel (prefetch pipelined gather over the f32 rows).
+        ctx.batch.clear();
+        ctx.batch
+            .extend(pool.into_sorted().into_iter().map(|(_, i)| i));
+        self.vectors.distance_batch(query, &ctx.batch, &mut ctx.dists);
+        let mut exact: Vec<(f32, u32)> = ctx
+            .batch
+            .iter()
+            .zip(ctx.dists.iter())
+            .map(|(&i, &d)| (d, i))
+            .collect();
+        exact.sort_by(dist_cmp);
+        exact.truncate(k);
+        exact
     }
 }
 
@@ -223,52 +289,19 @@ impl AnnIndex for IvfIndex {
         "vearch-ivf".to_string()
     }
 
-    /// `ef` maps to nprobe (≥1), scaled down since cells ≫ beam widths.
-    fn search(&self, query: &[f32], k: usize, ef: usize) -> Vec<u32> {
-        let n = self.vectors.len();
-        if n == 0 {
-            return Vec::new();
-        }
-        let nprobe = (ef / 8).clamp(1, self.nlist);
-        let cells = self.ranked_cells(query);
-        let mut dists: Vec<f32> = Vec::new();
+    fn search_with_dists(&self, query: &[f32], k: usize, ef: usize) -> Vec<(f32, u32)> {
+        let mut ctx = self.scratch.checkout(0);
+        self.search_one(query, k, ef, &mut ctx)
+    }
 
-        let Some(quant) = &self.quant else {
-            // Exact IVFFlat: full-precision posting-list scan through the
-            // f32 one-to-many kernel; no rerank pass needed.
-            let mut pool = crate::anns::heap::TopK::new(k);
-            for &(_, c) in cells.iter().take(nprobe) {
-                let members = self.cell_members(c);
-                self.vectors.distance_batch(query, members, &mut dists);
-                for (&i, &d) in members.iter().zip(&dists) {
-                    pool.push(d, i);
-                }
-            }
-            return pool.into_sorted().into_iter().map(|(_, i)| i).collect();
-        };
-
-        // SQ8 scan of probed cells: one i8 batch-kernel call per posting
-        // list (each cell's member ids are exactly a gathered id list, so
-        // the code-row prefetch pipeline applies unchanged).
-        let qc = quant.encode_query(query);
-        let metric = self.vectors.metric;
-        let mut pool = crate::anns::heap::TopK::new((k * self.rerank_mult).max(k));
-        for &(_, c) in cells.iter().take(nprobe) {
-            let members = self.cell_members(c);
-            quant.distance_batch(metric, &qc, members, &mut dists);
-            for (&i, &d) in members.iter().zip(&dists) {
-                pool.push(d, i);
-            }
-        }
-        // Exact rerank of the quantized survivors through the one-to-many
-        // SIMD kernel (prefetch pipelined gather over the f32 rows).
-        let ids: Vec<u32> = pool.into_sorted().into_iter().map(|(_, i)| i).collect();
-        self.vectors.distance_batch(query, &ids, &mut dists);
-        let mut exact: Vec<(f32, u32)> =
-            ids.into_iter().zip(dists.iter().copied()).map(|(i, d)| (d, i)).collect();
-        exact.sort_by(dist_cmp);
-        exact.truncate(k);
-        exact.into_iter().map(|(_, i)| i).collect()
+    fn search_batch(&self, queries: &[&[f32]], k: usize, ef: usize) -> Vec<Vec<(f32, u32)>> {
+        // One pooled context across the batch: cell ranking, posting-list
+        // distance buffers and the rerank gather all reuse its buffers.
+        let mut ctx = self.scratch.checkout(0);
+        queries
+            .iter()
+            .map(|q| self.search_one(q, k, ef, &mut ctx))
+            .collect()
     }
 
     fn len(&self) -> usize {

@@ -14,18 +14,55 @@ pub mod hnsw;
 pub mod ivf;
 pub mod nndescent;
 pub mod persist;
+pub mod scratch;
 pub mod vamana;
 pub mod visited;
 
 /// A built, queryable index.
+///
+/// The trait is **distance-carrying and batch-first**: the one required
+/// search method is [`AnnIndex::search_with_dists`], so exact distances
+/// survive the trait boundary (the coordinator surfaces them in
+/// `QueryResponse`, the sharded router merges on them), and
+/// [`AnnIndex::search_batch`] is the serving entry point — all six index
+/// types override it to reuse one pooled
+/// [`hnsw::search::SearchContext`] across the whole batch. Batch results
+/// are bitwise identical to per-query [`AnnIndex::search_with_dists`]
+/// calls for every index and metric (asserted by `tests/properties.rs`),
+/// extending the kernel-level batch==per-pair identity up through the
+/// whole stack.
 pub trait AnnIndex: Send + Sync {
     /// Implementation name (appears in reports / Figure 1 legends).
     fn name(&self) -> String;
 
-    /// k-NN search. `ef` is the beam/candidate budget (the recall↔speed
-    /// knob swept by the benchmarks; brute force ignores it). Returns ids
-    /// nearest-first.
-    fn search(&self, query: &[f32], k: usize, ef: usize) -> Vec<u32>;
+    /// k-NN search returning `(distance, id)` pairs nearest-first. `ef` is
+    /// the beam/candidate budget (the recall↔speed knob swept by the
+    /// benchmarks; brute force ignores it). Distances are **exact
+    /// full-precision metric values** (quantized pipelines rerank in f32
+    /// before returning) — the contract that lets the sharded router merge
+    /// shard results on carried distances without rescoring.
+    fn search_with_dists(&self, query: &[f32], k: usize, ef: usize) -> Vec<(f32, u32)>;
+
+    /// Ids-only k-NN search — a thin projection of
+    /// [`AnnIndex::search_with_dists`].
+    fn search(&self, query: &[f32], k: usize, ef: usize) -> Vec<u32> {
+        self.search_with_dists(query, k, ef)
+            .into_iter()
+            .map(|(_, i)| i)
+            .collect()
+    }
+
+    /// Multi-query batch search: one result list per query, in query
+    /// order, each bitwise identical to the corresponding
+    /// [`AnnIndex::search_with_dists`] call. The default loops per query;
+    /// implementations override it to amortize scratch checkout and keep
+    /// caches warm across the batch.
+    fn search_batch(&self, queries: &[&[f32]], k: usize, ef: usize) -> Vec<Vec<(f32, u32)>> {
+        queries
+            .iter()
+            .map(|q| self.search_with_dists(q, k, ef))
+            .collect()
+    }
 
     /// Number of indexed vectors.
     fn len(&self) -> usize;

@@ -10,11 +10,11 @@
 //! * `pynndescent` — diversified graph (occlusion pruning) + backtracking
 //!   beam, which trades build time for better high-recall behavior.
 
-use crate::anns::heap::{dist_cmp, MinQueue, TopK};
-use crate::anns::visited::VisitedSet;
+use crate::anns::heap::{dist_cmp, TopK};
+use crate::anns::hnsw::search::SearchContext;
+use crate::anns::scratch::ScratchPool;
 use crate::anns::{AnnIndex, VectorSet};
 use crate::util::rng::Rng;
-use std::sync::Mutex;
 
 /// Build parameters.
 #[derive(Clone, Debug)]
@@ -66,7 +66,7 @@ pub struct NnDescentIndex {
     params: NnDescentParams,
     label: String,
     seed: u64,
-    ctx_pool: Mutex<Vec<(VisitedSet, MinQueue)>>,
+    scratch: ScratchPool,
 }
 
 const NONE: u32 = u32::MAX;
@@ -195,7 +195,7 @@ impl NnDescentIndex {
             },
             params,
             seed,
-            ctx_pool: Mutex::new(Vec::new()),
+            scratch: ScratchPool::new(),
         }
     }
 
@@ -217,28 +217,23 @@ impl NnDescentIndex {
         }
         (0..n as u32).map(|i| self.neighbors(i).len()).sum::<usize>() as f64 / n as f64
     }
-}
 
-impl AnnIndex for NnDescentIndex {
-    fn name(&self) -> String {
-        self.label.clone()
-    }
-
-    fn search(&self, query: &[f32], k: usize, ef: usize) -> Vec<u32> {
+    /// One beam search with caller-provided scratch — the shared body of
+    /// `search_with_dists` and `search_batch`.
+    fn search_one(
+        &self,
+        query: &[f32],
+        k: usize,
+        ef: usize,
+        ctx: &mut SearchContext,
+    ) -> Vec<(f32, u32)> {
         let n = self.vectors.len();
         if n == 0 {
             return Vec::new();
         }
         let ef = ef.max(k);
-        let (mut visited, mut frontier) = self
-            .ctx_pool
-            .lock()
-            .unwrap()
-            .pop()
-            .unwrap_or_else(|| (VisitedSet::new(n), MinQueue::new()));
-        visited.resize(n);
-        visited.clear();
-        frontier.clear();
+        ctx.visited.clear();
+        ctx.frontier.clear();
         let mut results = TopK::new(ef);
 
         // Deterministic pseudo-random entries derived from the query bits.
@@ -249,32 +244,50 @@ impl AnnIndex for NnDescentIndex {
         let mut rng = Rng::new(h);
         for _ in 0..self.params.n_entries.max(1) {
             let e = rng.next_below(n) as u32;
-            if visited.insert(e) {
+            if ctx.visited.insert(e) {
                 let d = self.vectors.distance(query, e);
-                frontier.push(d, e);
+                ctx.frontier.push(d, e);
                 results.push(d, e);
             }
         }
 
-        while let Some((d, u)) = frontier.pop() {
+        while let Some((d, u)) = ctx.frontier.pop() {
             if d > results.bound() {
                 break;
             }
             for &nb in self.neighbors(u) {
-                if !visited.insert(nb) {
+                if !ctx.visited.insert(nb) {
                     continue;
                 }
                 let dnb = self.vectors.distance(query, nb);
                 if dnb < results.bound() {
                     results.push(dnb, nb);
-                    frontier.push(dnb, nb);
+                    ctx.frontier.push(dnb, nb);
                 }
             }
         }
-        self.ctx_pool.lock().unwrap().push((visited, frontier));
         let mut out = results.into_sorted();
         out.truncate(k);
-        out.into_iter().map(|(_, i)| i).collect()
+        out
+    }
+}
+
+impl AnnIndex for NnDescentIndex {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn search_with_dists(&self, query: &[f32], k: usize, ef: usize) -> Vec<(f32, u32)> {
+        let mut ctx = self.scratch.checkout(self.vectors.len());
+        self.search_one(query, k, ef, &mut ctx)
+    }
+
+    fn search_batch(&self, queries: &[&[f32]], k: usize, ef: usize) -> Vec<Vec<(f32, u32)>> {
+        let mut ctx = self.scratch.checkout(self.vectors.len());
+        queries
+            .iter()
+            .map(|q| self.search_one(q, k, ef, &mut ctx))
+            .collect()
     }
 
     fn len(&self) -> usize {

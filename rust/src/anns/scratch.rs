@@ -1,0 +1,134 @@
+//! Shared search-scratch pool.
+//!
+//! Every index needs per-query mutable state — an epoch visited set, a
+//! frontier heap, gather/distance buffers — that is expensive to allocate
+//! per query and must not be shared between concurrent queries. Before the
+//! batch-first refactor each index kept its own private
+//! `Mutex<Vec<SearchContext>>` (HNSW and GLASS duplicated the exact
+//! checkout/checkin code; IVF, Vamana and NNDescent allocated per query).
+//! [`ScratchPool`] is the one implementation they all share now.
+//!
+//! Discipline:
+//! * **Single guard scope.** [`ScratchPool::checkout`] returns a RAII
+//!   [`Scratch`] guard; checkin is its `Drop`. Callers can no longer leak a
+//!   context on an early return or panic, and the old two-statement
+//!   pop/push pattern (one mutex round-trip at each end of every search)
+//!   collapses into one checkout whose lock is held only for the `pop` —
+//!   [`SearchContext::ensure`] growth runs after the guard is released, so
+//!   a cold resize never blocks other queries.
+//! * **One checkout per batch.** `search_batch` implementations check out
+//!   a single context and drive every query in the batch through it, so
+//!   pool traffic amortizes to one checkout/checkin pair per *batch*
+//!   instead of two mutex round-trips per *query*. Contexts fully reset
+//!   per search (epoch-cleared visited set, cleared heaps/buffers), which
+//!   is what makes batch results bitwise identical to per-query results.
+
+use crate::anns::hnsw::search::SearchContext;
+use std::ops::{Deref, DerefMut};
+use std::sync::Mutex;
+
+/// A pool of reusable [`SearchContext`]s, shared by every index type.
+#[derive(Default)]
+pub struct ScratchPool {
+    pool: Mutex<Vec<SearchContext>>,
+}
+
+impl ScratchPool {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Check out a context grown to cover `n` nodes. The pool lock is held
+    /// only for the `pop`; creation/growth happens outside it. The context
+    /// returns to the pool when the guard drops.
+    pub fn checkout(&self, n: usize) -> Scratch<'_> {
+        let ctx = self.pool.lock().unwrap().pop();
+        let mut ctx = ctx.unwrap_or_else(|| SearchContext::new(n));
+        ctx.ensure(n);
+        Scratch {
+            pool: self,
+            ctx: Some(ctx),
+        }
+    }
+
+    /// Number of idle contexts (tests/metrics).
+    pub fn idle(&self) -> usize {
+        self.pool.lock().unwrap().len()
+    }
+}
+
+/// RAII checkout of a [`SearchContext`]; derefs to the context and checks
+/// it back in on drop.
+pub struct Scratch<'a> {
+    pool: &'a ScratchPool,
+    ctx: Option<SearchContext>,
+}
+
+impl Deref for Scratch<'_> {
+    type Target = SearchContext;
+    fn deref(&self) -> &SearchContext {
+        self.ctx.as_ref().expect("ctx present until drop")
+    }
+}
+
+impl DerefMut for Scratch<'_> {
+    fn deref_mut(&mut self) -> &mut SearchContext {
+        self.ctx.as_mut().expect("ctx present until drop")
+    }
+}
+
+impl Drop for Scratch<'_> {
+    fn drop(&mut self) {
+        if let Some(ctx) = self.ctx.take() {
+            self.pool.pool.lock().unwrap().push(ctx);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn contexts_are_reused_after_checkin() {
+        let pool = ScratchPool::new();
+        assert_eq!(pool.idle(), 0);
+        {
+            let _a = pool.checkout(100);
+            assert_eq!(pool.idle(), 0);
+        }
+        assert_eq!(pool.idle(), 1);
+        {
+            let _a = pool.checkout(100);
+            assert_eq!(pool.idle(), 0, "idle context must be reused, not duplicated");
+        }
+        assert_eq!(pool.idle(), 1);
+    }
+
+    #[test]
+    fn concurrent_checkouts_get_distinct_contexts() {
+        let pool = ScratchPool::new();
+        let mut a = pool.checkout(10);
+        let mut b = pool.checkout(10);
+        a.batch.push(1);
+        b.batch.push(2);
+        assert_eq!(a.batch, vec![1]);
+        assert_eq!(b.batch, vec![2]);
+        drop(a);
+        drop(b);
+        assert_eq!(pool.idle(), 2);
+    }
+
+    #[test]
+    fn checkout_grows_visited_set() {
+        let pool = ScratchPool::new();
+        {
+            let _small = pool.checkout(10);
+        }
+        let mut big = pool.checkout(1000);
+        // Insert near the top of the grown range — would panic if `ensure`
+        // had not resized the recycled context.
+        big.visited.clear();
+        assert!(big.visited.insert(999));
+    }
+}

@@ -9,10 +9,10 @@
 //! Search: single-layer beam from the medoid (no hierarchy).
 
 use crate::anns::heap::{dist_cmp, MinQueue, TopK};
+use crate::anns::scratch::ScratchPool;
 use crate::anns::visited::VisitedSet;
 use crate::anns::{AnnIndex, VectorSet};
 use crate::util::rng::Rng;
-use std::sync::Mutex;
 
 /// Build parameters (ParlayANN-ish defaults).
 #[derive(Clone, Debug)]
@@ -48,7 +48,7 @@ pub struct VamanaIndex {
     degrees: Vec<u16>,
     degree: usize,
     medoid: u32,
-    ctx_pool: Mutex<Vec<(VisitedSet, MinQueue)>>,
+    scratch: ScratchPool,
 }
 
 const NONE: u32 = u32::MAX;
@@ -66,7 +66,7 @@ impl VamanaIndex {
                 degrees: Vec::new(),
                 degree: r,
                 medoid: 0,
-                ctx_pool: Mutex::new(Vec::new()),
+                scratch: ScratchPool::new(),
             };
         }
         let mut rng = Rng::new(seed ^ 0xABBA);
@@ -131,7 +131,7 @@ impl VamanaIndex {
             graph,
             degree: r,
             medoid,
-            ctx_pool: Mutex::new(Vec::new()),
+            scratch: ScratchPool::new(),
         }
     }
 
@@ -241,37 +241,51 @@ fn add_reverse(
     }
 }
 
-impl AnnIndex for VamanaIndex {
-    fn name(&self) -> String {
-        "parlayann".to_string()
-    }
-
-    fn search(&self, query: &[f32], k: usize, ef: usize) -> Vec<u32> {
-        let n = self.vectors.len();
-        if n == 0 {
+impl VamanaIndex {
+    /// One beam search with caller-provided scratch — the shared body of
+    /// `search_with_dists` and `search_batch`.
+    fn search_one(
+        &self,
+        query: &[f32],
+        k: usize,
+        ef: usize,
+        ctx: &mut crate::anns::hnsw::search::SearchContext,
+    ) -> Vec<(f32, u32)> {
+        if self.vectors.is_empty() {
             return Vec::new();
         }
-        let beam = ef.max(k);
-        let (mut visited, mut frontier) = self
-            .ctx_pool
-            .lock()
-            .unwrap()
-            .pop()
-            .unwrap_or_else(|| (VisitedSet::new(n), MinQueue::new()));
-        visited.resize(n);
-        let out = beam_from(
+        let mut out = beam_from(
             &self.vectors,
             &self.graph,
             &self.degrees,
             self.degree,
             self.medoid,
             query,
-            beam,
-            &mut visited,
-            &mut frontier,
+            ef.max(k),
+            &mut ctx.visited,
+            &mut ctx.frontier,
         );
-        self.ctx_pool.lock().unwrap().push((visited, frontier));
-        out.into_iter().take(k).map(|(_, i)| i).collect()
+        out.truncate(k);
+        out
+    }
+}
+
+impl AnnIndex for VamanaIndex {
+    fn name(&self) -> String {
+        "parlayann".to_string()
+    }
+
+    fn search_with_dists(&self, query: &[f32], k: usize, ef: usize) -> Vec<(f32, u32)> {
+        let mut ctx = self.scratch.checkout(self.vectors.len());
+        self.search_one(query, k, ef, &mut ctx)
+    }
+
+    fn search_batch(&self, queries: &[&[f32]], k: usize, ef: usize) -> Vec<Vec<(f32, u32)>> {
+        let mut ctx = self.scratch.checkout(self.vectors.len());
+        queries
+            .iter()
+            .map(|q| self.search_one(q, k, ef, &mut ctx))
+            .collect()
     }
 
     fn len(&self) -> usize {

@@ -81,6 +81,27 @@ pub fn next_batch_or_stop<T>(
     Some(batch)
 }
 
+/// Partition a drained batch into groups sharing a key (the server groups
+/// by `(k, ef)` so each group can go through one `search_batch` call).
+/// Groups appear in first-seen order and items keep arrival order within
+/// their group; a uniform batch stays a single group, so the common case
+/// is one multi-query search per drained batch. Linear scan over the
+/// group list — batches are small (≤ `max_batch`) and distinct keys rare.
+pub fn group_by_key<T, K: PartialEq>(
+    items: Vec<T>,
+    key: impl Fn(&T) -> K,
+) -> Vec<(K, Vec<T>)> {
+    let mut groups: Vec<(K, Vec<T>)> = Vec::new();
+    for item in items {
+        let k = key(&item);
+        match groups.iter_mut().find(|(gk, _)| *gk == k) {
+            Some((_, g)) => g.push(item),
+            None => groups.push((k, vec![item])),
+        }
+    }
+    groups
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -121,6 +142,20 @@ mod tests {
         let (tx, rx) = channel::<u32>();
         drop(tx);
         assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn group_by_key_preserves_order_and_splits_keys() {
+        let items = vec![(10, 'a'), (20, 'b'), (10, 'c'), (30, 'd'), (20, 'e')];
+        let groups = group_by_key(items, |&(k, _)| k);
+        assert_eq!(groups.len(), 3);
+        assert_eq!(groups[0], (10, vec![(10, 'a'), (10, 'c')]));
+        assert_eq!(groups[1], (20, vec![(20, 'b'), (20, 'e')]));
+        assert_eq!(groups[2], (30, vec![(30, 'd')]));
+        // Uniform batch: one group, order untouched.
+        let uniform = group_by_key(vec![1, 2, 3], |_| 0);
+        assert_eq!(uniform, vec![(0, vec![1, 2, 3])]);
+        assert!(group_by_key(Vec::<u8>::new(), |_| 0).is_empty());
     }
 
     #[test]

@@ -9,6 +9,10 @@ pub struct Metrics {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub rejected: AtomicU64,
+    /// Requests answered through a multi-query `search_batch` group (size
+    /// > 1) — how much of the traffic actually amortized per-query
+    /// overhead, vs. batches that drained a single request.
+    pub batched_queries: AtomicU64,
     /// Reservoir of recent request latencies (seconds).
     latencies: Mutex<Vec<f64>>,
 }
@@ -36,6 +40,15 @@ impl Metrics {
         self.batches.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record one `search_batch` group of `group_len` requests; only
+    /// groups that actually shared a call (size > 1) count as batched.
+    pub fn record_group(&self, group_len: usize) {
+        if group_len > 1 {
+            self.batched_queries
+                .fetch_add(group_len as u64, Ordering::Relaxed);
+        }
+    }
+
     pub fn record_rejected(&self) {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
@@ -47,6 +60,7 @@ impl Metrics {
             requests: self.requests.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            batched_queries: self.batched_queries.load(Ordering::Relaxed),
             latency: crate::util::bench::Stats::from_samples(lat),
         }
     }
@@ -58,6 +72,7 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
     pub rejected: u64,
+    pub batched_queries: u64,
     pub latency: crate::util::bench::Stats,
 }
 
@@ -84,10 +99,13 @@ mod tests {
         m.record_batch();
         m.record_batch();
         m.record_rejected();
+        m.record_group(1); // singleton groups never count as batched
+        m.record_group(8);
         let s = m.snapshot();
         assert_eq!(s.requests, 100);
         assert_eq!(s.batches, 2);
         assert_eq!(s.rejected, 1);
+        assert_eq!(s.batched_queries, 8);
         assert_eq!(s.latency.n, 100);
         assert_eq!(s.mean_batch_size(), 50.0);
     }

@@ -6,7 +6,7 @@
 //! (and tokio is unavailable offline — DESIGN.md §8).
 
 use crate::anns::AnnIndex;
-use crate::coordinator::batcher::{next_batch_or_stop, BatchPolicy};
+use crate::coordinator::batcher::{group_by_key, next_batch_or_stop, BatchPolicy};
 use crate::coordinator::metrics::Metrics;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -23,10 +23,13 @@ pub struct QueryRequest {
     pub reply: SyncSender<QueryResponse>,
 }
 
-/// The answer.
+/// The answer: ids nearest-first with their exact distances (`dists[i]`
+/// belongs to `ids[i]`) — the distance-carrying `AnnIndex` trait means the
+/// serving layer no longer throws distances away at the trait boundary.
 #[derive(Clone, Debug)]
 pub struct QueryResponse {
     pub ids: Vec<u32>,
+    pub dists: Vec<f32>,
     pub latency_s: f64,
 }
 
@@ -85,15 +88,26 @@ impl Server {
                 };
                 let Some(batch) = batch else { break };
                 metrics.record_batch();
-                for req in batch {
-                    let ids = index.search(&req.query, req.k, req.ef);
-                    let latency = req.submitted.elapsed().as_secs_f64();
-                    metrics.record_request(latency);
-                    let _ = req.reply.send(QueryResponse {
-                        ids,
-                        latency_s: latency,
-                    });
-                    inflight.fetch_sub(1, Ordering::Relaxed);
+                // Serve each (k, ef) group through one multi-query
+                // `search_batch` call — the index reuses a single pooled
+                // scratch context across the group, and results are
+                // bitwise identical to per-request `search_with_dists`.
+                for ((k, ef), group) in group_by_key(batch, |r| (r.k, r.ef)) {
+                    let queries: Vec<&[f32]> =
+                        group.iter().map(|r| r.query.as_slice()).collect();
+                    let results = index.search_batch(&queries, k, ef);
+                    metrics.record_group(group.len());
+                    for (req, pairs) in group.into_iter().zip(results) {
+                        let latency = req.submitted.elapsed().as_secs_f64();
+                        metrics.record_request(latency);
+                        let (dists, ids) = pairs.into_iter().unzip();
+                        let _ = req.reply.send(QueryResponse {
+                            ids,
+                            dists,
+                            latency_s: latency,
+                        });
+                        inflight.fetch_sub(1, Ordering::Relaxed);
+                    }
                 }
             }));
         }
@@ -208,11 +222,67 @@ mod tests {
         for qi in 0..10 {
             let resp = h.query(ds.query_vec(qi).to_vec(), 5, 0).unwrap();
             assert_eq!(resp.ids, ds.gt[qi][..5].to_vec(), "query {qi}");
+            assert_eq!(resp.dists.len(), resp.ids.len());
+            // Distances surfaced by the server are the exact metric values.
+            for (&id, &d) in resp.ids.iter().zip(&resp.dists) {
+                let want = ds.metric.distance(ds.query_vec(qi), ds.base_vec(id as usize));
+                assert_eq!(d, want, "query {qi} id {id}");
+            }
             assert!(resp.latency_s >= 0.0);
         }
         let snap = server.shutdown();
         assert_eq!(snap.requests, 10);
         assert!(snap.batches >= 1);
+    }
+
+    #[test]
+    fn coordinator_batched_distances_match_direct_search() {
+        // The serving path goes through `search_batch` grouped by (k, ef);
+        // every response's (dist, id) pairs must be bitwise identical to a
+        // direct `search_with_dists` call on the underlying index — the
+        // trait-level batch identity observed end to end through the
+        // coordinator, on the real GLASS pipeline with mixed parameters.
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 800, 30, 94);
+        ds.compute_ground_truth(5);
+        let idx = Arc::new(crate::anns::glass::GlassIndex::build(
+            VectorSet::from_dataset(&ds),
+            crate::variants::VariantConfig::glass_baseline(),
+            3,
+        ));
+        let index: Arc<dyn AnnIndex> = idx.clone();
+        let server = Server::start(
+            index,
+            ServerConfig {
+                workers: 2,
+                queue_depth: 256,
+                batch: BatchPolicy {
+                    max_batch: 16,
+                    max_wait: std::time::Duration::from_millis(2),
+                },
+            },
+        );
+        let h = server.handle();
+        // Mixed (k, ef) across the flood exercises the per-group dispatch.
+        let mut pending = Vec::new();
+        for qi in 0..ds.n_queries() {
+            let (k, ef) = if qi % 2 == 0 { (5, 64) } else { (3, 32) };
+            let rx = h.submit(ds.query_vec(qi).to_vec(), k, ef).unwrap();
+            pending.push((qi, k, ef, rx));
+        }
+        for (qi, k, ef, rx) in pending {
+            let resp = rx.recv().unwrap();
+            let got: Vec<(f32, u32)> = resp
+                .dists
+                .iter()
+                .copied()
+                .zip(resp.ids.iter().copied())
+                .collect();
+            let want = idx.search_with_dists(ds.query_vec(qi), k, ef);
+            assert_eq!(got, want, "query {qi} k={k} ef={ef}");
+        }
+        let snap = server.shutdown();
+        assert_eq!(snap.requests as usize, ds.n_queries());
     }
 
     #[test]

@@ -32,6 +32,27 @@ pub fn brute_force_topk(
 /// the current worst. Iteration order matches the plain scan, so results
 /// (and tie-breaks) are identical to the per-pair path.
 pub fn topk_for_query(base: &[f32], q: &[f32], dim: usize, metric: Metric, k: usize) -> Vec<u32> {
+    let (mut ids, mut dists) = (Vec::new(), Vec::new());
+    topk_pairs_for_query(base, q, dim, metric, k, &mut ids, &mut dists)
+        .into_iter()
+        .map(|(_, i)| i)
+        .collect()
+}
+
+/// [`topk_for_query`] returning `(dist, id)` pairs and reusing
+/// caller-provided block buffers — the blocked-scan body behind both the
+/// ids-only ground-truth path and `BruteForceIndex`'s distance-carrying
+/// batch search (which threads pooled scratch buffers through here so a
+/// whole query batch allocates nothing but its result lists).
+pub fn topk_pairs_for_query(
+    base: &[f32],
+    q: &[f32],
+    dim: usize,
+    metric: Metric,
+    k: usize,
+    ids: &mut Vec<u32>,
+    dists: &mut Vec<f32>,
+) -> Vec<(f32, u32)> {
     let n = base.len() / dim;
     let k = k.min(n);
     if k == 0 {
@@ -40,15 +61,13 @@ pub fn topk_for_query(base: &[f32], q: &[f32], dim: usize, metric: Metric, k: us
     const BLOCK: usize = 64;
     // (dist, idx) sorted ascending; pool.last() is the current worst.
     let mut pool: Vec<(f32, u32)> = Vec::with_capacity(k + 1);
-    let mut ids: Vec<u32> = Vec::with_capacity(BLOCK);
-    let mut dists: Vec<f32> = Vec::with_capacity(BLOCK);
     let mut start = 0usize;
     while start < n {
         let end = (start + BLOCK).min(n);
         ids.clear();
         ids.extend(start as u32..end as u32);
-        metric.distance_batch(q, &ids, base, dim, &mut dists);
-        for (&i, &d) in ids.iter().zip(&dists) {
+        metric.distance_batch(q, ids, base, dim, dists);
+        for (&i, &d) in ids.iter().zip(dists.iter()) {
             let cand = (d, i);
             if pool.len() == k && cmp_asc(&cand, pool.last().unwrap()) != std::cmp::Ordering::Less
             {
@@ -64,7 +83,7 @@ pub fn topk_for_query(base: &[f32], q: &[f32], dim: usize, metric: Metric, k: us
         }
         start = end;
     }
-    pool.into_iter().map(|(_, i)| i).collect()
+    pool
 }
 
 fn cmp_asc(a: &(f32, u32), b: &(f32, u32)) -> std::cmp::Ordering {

@@ -4,7 +4,9 @@
 //! multicore testbed; this sandbox is single-core, so the default bench
 //! scale is reduced (counts below). Env overrides:
 //! `CRINN_BENCH_N` (base vectors cap), `CRINN_BENCH_QUERIES`,
-//! `CRINN_BENCH_EF` (comma list), `CRINN_BENCH_DATASETS` (comma list).
+//! `CRINN_BENCH_EF` (comma list), `CRINN_BENCH_DATASETS` (comma list),
+//! and `CRINN_BATCH` (batched-throughput sweep protocol — see
+//! [`crate::eval::sweep::batch_mode`]).
 
 use crate::anns::{AnnIndex, VectorSet};
 use crate::dataset::synth;
@@ -170,7 +172,7 @@ pub fn run_algorithm(
         ds.name,
         label,
         build_s,
-        index.memory_bytes() as f64 / 1048576.0
+        crate::util::bench::mib(index.memory_bytes())
     );
     sweep_index(index.as_ref(), ds, ds.gt_k, ef_grid, build_s)
 }

@@ -5,7 +5,9 @@ pub mod harness;
 pub mod report;
 pub mod sweep;
 
-pub use sweep::{sweep_index, CurvePoint, SweepResult};
+pub use sweep::{
+    batch_mode, measure_point, measure_point_with_mode, sweep_index, CurvePoint, SweepResult,
+};
 
 /// Default ef sweep grid (ann-benchmarks-like spacing).
 pub const DEFAULT_EF_GRID: &[usize] = &[10, 16, 24, 32, 48, 64, 96, 128, 192, 256, 384, 512];

@@ -4,13 +4,19 @@
 //!
 //! Query evaluation is parallel: each pass runs the query set through
 //! [`parallel_map`] (sized by `CRINN_THREADS`), with per-worker
-//! [`crate::anns::hnsw::search::SearchContext`]s supplied by the index
-//! implementations' internal context pools. The map is order-preserving
+//! [`crate::anns::hnsw::search::SearchContext`]s supplied by the shared
+//! [`crate::anns::scratch::ScratchPool`]s. The map is order-preserving
 //! and every index search is deterministic, so recall and per-query
 //! results are **bit-identical** for every thread count —
 //! `CRINN_THREADS=1` reproduces the sequential ann-benchmarks protocol
 //! exactly (asserted by `tests/properties.rs` and the CLI determinism
 //! test).
+//!
+//! `CRINN_BATCH=<B>` (default off) switches the *timed* passes to the
+//! ANN-Benchmarks batch-query protocol: B-query chunks through
+//! [`crate::anns::AnnIndex::search_batch`]. Recall and per-query results
+//! are unchanged — the batch path is bitwise identical to per-query
+//! search — so the knob is a pure throughput-protocol dial.
 
 use crate::anns::AnnIndex;
 use crate::dataset::{gt::recall_at_k, Dataset};
@@ -45,12 +51,59 @@ impl SweepResult {
     }
 }
 
+/// Parse the `CRINN_BATCH` batched-throughput knob: unset, empty, `0` or
+/// `off` keep the per-query protocol; a positive integer selects batched
+/// mode with that batch size. An unparsable value warns and falls back to
+/// per-query (same discipline as `CRINN_BENCH_EF`: a typo must not
+/// silently change the measurement protocol). Parsed once per process —
+/// `measure_point` calls this per curve point, and a typo'd value must
+/// warn once, not once per ef × dataset × algorithm.
+pub fn batch_mode() -> Option<usize> {
+    static MODE: std::sync::OnceLock<Option<usize>> = std::sync::OnceLock::new();
+    *MODE.get_or_init(|| {
+        let s = std::env::var("CRINN_BATCH").ok()?;
+        match s.trim() {
+            "" | "0" | "off" => None,
+            t => match t.parse::<usize>() {
+                Ok(b) => Some(b),
+                Err(_) => {
+                    eprintln!(
+                        "warning: CRINN_BATCH={s:?} is not a batch size; \
+                         using the per-query protocol"
+                    );
+                    None
+                }
+            },
+        }
+    })
+}
+
 /// Measure one ef setting: runs every query once per pass through the
 /// parallel worker pool, returns the curve point. QPS is aggregate
 /// wall-clock throughput across the pool (with `CRINN_THREADS=1` this
 /// degrades to ann-benchmarks' sequential single-thread protocol);
-/// latencies are always per-query.
+/// latencies are always per-query. With `CRINN_BATCH=<B>` set (default
+/// off) the timed passes switch to the batched-throughput protocol — see
+/// [`measure_point_with_mode`].
 pub fn measure_point(index: &dyn AnnIndex, ds: &Dataset, k: usize, ef: usize) -> CurvePoint {
+    measure_point_with_mode(index, ds, k, ef, batch_mode())
+}
+
+/// [`measure_point`] with an explicit protocol: `batch = None` is the
+/// per-query path (every existing number), `batch = Some(B)` times
+/// `search_batch` over B-query chunks instead — the ANN-Benchmarks
+/// batch-query protocol. Because batch results are bitwise identical to
+/// per-query results, **recall is identical in both modes**; only the
+/// timing changes (per-query latency becomes the amortized
+/// `chunk_time / chunk_len`). The recall pass itself is untimed and stays
+/// per-query in both modes.
+pub fn measure_point_with_mode(
+    index: &dyn AnnIndex,
+    ds: &Dataset,
+    k: usize,
+    ef: usize,
+    batch: Option<usize>,
+) -> CurvePoint {
     assert!(!ds.gt.is_empty(), "dataset needs ground truth");
     let nq = ds.n_queries();
     // Untimed recall pass — keeps recall_at_k out of the timed window (it
@@ -73,13 +126,37 @@ pub fn measure_point(index: &dyn AnnIndex, ds: &Dataset, k: usize, ef: usize) ->
     let mut wall = 0.0f64;
     while passes < MAX_PASSES && (passes == 0 || wall < MIN_SECS) {
         let t_pass = Instant::now();
-        let pass: Vec<f64> = parallel_map(nq, 4, |qi| {
-            let t = Instant::now();
-            std::hint::black_box(index.search(ds.query_vec(qi), k, ef));
-            t.elapsed().as_secs_f64()
-        });
+        match batch {
+            None => {
+                let pass: Vec<f64> = parallel_map(nq, 4, |qi| {
+                    let t = Instant::now();
+                    std::hint::black_box(index.search(ds.query_vec(qi), k, ef));
+                    t.elapsed().as_secs_f64()
+                });
+                lat.extend(pass);
+            }
+            Some(bs) => {
+                // Batched protocol: the query set is cut into B-query
+                // chunks, each served by one `search_batch` call; chunks
+                // go through the same worker pool as the per-query path,
+                // so CRINN_THREADS semantics carry over.
+                let bs = bs.max(1);
+                let n_chunks = nq.div_ceil(bs);
+                let chunk_times: Vec<(f64, usize)> = parallel_map(n_chunks, 1, |ci| {
+                    let lo = ci * bs;
+                    let hi = (lo + bs).min(nq);
+                    let queries: Vec<&[f32]> =
+                        (lo..hi).map(|qi| ds.query_vec(qi)).collect();
+                    let t = Instant::now();
+                    std::hint::black_box(index.search_batch(&queries, k, ef));
+                    (t.elapsed().as_secs_f64(), hi - lo)
+                });
+                for (dt, cnt) in chunk_times {
+                    lat.extend(std::iter::repeat(dt / cnt as f64).take(cnt));
+                }
+            }
+        }
         wall += t_pass.elapsed().as_secs_f64();
-        lat.extend(pass);
         passes += 1;
     }
     let stats = crate::util::bench::Stats::from_samples(lat);
@@ -163,6 +240,30 @@ mod tests {
             let want = acc / ds.n_queries() as f64;
             let got = measure_point(&idx, &ds, 10, ef).recall;
             assert_eq!(got, want, "ef={ef}");
+        }
+    }
+
+    #[test]
+    fn batched_sweep_mode_matches_per_query_recall() {
+        // CRINN_BATCH only changes the timing protocol: recall must be
+        // bit-identical to the per-query mode for every batch size
+        // (search_batch == per-query search is asserted upstream), and the
+        // throughput stats must stay well-formed. Uses the explicit-mode
+        // seam so the test never touches process environment.
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 700, 30, 64);
+        ds.compute_ground_truth(10);
+        let idx = crate::anns::hnsw::HnswIndex::build(
+            VectorSet::from_dataset(&ds),
+            &crate::variants::ConstructionKnobs::default(),
+            crate::variants::SearchKnobs::default(),
+            1,
+        );
+        let per = measure_point_with_mode(&idx, &ds, 10, 64, None);
+        for bs in [1usize, 7, 30, 100] {
+            let b = measure_point_with_mode(&idx, &ds, 10, 64, Some(bs));
+            assert_eq!(b.recall, per.recall, "batch size {bs}");
+            assert!(b.qps > 0.0 && b.mean_latency_s > 0.0, "batch size {bs}");
         }
     }
 

@@ -40,6 +40,13 @@
 //! let index = BruteForceIndex::build(vs);
 //! assert_eq!(index.len(), 4);
 //! assert_eq!(index.search(&[0.2, 0.1], 2, 0), vec![0, 1]);
+//!
+//! // The trait is distance-carrying and batch-first: `search_with_dists`
+//! // returns exact (dist, id) pairs, and `search_batch` answers a whole
+//! // query batch with results bitwise identical to per-query calls.
+//! let q: &[f32] = &[0.2, 0.1];
+//! let batched = index.search_batch(&[q, q], 2, 0);
+//! assert_eq!(batched[0], index.search_with_dists(q, 2, 0));
 //! ```
 
 pub mod anns;

@@ -111,6 +111,12 @@ pub fn report_row(name: &str, s: &Stats) {
     );
 }
 
+/// Bytes → MiB, for memory report lines. One definition: `main.rs` and the
+/// eval harness previously each hard-coded the 1048576 divisor.
+pub fn mib(bytes: usize) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0)
+}
+
 /// Human-format a duration in seconds.
 pub fn fmt_duration(s: f64) -> String {
     if s >= 1.0 {
@@ -159,6 +165,13 @@ mod tests {
             std::hint::black_box(1 + 1);
         });
         assert!(s.n >= 10);
+    }
+
+    #[test]
+    fn mib_conversion() {
+        assert_eq!(mib(0), 0.0);
+        assert_eq!(mib(1 << 20), 1.0);
+        assert_eq!(mib(3 * (1 << 20) + (1 << 19)), 3.5);
     }
 
     #[test]

@@ -1,7 +1,7 @@
 //! Cross-layer integration tests: Rust coordinator ⇄ PJRT artifacts ⇄
 //! ANNS engines ⇄ eval harness, on real (small) workloads.
 
-use crinn::anns::{AnnIndex, VectorSet};
+use crinn::anns::VectorSet;
 use crinn::dataset::synth;
 use crinn::distance::Metric;
 use crinn::variants::VariantConfig;
@@ -121,29 +121,15 @@ fn coordinator_end_to_end_recall() {
     let mut ds = synth::generate_counts(sp, 2000, 50, 8);
     ds.compute_ground_truth(10);
     let ds = Arc::new(ds);
+    // The router is itself an AnnIndex (batched fan-out, merge on the
+    // shard-carried exact distances), so it serves without a wrapper.
     let router = crinn::coordinator::ShardedRouter::build_glass(
         &ds,
         &VariantConfig::crinn_full(),
         2,
         7,
     );
-    struct RI(crinn::coordinator::ShardedRouter, Arc<crinn::dataset::Dataset>);
-    impl AnnIndex for RI {
-        fn name(&self) -> String {
-            "t".into()
-        }
-        fn search(&self, q: &[f32], k: usize, ef: usize) -> Vec<u32> {
-            self.0
-                .search(q, k, ef, |g| self.1.metric.distance(q, self.1.base_vec(g as usize)))
-        }
-        fn len(&self) -> usize {
-            self.0.len()
-        }
-    }
-    let server = crinn::coordinator::Server::start(
-        Arc::new(RI(router, ds.clone())),
-        Default::default(),
-    );
+    let server = crinn::coordinator::Server::start(Arc::new(router), Default::default());
     let h = server.handle();
     let mut recall = 0.0;
     for qi in 0..ds.n_queries() {
