@@ -6,39 +6,67 @@
 //! scalar scan against the compiled kernel's results.
 
 use crate::anns::scratch::ScratchPool;
-use crate::anns::{AnnIndex, VectorSet};
+use crate::anns::tombstones::Tombstones;
+use crate::anns::{AnnIndex, MutableAnnIndex, VectorSet};
 
 /// Brute-force index: the vectors plus pooled scan buffers.
+///
+/// The trivially mutable index: insert appends (or recycles) a row,
+/// delete tombstones it out of the scan filter, and consolidation just
+/// moves tombstones to the free list — there is no structure to repair,
+/// so it is bitwise result-preserving for every query. Doubles as the
+/// reference semantics for the mutation property tests.
 pub struct BruteForceIndex {
     pub vectors: VectorSet,
     scratch: ScratchPool,
+    deleted: Tombstones,
+    /// Consolidated slots awaiting reuse (still marked in `deleted`).
+    free: Vec<u32>,
 }
 
 impl BruteForceIndex {
     pub fn build(vectors: VectorSet) -> Self {
+        let deleted = Tombstones::new(vectors.len());
         BruteForceIndex {
             vectors,
             scratch: ScratchPool::new(),
+            deleted,
+            free: Vec::new(),
         }
     }
 
     /// One blocked `distance_batch` scan with caller-provided scratch —
-    /// the shared body of `search_with_dists` and `search_batch`.
+    /// the shared body of `search_with_dists` and `search_batch`. With no
+    /// deletions this is the constant-true-predicate scan, which compiles
+    /// to the pre-mutability blocked scan exactly.
     fn search_one(
         &self,
         query: &[f32],
         k: usize,
         ctx: &mut crate::anns::hnsw::search::SearchContext,
     ) -> Vec<(f32, u32)> {
-        crate::dataset::gt::topk_pairs_for_query(
-            &self.vectors.data,
-            query,
-            self.vectors.dim,
-            self.vectors.metric,
-            k,
-            &mut ctx.batch,
-            &mut ctx.dists,
-        )
+        if self.deleted.none() {
+            crate::dataset::gt::topk_pairs_for_query(
+                &self.vectors.data,
+                query,
+                self.vectors.dim,
+                self.vectors.metric,
+                k,
+                &mut ctx.batch,
+                &mut ctx.dists,
+            )
+        } else {
+            crate::dataset::gt::topk_pairs_for_query_filtered(
+                &self.vectors.data,
+                query,
+                self.vectors.dim,
+                self.vectors.metric,
+                k,
+                &mut ctx.batch,
+                &mut ctx.dists,
+                |i| !self.deleted.contains(i),
+            )
+        }
     }
 }
 
@@ -71,6 +99,41 @@ impl AnnIndex for BruteForceIndex {
     }
 }
 
+impl MutableAnnIndex for BruteForceIndex {
+    fn insert(&mut self, vec: &[f32]) -> crate::Result<u32> {
+        crate::anns::validate_insert_vec(vec, self.vectors.dim)?;
+        let (id, _) = crate::anns::recycle_or_append(
+            &mut self.vectors,
+            &mut self.deleted,
+            &mut self.free,
+            vec,
+        );
+        Ok(id)
+    }
+
+    fn delete(&mut self, id: u32) -> crate::Result<()> {
+        self.deleted.delete(id)
+    }
+
+    fn consolidate(&mut self) -> crate::Result<usize> {
+        let pending = self.deleted.pending(&self.free);
+        self.free.extend(&pending);
+        Ok(pending.len())
+    }
+
+    fn live_count(&self) -> usize {
+        self.vectors.len() - self.deleted.count()
+    }
+
+    fn deleted_count(&self) -> usize {
+        self.deleted.count() - self.free.len()
+    }
+
+    fn is_deleted(&self, id: u32) -> bool {
+        self.deleted.contains(id)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -82,5 +145,29 @@ mod tests {
         let idx = BruteForceIndex::build(vs);
         assert_eq!(idx.search(&[1.4], 2, 0), vec![1, 2]);
         assert_eq!(idx.len(), 4);
+    }
+
+    #[test]
+    fn mutation_is_exact_over_live_set() {
+        let vs = VectorSet::new(vec![0.0, 1.0, 2.0, 10.0], 1, Metric::L2);
+        let mut idx = BruteForceIndex::build(vs);
+        // Delete the current best; the scan must fall through exactly.
+        idx.delete(1).unwrap();
+        assert_eq!(idx.search(&[1.4], 2, 0), vec![2, 0]);
+        assert_eq!(idx.live_count(), 3);
+        // Insert appends and is immediately exact.
+        let id = idx.insert(&[1.5]).unwrap();
+        assert_eq!(id, 4);
+        assert_eq!(idx.search(&[1.4], 2, 0), vec![id, 2]);
+        // Consolidate frees the slot; results are bitwise unchanged.
+        let before = idx.search_with_dists(&[1.4], 3, 0);
+        assert_eq!(idx.consolidate().unwrap(), 1);
+        assert_eq!(idx.search_with_dists(&[1.4], 3, 0), before);
+        // The freed slot is recycled with the old id.
+        let id2 = idx.insert(&[0.9]).unwrap();
+        assert_eq!(id2, 1);
+        assert_eq!(idx.search(&[1.0], 1, 0), vec![1]);
+        assert_eq!(idx.len(), 5);
+        assert_eq!(idx.live_count(), 5);
     }
 }

@@ -17,20 +17,34 @@
 
 use crate::anns::heap::TopK;
 use crate::anns::hnsw::graph::HnswGraph;
-use crate::anns::hnsw::search::{greedy_descent, search, SearchContext};
+use crate::anns::hnsw::search::{greedy_descent, search_filtered, SearchContext};
 use crate::anns::hnsw::builder;
 use crate::anns::scratch::ScratchPool;
-use crate::anns::{AnnIndex, VectorSet};
+use crate::anns::tombstones::Tombstones;
+use crate::anns::{AnnIndex, MutableAnnIndex, VectorSet};
 use crate::distance::quant::QuantizedStore;
+use crate::util::rng::Rng;
 use crate::variants::VariantConfig;
 
 /// GLASS index: graph + quantized codes + variant knobs.
+///
+/// Mutable ([`MutableAnnIndex`]): inserts run the shared HNSW insertion
+/// body and append an SQ8 code row encoded with the *frozen* build-time
+/// scale (re-quantization drift is bounded by the robust-quantile scale;
+/// a rebuild re-fits it), deletes tombstone a bit consulted by both the
+/// quantized beam and the full-precision fallback, and consolidation
+/// repairs edges via [`HnswGraph::drop_nodes`] with slot recycling.
 pub struct GlassIndex {
     pub graph: HnswGraph,
     pub quant: QuantizedStore,
     pub config: VariantConfig,
     label: String,
     scratch: ScratchPool,
+    pub(crate) deleted: Tombstones,
+    /// Consolidated slots awaiting reuse (still marked in `deleted`).
+    pub(crate) free: Vec<u32>,
+    /// Level-sampling stream for online inserts (deterministic per seed).
+    rng: Rng,
 }
 
 impl GlassIndex {
@@ -38,12 +52,16 @@ impl GlassIndex {
     pub fn build(vs: VectorSet, config: VariantConfig, seed: u64) -> Self {
         let quant = QuantizedStore::build(&vs.data, vs.dim);
         let graph = builder::build(vs, &config.construction, seed);
+        let deleted = Tombstones::new(graph.len());
         GlassIndex {
             graph,
             quant,
             config,
             label: "glass".to_string(),
             scratch: ScratchPool::new(),
+            deleted,
+            free: Vec::new(),
+            rng: Rng::new(seed ^ 0x61A5_61A5),
         }
     }
 
@@ -54,13 +72,52 @@ impl GlassIndex {
 
     /// Reassemble from persisted parts (see [`crate::anns::persist`]).
     pub fn from_parts(graph: HnswGraph, quant: QuantizedStore, config: VariantConfig) -> Self {
+        let deleted = Tombstones::new(graph.len());
         GlassIndex {
             graph,
             quant,
             config,
             label: "glass".to_string(),
             scratch: ScratchPool::new(),
+            deleted,
+            free: Vec::new(),
+            rng: Rng::new(0x61A5_61A5),
         }
+    }
+
+    /// Restore persisted mutation state (tombstones + free list + the
+    /// insert-level RNG stream) — the persist reader validates shape
+    /// before calling this. Restoring the RNG state keeps a reloaded
+    /// snapshot *stream-deterministic*: the same inserts applied to the
+    /// loaded index and to the original in-memory one sample the same
+    /// levels and build the same edges.
+    pub(crate) fn restore_mutation_state(
+        &mut self,
+        deleted: Tombstones,
+        free: Vec<u32>,
+        rng_state: [u64; 4],
+    ) {
+        self.deleted = deleted;
+        self.free = free;
+        self.rng = Rng::from_state(rng_state);
+    }
+
+    /// Raw insert-level RNG state (persistence).
+    pub(crate) fn rng_state(&self) -> [u64; 4] {
+        self.rng.state()
+    }
+
+    /// `true` when `id` may appear in results (see
+    /// [`Tombstones::is_live`]).
+    #[inline]
+    fn live(&self, id: u32) -> bool {
+        self.deleted.is_live(id)
+    }
+
+    /// Tombstone filter for the full-precision fallback path (see
+    /// [`Tombstones::filter_ref`]).
+    fn tombstone_ref(&self) -> Option<&Tombstones> {
+        self.deleted.filter_ref()
     }
 
     /// Swap the search/refine knobs without rebuilding the graph — how the
@@ -86,7 +143,15 @@ impl GlassIndex {
         if !self.config.refine.quantized_primary {
             // Plain full-precision HNSW search (refinement disabled point
             // in the action space).
-            return search(&self.graph, &self.config.search, ctx, query, k, ef);
+            return search_filtered(
+                &self.graph,
+                &self.config.search,
+                ctx,
+                query,
+                k,
+                ef,
+                self.tombstone_ref(),
+            );
         }
         let pool = self.quantized_beam(query, k, ef, ctx);
         self.rerank(query, k, ef, pool, ctx)
@@ -112,12 +177,17 @@ impl GlassIndex {
         ctx.frontier.clear();
         let mut results = TopK::new(ef);
 
-        // Tier-1 entry from full-precision greedy descent.
+        // Tier-1 entry from full-precision greedy descent. Tombstoned
+        // nodes seed/extend the frontier (they stay traversable) but never
+        // enter the result pool — same contract as
+        // [`crate::anns::hnsw::search::search_filtered`].
         let (_, e0) = greedy_descent(g, query);
         let d0 = self.quant.distance(metric, &qcode, e0 as usize);
         ctx.visited.insert(e0);
         ctx.frontier.push(d0, e0);
-        results.push(d0, e0);
+        if self.live(e0) {
+            results.push(d0, e0);
+        }
         // Extra tiers (§6.2) from the diverse entry-point set. Tier 1 uses
         // only the greedy-descended entry (same fix as `hnsw::search`: the
         // old `_ => 1` fallback silently ran tier-2 behavior).
@@ -130,7 +200,9 @@ impl GlassIndex {
             if ctx.visited.insert(ep) {
                 let d = self.quant.distance(metric, &qcode, ep as usize);
                 ctx.frontier.push(d, ep);
-                results.push(d, ep);
+                if self.live(ep) {
+                    results.push(d, ep);
+                }
             }
         }
 
@@ -181,7 +253,7 @@ impl GlassIndex {
                     );
                     for (&nb, &dnb) in ctx.batch.iter().zip(ctx.dists.iter()) {
                         if dnb < results.bound() {
-                            if results.push(dnb, nb) {
+                            if self.live(nb) && results.push(dnb, nb) {
                                 improved = true;
                             }
                             ctx.frontier.push(dnb, nb);
@@ -205,7 +277,7 @@ impl GlassIndex {
                     }
                     let dnb = self.quant.distance(metric, &qcode, nb as usize);
                     if dnb < results.bound() {
-                        if results.push(dnb, nb) {
+                        if self.live(nb) && results.push(dnb, nb) {
                             improved = true;
                         }
                         ctx.frontier.push(dnb, nb);
@@ -278,7 +350,15 @@ impl GlassIndex {
         let pool = if self.config.refine.quantized_primary {
             self.quantized_beam(query, k, ef, &mut ctx)
         } else {
-            search(&self.graph, &self.config.search, &mut ctx, query, ef.max(k), ef)
+            search_filtered(
+                &self.graph,
+                &self.config.search,
+                &mut ctx,
+                query,
+                ef.max(k),
+                ef,
+                self.tombstone_ref(),
+            )
         };
         let take = self.config.refine.rerank_count(k, ef).min(pool.len());
         pool.into_iter().take(take).map(|(_, i)| i).collect()
@@ -323,6 +403,54 @@ impl AnnIndex for GlassIndex {
 
     fn memory_bytes(&self) -> usize {
         self.graph.memory_bytes() + self.quant.bytes()
+    }
+}
+
+impl MutableAnnIndex for GlassIndex {
+    fn insert(&mut self, vec: &[f32]) -> crate::Result<u32> {
+        // Shared HNSW insertion body; the slot hook keeps the SQ8 code
+        // rows in lockstep with the vector rows (frozen-scale encoding).
+        let quant = &mut self.quant;
+        crate::anns::hnsw::insert_point(
+            &mut self.graph,
+            &self.config.construction,
+            &self.scratch,
+            &mut self.deleted,
+            &mut self.free,
+            &mut self.rng,
+            vec,
+            |id, recycled| {
+                if recycled {
+                    quant.reencode(id as usize, vec);
+                } else {
+                    quant.append(vec);
+                }
+            },
+        )
+    }
+
+    fn delete(&mut self, id: u32) -> crate::Result<()> {
+        self.deleted.delete(id)
+    }
+
+    fn consolidate(&mut self) -> crate::Result<usize> {
+        Ok(crate::anns::hnsw::consolidate_graph(
+            &mut self.graph,
+            &self.deleted,
+            &mut self.free,
+        ))
+    }
+
+    fn live_count(&self) -> usize {
+        self.graph.len() - self.deleted.count()
+    }
+
+    fn deleted_count(&self) -> usize {
+        self.deleted.count() - self.free.len()
+    }
+
+    fn is_deleted(&self, id: u32) -> bool {
+        self.deleted.contains(id)
     }
 }
 
@@ -544,6 +672,67 @@ mod tests {
                 assert!(!out.is_empty(), "dim={dim} edge_batch={edge_batch}");
             }
         }
+    }
+
+    #[test]
+    fn mutation_quantized_beam_never_surfaces_tombstones() {
+        // Delete the full top-10 of a query: the quantized pipeline (beam
+        // + rerank) must return only live ids, for both the edge-batch and
+        // sequential beam shapes, and for the full-precision fallback.
+        let ds = dataset();
+        for (edge_batch, quantized) in [(false, true), (true, true), (false, false)] {
+            let mut cfg = VariantConfig::glass_baseline();
+            cfg.search.edge_batch = edge_batch;
+            cfg.refine.quantized_primary = quantized;
+            let mut idx = GlassIndex::build(VectorSet::from_dataset(&ds), cfg, 3);
+            let q = ds.query_vec(0);
+            let doomed = idx.search(q, 10, 128);
+            for &id in &doomed {
+                idx.delete(id).unwrap();
+            }
+            let batched: Vec<u32> = idx
+                .search_batch(&[q], 10, 128)
+                .pop()
+                .unwrap()
+                .into_iter()
+                .map(|(_, i)| i)
+                .collect();
+            for out in [idx.search(q, 10, 128), batched] {
+                assert_eq!(out.len(), 10);
+                for id in out {
+                    assert!(
+                        !doomed.contains(&id),
+                        "tombstoned id {id} surfaced \
+                         (edge_batch={edge_batch} quantized={quantized})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mutation_insert_consolidate_recycle_glass() {
+        let ds = dataset();
+        let mut idx = GlassIndex::build(
+            VectorSet::from_dataset(&ds),
+            VariantConfig::glass_baseline(),
+            3,
+        );
+        let n0 = idx.len();
+        let v = ds.query_vec(1).to_vec();
+        let id = idx.insert(&v).unwrap();
+        assert_eq!(id as usize, n0);
+        assert_eq!(idx.quant.len(), n0 + 1, "code row must be appended");
+        // The inserted point wins its own query through the quantized
+        // pipeline (self-distance quantizes to exactly 0).
+        assert_eq!(idx.search(&v, 1, 64), vec![id]);
+        idx.delete(id).unwrap();
+        assert_eq!(idx.consolidate().unwrap(), 1);
+        idx.graph.validate().unwrap();
+        let id2 = idx.insert(&v).unwrap();
+        assert_eq!(id2, id, "freed slot must be recycled");
+        assert_eq!(idx.quant.len(), n0 + 1, "recycle must not grow the codes");
+        assert_eq!(idx.search(&v, 1, 64), vec![id2]);
     }
 
     #[test]

@@ -53,12 +53,21 @@ pub fn build(vs: VectorSet, knobs: &ConstructionKnobs, seed: u64) -> HnswGraph {
     graph
 }
 
-fn sample_level(rng: &mut Rng, ml: f64) -> u8 {
+/// Draw a node level from the exponential distribution (shared by batch
+/// build and online insert — both sample the same hierarchy).
+pub(crate) fn sample_level(rng: &mut Rng, ml: f64) -> u8 {
     let u = 1.0 - rng.next_f64(); // (0, 1]
     ((-u.ln() * ml) as usize).min(31) as u8
 }
 
-fn insert(
+/// Link node `i` (vector already stored, level already assigned) into the
+/// graph: greedy descent above its level, beam-searched candidates and
+/// heuristic selection per layer, bidirectional links with overflow
+/// re-pruning. This is the one insertion body — `build` calls it for every
+/// point of a batch build, and `MutableAnnIndex::insert` calls it for each
+/// online arrival, so online inserts produce the same edge quality as a
+/// from-scratch build.
+pub(crate) fn insert(
     graph: &mut HnswGraph,
     knobs: &ConstructionKnobs,
     i: u32,

@@ -135,6 +135,185 @@ impl HnswGraph {
         self.upper[li].insert(i, neighbors);
     }
 
+    /// Append one fresh, unlinked slot holding `v` (online insert).
+    /// Returns the new id; the caller links it and sets its level.
+    pub fn append_slot(&mut self, v: &[f32]) -> u32 {
+        debug_assert_eq!(v.len(), self.vectors.dim);
+        let id = self.len() as u32;
+        self.vectors.data.extend_from_slice(v);
+        self.levels.push(0);
+        self.layer0.extend(std::iter::repeat(NONE).take(self.m0));
+        self.degree0.push(0);
+        id
+    }
+
+    /// Recycle a free slot for `v` (online insert after consolidation):
+    /// overwrite the vector row and drop every trace of the previous
+    /// occupant (adjacency, level, upper-layer entries). Consolidation
+    /// already removed all *incoming* edges, so after this the slot is a
+    /// fresh unlinked node.
+    pub fn reset_slot(&mut self, id: u32, v: &[f32]) {
+        debug_assert_eq!(v.len(), self.vectors.dim);
+        let i = id as usize;
+        self.vectors.data[i * self.vectors.dim..(i + 1) * self.vectors.dim].copy_from_slice(v);
+        self.set_neighbors0(id, &[]);
+        self.levels[i] = 0;
+        for layer in &mut self.upper {
+            layer.remove(&id);
+        }
+    }
+
+    /// Physically drop `pending` nodes (FreshDiskANN-style consolidation):
+    ///
+    /// 1. every live node that pointed at a dropped node repairs its
+    ///    adjacency by **neighbor-of-neighbor reconnection** — candidates
+    ///    are its surviving neighbors plus the live neighbors of each
+    ///    dropped neighbor, re-selected with the diversity heuristic under
+    ///    the layer's degree bound;
+    /// 2. the dropped nodes' own adjacency, upper-layer entries and levels
+    ///    are cleared (the slots become free and unreachable);
+    /// 3. `entry`/`max_level`/`entry_points` are re-anchored on live nodes
+    ///    (`is_live` decides liveness — it must also reject previously
+    ///    freed slots, not just `pending`).
+    ///
+    /// Deterministic: repairs depend only on each node's own adjacency and
+    /// vector data, never on map iteration order. With `pending` empty
+    /// this is a no-op.
+    pub fn drop_nodes(&mut self, pending: &[u32], is_live: impl Fn(u32) -> bool) {
+        if pending.is_empty() {
+            return;
+        }
+        let n = self.len();
+        let mut dropped = vec![false; n];
+        for &t in pending {
+            dropped[t as usize] = true;
+        }
+
+        // --- Layer-0 repair pass over live nodes.
+        for u in 0..n as u32 {
+            if !is_live(u) {
+                continue;
+            }
+            let nbs = self.neighbors0_meta(u);
+            if !nbs.iter().any(|&nb| dropped[nb as usize]) {
+                continue;
+            }
+            let mut cands = self.repair_candidates(u, nbs, &dropped, &is_live, 0);
+            cands.truncate(self.m0.max(1) * 4); // bound the reselect cost
+            let chosen = crate::anns::hnsw::select::select_heuristic(
+                &self.vectors,
+                &cands,
+                self.m0,
+                1.0,
+                true,
+            );
+            self.set_neighbors0(u, &chosen);
+        }
+
+        // --- Upper-layer repair (collect first: the maps are borrowed
+        // while candidates are gathered).
+        for li in 0..self.upper.len() {
+            let level = (li + 1) as u8;
+            let mut updates: Vec<(u32, Vec<u32>)> = Vec::new();
+            for (&u, nbs) in &self.upper[li] {
+                if !is_live(u) || !nbs.iter().any(|&nb| dropped[nb as usize]) {
+                    continue;
+                }
+                let cands = self.repair_candidates(u, nbs, &dropped, &is_live, level);
+                let chosen = crate::anns::hnsw::select::select_heuristic(
+                    &self.vectors,
+                    &cands,
+                    self.m,
+                    1.0,
+                    true,
+                );
+                updates.push((u, chosen));
+            }
+            for (u, chosen) in updates {
+                self.upper[li].insert(u, chosen);
+            }
+        }
+
+        // --- Clear the dropped nodes themselves.
+        for &t in pending {
+            self.set_neighbors0(t, &[]);
+            self.levels[t as usize] = 0;
+            for layer in &mut self.upper {
+                layer.remove(&t);
+            }
+        }
+
+        // --- Re-anchor entry on a live max-level node. Keeping the current
+        // entry when it is still live and still maximal makes a
+        // no-structural-change consolidate stable.
+        let mut best: Option<(u8, u32)> = None;
+        for i in 0..n as u32 {
+            if is_live(i) {
+                let l = self.levels[i as usize];
+                if best.map_or(true, |(bl, _)| l > bl) {
+                    best = Some((l, i));
+                }
+            }
+        }
+        match best {
+            Some((l, i)) => {
+                if !is_live(self.entry) || self.levels[self.entry as usize] < l {
+                    self.entry = i;
+                }
+                self.max_level = self.levels[self.entry as usize];
+            }
+            None => {
+                // No live nodes left: park the entry on slot 0 (cleared
+                // above if it was dropped); searches return empty via the
+                // tombstone filter.
+                self.entry = 0;
+                self.max_level = if n > 0 { self.levels[0] } else { 0 };
+            }
+        }
+        let old_eps = std::mem::take(&mut self.entry_points);
+        self.entry_points.push(self.entry);
+        self.entry_points
+            .extend(old_eps.into_iter().filter(|&ep| is_live(ep) && ep != self.entry));
+    }
+
+    /// Candidate pool for repairing `u`'s adjacency at `level`: surviving
+    /// neighbors plus live neighbors-of-dropped-neighbors, scored by
+    /// distance to `u`, sorted ascending, deduplicated.
+    fn repair_candidates(
+        &self,
+        u: u32,
+        nbs: &[u32],
+        dropped: &[bool],
+        is_live: &impl Fn(u32) -> bool,
+        level: u8,
+    ) -> Vec<(f32, u32)> {
+        let mut ids: Vec<u32> = Vec::with_capacity(nbs.len() * 2);
+        for &nb in nbs {
+            if dropped[nb as usize] {
+                let second: &[u32] = if level == 0 {
+                    self.neighbors0_meta(nb)
+                } else {
+                    self.neighbors_upper(level, nb)
+                };
+                for &nn in second {
+                    if nn != u && is_live(nn) {
+                        ids.push(nn);
+                    }
+                }
+            } else if is_live(nb) {
+                ids.push(nb);
+            }
+        }
+        let uv = self.vectors.vec(u);
+        let mut cands: Vec<(f32, u32)> = ids
+            .into_iter()
+            .map(|c| (self.vectors.metric.distance(uv, self.vectors.vec(c)), c))
+            .collect();
+        cands.sort_by(crate::anns::heap::dist_cmp);
+        cands.dedup_by_key(|x| x.1);
+        cands
+    }
+
     /// Approximate resident memory.
     pub fn memory_bytes(&self) -> usize {
         let upper: usize = self
@@ -239,6 +418,51 @@ mod tests {
         assert_eq!(g.neighbors_upper(3, 2), &[1]);
         assert_eq!(g.neighbors_upper(2, 2), &[] as &[u32]);
         assert_eq!(g.neighbors_upper(1, 9), &[] as &[u32]);
+    }
+
+    #[test]
+    fn mutation_slots_append_and_reset() {
+        let mut g = empty_graph(3);
+        let id = g.append_slot(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(id, 3);
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.vectors.vec(3), &[1.0, 2.0, 3.0, 4.0]);
+        assert!(g.neighbors0_meta(3).is_empty());
+        g.set_neighbors0(3, &[0, 1]);
+        g.set_neighbors_upper(2, 3, vec![1]);
+        g.levels[3] = 2;
+        g.reset_slot(3, &[9.0, 9.0, 9.0, 9.0]);
+        assert_eq!(g.vectors.vec(3), &[9.0, 9.0, 9.0, 9.0]);
+        assert!(g.neighbors0_meta(3).is_empty());
+        assert_eq!(g.levels[3], 0);
+        assert_eq!(g.neighbors_upper(2, 3), &[] as &[u32]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn mutation_drop_nodes_reconnects_neighbor_of_neighbor() {
+        // A path 0 - 1 - 2 (layer 0): dropping 1 must leave 0 and 2
+        // reconnected through the neighbor-of-neighbor candidates.
+        let data = vec![
+            0.0, 0.0, 0.0, 0.0, // 0
+            1.0, 0.0, 0.0, 0.0, // 1 (to drop)
+            2.0, 0.0, 0.0, 0.0, // 2
+        ];
+        let mut g = HnswGraph::new(VectorSet::new(data, 4, Metric::L2), 4);
+        g.set_neighbors0(0, &[1]);
+        g.set_neighbors0(1, &[0, 2]);
+        g.set_neighbors0(2, &[1]);
+        let dead = [1u32];
+        g.drop_nodes(&dead, |id| id != 1);
+        assert_eq!(g.neighbors0_meta(0), &[2], "0 must reconnect to 2");
+        assert_eq!(g.neighbors0_meta(2), &[0], "2 must reconnect to 0");
+        assert!(g.neighbors0_meta(1).is_empty(), "dropped node cleared");
+        assert!(g.entry != 1 && !g.entry_points.contains(&1));
+        g.validate().unwrap();
+        // Empty pending list: strict no-op.
+        let before = g.layer0.clone();
+        g.drop_nodes(&[], |_| true);
+        assert_eq!(g.layer0, before);
     }
 
     #[test]

@@ -17,7 +17,9 @@ pub mod select;
 pub use graph::HnswGraph;
 
 use crate::anns::scratch::ScratchPool;
-use crate::anns::{AnnIndex, VectorSet};
+use crate::anns::tombstones::Tombstones;
+use crate::anns::{AnnIndex, MutableAnnIndex, VectorSet};
+use crate::util::rng::Rng;
 use crate::variants::{ConstructionKnobs, SearchKnobs};
 
 /// A built HNSW index with an attached search configuration.
@@ -26,11 +28,23 @@ use crate::variants::{ConstructionKnobs, SearchKnobs};
 /// [`ScratchPool`]: a single RAII checkout per
 /// query (or per *batch* — [`AnnIndex::search_batch`] drives every query
 /// in a batch through one pooled [`search::SearchContext`]).
+///
+/// The index is mutable ([`MutableAnnIndex`]): online inserts reuse the
+/// batch builder's insertion body (same level sampling, same heuristic
+/// linking), deletes tombstone a [`Tombstones`] bit consulted by the
+/// filtered beam, and consolidation repairs edges via
+/// [`HnswGraph::drop_nodes`] while recycling freed slots.
 pub struct HnswIndex {
     pub graph: HnswGraph,
     pub knobs: SearchKnobs,
+    construction: ConstructionKnobs,
     label: String,
     scratch: ScratchPool,
+    deleted: Tombstones,
+    /// Consolidated slots awaiting reuse (still marked in `deleted`).
+    free: Vec<u32>,
+    /// Level-sampling stream for online inserts (deterministic per seed).
+    rng: Rng,
 }
 
 impl HnswIndex {
@@ -42,17 +56,28 @@ impl HnswIndex {
         seed: u64,
     ) -> Self {
         let graph = builder::build(vs, construction, seed);
+        let deleted = Tombstones::new(graph.len());
         HnswIndex {
             graph,
             knobs: search_knobs,
+            construction: construction.clone(),
             label: "hnsw".to_string(),
             scratch: ScratchPool::new(),
+            deleted,
+            free: Vec::new(),
+            rng: Rng::new(seed ^ 0x11FE_11FE),
         }
     }
 
     pub fn with_label(mut self, label: &str) -> Self {
         self.label = label.to_string();
         self
+    }
+
+    /// The tombstone filter handed to the beam (see
+    /// [`Tombstones::filter_ref`]).
+    fn tombstone_ref(&self) -> Option<&Tombstones> {
+        self.deleted.filter_ref()
     }
 }
 
@@ -63,7 +88,15 @@ impl AnnIndex for HnswIndex {
 
     fn search_with_dists(&self, query: &[f32], k: usize, ef: usize) -> Vec<(f32, u32)> {
         let mut ctx = self.scratch.checkout(self.graph.len());
-        search::search(&self.graph, &self.knobs, &mut ctx, query, k, ef)
+        search::search_filtered(
+            &self.graph,
+            &self.knobs,
+            &mut ctx,
+            query,
+            k,
+            ef,
+            self.tombstone_ref(),
+        )
     }
 
     fn search_batch(&self, queries: &[&[f32]], k: usize, ef: usize) -> Vec<Vec<(f32, u32)>> {
@@ -71,9 +104,10 @@ impl AnnIndex for HnswIndex {
         // resets the context, so results are bitwise identical to the
         // per-query path.
         let mut ctx = self.scratch.checkout(self.graph.len());
+        let deleted = self.tombstone_ref();
         queries
             .iter()
-            .map(|q| search::search(&self.graph, &self.knobs, &mut ctx, q, k, ef))
+            .map(|q| search::search_filtered(&self.graph, &self.knobs, &mut ctx, q, k, ef, deleted))
             .collect()
     }
 
@@ -83,6 +117,137 @@ impl AnnIndex for HnswIndex {
 
     fn memory_bytes(&self) -> usize {
         self.graph.memory_bytes()
+    }
+}
+
+/// The one online-insert body shared by [`HnswIndex`] and
+/// `GlassIndex` (same level sampling, slot lifecycle, entry anchoring and
+/// builder linking — duplicating these subtle edge cases per index is how
+/// they drift). `on_slot(id, recycled)` runs right after the slot holds
+/// the new vector, before linking — GLASS keeps its SQ8 code rows in sync
+/// there; plain HNSW passes a no-op.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn insert_point(
+    graph: &mut HnswGraph,
+    construction: &ConstructionKnobs,
+    scratch: &ScratchPool,
+    deleted: &mut Tombstones,
+    free: &mut Vec<u32>,
+    rng: &mut Rng,
+    vec: &[f32],
+    mut on_slot: impl FnMut(u32, bool),
+) -> crate::Result<u32> {
+    crate::anns::validate_insert_vec(vec, graph.dim())?;
+    let level = builder::sample_level(rng, 1.0 / (graph.m as f64).ln());
+    let id = match free.pop() {
+        Some(id) => {
+            graph.reset_slot(id, vec);
+            deleted.clear(id);
+            on_slot(id, true);
+            id
+        }
+        None => {
+            let id = graph.append_slot(vec);
+            deleted.resize(graph.len());
+            on_slot(id, false);
+            id
+        }
+    };
+    graph.levels[id as usize] = level;
+    if graph.len() - deleted.count() == 1 {
+        // First (or only) live point: it anchors the hierarchy. (The
+        // graph may still hold dead slots — they are disconnected, so
+        // descending from them would strand the beam.)
+        graph.entry = id;
+        graph.max_level = level;
+        graph.entry_points = vec![id];
+        return Ok(id);
+    }
+    let ef_c = construction.effective_ef().max(8);
+    let mut guard = scratch.checkout(graph.len());
+    let ctx: &mut search::SearchContext = &mut guard;
+    builder::insert(
+        graph,
+        construction,
+        id,
+        level,
+        ef_c,
+        &mut ctx.visited,
+        &mut ctx.frontier,
+    );
+    if level > graph.max_level {
+        graph.max_level = level;
+        graph.entry = id;
+    }
+    // Keep the §6.1 multi-entry architecture alive under growth: the
+    // batch builder selects its diverse entry-point set once, at the end
+    // of a build — a path an online-grown index never takes, which would
+    // silently degrade every `entry_tiers >= 2` search to tier-1. Online
+    // maintenance is capacity-fill rather than diversity-sampled: admit
+    // upper-level arrivals (rare by construction — P(level >= 1) = 1/M,
+    // so they are naturally spread) into spare tier capacity, and move a
+    // newly promoted global entry to the head of the list.
+    let cap = construction.num_entry_points.clamp(1, 9);
+    if graph.entry == id {
+        graph.entry_points.retain(|&ep| ep != id);
+        graph.entry_points.insert(0, id);
+        graph.entry_points.truncate(cap);
+    } else if level >= 1 && graph.entry_points.len() < cap && !graph.entry_points.contains(&id) {
+        graph.entry_points.push(id);
+    }
+    Ok(id)
+}
+
+/// The one consolidation lifecycle shared by the graph indexes
+/// ([`HnswIndex`] and `GlassIndex`): compute the pending set, repair the
+/// graph around it ([`HnswGraph::drop_nodes`]), hand the slots to the
+/// free list. Returns the number of points dropped (0 = strict no-op).
+pub(crate) fn consolidate_graph(
+    graph: &mut HnswGraph,
+    deleted: &Tombstones,
+    free: &mut Vec<u32>,
+) -> usize {
+    let pending = deleted.pending(free);
+    if pending.is_empty() {
+        return 0;
+    }
+    graph.drop_nodes(&pending, |id| !deleted.contains(id));
+    free.extend(&pending);
+    pending.len()
+}
+
+impl MutableAnnIndex for HnswIndex {
+    fn insert(&mut self, vec: &[f32]) -> crate::Result<u32> {
+        insert_point(
+            &mut self.graph,
+            &self.construction,
+            &self.scratch,
+            &mut self.deleted,
+            &mut self.free,
+            &mut self.rng,
+            vec,
+            |_, _| {},
+        )
+    }
+
+    fn delete(&mut self, id: u32) -> crate::Result<()> {
+        self.deleted.delete(id)
+    }
+
+    fn consolidate(&mut self) -> crate::Result<usize> {
+        Ok(consolidate_graph(&mut self.graph, &self.deleted, &mut self.free))
+    }
+
+    fn live_count(&self) -> usize {
+        self.graph.len() - self.deleted.count()
+    }
+
+    fn deleted_count(&self) -> usize {
+        self.deleted.count() - self.free.len()
+    }
+
+    fn is_deleted(&self, id: u32) -> bool {
+        self.deleted.contains(id)
     }
 }
 
@@ -163,6 +328,130 @@ mod tests {
         );
         let r = recall_of(&idx, &ds, 128);
         assert!(r > 0.9, "crinn-knob recall@10 was {r}");
+    }
+
+    #[test]
+    fn mutation_insert_delete_consolidate_roundtrip() {
+        let ds = small_dataset();
+        let mut idx = HnswIndex::build(
+            VectorSet::from_dataset(&ds),
+            &ConstructionKnobs::default(),
+            SearchKnobs::default(),
+            7,
+        );
+        let n0 = idx.len();
+        // Insert a point: it must come back as its own nearest neighbor.
+        let v: Vec<f32> = ds.query_vec(0).to_vec();
+        let id = idx.insert(&v).unwrap();
+        assert_eq!(id as usize, n0);
+        assert_eq!(idx.len(), n0 + 1);
+        assert_eq!(idx.live_count(), n0 + 1);
+        let top = idx.search_with_dists(&v, 1, 64);
+        assert_eq!(top[0], (0.0, id), "inserted point must be its own NN");
+        // Delete it: it must vanish from results immediately.
+        idx.delete(id).unwrap();
+        assert!(idx.is_deleted(id));
+        assert_eq!(idx.deleted_count(), 1);
+        assert!(idx.search(&v, 10, 64).iter().all(|&i| i != id));
+        assert!(idx.delete(id).is_err(), "double delete must error");
+        // Consolidate: slot freed, graph stays valid, id gets recycled.
+        assert_eq!(idx.consolidate().unwrap(), 1);
+        assert_eq!(idx.consolidate().unwrap(), 0, "no pending => no-op");
+        assert_eq!(idx.deleted_count(), 0);
+        assert_eq!(idx.live_count(), n0);
+        idx.graph.validate().expect("graph valid after consolidate");
+        let id2 = idx.insert(&v).unwrap();
+        assert_eq!(id2, id, "freed slot must be recycled");
+        assert_eq!(idx.len(), n0 + 1);
+        assert_eq!(idx.search(&v, 1, 64), vec![id2]);
+        idx.graph.validate().expect("graph valid after recycle");
+    }
+
+    #[test]
+    fn mutation_insert_matches_dimension_check() {
+        let ds = small_dataset();
+        let mut idx = HnswIndex::build(
+            VectorSet::from_dataset(&ds),
+            &ConstructionKnobs::default(),
+            SearchKnobs::default(),
+            7,
+        );
+        assert!(idx.insert(&[1.0, 2.0]).is_err(), "wrong dim must error");
+        assert!(idx.delete(1_000_000).is_err(), "out of range must error");
+        // Non-finite rows would permanently corrupt neighbor selection —
+        // rejected at the door, index untouched.
+        let n0 = idx.len();
+        assert!(idx.insert(&vec![f32::NAN; 64]).is_err(), "NaN row accepted");
+        assert!(idx.insert(&vec![f32::INFINITY; 64]).is_err(), "Inf row accepted");
+        assert_eq!(idx.len(), n0, "rejected insert must not grow the index");
+    }
+
+    #[test]
+    fn mutation_insert_into_empty_index() {
+        let vs = VectorSet::new(Vec::new(), 4, crate::distance::Metric::L2);
+        let mut idx = HnswIndex::build(
+            vs,
+            &ConstructionKnobs::default(),
+            SearchKnobs::default(),
+            1,
+        );
+        assert!(idx.search(&[0.0; 4], 3, 16).is_empty());
+        let a = idx.insert(&[0.0, 0.0, 0.0, 0.0]).unwrap();
+        let b = idx.insert(&[1.0, 0.0, 0.0, 0.0]).unwrap();
+        let c = idx.insert(&[2.0, 0.0, 0.0, 0.0]).unwrap();
+        assert_eq!((a, b, c), (0, 1, 2));
+        idx.graph.validate().unwrap();
+        assert_eq!(idx.search(&[1.9, 0.0, 0.0, 0.0], 2, 16), vec![c, b]);
+        // Delete everything: searches go empty, never panic.
+        for id in [a, b, c] {
+            idx.delete(id).unwrap();
+        }
+        assert!(idx.search(&[0.0; 4], 3, 16).is_empty());
+        assert_eq!(idx.consolidate().unwrap(), 3);
+        assert!(idx.search(&[0.0; 4], 3, 16).is_empty());
+        // And the graph comes back from the dead via slot reuse.
+        let d = idx.insert(&[5.0, 0.0, 0.0, 0.0]).unwrap();
+        assert!(idx.is_deleted(a) || d == a || d == b || d == c);
+        assert_eq!(idx.search(&[5.0, 0.0, 0.0, 0.0], 1, 16), vec![d]);
+        idx.graph.validate().unwrap();
+    }
+
+    #[test]
+    fn mutation_grown_index_keeps_multi_entry_architecture() {
+        // An index grown purely through online inserts must not silently
+        // lose the §6.1 multi-entry feature: the batch builder's one-shot
+        // entry-point selection never runs for it, so insert_point has to
+        // fill tier capacity as upper-level nodes arrive.
+        let knobs = ConstructionKnobs {
+            num_entry_points: 5,
+            ..ConstructionKnobs::default()
+        };
+        let vs = VectorSet::new(Vec::new(), 8, crate::distance::Metric::L2);
+        let mut idx = HnswIndex::build(vs, &knobs, SearchKnobs::default(), 9);
+        let mut rng = crate::util::rng::Rng::new(99);
+        for _ in 0..400 {
+            let v: Vec<f32> = (0..8).map(|_| rng.next_gaussian_f32()).collect();
+            idx.insert(&v).unwrap();
+        }
+        idx.graph.validate().unwrap();
+        let eps = &idx.graph.entry_points;
+        assert!(eps.len() >= 2, "online growth never filled entry tiers: {eps:?}");
+        assert!(eps.len() <= 5);
+        assert_eq!(eps[0], idx.graph.entry, "global entry must head the tier list");
+        let set: std::collections::HashSet<_> = eps.iter().collect();
+        assert_eq!(set.len(), eps.len(), "duplicate entry points");
+        assert!(eps.iter().all(|&ep| (ep as usize) < idx.len()));
+        // A tier-3 search actually uses them and stays well-formed.
+        let tier3 = SearchKnobs {
+            entry_tiers: 3,
+            tier_budget_1: 8,
+            tier_budget_2: 16,
+            ..SearchKnobs::default()
+        };
+        let mut probe = idx;
+        probe.knobs = tier3;
+        let out = probe.search_with_dists(&[0.0; 8], 10, 64);
+        assert_eq!(out.len(), 10);
     }
 
     #[test]

@@ -17,6 +17,7 @@
 
 use crate::anns::heap::{dist_cmp, MinQueue, TopK};
 use crate::anns::hnsw::graph::HnswGraph;
+use crate::anns::tombstones::Tombstones;
 use crate::anns::visited::VisitedSet;
 use crate::distance::prefetch;
 use crate::variants::SearchKnobs;
@@ -88,9 +89,30 @@ pub fn search(
     k: usize,
     ef: usize,
 ) -> Vec<(f32, u32)> {
+    search_filtered(graph, knobs, ctx, q, k, ef, None)
+}
+
+/// [`search`] with an optional tombstone filter (mutable indexes).
+/// Tombstoned nodes stay fully *traversable* — they seed and extend the
+/// frontier exactly as live nodes do, preserving graph connectivity — but
+/// they never enter the result pool, so a dead id cannot surface and the
+/// beam bound is computed over live candidates only. With `deleted: None`
+/// (or an empty bitset — callers pass `None` then) the code path is
+/// identical to the pre-mutability search.
+#[allow(clippy::too_many_arguments)]
+pub fn search_filtered(
+    graph: &HnswGraph,
+    knobs: &SearchKnobs,
+    ctx: &mut SearchContext,
+    q: &[f32],
+    k: usize,
+    ef: usize,
+    deleted: Option<&Tombstones>,
+) -> Vec<(f32, u32)> {
     if graph.is_empty() {
         return Vec::new();
     }
+    let live = |id: u32| deleted.map_or(true, |t| !t.contains(id));
     let ef = ef.max(k);
     ctx.visited.clear();
     ctx.frontier.clear();
@@ -102,7 +124,9 @@ pub fn search(
     let (d0, e0) = greedy_descent(graph, q);
     ctx.visited.insert(e0);
     ctx.frontier.push(d0, e0);
-    results.push(d0, e0);
+    if live(e0) {
+        results.push(d0, e0);
+    }
     let extra = match (knobs.entry_tiers, ef) {
         (t, ef) if t >= 3 && ef >= knobs.tier_budget_2 => graph.entry_points.len(),
         (t, ef) if t >= 2 && ef >= knobs.tier_budget_1 => 3,
@@ -115,7 +139,9 @@ pub fn search(
         if ctx.visited.insert(ep) {
             let d = graph.vectors.distance(q, ep);
             ctx.frontier.push(d, ep);
-            results.push(d, ep);
+            if live(ep) {
+                results.push(d, ep);
+            }
         }
     }
 
@@ -154,7 +180,7 @@ pub fn search(
                 );
                 for (&nb, &dnb) in ctx.batch.iter().zip(ctx.dists.iter()) {
                     if dnb < results.bound() {
-                        if results.push(dnb, nb) {
+                        if live(nb) && results.push(dnb, nb) {
                             improved = true;
                         }
                         ctx.frontier.push(dnb, nb);
@@ -184,7 +210,7 @@ pub fn search(
                 }
                 let dnb = graph.vectors.distance(q, nb);
                 if dnb < results.bound() {
-                    if results.push(dnb, nb) {
+                    if live(nb) && results.push(dnb, nb) {
                         improved = true;
                     }
                     ctx.frontier.push(dnb, nb);
@@ -413,6 +439,35 @@ mod tests {
         search(&bare, &tier3, &mut ctx, &[0.3, 9.1], 5, 32);
         let v3_bare = ctx.visited.count();
         assert!(v3 >= v3_bare, "tier-3 should seed extra entries ({v3} < {v3_bare})");
+    }
+
+    #[test]
+    fn tombstoned_nodes_filtered_but_traversable() {
+        let g = grid_graph();
+        let mut ctx = SearchContext::new(g.len());
+        let knobs = SearchKnobs::default();
+        let q = [4.9f32, 5.1];
+        let base = search_filtered(&g, &knobs, &mut ctx, &q, 5, 64, None);
+        assert_eq!(base[0].1, 55);
+        // Tombstone the true NN (and a second nearby node): they must
+        // vanish from results while the rest of the ranking is preserved.
+        let mut dead = crate::anns::tombstones::Tombstones::new(g.len());
+        dead.set(55);
+        dead.set(45);
+        let got = search_filtered(&g, &knobs, &mut ctx, &q, 5, 64, Some(&dead));
+        assert!(got.iter().all(|&(_, id)| id != 55 && id != 45));
+        let want: Vec<(f32, u32)> = search_filtered(&g, &knobs, &mut ctx, &q, 7, 64, None)
+            .into_iter()
+            .filter(|&(_, id)| id != 55 && id != 45)
+            .take(5)
+            .collect();
+        assert_eq!(got, want, "filtered beam must keep the live ranking");
+        // An empty bitset behaves exactly like no bitset.
+        let none = crate::anns::tombstones::Tombstones::new(g.len());
+        assert_eq!(
+            search_filtered(&g, &knobs, &mut ctx, &q, 5, 64, Some(&none)),
+            base
+        );
     }
 
     #[test]

@@ -20,7 +20,8 @@
 use crate::anns::heap::dist_cmp;
 use crate::anns::hnsw::search::SearchContext;
 use crate::anns::scratch::ScratchPool;
-use crate::anns::{AnnIndex, VectorSet};
+use crate::anns::tombstones::Tombstones;
+use crate::anns::{AnnIndex, MutableAnnIndex, VectorSet};
 use crate::distance::quant::QuantizedStore;
 use crate::util::rng::Rng;
 
@@ -50,16 +51,32 @@ impl Default for IvfParams {
 }
 
 /// Built IVF index.
+///
+/// Mutable ([`MutableAnnIndex`]): an insert appends to the posting list of
+/// its nearest centroid (re-quantizing through the frozen-scale
+/// [`QuantizedStore`] when `quantized_scan` is on — centroids are *not*
+/// re-fit online; a rebuild re-runs k-means), a delete tombstones the id
+/// (the scan still computes its distance but never pools it), and
+/// consolidation compacts the posting lists in place. Compaction keeps
+/// surviving entries in their original order, so consolidation is
+/// **bitwise result-preserving** for every query — the strongest form of
+/// the "untouched queries" guarantee.
 pub struct IvfIndex {
     pub vectors: VectorSet,
     /// SQ8 codes for the quantized scan mode; `None` = exact IVFFlat.
     quant: Option<QuantizedStore>,
     centroids: Vec<f32>,
     nlist: usize,
-    /// Concatenated member ids per cell + offsets (CSR).
-    members: Vec<u32>,
-    offsets: Vec<u32>,
+    /// Per-cell posting lists (ids ascending at build time; inserts
+    /// append). A `Vec` per cell instead of the old frozen CSR so online
+    /// appends and compaction stay O(cell), at the cost of one extra
+    /// indirection per probed cell — the batch kernel still sees each
+    /// posting list as one contiguous gathered id slice.
+    cells: Vec<Vec<u32>>,
     rerank_mult: usize,
+    deleted: Tombstones,
+    /// Consolidated slots awaiting reuse (still marked in `deleted`).
+    free: Vec<u32>,
     /// Shared scratch: cell-ranking, gather and distance buffers that the
     /// old code allocated fresh on every query.
     scratch: ScratchPool,
@@ -146,34 +163,26 @@ impl IvfIndex {
             assign[i] = nearest_centroid(&vectors, &centroids, nlist, i as u32);
         }
 
-        // --- CSR cell membership.
-        let mut counts = vec![0u32; nlist + 1];
-        for &a in &assign {
-            counts[a as usize + 1] += 1;
-        }
-        for c in 0..nlist {
-            counts[c + 1] += counts[c];
-        }
-        let offsets = counts.clone();
-        let mut cursor = counts;
-        let mut members = vec![0u32; n];
+        // --- Per-cell posting lists (ids ascending, same order the old
+        // CSR layout produced).
+        let mut cells: Vec<Vec<u32>> = vec![Vec::new(); nlist];
         for i in 0..n {
-            let c = assign[i] as usize;
-            members[cursor[c] as usize] = i as u32;
-            cursor[c] += 1;
+            cells[assign[i] as usize].push(i as u32);
         }
 
         let quant = params
             .quantized_scan
             .then(|| QuantizedStore::build(&vectors.data, dim));
+        let deleted = Tombstones::new(n);
         IvfIndex {
             vectors,
             quant,
             centroids,
             nlist,
-            members,
-            offsets,
+            cells,
             rerank_mult: params.rerank_mult.max(1),
+            deleted,
+            free: Vec::new(),
             scratch: ScratchPool::new(),
         }
     }
@@ -195,18 +204,21 @@ impl IvfIndex {
     }
 
     pub fn cell_sizes(&self) -> Vec<usize> {
-        (0..self.nlist)
-            .map(|c| (self.offsets[c + 1] - self.offsets[c]) as usize)
-            .collect()
+        self.cells.iter().map(|c| c.len()).collect()
     }
 
-    /// Member ids of cell `c` (a CSR posting list — already the gathered
-    /// id-list shape the one-to-many kernels take).
+    /// Member ids of cell `c` (a contiguous posting list — already the
+    /// gathered id-list shape the one-to-many kernels take).
     #[inline]
     fn cell_members(&self, c: u32) -> &[u32] {
-        let s = self.offsets[c as usize] as usize;
-        let e = self.offsets[c as usize + 1] as usize;
-        &self.members[s..e]
+        &self.cells[c as usize]
+    }
+
+    /// `true` when `id` may appear in results (see
+    /// [`Tombstones::is_live`]).
+    #[inline]
+    fn live(&self, id: u32) -> bool {
+        self.deleted.is_live(id)
     }
 
     /// One query with caller-provided scratch — the shared body of
@@ -228,13 +240,18 @@ impl IvfIndex {
 
         let Some(quant) = &self.quant else {
             // Exact IVFFlat: full-precision posting-list scan through the
-            // f32 one-to-many kernel; no rerank pass needed.
+            // f32 one-to-many kernel; no rerank pass needed. Tombstoned
+            // members still get a (discarded) distance — the batch kernel
+            // runs whole posting lists — but never enter the pool; their
+            // cost disappears at the next consolidate.
             let mut pool = crate::anns::heap::TopK::new(k);
             for &(_, c) in ctx.cands.iter().take(nprobe) {
                 let members = self.cell_members(c);
                 self.vectors.distance_batch(query, members, &mut ctx.dists);
                 for (&i, &d) in members.iter().zip(&ctx.dists) {
-                    pool.push(d, i);
+                    if self.live(i) {
+                        pool.push(d, i);
+                    }
                 }
             }
             return pool.into_sorted();
@@ -250,7 +267,9 @@ impl IvfIndex {
             let members = self.cell_members(c);
             quant.distance_batch(metric, &qc, members, &mut ctx.dists);
             for (&i, &d) in members.iter().zip(&ctx.dists) {
-                pool.push(d, i);
+                if self.live(i) {
+                    pool.push(d, i);
+                }
             }
         }
         // Exact rerank of the quantized survivors through the one-to-many
@@ -312,7 +331,63 @@ impl AnnIndex for IvfIndex {
         self.vectors.data.len() * 4
             + self.quant.as_ref().map_or(0, |q| q.bytes())
             + self.centroids.len() * 4
-            + self.members.len() * 4
+            + self.cells.iter().map(|c| c.len() * 4).sum::<usize>()
+    }
+}
+
+impl MutableAnnIndex for IvfIndex {
+    fn insert(&mut self, vec: &[f32]) -> crate::Result<u32> {
+        crate::anns::validate_insert_vec(vec, self.vectors.dim)?;
+        let (id, recycled) = crate::anns::recycle_or_append(
+            &mut self.vectors,
+            &mut self.deleted,
+            &mut self.free,
+            vec,
+        );
+        if let Some(q) = &mut self.quant {
+            if recycled {
+                q.reencode(id as usize, vec);
+            } else {
+                q.append(vec);
+            }
+        }
+        let c = nearest_centroid(&self.vectors, &self.centroids, self.nlist, id);
+        self.cells[c as usize].push(id);
+        Ok(id)
+    }
+
+    fn delete(&mut self, id: u32) -> crate::Result<()> {
+        self.deleted.delete(id)
+    }
+
+    fn consolidate(&mut self) -> crate::Result<usize> {
+        let pending = self.deleted.pending(&self.free);
+        if pending.is_empty() {
+            return Ok(0);
+        }
+        let mut pending_mask = vec![false; self.vectors.len()];
+        for &t in &pending {
+            pending_mask[t as usize] = true;
+        }
+        // Posting-list compaction: surviving entries keep their relative
+        // order, so live results are bitwise unchanged for every query.
+        for cell in &mut self.cells {
+            cell.retain(|&i| !pending_mask[i as usize]);
+        }
+        self.free.extend(&pending);
+        Ok(pending.len())
+    }
+
+    fn live_count(&self) -> usize {
+        self.vectors.len() - self.deleted.count()
+    }
+
+    fn deleted_count(&self) -> usize {
+        self.deleted.count() - self.free.len()
+    }
+
+    fn is_deleted(&self, id: u32) -> bool {
+        self.deleted.contains(id)
     }
 }
 
@@ -407,6 +482,51 @@ mod tests {
         // The SQ8 scan's exact rerank closes nearly all the quantization
         // gap at the same probe budget.
         assert!(rq > re - 0.05, "quantized {rq} vs exact {re}");
+    }
+
+    #[test]
+    fn mutation_insert_delete_consolidate_ivf() {
+        for quantized_scan in [true, false] {
+            let sp = synth::spec("demo-64").unwrap();
+            let mut ds = synth::generate_counts(sp, 800, 20, 57);
+            ds.compute_ground_truth(10);
+            let params = IvfParams { quantized_scan, ..IvfParams::default() };
+            let mut idx = IvfIndex::build(VectorSet::from_dataset(&ds), params, 1);
+            // Insert: point lands in exactly one cell and wins its query.
+            let v = ds.query_vec(0).to_vec();
+            let id = idx.insert(&v).unwrap();
+            assert_eq!(id, 800);
+            assert_eq!(idx.cell_sizes().iter().sum::<usize>(), 801);
+            assert_eq!(idx.search(&v, 1, 100_000), vec![id], "qs={quantized_scan}");
+            // Delete the query's whole top-10: none may surface again.
+            let doomed = idx.search(ds.query_vec(1), 10, 100_000);
+            for &d in &doomed {
+                idx.delete(d).unwrap();
+            }
+            let after = idx.search(ds.query_vec(1), 10, 100_000);
+            assert_eq!(after.len(), 10);
+            assert!(after.iter().all(|i| !doomed.contains(i)));
+            assert_eq!(idx.deleted_count(), 10);
+            // Consolidation is bitwise result-preserving for IVF — for
+            // EVERY query, not just untouched ones (compaction keeps
+            // surviving order; distances of live points are unchanged).
+            let before: Vec<_> = (0..ds.n_queries())
+                .map(|qi| idx.search_with_dists(ds.query_vec(qi), 10, 256))
+                .collect();
+            assert_eq!(idx.consolidate().unwrap(), 10);
+            assert_eq!(idx.consolidate().unwrap(), 0);
+            let post: Vec<_> = (0..ds.n_queries())
+                .map(|qi| idx.search_with_dists(ds.query_vec(qi), 10, 256))
+                .collect();
+            assert_eq!(before, post, "consolidate changed results (qs={quantized_scan})");
+            assert_eq!(idx.cell_sizes().iter().sum::<usize>(), 791);
+            assert_eq!(idx.live_count(), 791);
+            assert_eq!(idx.deleted_count(), 0);
+            // Recycled insert reuses a freed slot and is searchable.
+            let id2 = idx.insert(&v).unwrap();
+            assert!(doomed.contains(&id2), "expected a recycled slot, got {id2}");
+            assert!(idx.search(&v, 2, 100_000).contains(&id2));
+        }
     }
 
     #[test]

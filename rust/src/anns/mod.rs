@@ -5,7 +5,10 @@
 //! (§3.5). The rest are the Figure-1 baselines: [`bruteforce`] (exact),
 //! [`nndescent`] (NNDescent / PyNNDescent), [`vamana`] (ParlayANN-like),
 //! [`ivf`] (Vearch-like). All implement [`AnnIndex`] so the eval harness
-//! and serving coordinator treat them uniformly.
+//! and serving coordinator treat them uniformly. HNSW, GLASS, IVF and
+//! brute force additionally implement [`MutableAnnIndex`] — online insert,
+//! tombstone delete ([`tombstones`]) and consolidation — for serving under
+//! live traffic.
 
 pub mod bruteforce;
 pub mod glass;
@@ -15,8 +18,11 @@ pub mod ivf;
 pub mod nndescent;
 pub mod persist;
 pub mod scratch;
+pub mod tombstones;
 pub mod vamana;
 pub mod visited;
+
+pub use tombstones::Tombstones;
 
 /// A built, queryable index.
 ///
@@ -28,9 +34,9 @@ pub mod visited;
 /// types override it to reuse one pooled
 /// [`hnsw::search::SearchContext`] across the whole batch. Batch results
 /// are bitwise identical to per-query [`AnnIndex::search_with_dists`]
-/// calls for every index and metric (asserted by `tests/properties.rs`),
-/// extending the kernel-level batch==per-pair identity up through the
-/// whole stack.
+/// calls for every index and metric (asserted by the table-driven
+/// cross-index suite in `tests/conformance.rs`), extending the
+/// kernel-level batch==per-pair identity up through the whole stack.
 pub trait AnnIndex: Send + Sync {
     /// Implementation name (appears in reports / Figure 1 legends).
     fn name(&self) -> String;
@@ -75,6 +81,116 @@ pub trait AnnIndex: Send + Sync {
     /// Approximate resident bytes (memory reporting in EXPERIMENTS.md).
     fn memory_bytes(&self) -> usize {
         0
+    }
+}
+
+/// A queryable index that also absorbs streaming updates — the serving
+/// half of the FreshDiskANN-style mutation protocol.
+///
+/// Semantics shared by every implementation:
+///
+/// * **Stable external ids.** [`MutableAnnIndex::insert`] returns the id
+///   the point will answer under forever; neither `delete` nor
+///   `consolidate` ever renumbers a live point. Consolidation recycles
+///   dead *slots* into a free list instead of compacting the id space, so
+///   a router or client-side cache never has to remap.
+/// * **Tombstone deletes.** [`MutableAnnIndex::delete`] only marks a
+///   [`Tombstones`] bit. The point stays physically present (graph nodes
+///   remain traversable, IVF entries remain scanned) but is filtered from
+///   every result list — a tombstoned id never surfaces from
+///   [`AnnIndex::search_with_dists`] or [`AnnIndex::search_batch`].
+/// * **Consolidation.** [`MutableAnnIndex::consolidate`] physically drops
+///   pending tombstones: graphs repair edges by neighbor-of-neighbor
+///   reconnection, IVF compacts posting lists, and the freed slots become
+///   reusable by later inserts. With zero pending tombstones it is a
+///   strict no-op (search results are bitwise unchanged).
+///
+/// Mutations take `&mut self`; concurrent serving wraps the index in the
+/// coordinator's `RwLock` (searches share read locks, mutations take the
+/// write lock — see `coordinator::Server::start_mutable`).
+///
+/// Index types that cannot absorb updates yet (Vamana, NNDescent)
+/// implement the trait by returning an `Unsupported`-style error from all
+/// three mutating methods, so the coordinator can expose one uniform
+/// update path and report the failure per request instead of panicking.
+pub trait MutableAnnIndex: AnnIndex {
+    /// Insert one vector (dimension must match the index); returns its
+    /// assigned id — a recycled free slot when one exists, else a fresh
+    /// slot at the end of the id space.
+    fn insert(&mut self, vec: &[f32]) -> crate::Result<u32>;
+
+    /// Tombstone-delete `id`. Errors if `id` is out of range or not live.
+    fn delete(&mut self, id: u32) -> crate::Result<()>;
+
+    /// Physically drop pending tombstones and repair the structure.
+    /// Returns how many points were dropped (0 = strict no-op).
+    fn consolidate(&mut self) -> crate::Result<usize>;
+
+    /// Number of live (searchable) points: `len()` minus tombstoned and
+    /// free slots.
+    fn live_count(&self) -> usize {
+        self.len()
+    }
+
+    /// Pending tombstones — deleted but not yet consolidated.
+    fn deleted_count(&self) -> usize {
+        0
+    }
+
+    /// Is `id` currently non-live (tombstoned or free)? Out-of-range ids
+    /// read as false.
+    fn is_deleted(&self, _id: u32) -> bool {
+        false
+    }
+}
+
+/// Shared validation for every online-insert entry point: the dimension
+/// must match and every component must be finite. A NaN/Inf row would
+/// *permanently* corrupt the index (NaN-keyed neighbor sorts hand the
+/// node bidirectional edges on live nodes, and it quantizes to a phantom
+/// zero code row) — unlike a NaN query, which is transient.
+pub(crate) fn validate_insert_vec(vec: &[f32], dim: usize) -> crate::Result<()> {
+    crate::ensure!(
+        vec.len() == dim,
+        "insert dimension {} != index dimension {dim}",
+        vec.len()
+    );
+    crate::ensure!(
+        vec.iter().all(|x| x.is_finite()),
+        "insert vector contains non-finite components"
+    );
+    Ok(())
+}
+
+/// Shared flat-row slot lifecycle for mutable indexes without graph
+/// structure (IVF, brute force): recycle a freed slot (overwrite the row,
+/// unmark the bit) or append a fresh one (extend the rows, grow the
+/// bitset). Returns `(id, recycled)` — the caller layers its own per-slot
+/// upkeep (e.g. SQ8 re-encoding) on the flag, mirroring
+/// `hnsw::insert_point`'s `on_slot` hook. Keeping the ordering invariants
+/// (write-then-clear, extend-then-resize, free entries staying marked) in
+/// one place is what stops the four mutable impls drifting apart.
+pub(crate) fn recycle_or_append(
+    vectors: &mut VectorSet,
+    deleted: &mut Tombstones,
+    free: &mut Vec<u32>,
+    vec: &[f32],
+) -> (u32, bool) {
+    debug_assert_eq!(vec.len(), vectors.dim);
+    let dim = vectors.dim;
+    match free.pop() {
+        Some(id) => {
+            let i = id as usize;
+            vectors.data[i * dim..(i + 1) * dim].copy_from_slice(vec);
+            deleted.clear(id);
+            (id, true)
+        }
+        None => {
+            let id = vectors.len() as u32;
+            vectors.data.extend_from_slice(vec);
+            deleted.resize(vectors.len());
+            (id, false)
+        }
     }
 }
 

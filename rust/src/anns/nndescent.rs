@@ -13,7 +13,7 @@
 use crate::anns::heap::{dist_cmp, TopK};
 use crate::anns::hnsw::search::SearchContext;
 use crate::anns::scratch::ScratchPool;
-use crate::anns::{AnnIndex, VectorSet};
+use crate::anns::{AnnIndex, MutableAnnIndex, VectorSet};
 use crate::util::rng::Rng;
 
 /// Build parameters.
@@ -296,6 +296,24 @@ impl AnnIndex for NnDescentIndex {
 
     fn memory_bytes(&self) -> usize {
         self.vectors.data.len() * 4 + self.graph.len() * 4
+    }
+}
+
+/// NN-Descent's graph is the converged fixed point of the whole-dataset
+/// refinement loop — there is no sound single-point update rule, so every
+/// mutating method reports `Unsupported` (the coordinator fails the
+/// request, not the process).
+impl MutableAnnIndex for NnDescentIndex {
+    fn insert(&mut self, _vec: &[f32]) -> crate::Result<u32> {
+        crate::bail!("Unsupported: nndescent does not implement online insert (rebuild instead)")
+    }
+
+    fn delete(&mut self, _id: u32) -> crate::Result<()> {
+        crate::bail!("Unsupported: nndescent does not implement delete (rebuild instead)")
+    }
+
+    fn consolidate(&mut self) -> crate::Result<usize> {
+        crate::bail!("Unsupported: nndescent does not implement consolidate")
     }
 }
 

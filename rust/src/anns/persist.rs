@@ -3,11 +3,20 @@
 //! A deployment builds once and serves many times — ann-benchmarks and
 //! every production store persist their graphs. Format: a little-endian
 //! binary container (`CRNN` magic + version) carrying the vector set, the
-//! layered graph, the quantized codes, and the variant configuration
-//! (encoded through the same action space the RL uses, which keeps the
-//! format stable as knobs evolve).
+//! layered graph, the quantized codes, the variant configuration (encoded
+//! through the same action space the RL uses, which keeps the format
+//! stable as knobs evolve) and — since v2 — the mutation state: the
+//! tombstone bitset and the free-slot list, so a snapshot taken under
+//! live traffic restores with exactly the same live set.
+//!
+//! Readers are hostile-input hardened: every `u64` length field is
+//! overflow-checked against the file size before any allocation, the
+//! tombstone count may never exceed the point count, the bitset may not
+//! mark slots beyond the point count, and every free-list entry must be a
+//! marked, unique, in-range slot.
 
 use crate::anns::hnsw::graph::HnswGraph;
+use crate::anns::tombstones::Tombstones;
 use crate::anns::VectorSet;
 use crate::distance::quant::QuantizedStore;
 use crate::distance::Metric;
@@ -18,7 +27,10 @@ use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"CRNN";
-const VERSION: u32 = 1;
+/// v2 appended the mutation-state tail (tombstone bitset + free list +
+/// insert-level RNG state + frozen quantizer scale). The reader still
+/// accepts v1 files (no tail; empty mutation state, re-fit scale).
+const VERSION: u32 = 2;
 
 struct W<'a, T: Write>(&'a mut T);
 
@@ -52,6 +64,13 @@ impl<'a, T: Write> W<'a, T> {
     fn u8s(&mut self, v: &[u8]) -> Result<()> {
         self.u64(v.len() as u64)?;
         self.0.write_all(v)?;
+        Ok(())
+    }
+    fn u64s(&mut self, v: &[u64]) -> Result<()> {
+        self.u64(v.len() as u64)?;
+        for x in v {
+            self.0.write_all(&x.to_le_bytes())?;
+        }
         Ok(())
     }
 }
@@ -121,6 +140,15 @@ impl<'a, T: Read> R<'a, T> {
         self.inner.read_exact(&mut v)?;
         Ok(v)
     }
+    fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.len(8)?;
+        let mut raw = vec![0u8; n * 8];
+        self.inner.read_exact(&mut raw)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+            .collect())
+    }
 }
 
 /// Save a built GLASS index (graph + codes + config) to `path`.
@@ -165,13 +193,31 @@ pub fn save_glass(idx: &crate::anns::glass::GlassIndex, path: &Path) -> Result<(
             w.f64(v)?;
         }
     }
+    // v2: mutation state — declared tombstone count, bitset words, free
+    // list, insert-level RNG state (4 fixed u64s). The count is redundant
+    // with the words' popcount; writing both lets the reader cross-check
+    // a corrupted file. Persisting the RNG state keeps post-reload online
+    // inserts on the exact stream the snapshot was on.
+    w.u64(idx.deleted.count() as u64)?;
+    w.u64s(idx.deleted.words())?;
+    w.u32s(&idx.free)?;
+    for x in idx.rng_state() {
+        w.u64(x)?;
+    }
+    // The frozen quantizer scale (exact f32 bits): codes are re-derived
+    // from it at load, bit-identical to the saved store even when rows
+    // were appended online (a load-time re-fit over base+inserted rows
+    // would shift the scale and silently change quantized search).
+    w.u32(idx.quant.scale.to_bits())?;
     bw.flush()?;
     Ok(())
 }
 
 /// Load a GLASS index saved with [`save_glass`]. Codes and degree
 /// metadata are rebuilt from the payload (cheaper than storing them and
-/// immune to quantizer-version drift).
+/// immune to quantizer-version drift); the codes re-derive from the
+/// **persisted** frozen scale, never a re-fit, so an index that absorbed
+/// online inserts restores bit-identically.
 pub fn load_glass(path: &Path) -> Result<crate::anns::glass::GlassIndex> {
     let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
     let limit = f
@@ -186,7 +232,7 @@ pub fn load_glass(path: &Path) -> Result<crate::anns::glass::GlassIndex> {
         bail!("not a CRINN index file");
     }
     let version = r.u32()?;
-    if version != VERSION {
+    if version != 1 && version != VERSION {
         bail!("unsupported index version {version}");
     }
     let dim = r.u32()? as usize;
@@ -207,7 +253,6 @@ pub fn load_glass(path: &Path) -> Result<crate::anns::glass::GlassIndex> {
     let entry_points = r.u32s()?;
     let n_layers = r.u32()? as usize;
 
-    let quant = QuantizedStore::build(&vs.data, dim);
     let mut graph = HnswGraph::new(vs, m);
     crate::ensure!(graph.layer0.len() == layer0.len(), "layer0 size mismatch");
     graph.layer0 = layer0;
@@ -238,10 +283,75 @@ pub fn load_glass(path: &Path) -> Result<crate::anns::glass::GlassIndex> {
         }
         config = decode_action(&config, module, &a);
     }
+    // v2: mutation state (v1 files predate it — `from_parts`' defaults,
+    // empty tombstones / empty free list / fresh RNG plus a re-fit scale,
+    // are exactly the v1 semantics, so old snapshots keep loading).
+    // Reject before reconstruction: a tombstone count larger than the
+    // point count, a bitset marking phantom slots, or a free list naming
+    // live/duplicate/out-of-range slots all indicate a corrupted or
+    // hostile file (same discipline as the length-field hardening above —
+    // fail with Err, never trust-and-crash later).
+    let n_points = graph.len();
+    let mutation_state = if version >= 2 {
+        let declared_dead = r.u64()?;
+        crate::ensure!(
+            declared_dead <= n_points as u64,
+            "corrupt index: tombstone count {declared_dead} exceeds point count {n_points}"
+        );
+        let words = r.u64s()?;
+        let deleted = Tombstones::from_words(words, n_points)
+            .map_err(|e| Error::msg(format!("corrupt index: {e}")))?;
+        crate::ensure!(
+            deleted.count() as u64 == declared_dead,
+            "corrupt index: tombstone bitset popcount {} != declared count {declared_dead}",
+            deleted.count()
+        );
+        let free = r.u32s()?;
+        crate::ensure!(
+            free.len() <= deleted.count(),
+            "corrupt index: free list ({}) larger than tombstone count ({})",
+            free.len(),
+            deleted.count()
+        );
+        let mut seen = std::collections::HashSet::with_capacity(free.len());
+        for &f in &free {
+            crate::ensure!(
+                (f as usize) < n_points && deleted.contains(f),
+                "corrupt index: free slot {f} is not a tombstoned point"
+            );
+            crate::ensure!(seen.insert(f), "corrupt index: duplicate free slot {f}");
+        }
+        // Insert-level RNG state: 4 fixed u64s, any value accepted (the
+        // degenerate all-zero orbit falls back to the default seed inside
+        // `Rng::from_state`).
+        let mut rng_state = [0u64; 4];
+        for x in rng_state.iter_mut() {
+            *x = r.u64()?;
+        }
+        // The frozen quantizer scale: codes rebuild from it
+        // bit-identically (never re-fit — online-appended rows would
+        // shift a refit scale).
+        let scale = f32::from_bits(r.u32()?);
+        crate::ensure!(
+            scale.is_finite() && scale > 0.0,
+            "corrupt index: quantizer scale {scale} is not a positive finite value"
+        );
+        Some((deleted, free, rng_state, scale))
+    } else {
+        None
+    };
     graph
         .validate()
         .map_err(|e| Error::msg(format!("loaded graph invalid: {e}")))?;
-    Ok(crate::anns::glass::GlassIndex::from_parts(graph, quant, config))
+    let quant = match &mutation_state {
+        Some((_, _, _, scale)) => QuantizedStore::with_scale(&graph.vectors.data, dim, *scale),
+        None => QuantizedStore::build(&graph.vectors.data, dim),
+    };
+    let mut idx = crate::anns::glass::GlassIndex::from_parts(graph, quant, config);
+    if let Some((deleted, free, rng_state, _)) = mutation_state {
+        idx.restore_mutation_state(deleted, free, rng_state);
+    }
+    Ok(idx)
 }
 
 #[cfg(test)]
@@ -328,6 +438,208 @@ mod tests {
             assert!(msg.contains("corrupt index"), "unexpected error: {msg}");
             std::fs::remove_file(&path).ok();
         }
+    }
+
+    #[test]
+    fn mutation_state_roundtrip() {
+        use crate::anns::MutableAnnIndex;
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 300, 10, 80);
+        ds.compute_ground_truth(10);
+        let mut idx = GlassIndex::build(
+            crate::anns::VectorSet::from_dataset(&ds),
+            VariantConfig::glass_baseline(),
+            7,
+        );
+        for id in [3u32, 77, 150, 299] {
+            idx.delete(id).unwrap();
+        }
+        let path = tmp("mutstate.idx");
+        save_glass(&idx, &path).unwrap();
+        let loaded = load_glass(&path).unwrap();
+        assert_eq!(loaded.live_count(), idx.live_count());
+        assert_eq!(loaded.deleted_count(), 4);
+        for id in [3u32, 77, 150, 299] {
+            assert!(loaded.is_deleted(id));
+        }
+        assert!(!loaded.is_deleted(4));
+        // Deletes don't touch the vector payload, so the rebuilt quantizer
+        // has the same scale and the reloaded search is bitwise identical
+        // — and it must filter the persisted tombstones.
+        for qi in 0..ds.n_queries() {
+            let a = idx.search_with_dists(ds.query_vec(qi), 10, 64);
+            let b = loaded.search_with_dists(ds.query_vec(qi), 10, 64);
+            assert_eq!(a, b, "query {qi} diverged after reload");
+            assert!(b.iter().all(|&(_, i)| ![3u32, 77, 150, 299].contains(&i)));
+        }
+        // Free list round-trips: a consolidated snapshot restores with its
+        // recyclable slots, and the next insert reuses one.
+        idx.consolidate().unwrap();
+        save_glass(&idx, &path).unwrap();
+        let mut reloaded = load_glass(&path).unwrap();
+        assert_eq!(reloaded.deleted_count(), 0);
+        assert_eq!(reloaded.live_count(), 296);
+        let id = reloaded.insert(ds.query_vec(0)).unwrap();
+        assert!([3u32, 77, 150, 299].contains(&id), "expected slot reuse, got {id}");
+        assert_eq!(reloaded.len(), 300);
+        // Stream determinism: the reloaded index resumed the persisted
+        // insert-level RNG, so applying the SAME inserts to the original
+        // in-memory index and to the snapshot produces identical graphs
+        // (ids, sampled levels, edges) and identical search results.
+        let id2 = idx.insert(ds.query_vec(0)).unwrap();
+        assert_eq!(id2, id, "reloaded snapshot diverged on slot choice");
+        for extra in 1..4 {
+            let a = idx.insert(ds.query_vec(extra)).unwrap();
+            let b = reloaded.insert(ds.query_vec(extra)).unwrap();
+            assert_eq!(a, b);
+        }
+        assert_eq!(idx.graph.levels, reloaded.graph.levels, "level streams diverged");
+        for qi in 0..ds.n_queries() {
+            assert_eq!(
+                idx.search_with_dists(ds.query_vec(qi), 10, 64),
+                reloaded.search_with_dists(ds.query_vec(qi), 10, 64),
+                "post-reload insert stream diverged at query {qi}"
+            );
+        }
+        // Snapshot taken AFTER online inserts: the persisted frozen scale
+        // restores bit-identical codes (no re-fit over the grown payload),
+        // so the reload reproduces the in-memory quantized pipeline
+        // exactly.
+        save_glass(&idx, &path).unwrap();
+        let post = load_glass(&path).unwrap();
+        assert_eq!(post.quant.scale, idx.quant.scale, "scale was re-fit on load");
+        for qi in 0..ds.n_queries() {
+            assert_eq!(
+                idx.search_with_dists(ds.query_vec(qi), 10, 64),
+                post.search_with_dists(ds.query_vec(qi), 10, 64),
+                "insert-grown snapshot diverged at query {qi}"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Byte offsets of the v2 mutation-state tail, from EOF:
+    /// `[dead:8][wlen:8][words:8*wlen][flen:8][free:4*flen][rng:32][scale:4]`.
+    fn patched(full: &[u8], from_end: usize, bytes: &[u8]) -> Vec<u8> {
+        let mut f = full.to_vec();
+        let at = f.len() - from_end;
+        f[at..at + bytes.len()].copy_from_slice(bytes);
+        f
+    }
+
+    #[test]
+    fn rejects_corrupt_mutation_state() {
+        use crate::anns::MutableAnnIndex;
+        let sp = synth::spec("demo-64").unwrap();
+        let ds = synth::generate_counts(sp, 300, 5, 81);
+        let mut idx = GlassIndex::build(
+            crate::anns::VectorSet::from_dataset(&ds),
+            VariantConfig::glass_baseline(),
+            7,
+        );
+        idx.delete(5).unwrap();
+        idx.consolidate().unwrap(); // free = [5]
+        let path = tmp("mutcorrupt.idx");
+        save_glass(&idx, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // n=300 => 5 bitset words; tail = 8 (dead) + 8 (wlen) + 40 (words)
+        // + 8 (flen) + 4 (one free id) + 32 (rng state) + 4 (scale) = 104.
+        let tail = 104;
+        assert!(load_glass(&path).is_ok(), "pristine file must load");
+
+        // (a) Tombstone count exceeding the point count — the headline
+        // hostile-file check (overflow-safe: u64::MAX never allocates).
+        for huge in [u64::MAX, 301u64] {
+            std::fs::write(&path, patched(&full, tail, &huge.to_le_bytes())).unwrap();
+            let err = load_glass(&path).expect_err("hostile tombstone count accepted");
+            assert!(
+                format!("{err:#}").contains("tombstone count"),
+                "unexpected error: {err:#}"
+            );
+        }
+        // (b) Declared count inconsistent with the bitset popcount.
+        std::fs::write(&path, patched(&full, tail, &2u64.to_le_bytes())).unwrap();
+        let err = load_glass(&path).expect_err("popcount mismatch accepted");
+        assert!(format!("{err:#}").contains("popcount"), "unexpected: {err:#}");
+        // (c) Bitset marking a phantom slot beyond the point count (bit 63
+        // of the last word = slot 319 of a 300-point index). The last word
+        // sits 8 (word) + 8 (flen) + 4 (free) + 32 (rng) + 4 (scale) = 56
+        // bytes from EOF.
+        let mut bad_word = [0u8; 8];
+        bad_word[7] = 0x80;
+        std::fs::write(&path, patched(&full, 56, &bad_word)).unwrap();
+        let err = load_glass(&path).expect_err("phantom tombstone accepted");
+        assert!(format!("{err:#}").contains("corrupt index"), "unexpected: {err:#}");
+        // (d) Free list naming a live (non-tombstoned) slot (the free id
+        // sits 4 + 32 + 4 = 40 bytes from EOF).
+        std::fs::write(&path, patched(&full, 40, &7u32.to_le_bytes())).unwrap();
+        let err = load_glass(&path).expect_err("live free slot accepted");
+        assert!(
+            format!("{err:#}").contains("not a tombstoned point"),
+            "unexpected: {err:#}"
+        );
+        // (e) An all-zero RNG state (the degenerate xoshiro orbit) is
+        // defused to the default seed, not reproduced: the file loads and
+        // inserts still sample useful levels (the state sits 32 + 4 = 36
+        // bytes from EOF).
+        std::fs::write(&path, patched(&full, 36, &[0u8; 32])).unwrap();
+        let mut zeroed = load_glass(&path).unwrap();
+        let id = zeroed.insert(&vec![0.0f32; 64]).unwrap();
+        assert_eq!(id, 5, "freed slot must still be recycled");
+        // (f) A hostile quantizer scale (NaN / zero / negative) is
+        // rejected instead of poisoning every quantized distance.
+        for bad in [f32::NAN, 0.0, -1.0, f32::INFINITY] {
+            std::fs::write(&path, patched(&full, 4, &bad.to_bits().to_le_bytes())).unwrap();
+            let err = load_glass(&path).expect_err("hostile scale accepted");
+            assert!(
+                format!("{err:#}").contains("quantizer scale"),
+                "unexpected: {err:#}"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn loads_v1_snapshot_without_mutation_state() {
+        use crate::anns::MutableAnnIndex;
+        // A v1 file is byte-for-byte a v2 file minus the mutation-state
+        // tail, with the version field patched — snapshots written before
+        // the tail existed must keep loading, with everything-live
+        // defaults and the legacy re-fit scale (identical to the frozen
+        // one here, since no rows were appended).
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 300, 5, 82);
+        ds.compute_ground_truth(10);
+        let idx = GlassIndex::build(
+            crate::anns::VectorSet::from_dataset(&ds),
+            VariantConfig::glass_baseline(),
+            7,
+        );
+        let path = tmp("v1compat.idx");
+        save_glass(&idx, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // Tail with zero deletes/free slots: 8 (dead) + 8 (wlen) + 40
+        // (words) + 8 (flen) + 0 (free) + 32 (rng) + 4 (scale) = 100.
+        let mut v1 = full[..full.len() - 100].to_vec();
+        v1[4..8].copy_from_slice(&1u32.to_le_bytes());
+        std::fs::write(&path, &v1).unwrap();
+        let loaded = load_glass(&path).unwrap();
+        assert_eq!(loaded.live_count(), 300);
+        assert_eq!(loaded.deleted_count(), 0);
+        for qi in 0..ds.n_queries() {
+            assert_eq!(
+                loaded.search_with_dists(ds.query_vec(qi), 10, 64),
+                idx.search_with_dists(ds.query_vec(qi), 10, 64),
+                "v1 load diverged at query {qi}"
+            );
+        }
+        // Unknown future versions still fail loudly.
+        let mut v9 = full.clone();
+        v9[4..8].copy_from_slice(&9u32.to_le_bytes());
+        std::fs::write(&path, &v9).unwrap();
+        let err = load_glass(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("unsupported index version"));
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

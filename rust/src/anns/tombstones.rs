@@ -1,0 +1,282 @@
+//! Tombstone bitset for mutable indexes.
+//!
+//! Deletion in a graph/IVF index cannot eagerly rewrite the structure on
+//! the request path — FreshDiskANN-style systems instead *mark* the point
+//! dead and keep it traversable (a tombstoned graph node still routes the
+//! beam through its neighborhood) while filtering it out of every result
+//! list. [`Tombstones`] is that mark: one bit per physical slot, a
+//! popcount kept incrementally, and a cheap [`Tombstones::none`] test so
+//! the common no-deletions search path stays branch-predictable.
+//!
+//! Lifecycle of a slot (see `MutableAnnIndex` in [`crate::anns`]):
+//! *live* → `delete` marks the bit (pending tombstone) → `consolidate`
+//! repairs the structure around it and hands the id to the index's free
+//! list (the bit stays set — the slot is still not live) → a later
+//! `insert` reuses the slot and clears the bit. External ids therefore
+//! never shift, which is what lets consolidation preserve results for
+//! untouched queries.
+
+/// One bit per slot; set = not live (pending tombstone or free slot).
+#[derive(Clone, Debug, Default)]
+pub struct Tombstones {
+    words: Vec<u64>,
+    n: usize,
+    dead: usize,
+}
+
+impl Tombstones {
+    pub fn new(n: usize) -> Self {
+        Tombstones {
+            words: vec![0; n.div_ceil(64)],
+            n,
+            dead: 0,
+        }
+    }
+
+    /// Number of slots covered (physical index size, not live count).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Number of marked (non-live) slots.
+    #[inline]
+    pub fn count(&self) -> usize {
+        self.dead
+    }
+
+    /// True when no slot is marked — the search hot paths test this once
+    /// and skip per-candidate filtering entirely.
+    #[inline]
+    pub fn none(&self) -> bool {
+        self.dead == 0
+    }
+
+    /// May `id` appear in results? One definition of the `none()`
+    /// fast-path + bit test every mutable index's scan shares.
+    #[inline]
+    pub fn is_live(&self, id: u32) -> bool {
+        self.none() || !self.contains(id)
+    }
+
+    /// The filter handed to the beam paths: `None` while nothing is
+    /// marked, so the common no-deletions search stays byte-for-byte on
+    /// the pre-mutability code path.
+    #[inline]
+    pub fn filter_ref(&self) -> Option<&Tombstones> {
+        if self.none() {
+            None
+        } else {
+            Some(self)
+        }
+    }
+
+    /// Grow to cover `n` slots (new slots unmarked). Never shrinks.
+    pub fn resize(&mut self, n: usize) {
+        if n > self.n {
+            self.n = n;
+            self.words.resize(n.div_ceil(64), 0);
+        }
+    }
+
+    /// Is slot `id` marked? Out-of-range ids read as unmarked.
+    #[inline]
+    pub fn contains(&self, id: u32) -> bool {
+        self.words
+            .get(id as usize / 64)
+            .is_some_and(|w| (w >> (id % 64)) & 1 == 1)
+    }
+
+    /// Mark `id`; returns true if it was live (newly marked).
+    pub fn set(&mut self, id: u32) -> bool {
+        assert!((id as usize) < self.n, "tombstone id {id} out of range");
+        let w = &mut self.words[id as usize / 64];
+        let bit = 1u64 << (id % 64);
+        if *w & bit != 0 {
+            return false;
+        }
+        *w |= bit;
+        self.dead += 1;
+        true
+    }
+
+    /// Unmark `id` (slot reuse); returns true if it was marked.
+    pub fn clear(&mut self, id: u32) -> bool {
+        assert!((id as usize) < self.n, "tombstone id {id} out of range");
+        let w = &mut self.words[id as usize / 64];
+        let bit = 1u64 << (id % 64);
+        if *w & bit == 0 {
+            return false;
+        }
+        *w &= !bit;
+        self.dead -= 1;
+        true
+    }
+
+    /// Marked ids, ascending.
+    pub fn iter_set(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.dead);
+        for (wi, &w) in self.words.iter().enumerate() {
+            let mut w = w;
+            while w != 0 {
+                let b = w.trailing_zeros();
+                out.push((wi * 64) as u32 + b);
+                w &= w - 1;
+            }
+        }
+        out
+    }
+
+    /// The one range-checked tombstone delete every mutable index shares
+    /// (the bitset length tracks the index length by construction): `Err`
+    /// on out-of-range ids and on ids that are already non-live
+    /// (tombstoned or free).
+    pub fn delete(&mut self, id: u32) -> crate::Result<()> {
+        crate::ensure!(
+            (id as usize) < self.n,
+            "delete id {id} out of range (len {})",
+            self.n
+        );
+        crate::ensure!(self.set(id), "id {id} is already deleted");
+        Ok(())
+    }
+
+    /// Marked ids not yet handed to the caller's free list — the set one
+    /// `consolidate()` call drops, ascending. (Free-list entries stay
+    /// marked after consolidation, so pending = marked ∖ free; every
+    /// index's consolidate shares this one definition of the lifecycle.)
+    pub fn pending(&self, free: &[u32]) -> Vec<u32> {
+        let freed: std::collections::HashSet<u32> = free.iter().copied().collect();
+        self.iter_set()
+            .into_iter()
+            .filter(|t| !freed.contains(t))
+            .collect()
+    }
+
+    /// Raw words (persistence).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Rebuild from persisted words, validating shape: the word count must
+    /// match `n` and no bit may be set beyond slot `n` — a hostile or
+    /// corrupted file fails here instead of resurrecting phantom slots.
+    /// The popcount is recomputed, never trusted from the file.
+    pub fn from_words(words: Vec<u64>, n: usize) -> Result<Self, String> {
+        if words.len() != n.div_ceil(64) {
+            return Err(format!(
+                "tombstone bitset has {} words, expected {} for {n} points",
+                words.len(),
+                n.div_ceil(64)
+            ));
+        }
+        if n % 64 != 0 {
+            if let Some(&last) = words.last() {
+                if last >> (n % 64) != 0 {
+                    return Err(format!(
+                        "tombstone bitset marks slots beyond point count {n}"
+                    ));
+                }
+            }
+        }
+        let dead = words.iter().map(|w| w.count_ones() as usize).sum();
+        Ok(Tombstones { words, n, dead })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_clear_count() {
+        let mut t = Tombstones::new(130);
+        assert!(t.none());
+        assert!(t.set(0));
+        assert!(t.set(63));
+        assert!(t.set(64));
+        assert!(t.set(129));
+        assert!(!t.set(64), "double-mark must report already set");
+        assert_eq!(t.count(), 4);
+        assert!(!t.none());
+        assert!(t.contains(63) && t.contains(129));
+        assert!(!t.contains(1));
+        assert!(!t.contains(1000), "out of range reads unmarked");
+        assert_eq!(t.iter_set(), vec![0, 63, 64, 129]);
+        assert!(t.clear(63));
+        assert!(!t.clear(63));
+        assert_eq!(t.count(), 3);
+        assert!(!t.contains(63));
+    }
+
+    #[test]
+    fn resize_preserves_marks() {
+        let mut t = Tombstones::new(10);
+        t.set(7);
+        t.resize(200);
+        assert_eq!(t.len(), 200);
+        assert!(t.contains(7));
+        assert!(!t.contains(150));
+        t.set(150);
+        assert_eq!(t.count(), 2);
+    }
+
+    #[test]
+    fn words_roundtrip() {
+        let mut t = Tombstones::new(100);
+        for id in [3u32, 64, 99] {
+            t.set(id);
+        }
+        let back = Tombstones::from_words(t.words().to_vec(), 100).unwrap();
+        assert_eq!(back.count(), 3);
+        assert_eq!(back.iter_set(), t.iter_set());
+    }
+
+    #[test]
+    fn from_words_rejects_bad_shapes() {
+        // Wrong word count.
+        assert!(Tombstones::from_words(vec![0; 3], 100).is_err());
+        // Bit set beyond n (slot 100 of a 100-slot set).
+        let mut words = vec![0u64; 2];
+        words[1] = 1 << 36;
+        assert!(Tombstones::from_words(words, 100).is_err());
+        // Exactly at the boundary is fine.
+        let mut words = vec![0u64; 2];
+        words[1] = 1 << 35; // slot 99
+        let t = Tombstones::from_words(words, 100).unwrap();
+        assert!(t.contains(99));
+        assert_eq!(t.count(), 1);
+    }
+
+    #[test]
+    fn delete_range_and_double_delete_errors() {
+        let mut t = Tombstones::new(10);
+        assert!(t.delete(3).is_ok());
+        assert!(t.delete(3).is_err(), "double delete must error");
+        assert!(t.delete(10).is_err(), "out of range must error");
+        assert_eq!(t.count(), 1);
+    }
+
+    #[test]
+    fn pending_excludes_free_entries() {
+        let mut t = Tombstones::new(50);
+        for id in [2u32, 9, 17, 33] {
+            t.set(id);
+        }
+        assert_eq!(t.pending(&[]), vec![2, 9, 17, 33]);
+        assert_eq!(t.pending(&[9, 33]), vec![2, 17]);
+        assert_eq!(t.pending(&[2, 9, 17, 33]), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn empty_set() {
+        let t = Tombstones::new(0);
+        assert!(t.is_empty() && t.none());
+        assert!(t.iter_set().is_empty());
+        assert!(Tombstones::from_words(vec![], 0).is_ok());
+    }
+}

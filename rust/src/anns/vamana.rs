@@ -11,7 +11,7 @@
 use crate::anns::heap::{dist_cmp, MinQueue, TopK};
 use crate::anns::scratch::ScratchPool;
 use crate::anns::visited::VisitedSet;
-use crate::anns::{AnnIndex, VectorSet};
+use crate::anns::{AnnIndex, MutableAnnIndex, VectorSet};
 use crate::util::rng::Rng;
 
 /// Build parameters (ParlayANN-ish defaults).
@@ -294,6 +294,26 @@ impl AnnIndex for VamanaIndex {
 
     fn memory_bytes(&self) -> usize {
         self.vectors.data.len() * 4 + self.graph.len() * 4
+    }
+}
+
+/// Vamana does not support online mutation yet: its RobustPrune(α)
+/// highway edges assume the two-pass batch build, and FreshDiskANN-style
+/// streaming inserts for it are a project of their own. Every mutating
+/// method reports `Unsupported` so the coordinator's uniform update path
+/// fails the request instead of the process; the read-side accessors fall
+/// back to the static defaults (everything live).
+impl MutableAnnIndex for VamanaIndex {
+    fn insert(&mut self, _vec: &[f32]) -> crate::Result<u32> {
+        crate::bail!("Unsupported: vamana does not implement online insert (rebuild instead)")
+    }
+
+    fn delete(&mut self, _id: u32) -> crate::Result<()> {
+        crate::bail!("Unsupported: vamana does not implement delete (rebuild instead)")
+    }
+
+    fn consolidate(&mut self) -> crate::Result<usize> {
+        crate::bail!("Unsupported: vamana does not implement consolidate")
     }
 }
 

@@ -159,6 +159,63 @@ mod tests {
     }
 
     #[test]
+    fn group_by_key_is_a_stable_partition() {
+        // Randomized check of the three contracts the server relies on:
+        // (1) keys appear in first-seen order, (2) items keep arrival
+        // order within their group (stability — responses are zipped back
+        // positionally), (3) the groups are a partition: every item
+        // appears exactly once and nothing is invented.
+        use crate::util::rng::Rng;
+        for seed in 0..20u64 {
+            let mut rng = Rng::new(seed ^ 0x6B0B);
+            let n = rng.next_below(64);
+            let items: Vec<(usize, usize)> =
+                (0..n).map(|i| (rng.next_below(5), i)).collect();
+            let groups = group_by_key(items.clone(), |&(k, _)| k);
+            // (1) first-seen key order, no duplicate keys.
+            let mut seen_keys = Vec::new();
+            for &(k, _) in &items {
+                if !seen_keys.contains(&k) {
+                    seen_keys.push(k);
+                }
+            }
+            let group_keys: Vec<usize> = groups.iter().map(|&(k, _)| k).collect();
+            assert_eq!(group_keys, seen_keys, "seed {seed}");
+            // (2) stability: each group equals the order-preserving filter.
+            for (k, g) in &groups {
+                let want: Vec<(usize, usize)> =
+                    items.iter().copied().filter(|&(ik, _)| ik == *k).collect();
+                assert_eq!(g, &want, "seed {seed} key {k}");
+            }
+            // (3) partition: concatenation is a permutation that restores
+            // the original order under a stable sort by arrival index.
+            let total: usize = groups.iter().map(|(_, g)| g.len()).sum();
+            assert_eq!(total, items.len(), "seed {seed}");
+            let mut flat: Vec<(usize, usize)> =
+                groups.into_iter().flat_map(|(_, g)| g).collect();
+            flat.sort_by_key(|&(_, i)| i);
+            assert_eq!(flat, items, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn group_by_key_single_and_all_distinct() {
+        // Degenerate shapes: every key distinct (one group per item, in
+        // arrival order) and every key equal (one group, order untouched).
+        let distinct = group_by_key(vec![(3, 'a'), (1, 'b'), (2, 'c')], |&(k, _)| k);
+        assert_eq!(
+            distinct,
+            vec![
+                (3, vec![(3, 'a')]),
+                (1, vec![(1, 'b')]),
+                (2, vec![(2, 'c')])
+            ]
+        );
+        let same = group_by_key(vec![5, 6, 7, 8], |_| 42);
+        assert_eq!(same, vec![(42, vec![5, 6, 7, 8])]);
+    }
+
+    #[test]
     fn closed_mid_batch_returns_partial() {
         let (tx, rx) = channel();
         tx.send(7).unwrap();

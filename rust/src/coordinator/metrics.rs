@@ -13,6 +13,14 @@ pub struct Metrics {
     /// > 1) — how much of the traffic actually amortized per-query
     /// overhead, vs. batches that drained a single request.
     pub batched_queries: AtomicU64,
+    /// Successful mutations through the update path.
+    pub inserts: AtomicU64,
+    pub deletes: AtomicU64,
+    /// Mutations that failed (immutable backend, bad id, wrong dim, …).
+    pub mutation_errors: AtomicU64,
+    /// Gauge: live (searchable) points after the most recent mutation —
+    /// 0 until the first mutation on a mutable backend.
+    pub live_points: AtomicU64,
     /// Reservoir of recent request latencies (seconds).
     latencies: Mutex<Vec<f64>>,
 }
@@ -53,7 +61,26 @@ impl Metrics {
         self.rejected.fetch_add(1, Ordering::Relaxed);
     }
 
-    /// Snapshot (requests, batches, rejected, latency stats).
+    pub fn record_insert(&self) {
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_delete(&self) {
+        self.deletes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_mutation_error(&self) {
+        self.mutation_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Update the live-point gauge (called with the index's `live_count`
+    /// while the mutation still holds the write lock, so the gauge never
+    /// lags the index it describes).
+    pub fn set_live_points(&self, live: u64) {
+        self.live_points.store(live, Ordering::Relaxed);
+    }
+
+    /// Snapshot (requests, batches, rejected, mutations, latency stats).
     pub fn snapshot(&self) -> MetricsSnapshot {
         let lat = self.latencies.lock().unwrap().clone();
         MetricsSnapshot {
@@ -61,6 +88,10 @@ impl Metrics {
             batches: self.batches.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             batched_queries: self.batched_queries.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            deletes: self.deletes.load(Ordering::Relaxed),
+            mutation_errors: self.mutation_errors.load(Ordering::Relaxed),
+            live_points: self.live_points.load(Ordering::Relaxed),
             latency: crate::util::bench::Stats::from_samples(lat),
         }
     }
@@ -73,6 +104,10 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     pub rejected: u64,
     pub batched_queries: u64,
+    pub inserts: u64,
+    pub deletes: u64,
+    pub mutation_errors: u64,
+    pub live_points: u64,
     pub latency: crate::util::bench::Stats,
 }
 
@@ -108,5 +143,23 @@ mod tests {
         assert_eq!(s.batched_queries, 8);
         assert_eq!(s.latency.n, 100);
         assert_eq!(s.mean_batch_size(), 50.0);
+    }
+
+    #[test]
+    fn mutation_counters_and_live_gauge() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!((s.inserts, s.deletes, s.mutation_errors, s.live_points), (0, 0, 0, 0));
+        m.record_insert();
+        m.record_insert();
+        m.record_delete();
+        m.record_mutation_error();
+        m.set_live_points(41);
+        m.set_live_points(42); // gauge overwrites, never accumulates
+        let s = m.snapshot();
+        assert_eq!(s.inserts, 2);
+        assert_eq!(s.deletes, 1);
+        assert_eq!(s.mutation_errors, 1);
+        assert_eq!(s.live_points, 42);
     }
 }

@@ -3,14 +3,21 @@
 //! * [`batcher`] — dynamic batching: requests accumulate until
 //!   `max_batch` or `max_wait` (amortizes cache-warm graph walks and
 //!   enables the PJRT batch-rerank path);
-//! * [`router`] — sharded indexes with fan-out + top-k merge;
+//! * [`router`] — sharded indexes with fan-out + top-k merge, in a static
+//!   flavor ([`ShardedRouter`]) and a mutable one
+//!   ([`MutableShardedRouter`]: mutations routed to the owning shard);
 //! * [`server`] — thread-based request loop with bounded queues
-//!   (backpressure) and latency/throughput metrics.
+//!   (backpressure), a search + insert/delete update path
+//!   ([`server::QueryRequest`] is an enum; `Server::start_mutable` serves
+//!   a `MutableAnnIndex` behind an `RwLock`), and latency/throughput/
+//!   mutation metrics.
 
 pub mod batcher;
 pub mod metrics;
 pub mod router;
 pub mod server;
 
-pub use router::ShardedRouter;
-pub use server::{QueryRequest, QueryResponse, Server, ServerConfig};
+pub use router::{MutableShardedRouter, ShardedRouter};
+pub use server::{
+    MutationResponse, QueryRequest, QueryResponse, Server, ServerConfig, SharedMutableIndex,
+};

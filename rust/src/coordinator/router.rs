@@ -1,9 +1,21 @@
 //! Sharded router: partition the base across shard indexes, fan a query
 //! out, merge the per-shard top-k — how multi-tenant vector stores
 //! (Vearch/Milvus) scale past one index.
+//!
+//! Two flavors:
+//! * [`ShardedRouter`] — static contiguous ranges (shard `s` owns rows
+//!   `[offsets[s], offsets[s+1])`), the zero-overhead layout for
+//!   build-once serving;
+//! * [`MutableShardedRouter`] — interleaved id mapping
+//!   (`global = local * n_shards + shard`) so shards can grow
+//!   independently under online inserts without ever renumbering an
+//!   existing point: mutations are routed to the owning shard
+//!   (`shard = global % n_shards`), consolidation fans out per shard, and
+//!   global ids stay stable because each shard recycles slots instead of
+//!   compacting.
 
 use crate::anns::heap::dist_cmp;
-use crate::anns::AnnIndex;
+use crate::anns::{AnnIndex, MutableAnnIndex};
 use crate::anns::VectorSet;
 use crate::dataset::Dataset;
 use crate::variants::VariantConfig;
@@ -152,6 +164,165 @@ impl AnnIndex for ShardedRouter {
     }
 }
 
+/// A router over mutable shards with an interleaved id mapping: global id
+/// `g` lives on shard `g % n_shards` as local id `g / n_shards`. Built
+/// round-robin over a dataset, global ids coincide with dataset row
+/// numbers; after online inserts the id space may grow sparse (shards
+/// grow at their own pace) but never reshuffles.
+pub struct MutableShardedRouter {
+    shards: Vec<Box<dyn MutableAnnIndex>>,
+    metric: crate::distance::Metric,
+    dim: usize,
+    /// Round-robin insert cursor (next shard to receive a point).
+    next_shard: usize,
+}
+
+impl MutableShardedRouter {
+    /// Build mutable GLASS shards over a dataset split round-robin (row
+    /// `i` → shard `i % n_shards`), so `global id == dataset row`.
+    pub fn build_glass(ds: &Dataset, config: &VariantConfig, n_shards: usize, seed: u64) -> Self {
+        let n = ds.n_base();
+        let n_shards = n_shards.clamp(1, n.max(1));
+        let mut shards: Vec<Box<dyn MutableAnnIndex>> = Vec::with_capacity(n_shards);
+        for s in 0..n_shards {
+            let mut data = Vec::new();
+            let mut i = s;
+            while i < n {
+                data.extend_from_slice(ds.base_vec(i));
+                i += n_shards;
+            }
+            let vs = VectorSet::new(data, ds.dim, ds.metric);
+            shards.push(Box::new(
+                crate::anns::glass::GlassIndex::build(vs, config.clone(), seed ^ s as u64)
+                    .with_label(&format!("glass-mshard{s}")),
+            ));
+        }
+        MutableShardedRouter {
+            shards,
+            metric: ds.metric,
+            dim: ds.dim,
+            next_shard: n % n_shards,
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn metric(&self) -> crate::distance::Metric {
+        self.metric
+    }
+
+    #[inline]
+    fn locate(&self, id: u32) -> (usize, u32) {
+        let s = self.shards.len() as u32;
+        ((id % s) as usize, id / s)
+    }
+
+    #[inline]
+    fn global(&self, shard: usize, local: u32) -> u32 {
+        (local as usize * self.shards.len() + shard) as u32
+    }
+}
+
+impl AnnIndex for MutableShardedRouter {
+    fn name(&self) -> String {
+        format!(
+            "mutable-sharded-{}x-{}",
+            self.n_shards(),
+            self.shards.first().map(|s| s.name()).unwrap_or_default()
+        )
+    }
+
+    fn search_with_dists(&self, query: &[f32], k: usize, ef: usize) -> Vec<(f32, u32)> {
+        self.search_batch(&[query], k, ef)
+            .pop()
+            .expect("one result list per query")
+    }
+
+    /// Whole-batch fan-out per shard, merge on shard-carried exact
+    /// distances with interleaved id remapping. Sequential over shards —
+    /// the mutable router is correctness-first; the static
+    /// [`ShardedRouter`] remains the high-throughput read path.
+    fn search_batch(&self, queries: &[&[f32]], k: usize, ef: usize) -> Vec<Vec<(f32, u32)>> {
+        let per_shard: Vec<Vec<Vec<(f32, u32)>>> = self
+            .shards
+            .iter()
+            .map(|shard| shard.search_batch(queries, k, ef))
+            .collect();
+        (0..queries.len())
+            .map(|qi| {
+                let mut merged: Vec<(f32, u32)> = Vec::with_capacity(k * self.shards.len());
+                for (s, shard_results) in per_shard.iter().enumerate() {
+                    for &(d, local) in &shard_results[qi] {
+                        merged.push((d, self.global(s, local)));
+                    }
+                }
+                merged.sort_by(dist_cmp);
+                merged.truncate(k);
+                merged
+            })
+            .collect()
+    }
+
+    /// Total physical slots across shards (count semantics; the global id
+    /// *range* can exceed this once shards grow unevenly).
+    fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.len()).sum()
+    }
+
+    fn memory_bytes(&self) -> usize {
+        self.shards.iter().map(|s| s.memory_bytes()).sum()
+    }
+}
+
+impl MutableAnnIndex for MutableShardedRouter {
+    /// Round-robin placement; the returned global id encodes the owning
+    /// shard, so deletes route without any lookup table.
+    fn insert(&mut self, vec: &[f32]) -> crate::Result<u32> {
+        crate::anns::validate_insert_vec(vec, self.dim)?;
+        let s = self.next_shard;
+        self.next_shard = (self.next_shard + 1) % self.shards.len();
+        let local = self.shards[s]
+            .insert(vec)
+            .map_err(|e| e.context(format!("shard {s}")))?;
+        Ok(self.global(s, local))
+    }
+
+    fn delete(&mut self, id: u32) -> crate::Result<()> {
+        let (s, local) = self.locate(id);
+        self.shards[s]
+            .delete(local)
+            .map_err(|e| e.context(format!("global id {id} (shard {s})")))
+    }
+
+    /// Per-shard consolidation. Sound at the router level because shards
+    /// recycle slots instead of renumbering: every surviving global id is
+    /// untouched.
+    fn consolidate(&mut self) -> crate::Result<usize> {
+        let mut dropped = 0;
+        for (s, shard) in self.shards.iter_mut().enumerate() {
+            dropped += shard
+                .consolidate()
+                .map_err(|e| e.context(format!("shard {s}")))?;
+        }
+        Ok(dropped)
+    }
+
+    fn live_count(&self) -> usize {
+        self.shards.iter().map(|s| s.live_count()).sum()
+    }
+
+    fn deleted_count(&self) -> usize {
+        self.shards.iter().map(|s| s.deleted_count()).sum()
+    }
+
+    fn is_deleted(&self, id: u32) -> bool {
+        let (s, local) = self.locate(id);
+        self.shards[s].is_deleted(local)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -208,6 +379,81 @@ mod tests {
                 assert_eq!(d, want, "query {qi} gid {gid}");
             }
         }
+    }
+
+    #[test]
+    fn mutable_router_ids_are_dataset_rows_and_distances_exact() {
+        // Round-robin build: global id == dataset row, and merged
+        // distances are the exact metric values to that row.
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 900, 25, 98);
+        ds.compute_ground_truth(10);
+        let router = MutableShardedRouter::build_glass(&ds, &VariantConfig::glass_baseline(), 3, 5);
+        assert_eq!(router.n_shards(), 3);
+        assert_eq!(router.len(), 900);
+        assert_eq!(router.live_count(), 900);
+        let mut acc = 0.0;
+        for qi in 0..ds.n_queries() {
+            let q = ds.query_vec(qi);
+            let found = router.search_with_dists(q, 10, 96);
+            for &(d, gid) in &found {
+                let want = ds.metric.distance(q, ds.base_vec(gid as usize));
+                assert_eq!(d, want, "query {qi} gid {gid}");
+            }
+            let ids: Vec<u32> = found.iter().map(|&(_, i)| i).collect();
+            acc += crate::dataset::gt::recall_at_k(&ids, &ds.gt[qi], 10);
+        }
+        let recall = acc / ds.n_queries() as f64;
+        assert!(recall > 0.85, "mutable sharded recall {recall}");
+    }
+
+    #[test]
+    fn mutable_router_routes_mutations_to_owning_shard() {
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 600, 10, 99);
+        ds.compute_ground_truth(10);
+        let mut router =
+            MutableShardedRouter::build_glass(&ds, &VariantConfig::glass_baseline(), 4, 5);
+        // Delete the top-5 of query 0 — spread across shards by the
+        // interleaved mapping — and verify they never surface again.
+        let doomed = router.search(ds.query_vec(0), 5, 96);
+        for &id in &doomed {
+            router.delete(id).unwrap();
+            assert!(router.is_deleted(id));
+        }
+        assert_eq!(router.deleted_count(), 5);
+        assert_eq!(router.live_count(), 595);
+        let after = router.search(ds.query_vec(0), 10, 96);
+        assert!(after.iter().all(|id| !doomed.contains(id)));
+        assert!(router.delete(doomed[0]).is_err(), "double delete must error");
+        // Insert: the new point is immediately findable under its global
+        // id, and the id decodes to a real shard slot.
+        let v = ds.query_vec(1).to_vec();
+        let id = router.insert(&v).unwrap();
+        let top = router.search_with_dists(&v, 1, 96);
+        assert_eq!(top[0], (0.0, id));
+        // Consolidate fans out per shard; ids of live points are stable.
+        let before: Vec<_> = (0..ds.n_queries())
+            .map(|qi| router.search(ds.query_vec(qi), 10, 96))
+            .collect();
+        assert_eq!(router.consolidate().unwrap(), 5);
+        assert_eq!(router.deleted_count(), 0);
+        for (qi, prev) in before.iter().enumerate() {
+            let now = router.search(ds.query_vec(qi), 10, 96);
+            let overlap = now.iter().filter(|i| prev.contains(i)).count();
+            assert!(
+                overlap >= 8,
+                "query {qi}: consolidation reshuffled ids ({overlap}/10 overlap)"
+            );
+        }
+        // Recycled inserts: one insert per shard (round-robin covers all
+        // four), so every shard holding a freed slot recycles it — at
+        // least one of the new ids must be a previously-doomed global id.
+        let new_ids: Vec<u32> = (0..4).map(|_| router.insert(&v).unwrap()).collect();
+        assert!(
+            new_ids.iter().any(|id| doomed.contains(id)),
+            "no freed slot was recycled: {new_ids:?} vs doomed {doomed:?}"
+        );
     }
 
     #[test]

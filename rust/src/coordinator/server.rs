@@ -4,23 +4,71 @@
 //! Thread-based rather than async: the workload is CPU-bound graph
 //! traversal; a tokio reactor would add no concurrency on this substrate
 //! (and tokio is unavailable offline — DESIGN.md §8).
+//!
+//! Two backends:
+//! * [`Server::start`] — a read-only `Arc<dyn AnnIndex>`; mutation
+//!   requests are answered with an error (the index is immutable).
+//! * [`Server::start_mutable`] — an `Arc<RwLock<Box<dyn
+//!   MutableAnnIndex>>>`: searches share the read lock (and still batch
+//!   through one `search_batch` per `(k, ef)` group), while
+//!   inserts/deletes take the write lock briefly per mutation.
+//!
+//! Mutations ride the same bounded queue and dynamic batcher as searches
+//! ([`QueryRequest`] is an enum). Within one drained batch the worker
+//! applies mutations first, in arrival order, then serves the batch's
+//! searches — so a search batched together with a delete never resurrects
+//! the deleted id. Across batches/workers, ordering is whatever the locks
+//! give (as in any concurrent store); every response is keyed to its own
+//! reply channel, so results never cross requests.
 
-use crate::anns::AnnIndex;
+use crate::anns::{AnnIndex, MutableAnnIndex};
 use crate::coordinator::batcher::{group_by_key, next_batch_or_stop, BatchPolicy};
 use crate::coordinator::metrics::Metrics;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Instant;
 
+/// The shared-ownership shape a mutable backend is served from.
+pub type SharedMutableIndex = Arc<RwLock<Box<dyn MutableAnnIndex>>>;
+
+/// One request through the serving queue: a search or a mutation.
+pub enum QueryRequest {
+    Search(SearchRequest),
+    Insert(InsertRequest),
+    Delete(DeleteRequest),
+}
+
 /// One query.
-pub struct QueryRequest {
+pub struct SearchRequest {
     pub query: Vec<f32>,
     pub k: usize,
     pub ef: usize,
     pub submitted: Instant,
     /// Reply channel.
     pub reply: SyncSender<QueryResponse>,
+}
+
+/// One online insert.
+pub struct InsertRequest {
+    pub vector: Vec<f32>,
+    pub submitted: Instant,
+    pub reply: SyncSender<MutationResponse>,
+}
+
+/// One tombstone delete.
+pub struct DeleteRequest {
+    pub id: u32,
+    pub submitted: Instant,
+    pub reply: SyncSender<MutationResponse>,
+}
+
+/// Outcome of a mutation: the assigned id for inserts (the echoed id for
+/// deletes), or the index's error rendered as a string.
+#[derive(Clone, Debug)]
+pub struct MutationResponse {
+    pub result: Result<u32, String>,
+    pub latency_s: f64,
 }
 
 /// The answer: ids nearest-first with their exact distances (`dists[i]`
@@ -51,6 +99,49 @@ impl Default for ServerConfig {
     }
 }
 
+/// The index a worker serves from: read-only, or mutable behind a lock.
+#[derive(Clone)]
+enum Backend {
+    Fixed(Arc<dyn AnnIndex>),
+    Mutable(SharedMutableIndex),
+}
+
+impl Backend {
+    fn search_batch(&self, queries: &[&[f32]], k: usize, ef: usize) -> Vec<Vec<(f32, u32)>> {
+        match self {
+            Backend::Fixed(index) => index.search_batch(queries, k, ef),
+            Backend::Mutable(index) => index.read().unwrap().search_batch(queries, k, ef),
+        }
+    }
+
+    /// Apply one mutation under the write lock. The live-point gauge is
+    /// updated while the lock is still held, so concurrent workers can
+    /// never publish a stale count over a newer one.
+    fn apply(&self, op: Mutation, metrics: &Metrics) -> Result<u32, String> {
+        match self {
+            Backend::Fixed(_) => {
+                Err("index is immutable (serve it with Server::start_mutable)".to_string())
+            }
+            Backend::Mutable(index) => {
+                let mut idx = index.write().unwrap();
+                let result = match op {
+                    Mutation::Insert(v) => idx.insert(&v).map_err(|e| format!("{e:#}")),
+                    Mutation::Delete(id) => {
+                        idx.delete(id).map(|_| id).map_err(|e| format!("{e:#}"))
+                    }
+                };
+                metrics.set_live_points(idx.live_count() as u64);
+                result
+            }
+        }
+    }
+}
+
+enum Mutation {
+    Insert(Vec<f32>),
+    Delete(u32),
+}
+
 /// A running server. Submit with [`Server::handle`]; drop to stop.
 pub struct Server {
     tx: Option<SyncSender<QueryRequest>>,
@@ -61,8 +152,23 @@ pub struct Server {
 }
 
 impl Server {
-    /// Start worker threads over a shared index.
+    /// Start worker threads over a shared read-only index. Mutation
+    /// requests submitted to this server are answered with an error.
     pub fn start(index: Arc<dyn AnnIndex>, config: ServerConfig) -> Server {
+        Server::start_backend(Backend::Fixed(index), config)
+    }
+
+    /// Start worker threads over a mutable index: searches share the read
+    /// lock, inserts/deletes serialize on the write lock, and the
+    /// tombstone/consolidation semantics come from the index itself.
+    pub fn start_mutable(index: SharedMutableIndex, config: ServerConfig) -> Server {
+        let metrics_live = index.read().unwrap().live_count() as u64;
+        let server = Server::start_backend(Backend::Mutable(index), config);
+        server.metrics.set_live_points(metrics_live);
+        server
+    }
+
+    fn start_backend(backend: Backend, config: ServerConfig) -> Server {
         let (tx, rx) = sync_channel::<QueryRequest>(config.queue_depth.max(1));
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::new());
@@ -71,7 +177,7 @@ impl Server {
         let mut workers = Vec::new();
         for _ in 0..config.workers.max(1) {
             let rx = rx.clone();
-            let index = index.clone();
+            let backend = backend.clone();
             let metrics = metrics.clone();
             let policy = config.batch.clone();
             let inflight = inflight.clone();
@@ -88,14 +194,45 @@ impl Server {
                 };
                 let Some(batch) = batch else { break };
                 metrics.record_batch();
+                // Split the drained batch: mutations apply first (arrival
+                // order preserved), then the searches — so a search
+                // batched alongside a delete observes it. One shared
+                // apply-and-reply block serves both mutation kinds, so
+                // the accounting protocol cannot drift between them.
+                let mut searches = Vec::with_capacity(batch.len());
+                for req in batch {
+                    let (op, reply, submitted, is_insert) = match req {
+                        QueryRequest::Search(s) => {
+                            searches.push(s);
+                            continue;
+                        }
+                        QueryRequest::Insert(r) => {
+                            (Mutation::Insert(r.vector), r.reply, r.submitted, true)
+                        }
+                        QueryRequest::Delete(r) => {
+                            (Mutation::Delete(r.id), r.reply, r.submitted, false)
+                        }
+                    };
+                    let result = backend.apply(op, &metrics);
+                    match (&result, is_insert) {
+                        (Ok(_), true) => metrics.record_insert(),
+                        (Ok(_), false) => metrics.record_delete(),
+                        (Err(_), _) => metrics.record_mutation_error(),
+                    }
+                    let _ = reply.send(MutationResponse {
+                        result,
+                        latency_s: submitted.elapsed().as_secs_f64(),
+                    });
+                    inflight.fetch_sub(1, Ordering::Relaxed);
+                }
                 // Serve each (k, ef) group through one multi-query
                 // `search_batch` call — the index reuses a single pooled
                 // scratch context across the group, and results are
                 // bitwise identical to per-request `search_with_dists`.
-                for ((k, ef), group) in group_by_key(batch, |r| (r.k, r.ef)) {
+                for ((k, ef), group) in group_by_key(searches, |r| (r.k, r.ef)) {
                     let queries: Vec<&[f32]> =
                         group.iter().map(|r| r.query.as_slice()).collect();
-                    let results = index.search_batch(&queries, k, ef);
+                    let results = backend.search_batch(&queries, k, ef);
                     metrics.record_group(group.len());
                     for (req, pairs) in group.into_iter().zip(results) {
                         let latency = req.submitted.elapsed().as_secs_f64();
@@ -151,36 +288,75 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
+    /// Enqueue one request; shared admission control for searches and
+    /// mutations (stop flag, bounded-queue backpressure, inflight count).
+    fn push(&self, req: QueryRequest) -> bool {
+        if self.stopping.load(Ordering::Relaxed) {
+            self.metrics.record_rejected();
+            return false;
+        }
+        match self.tx.try_send(req) {
+            Ok(()) => {
+                self.inflight.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            Err(_) => {
+                self.metrics.record_rejected();
+                false
+            }
+        }
+    }
+
     /// Submit a query; returns the reply receiver, or `None` when the
     /// server rejects (shutting down / queue full — backpressure).
     pub fn submit(&self, query: Vec<f32>, k: usize, ef: usize) -> Option<Receiver<QueryResponse>> {
-        if self.stopping.load(Ordering::Relaxed) {
-            self.metrics.record_rejected();
-            return None;
-        }
         let (reply_tx, reply_rx) = sync_channel(1);
-        let req = QueryRequest {
+        self.push(QueryRequest::Search(SearchRequest {
             query,
             k,
             ef,
             submitted: Instant::now(),
             reply: reply_tx,
-        };
-        match self.tx.try_send(req) {
-            Ok(()) => {
-                self.inflight.fetch_add(1, Ordering::Relaxed);
-                Some(reply_rx)
-            }
-            Err(_) => {
-                self.metrics.record_rejected();
-                None
-            }
-        }
+        }))
+        .then_some(reply_rx)
+    }
+
+    /// Submit an online insert; same admission control as [`Self::submit`].
+    pub fn submit_insert(&self, vector: Vec<f32>) -> Option<Receiver<MutationResponse>> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.push(QueryRequest::Insert(InsertRequest {
+            vector,
+            submitted: Instant::now(),
+            reply: reply_tx,
+        }))
+        .then_some(reply_rx)
+    }
+
+    /// Submit a tombstone delete; same admission control as
+    /// [`Self::submit`].
+    pub fn submit_delete(&self, id: u32) -> Option<Receiver<MutationResponse>> {
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.push(QueryRequest::Delete(DeleteRequest {
+            id,
+            submitted: Instant::now(),
+            reply: reply_tx,
+        }))
+        .then_some(reply_rx)
     }
 
     /// Blocking convenience: submit + wait.
     pub fn query(&self, query: Vec<f32>, k: usize, ef: usize) -> Option<QueryResponse> {
         self.submit(query, k, ef)?.recv().ok()
+    }
+
+    /// Blocking convenience: insert + wait for the assigned id.
+    pub fn insert(&self, vector: Vec<f32>) -> Option<MutationResponse> {
+        self.submit_insert(vector)?.recv().ok()
+    }
+
+    /// Blocking convenience: delete + wait for the ack.
+    pub fn delete(&self, id: u32) -> Option<MutationResponse> {
+        self.submit_delete(id)?.recv().ok()
     }
 
     pub fn inflight(&self) -> usize {
@@ -335,5 +511,73 @@ mod tests {
         let (server, _) = make_server(16);
         let snap = server.shutdown();
         assert_eq!(snap.requests, 0);
+    }
+
+    #[test]
+    fn mutation_on_immutable_server_errors_cleanly() {
+        let (server, ds) = make_server(64);
+        let h = server.handle();
+        let resp = h.insert(ds.base_vec(0).to_vec()).unwrap();
+        assert!(resp.result.is_err(), "immutable backend accepted an insert");
+        assert!(resp.result.unwrap_err().contains("immutable"));
+        let resp = h.delete(3).unwrap();
+        assert!(resp.result.is_err());
+        // Searches still work on the same server.
+        assert!(h.query(ds.query_vec(0).to_vec(), 5, 0).is_some());
+        let snap = server.shutdown();
+        assert_eq!(snap.mutation_errors, 2);
+        assert_eq!((snap.inserts, snap.deletes), (0, 0));
+    }
+
+    #[test]
+    fn mutation_update_path_end_to_end() {
+        // Sequential (submit + wait each step) so the interleaving is
+        // deterministic: an acked delete must be invisible to the next
+        // search, an acked insert must be findable, and the counters/live
+        // gauge must reconcile exactly.
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 400, 30, 97);
+        ds.compute_ground_truth(6); // k=5 served + 1 spare for the delete
+        let index: crate::coordinator::SharedMutableIndex = Arc::new(RwLock::new(Box::new(
+            BruteForceIndex::build(VectorSet::from_dataset(&ds)),
+        )));
+        let server = Server::start_mutable(
+            index.clone(),
+            ServerConfig {
+                workers: 2,
+                queue_depth: 128,
+                batch: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: std::time::Duration::from_millis(1),
+                },
+            },
+        );
+        assert_eq!(server.metrics.live_points.load(Ordering::Relaxed), 400);
+        let h = server.handle();
+        // Delete the exact NN of query 0: the served result must shift to
+        // the remainder of the ground-truth list.
+        let victim = ds.gt[0][0];
+        let ack = h.delete(victim).unwrap();
+        assert_eq!(ack.result, Ok(victim));
+        let resp = h.query(ds.query_vec(0).to_vec(), 5, 0).unwrap();
+        assert_eq!(resp.ids, ds.gt[0][1..6].to_vec());
+        // Insert the query vector itself: it becomes its own NN.
+        let ack = h.insert(ds.query_vec(0).to_vec()).unwrap();
+        let new_id = ack.result.expect("insert must succeed");
+        assert_eq!(new_id, 400);
+        let resp = h.query(ds.query_vec(0).to_vec(), 1, 0).unwrap();
+        assert_eq!(resp.ids, vec![new_id]);
+        assert_eq!(resp.dists, vec![0.0]);
+        // Double delete errors but does not poison the server.
+        let ack = h.delete(victim).unwrap();
+        assert!(ack.result.is_err());
+        let snap = server.shutdown();
+        assert_eq!((snap.inserts, snap.deletes, snap.mutation_errors), (1, 1, 1));
+        assert_eq!(snap.live_points, 400); // 400 - 1 deleted + 1 inserted
+        assert_eq!(snap.requests, 2, "searches counted separately from mutations");
+        // The mutations really landed in the shared index.
+        let idx = index.read().unwrap();
+        assert_eq!(idx.live_count(), 400);
+        assert!(idx.is_deleted(victim));
     }
 }

@@ -53,6 +53,27 @@ pub fn topk_pairs_for_query(
     ids: &mut Vec<u32>,
     dists: &mut Vec<f32>,
 ) -> Vec<(f32, u32)> {
+    topk_pairs_for_query_filtered(base, q, dim, metric, k, ids, dists, |_| true)
+}
+
+/// [`topk_pairs_for_query`] restricted to rows the `live` predicate
+/// accepts — how a mutable [`crate::anns::bruteforce::BruteForceIndex`]
+/// keeps tombstoned/free slots out of its scan. The predicate is a
+/// monomorphized generic, so the unfiltered path (`|_| true`) compiles to
+/// exactly the pre-mutability blocked scan; iteration order is unchanged,
+/// so tie-breaks match the per-pair path either way.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+pub fn topk_pairs_for_query_filtered(
+    base: &[f32],
+    q: &[f32],
+    dim: usize,
+    metric: Metric,
+    k: usize,
+    ids: &mut Vec<u32>,
+    dists: &mut Vec<f32>,
+    live: impl Fn(u32) -> bool,
+) -> Vec<(f32, u32)> {
     let n = base.len() / dim;
     let k = k.min(n);
     if k == 0 {
@@ -68,6 +89,9 @@ pub fn topk_pairs_for_query(
         ids.extend(start as u32..end as u32);
         metric.distance_batch(q, ids, base, dim, dists);
         for (&i, &d) in ids.iter().zip(dists.iter()) {
+            if !live(i) {
+                continue;
+            }
             let cand = (d, i);
             if pool.len() == k && cmp_asc(&cand, pool.last().unwrap()) != std::cmp::Ordering::Less
             {
@@ -135,6 +159,53 @@ mod tests {
         let q = vec![0.9];
         let got = brute_force_topk(&base, &q, 1, Metric::L2, 10);
         assert_eq!(got[0], vec![1, 0, 2, 3]);
+    }
+
+    #[test]
+    fn filtered_scan_equals_scan_of_live_subset() {
+        let dim = 8;
+        let n = 200;
+        let mut rng = Rng::new(4);
+        let base: Vec<f32> = (0..n * dim).map(|_| rng.next_gaussian_f32()).collect();
+        let q: Vec<f32> = (0..dim).map(|_| rng.next_gaussian_f32()).collect();
+        let dead: std::collections::HashSet<u32> =
+            (0..n as u32).filter(|_| rng.next_f64() < 0.3).collect();
+        let (mut ids, mut dists) = (Vec::new(), Vec::new());
+        let got = topk_pairs_for_query_filtered(
+            &base,
+            &q,
+            dim,
+            Metric::L2,
+            10,
+            &mut ids,
+            &mut dists,
+            |i| !dead.contains(&i),
+        );
+        let mut all: Vec<(f32, u32)> = (0..n as u32)
+            .filter(|i| !dead.contains(i))
+            .map(|i| {
+                let r = &base[i as usize * dim..(i as usize + 1) * dim];
+                (Metric::L2.distance(&q, r), i)
+            })
+            .collect();
+        all.sort_by(super::cmp_asc);
+        all.truncate(10);
+        assert_eq!(got, all);
+        assert!(got.iter().all(|&(_, i)| !dead.contains(&i)));
+        // The constant-true predicate is exactly the unfiltered scan.
+        let plain =
+            topk_pairs_for_query(&base, &q, dim, Metric::L2, 10, &mut ids, &mut dists);
+        let always = topk_pairs_for_query_filtered(
+            &base,
+            &q,
+            dim,
+            Metric::L2,
+            10,
+            &mut ids,
+            &mut dists,
+            |_| true,
+        );
+        assert_eq!(plain, always);
     }
 
     #[test]

@@ -27,10 +27,19 @@ pub struct QuantizedStore {
 }
 
 impl QuantizedStore {
-    /// Quantize `data` (row-major `[n, dim]` f32).
+    /// Quantize `data` (row-major `[n, dim]` f32), fitting the scale from
+    /// the data (robust quantile).
     pub fn build(data: &[f32], dim: usize) -> QuantizedStore {
+        Self::with_scale(data, dim, choose_scale(data))
+    }
+
+    /// Quantize `data` under an **explicit** scale — how a persisted index
+    /// restores its store: rows encode with the exact per-element formula
+    /// `build`/[`QuantizedStore::append`] use, so re-deriving codes from
+    /// the snapshot's frozen scale is bit-identical to the codes the saved
+    /// index carried (a re-fit over base+inserted rows generally is not).
+    pub fn with_scale(data: &[f32], dim: usize, scale: f32) -> QuantizedStore {
         assert!(dim > 0 && data.len() % dim == 0);
-        let scale = choose_scale(data);
         let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
         let codes = data
             .iter()
@@ -127,6 +136,29 @@ impl QuantizedStore {
             locality,
             out,
         );
+    }
+
+    /// Append one row encoded with the **frozen** build-time scale (online
+    /// insert). New points from the indexed distribution quantize with the
+    /// same error profile as the original rows; a heavily drifted stream
+    /// warrants a rebuild, which re-fits the scale from scratch.
+    pub fn append(&mut self, v: &[f32]) {
+        assert_eq!(v.len(), self.dim, "append dimension mismatch");
+        let inv = if self.scale > 0.0 { 1.0 / self.scale } else { 0.0 };
+        self.codes
+            .extend(v.iter().map(|&x| (x * inv).round().clamp(-127.0, 127.0) as i8));
+    }
+
+    /// Re-encode row `i` in place (slot recycling after consolidation).
+    pub fn reencode(&mut self, i: usize, v: &[f32]) {
+        assert_eq!(v.len(), self.dim, "reencode dimension mismatch");
+        let inv = if self.scale > 0.0 { 1.0 / self.scale } else { 0.0 };
+        for (c, &x) in self.codes[i * self.dim..(i + 1) * self.dim]
+            .iter_mut()
+            .zip(v.iter())
+        {
+            *c = (x * inv).round().clamp(-127.0, 127.0) as i8;
+        }
     }
 
     /// Bytes used by the codes (for memory reporting).
@@ -258,6 +290,42 @@ mod tests {
             let dot_naive: i32 = a.iter().zip(&b).map(|(x, y)| *x as i32 * *y as i32).sum();
             assert_eq!(l2_sq_i8(&a, &b), l2_naive, "len={len}");
             assert_eq!(dot_i8(&a, &b), dot_naive, "len={len}");
+        }
+    }
+
+    #[test]
+    fn append_and_reencode_match_build_encoding() {
+        // A row appended (or re-encoded in place) with the frozen scale
+        // must be bit-identical to what a from-scratch build of the same
+        // data produces — the guarantee that keeps online inserts on the
+        // same quantization contract as the original rows.
+        let dim = 24;
+        let data = random_data(50, dim, 8);
+        let extra = random_data(3, dim, 9);
+        let mut grown = QuantizedStore::build(&data, dim);
+        for row in extra.chunks(dim) {
+            grown.append(row);
+        }
+        assert_eq!(grown.len(), 53);
+        let mut all = data.clone();
+        all.extend_from_slice(&extra);
+        // Same scale => same codes for the appended rows.
+        let reference = QuantizedStore::build(&all, dim);
+        if (reference.scale - grown.scale).abs() < f32::EPSILON * grown.scale {
+            for i in 50..53 {
+                assert_eq!(grown.code(i), reference.code(i), "row {i}");
+            }
+        }
+        // reencode == append encoding of the same vector.
+        let mut other = grown.clone();
+        other.reencode(0, &extra[0..dim]);
+        assert_eq!(other.code(0), grown.code(50));
+        // with_scale under the frozen scale reproduces the grown store's
+        // codes bit-for-bit — the persistence restore path.
+        let restored = QuantizedStore::with_scale(&all, dim, grown.scale);
+        assert_eq!(restored.scale, grown.scale);
+        for i in 0..53 {
+            assert_eq!(restored.code(i), grown.code(i), "restored row {i}");
         }
     }
 

@@ -6,7 +6,8 @@ pub mod report;
 pub mod sweep;
 
 pub use sweep::{
-    batch_mode, measure_point, measure_point_with_mode, sweep_index, CurvePoint, SweepResult,
+    batch_mode, measure_mutations, measure_point, measure_point_with_mode, sweep_index,
+    CurvePoint, MutationStats, SweepResult,
 };
 
 /// Default ef sweep grid (ann-benchmarks-like spacing).

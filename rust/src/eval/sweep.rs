@@ -173,6 +173,62 @@ pub fn measure_point_with_mode(
     }
 }
 
+/// Measured insert/delete throughput for a mutable index — the
+/// EXPERIMENTS.md "Live updates" row. Wall-clock, sequential (the
+/// mutation path is serialized by design; concurrency belongs to the
+/// serving lock, not the index).
+#[derive(Clone, Debug)]
+pub struct MutationStats {
+    pub inserts: usize,
+    pub deletes: usize,
+    pub inserts_per_s: f64,
+    pub deletes_per_s: f64,
+    /// Wall-clock seconds of the final `consolidate()` pass.
+    pub consolidate_s: f64,
+    /// Points physically dropped by that pass.
+    pub consolidated: usize,
+}
+
+/// Apply `insert_vecs` then delete `delete_ids` (ids must be valid at the
+/// time each delete runs) then consolidate, timing each phase. Errors out
+/// on the first failed mutation — an `Unsupported` index reports instead
+/// of measuring garbage.
+pub fn measure_mutations(
+    index: &mut dyn crate::anns::MutableAnnIndex,
+    insert_vecs: &[Vec<f32>],
+    delete_ids: &[u32],
+) -> crate::Result<MutationStats> {
+    let t = Instant::now();
+    for v in insert_vecs {
+        index.insert(v)?;
+    }
+    let insert_s = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    for &id in delete_ids {
+        index.delete(id)?;
+    }
+    let delete_s = t.elapsed().as_secs_f64();
+    let t = Instant::now();
+    let consolidated = index.consolidate()?;
+    let consolidate_s = t.elapsed().as_secs_f64();
+    Ok(MutationStats {
+        inserts: insert_vecs.len(),
+        deletes: delete_ids.len(),
+        inserts_per_s: if insert_s > 0.0 {
+            insert_vecs.len() as f64 / insert_s
+        } else {
+            0.0
+        },
+        deletes_per_s: if delete_s > 0.0 {
+            delete_ids.len() as f64 / delete_s
+        } else {
+            0.0
+        },
+        consolidate_s,
+        consolidated,
+    })
+}
+
 /// Sweep an index over an ef grid.
 pub fn sweep_index(
     index: &dyn AnnIndex,
@@ -265,6 +321,38 @@ mod tests {
             assert_eq!(b.recall, per.recall, "batch size {bs}");
             assert!(b.qps > 0.0 && b.mean_latency_s > 0.0, "batch size {bs}");
         }
+    }
+
+    #[test]
+    fn mutation_throughput_measurement_well_formed() {
+        use crate::util::rng::Rng;
+        let sp = synth::spec("demo-64").unwrap();
+        let ds = synth::generate_counts(sp, 400, 5, 65);
+        let mut idx = crate::anns::hnsw::HnswIndex::build(
+            VectorSet::from_dataset(&ds),
+            &crate::variants::ConstructionKnobs::default(),
+            crate::variants::SearchKnobs::default(),
+            1,
+        );
+        let mut rng = Rng::new(66);
+        let inserts: Vec<Vec<f32>> = (0..20)
+            .map(|_| (0..ds.dim).map(|_| rng.next_gaussian_f32()).collect())
+            .collect();
+        let deletes: Vec<u32> = (0..10).collect();
+        let stats = measure_mutations(&mut idx, &inserts, &deletes).unwrap();
+        assert_eq!((stats.inserts, stats.deletes), (20, 10));
+        assert_eq!(stats.consolidated, 10);
+        assert!(stats.inserts_per_s > 0.0 && stats.deletes_per_s > 0.0);
+        assert!(stats.consolidate_s >= 0.0);
+        use crate::anns::MutableAnnIndex;
+        assert_eq!(idx.live_count(), 410);
+        // An Unsupported index reports instead of measuring garbage.
+        let mut vam = crate::anns::vamana::VamanaIndex::build(
+            VectorSet::from_dataset(&ds),
+            crate::anns::vamana::VamanaParams::default(),
+            1,
+        );
+        assert!(measure_mutations(&mut vam, &inserts, &[]).is_err());
     }
 
     #[test]

@@ -1,0 +1,200 @@
+//! Shared fixtures for the integration-test binaries (`conformance.rs`,
+//! `mutation.rs`): the metric-parameterized synthetic datasets, the
+//! table of index constructors, and the per-(index, metric) recall
+//! floors. Cargo compiles this directory as a module of each test that
+//! declares `mod common;`, not as a test target of its own.
+//!
+//! The floors are **collapse detectors**, not SOTA certificates: they sit
+//! well below the recall these builds actually reach (existing unit tests
+//! assert the tighter per-index numbers) so that a broken tombstone
+//! filter, a mis-repaired graph, or a scrambled batch path fails loudly
+//! while normal seed-to-seed variance does not. Ip floors are the
+//! loosest: MIPS has no triangle inequality and the graph baselines are
+//! only parity-tested there.
+
+#![allow(dead_code)]
+
+use crinn::anns::{AnnIndex, MutableAnnIndex, VectorSet};
+use crinn::dataset::{synth, Dataset};
+use crinn::distance::Metric;
+use crinn::variants::{ConstructionKnobs, SearchKnobs, VariantConfig};
+
+/// One synthetic dataset per metric (the Ip case reuses the demo manifold
+/// under the inner-product convention — there is no Ip preset).
+pub fn metric_dataset(metric: Metric, n: usize, nq: usize, seed: u64) -> Dataset {
+    let mut ds = match metric {
+        Metric::L2 => synth::generate_counts(synth::spec("demo-64").unwrap(), n, nq, seed),
+        Metric::Angular => {
+            synth::generate_counts(synth::spec("glove-25-angular").unwrap(), n, nq, seed)
+        }
+        Metric::Ip => {
+            let mut ds =
+                synth::generate_counts(synth::spec("demo-64").unwrap(), n, nq, seed);
+            ds.metric = Metric::Ip;
+            ds
+        }
+    };
+    ds.compute_ground_truth(10);
+    ds
+}
+
+/// One row of the conformance table: how to build the index, which `ef`
+/// exercises it (IVF maps ef to nprobe, so it needs a larger budget), and
+/// the recall@10 floor per metric.
+pub struct IndexCase {
+    pub name: &'static str,
+    pub ef: usize,
+    /// recall@10 floors for (L2, Angular, Ip).
+    pub floors: (f64, f64, f64),
+    pub build: fn(VectorSet, u64) -> Box<dyn AnnIndex>,
+}
+
+pub fn floor_for(case: &IndexCase, metric: Metric) -> f64 {
+    match metric {
+        Metric::L2 => case.floors.0,
+        Metric::Angular => case.floors.1,
+        Metric::Ip => case.floors.2,
+    }
+}
+
+/// The six index types as one table — the single place the cross-index
+/// conformance loop iterates.
+pub fn static_index_cases() -> Vec<IndexCase> {
+    vec![
+        IndexCase {
+            name: "bruteforce",
+            ef: 0,
+            floors: (0.999, 0.999, 0.999),
+            build: |vs, _seed| Box::new(crinn::anns::bruteforce::BruteForceIndex::build(vs)),
+        },
+        IndexCase {
+            name: "hnsw",
+            ef: 128,
+            floors: (0.85, 0.80, 0.25),
+            build: |vs, seed| {
+                Box::new(crinn::anns::hnsw::HnswIndex::build(
+                    vs,
+                    &ConstructionKnobs::default(),
+                    SearchKnobs::crinn_discovered(),
+                    seed,
+                ))
+            },
+        },
+        IndexCase {
+            name: "glass",
+            ef: 128,
+            floors: (0.80, 0.75, 0.25),
+            build: |vs, seed| {
+                Box::new(crinn::anns::glass::GlassIndex::build(
+                    vs,
+                    VariantConfig::crinn_full(),
+                    seed,
+                ))
+            },
+        },
+        IndexCase {
+            name: "ivf",
+            ef: 256,
+            floors: (0.80, 0.70, 0.25),
+            build: |vs, seed| {
+                Box::new(crinn::anns::ivf::IvfIndex::build(
+                    vs,
+                    crinn::anns::ivf::IvfParams::default(),
+                    seed,
+                ))
+            },
+        },
+        IndexCase {
+            name: "vamana",
+            ef: 128,
+            floors: (0.75, 0.65, 0.20),
+            build: |vs, seed| {
+                Box::new(crinn::anns::vamana::VamanaIndex::build(
+                    vs,
+                    crinn::anns::vamana::VamanaParams::default(),
+                    seed,
+                ))
+            },
+        },
+        IndexCase {
+            name: "pynndescent",
+            ef: 128,
+            floors: (0.50, 0.45, 0.10),
+            build: |vs, seed| {
+                Box::new(crinn::anns::nndescent::NnDescentIndex::build(
+                    vs,
+                    crinn::anns::nndescent::NnDescentParams::pynndescent(),
+                    seed,
+                ))
+            },
+        },
+    ]
+}
+
+/// One row of the mutation table: the four natively-mutable index types.
+/// The `static_floor` is the same L2 collapse floor the conformance table
+/// uses — the acceptance bar post-consolidation recall is held to.
+pub struct MutableCase {
+    pub name: &'static str,
+    pub ef: usize,
+    pub static_floor: f64,
+    pub build: fn(VectorSet, u64) -> Box<dyn MutableAnnIndex>,
+}
+
+pub fn mutable_index_cases() -> Vec<MutableCase> {
+    vec![
+        MutableCase {
+            name: "bruteforce",
+            ef: 0,
+            static_floor: 0.999,
+            build: |vs, _seed| Box::new(crinn::anns::bruteforce::BruteForceIndex::build(vs)),
+        },
+        MutableCase {
+            name: "hnsw",
+            ef: 128,
+            static_floor: 0.85,
+            build: |vs, seed| {
+                Box::new(crinn::anns::hnsw::HnswIndex::build(
+                    vs,
+                    &ConstructionKnobs::default(),
+                    SearchKnobs::default(),
+                    seed,
+                ))
+            },
+        },
+        MutableCase {
+            name: "glass",
+            ef: 128,
+            static_floor: 0.80,
+            build: |vs, seed| {
+                Box::new(crinn::anns::glass::GlassIndex::build(
+                    vs,
+                    VariantConfig::glass_baseline(),
+                    seed,
+                ))
+            },
+        },
+        MutableCase {
+            name: "ivf",
+            ef: 256,
+            static_floor: 0.80,
+            build: |vs, seed| {
+                Box::new(crinn::anns::ivf::IvfIndex::build(
+                    vs,
+                    crinn::anns::ivf::IvfParams::default(),
+                    seed,
+                ))
+            },
+        },
+    ]
+}
+
+/// Mean recall@10 of an index over a dataset's query set at one `ef`.
+pub fn recall_at(index: &dyn AnnIndex, ds: &Dataset, ef: usize) -> f64 {
+    let mut acc = 0.0;
+    for qi in 0..ds.n_queries() {
+        let found = index.search(ds.query_vec(qi), 10, ef);
+        acc += crinn::dataset::gt::recall_at_k(&found, &ds.gt[qi], 10);
+    }
+    acc / ds.n_queries() as f64
+}

@@ -1,0 +1,130 @@
+//! Cross-index conformance suite: ONE table-driven harness that runs
+//! every index type over synthetic L2 / Angular / Ip datasets and holds
+//! each to the shared contract of the `AnnIndex` trait:
+//!
+//! 1. **Recall floor** — mean recall@10 against exact ground truth
+//!    recomputed here through `gt::topk_pairs_for_query` must clear the
+//!    per-(index, metric) collapse floor in `tests/common/mod.rs`.
+//! 2. **Batch identity** — `search_batch` is bitwise identical
+//!    (distances AND ids) to per-query `search_with_dists`, across batch
+//!    shapes: the whole query set as one batch, chunked batches with a
+//!    trailing partial chunk, and singleton batches.
+//! 3. **Projection** — ids-only `search` is exactly the id projection of
+//!    `search_with_dists`.
+//! 4. **Well-formedness** — results sorted by `(dist, id)`, distinct,
+//!    in id range.
+//!
+//! This replaces the per-index ad-hoc copies that used to live in
+//! `properties.rs` (`prop_search_batch_matches_per_query_bitwise`) with a
+//! single loop over `common::static_index_cases()` — adding an index type
+//! means adding one table row, not another hand-rolled test.
+
+mod common;
+
+use crinn::anns::VectorSet;
+use crinn::distance::Metric;
+
+fn conformance_for_metric(metric: Metric, seed: u64) {
+    let ds = common::metric_dataset(metric, 1200, 24, seed);
+    // Ground truth recomputed through the public scan entry point the
+    // issue pins: gt::topk_pairs_for_query (ds.gt comes from the same
+    // kernel via brute_force_topk; this keeps the oracle explicit).
+    let (mut idbuf, mut dbuf) = (Vec::new(), Vec::new());
+    let gt: Vec<Vec<u32>> = (0..ds.n_queries())
+        .map(|qi| {
+            crinn::dataset::gt::topk_pairs_for_query(
+                &ds.base,
+                ds.query_vec(qi),
+                ds.dim,
+                ds.metric,
+                10,
+                &mut idbuf,
+                &mut dbuf,
+            )
+            .into_iter()
+            .map(|(_, i)| i)
+            .collect()
+        })
+        .collect();
+
+    let queries: Vec<&[f32]> = (0..ds.n_queries()).map(|qi| ds.query_vec(qi)).collect();
+    for case in common::static_index_cases() {
+        let idx = (case.build)(VectorSet::from_dataset(&ds), 7);
+        assert_eq!(idx.len(), ds.n_base(), "{} {metric:?}", case.name);
+
+        // --- 1. Recall floor vs the explicit oracle.
+        let mut acc = 0.0;
+        for (qi, q) in queries.iter().enumerate() {
+            let found = idx.search(q, 10, case.ef);
+            acc += crinn::dataset::gt::recall_at_k(&found, &gt[qi], 10);
+        }
+        let recall = acc / queries.len() as f64;
+        let floor = common::floor_for(&case, metric);
+        assert!(
+            recall >= floor,
+            "{} {metric:?}: recall@10 {recall:.3} below floor {floor}",
+            case.name
+        );
+
+        // --- 2–4. Batch identity, projection, well-formedness.
+        for (k, ef) in [(10usize, case.ef.max(64)), (5, case.ef.max(16).min(64))] {
+            let per_query: Vec<Vec<(f32, u32)>> = queries
+                .iter()
+                .map(|q| idx.search_with_dists(q, k, ef))
+                .collect();
+            // Whole set as one batch.
+            assert_eq!(
+                idx.search_batch(&queries, k, ef),
+                per_query,
+                "{} {metric:?} k={k} ef={ef} (single batch)",
+                case.name
+            );
+            // Chunked batches, incl. a trailing partial chunk + singletons.
+            for bs in [1usize, 7] {
+                let chunked: Vec<Vec<(f32, u32)>> = queries
+                    .chunks(bs)
+                    .flat_map(|chunk| idx.search_batch(chunk, k, ef))
+                    .collect();
+                assert_eq!(
+                    chunked, per_query,
+                    "{} {metric:?} k={k} ef={ef} bs={bs}",
+                    case.name
+                );
+            }
+            for (qi, q) in queries.iter().enumerate() {
+                // Projection.
+                let ids: Vec<u32> = per_query[qi].iter().map(|&(_, i)| i).collect();
+                assert_eq!(idx.search(q, k, ef), ids, "{} projection", case.name);
+                // Well-formed: sorted, distinct, in range.
+                assert!(per_query[qi].len() <= k);
+                for w in per_query[qi].windows(2) {
+                    assert!(
+                        crinn::anns::heap::dist_cmp(&w[0], &w[1]) != std::cmp::Ordering::Greater,
+                        "{} {metric:?} unsorted",
+                        case.name
+                    );
+                }
+                let set: std::collections::HashSet<u32> = ids.iter().copied().collect();
+                assert_eq!(set.len(), ids.len(), "{} duplicate ids", case.name);
+                assert!(ids.iter().all(|&i| (i as usize) < ds.n_base()));
+            }
+        }
+        // Empty batch: well-formed, no output.
+        assert!(idx.search_batch(&[], 10, 64).is_empty(), "{}", case.name);
+    }
+}
+
+#[test]
+fn conformance_batch_identity_and_recall_l2() {
+    conformance_for_metric(Metric::L2, 81);
+}
+
+#[test]
+fn conformance_batch_identity_and_recall_angular() {
+    conformance_for_metric(Metric::Angular, 82);
+}
+
+#[test]
+fn conformance_batch_identity_and_recall_ip() {
+    conformance_for_metric(Metric::Ip, 83);
+}

@@ -1,0 +1,359 @@
+//! Mutation property tests — the live-traffic contract of
+//! `MutableAnnIndex` (tombstone delete + online insert + consolidation)
+//! for every natively-mutable index type, plus the coordinator's mixed
+//! search+mutation serving path.
+//!
+//! The central acceptance property: after random interleaved
+//! insert/delete/search sequences on HNSW, GLASS and IVF (and the
+//! brute-force reference), a tombstoned id NEVER appears in
+//! `search`/`search_batch` results, returned distances stay exact against
+//! an externally-tracked mirror of the live set, and post-`consolidate()`
+//! recall@10 over the live set clears the same static-build floor that
+//! `tests/conformance.rs` asserts.
+
+mod common;
+
+use crinn::anns::{MutableAnnIndex, VectorSet};
+use crinn::distance::Metric;
+use crinn::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Exact top-10 of the *live* mirror for one query (the oracle the
+/// mutated index is graded against).
+fn live_topk(live: &BTreeMap<u32, Vec<f32>>, q: &[f32], metric: Metric, k: usize) -> Vec<u32> {
+    let mut all: Vec<(f32, u32)> = live
+        .iter()
+        .map(|(&id, v)| (metric.distance(q, v), id))
+        .collect();
+    all.sort_by(crinn::anns::heap::dist_cmp);
+    all.truncate(k);
+    all.into_iter().map(|(_, i)| i).collect()
+}
+
+/// Assert one round of searches: only live ids, exact distances, batch ==
+/// per-query bitwise.
+fn check_searches(
+    idx: &dyn MutableAnnIndex,
+    live: &BTreeMap<u32, Vec<f32>>,
+    queries: &[&[f32]],
+    metric: Metric,
+    ef: usize,
+    label: &str,
+) {
+    let per_query: Vec<Vec<(f32, u32)>> = queries
+        .iter()
+        .map(|q| idx.search_with_dists(q, 10, ef))
+        .collect();
+    let batched = idx.search_batch(queries, 10, ef);
+    assert_eq!(batched, per_query, "{label}: batch != per-query under mutation");
+    for (q, res) in queries.iter().zip(&per_query) {
+        for &(d, id) in res {
+            let v = live.get(&id).unwrap_or_else(|| {
+                panic!("{label}: non-live id {id} surfaced (tombstone leak)")
+            });
+            assert!(!idx.is_deleted(id), "{label}: is_deleted({id}) disagrees");
+            assert_eq!(d, metric.distance(q, v), "{label}: inexact distance for {id}");
+        }
+        // Distinct ids, sorted by (dist, id).
+        let ids: std::collections::HashSet<u32> = res.iter().map(|&(_, i)| i).collect();
+        assert_eq!(ids.len(), res.len(), "{label}: duplicate ids");
+        for w in res.windows(2) {
+            assert!(
+                crinn::anns::heap::dist_cmp(&w[0], &w[1]) != std::cmp::Ordering::Greater,
+                "{label}: unsorted results"
+            );
+        }
+    }
+}
+
+/// The acceptance-criterion property, per index type and seed.
+fn interleaved_property(case: &common::MutableCase, seed: u64) {
+    let label = format!("{} seed {seed}", case.name);
+    let ds = common::metric_dataset(Metric::L2, 900, 20, 1000 + seed);
+    let mut idx = (case.build)(VectorSet::from_dataset(&ds), 7 + seed);
+    let metric = ds.metric;
+    let dim = ds.dim;
+
+    // External mirror of the live set: id -> vector.
+    let mut live: BTreeMap<u32, Vec<f32>> = (0..ds.n_base() as u32)
+        .map(|i| (i, ds.base_vec(i as usize).to_vec()))
+        .collect();
+    let mut rng = Rng::new(0xD15E ^ seed);
+    let queries: Vec<&[f32]> = (0..ds.n_queries()).map(|qi| ds.query_vec(qi)).collect();
+
+    for step in 0..120 {
+        match rng.next_below(10) {
+            0..=3 => {
+                // Insert a fresh vector; the returned id must be a slot the
+                // mirror does not consider live.
+                let v: Vec<f32> = (0..dim).map(|_| rng.next_gaussian_f32()).collect();
+                let id = idx.insert(&v).unwrap_or_else(|e| panic!("{label}: insert: {e:#}"));
+                assert!(
+                    live.insert(id, v).is_none(),
+                    "{label}: insert returned live id {id}"
+                );
+            }
+            4..=6 => {
+                // Delete a random live id (keep ≥ half the set alive so
+                // recall floors stay meaningful).
+                if live.len() > ds.n_base() / 2 {
+                    let keys: Vec<u32> = live.keys().copied().collect();
+                    let id = keys[rng.next_below(keys.len())];
+                    idx.delete(id).unwrap_or_else(|e| panic!("{label}: delete {id}: {e:#}"));
+                    live.remove(&id);
+                    assert!(idx.is_deleted(id), "{label}: delete({id}) not visible");
+                }
+            }
+            _ => {
+                let qi = rng.next_below(queries.len());
+                check_searches(&*idx, &live, &queries[qi..qi + 1], metric, case.ef, &label);
+            }
+        }
+        assert_eq!(idx.live_count(), live.len(), "{label}: live_count drift at {step}");
+        if step == 60 {
+            // Mid-stream consolidation; everything must keep holding.
+            idx.consolidate().unwrap_or_else(|e| panic!("{label}: consolidate: {e:#}"));
+            assert_eq!(idx.deleted_count(), 0, "{label}: pending after consolidate");
+            check_searches(&*idx, &live, &queries, metric, case.ef, &label);
+        }
+    }
+
+    // Final consolidation, then the recall bar: recall@10 over the live
+    // set must clear the same static-build floor conformance.rs asserts.
+    idx.consolidate().unwrap();
+    check_searches(&*idx, &live, &queries, metric, case.ef, &label);
+    let mut acc = 0.0;
+    for q in &queries {
+        let found: Vec<u32> = idx.search(q, 10, case.ef);
+        let gt = live_topk(&live, q, metric, 10);
+        acc += crinn::dataset::gt::recall_at_k(&found, &gt, 10);
+    }
+    let recall = acc / queries.len() as f64;
+    assert!(
+        recall >= case.static_floor,
+        "{label}: post-consolidate live-set recall {recall:.3} below static floor {}",
+        case.static_floor
+    );
+}
+
+#[test]
+fn mutation_interleaved_property_bruteforce() {
+    for seed in 0..2 {
+        interleaved_property(&common::mutable_index_cases()[0], seed);
+    }
+}
+
+#[test]
+fn mutation_interleaved_property_hnsw() {
+    for seed in 0..2 {
+        interleaved_property(&common::mutable_index_cases()[1], seed);
+    }
+}
+
+#[test]
+fn mutation_interleaved_property_glass() {
+    for seed in 0..2 {
+        interleaved_property(&common::mutable_index_cases()[2], seed);
+    }
+}
+
+#[test]
+fn mutation_interleaved_property_ivf() {
+    for seed in 0..2 {
+        interleaved_property(&common::mutable_index_cases()[3], seed);
+    }
+}
+
+/// Consolidation result-preservation, in its two strengths:
+/// * IVF + brute force: **bitwise for every query even with pending
+///   tombstones** (posting-list compaction keeps surviving order; the
+///   flat scan has no structure at all);
+/// * HNSW + GLASS (graph repair rewires edges, so post-repair results may
+///   legitimately differ): a consolidate with **zero pending tombstones
+///   is a strict no-op** — bitwise-identical results.
+#[test]
+fn mutation_consolidate_preserves_untouched_results() {
+    let ds = common::metric_dataset(Metric::L2, 800, 20, 500);
+    let queries: Vec<&[f32]> = (0..ds.n_queries()).map(|qi| ds.query_vec(qi)).collect();
+    for case in common::mutable_index_cases() {
+        let mut idx = (case.build)(VectorSet::from_dataset(&ds), 7);
+        // Delete a spread of ids.
+        for id in (0..800u32).step_by(37) {
+            idx.delete(id).unwrap();
+        }
+        if matches!(case.name, "bruteforce" | "ivf") {
+            let before: Vec<_> = queries
+                .iter()
+                .map(|q| idx.search_with_dists(q, 10, case.ef))
+                .collect();
+            assert!(idx.consolidate().unwrap() > 0);
+            let after: Vec<_> = queries
+                .iter()
+                .map(|q| idx.search_with_dists(q, 10, case.ef))
+                .collect();
+            assert_eq!(before, after, "{}: consolidate changed results", case.name);
+        } else {
+            idx.consolidate().unwrap();
+        }
+        // Second consolidate: no pending => strict no-op for everyone.
+        let before: Vec<_> = queries
+            .iter()
+            .map(|q| idx.search_with_dists(q, 10, case.ef))
+            .collect();
+        assert_eq!(idx.consolidate().unwrap(), 0);
+        let after: Vec<_> = queries
+            .iter()
+            .map(|q| idx.search_with_dists(q, 10, case.ef))
+            .collect();
+        assert_eq!(before, after, "{}: empty consolidate not a no-op", case.name);
+    }
+}
+
+/// Vamana and NNDescent report `Unsupported` from every mutating method —
+/// the uniform update path fails the request, never the process — while
+/// the read-side accessors stay at the static defaults.
+#[test]
+fn mutation_unsupported_for_vamana_and_nndescent() {
+    let ds = common::metric_dataset(Metric::L2, 300, 5, 501);
+    let mut vam = crinn::anns::vamana::VamanaIndex::build(
+        VectorSet::from_dataset(&ds),
+        crinn::anns::vamana::VamanaParams::default(),
+        1,
+    );
+    let mut nnd = crinn::anns::nndescent::NnDescentIndex::build(
+        VectorSet::from_dataset(&ds),
+        crinn::anns::nndescent::NnDescentParams::default(),
+        1,
+    );
+    let v = ds.base_vec(0).to_vec();
+    for idx in [&mut vam as &mut dyn MutableAnnIndex, &mut nnd as &mut dyn MutableAnnIndex] {
+        let err = idx.insert(&v).expect_err("insert must be unsupported");
+        assert!(format!("{err:#}").contains("Unsupported"));
+        assert!(idx.delete(0).is_err());
+        assert!(idx.consolidate().is_err());
+        assert_eq!(idx.live_count(), 300);
+        assert_eq!(idx.deleted_count(), 0);
+        assert!(!idx.is_deleted(0));
+        // Searches are untouched by the failed mutations.
+        assert_eq!(idx.search(&v, 1, 64)[0], 0);
+    }
+}
+
+/// Mixed search+mutation batches through the server: responses keyed back
+/// to the right requests. Each search carries a distinct `k`, so a reply
+/// routed to the wrong receiver is caught by its length; distances are
+/// checked against the row store, which mutations never reorder
+/// (tombstones filter, inserts append/recycle).
+#[test]
+fn mutation_mixed_batches_through_server_keyed_correctly() {
+    use crinn::coordinator::{Server, ServerConfig, SharedMutableIndex};
+    use std::sync::{Arc, RwLock};
+
+    let ds = common::metric_dataset(Metric::L2, 500, 30, 502);
+    let index: SharedMutableIndex = Arc::new(RwLock::new(Box::new(
+        crinn::anns::bruteforce::BruteForceIndex::build(VectorSet::from_dataset(&ds)),
+    )));
+    let server = Server::start_mutable(
+        index.clone(),
+        ServerConfig {
+            workers: 2,
+            queue_depth: 512,
+            batch: crinn::coordinator::batcher::BatchPolicy {
+                max_batch: 16,
+                max_wait: std::time::Duration::from_millis(2),
+            },
+        },
+    );
+    let h = server.handle();
+
+    // Burst phase: interleave searches (distinct k per request) with
+    // inserts and deletes, collect everything afterwards. Mutations may
+    // land before or after any given search (concurrent workers), so the
+    // assertions here are the timing-robust ones: reply keying (k and
+    // query identity) and distance exactness against the append-only row
+    // store.
+    let mut rng = Rng::new(503);
+    let mut search_pending = Vec::new();
+    let mut insert_pending = Vec::new();
+    let mut delete_pending = Vec::new();
+    let mut expected_inserts = 0u64;
+    let mut expected_deletes = 0u64;
+    for i in 0..60usize {
+        match i % 3 {
+            0 => {
+                let k = 1 + (i / 3) % 8;
+                let qi = rng.next_below(ds.n_queries());
+                let rx = h.submit(ds.query_vec(qi).to_vec(), k, 0).expect("accepted");
+                search_pending.push((qi, k, rx));
+            }
+            1 => {
+                let v: Vec<f32> = (0..ds.dim).map(|_| rng.next_gaussian_f32()).collect();
+                let rx = h.submit_insert(v.clone()).expect("accepted");
+                insert_pending.push((v, rx));
+                expected_inserts += 1;
+            }
+            _ => {
+                // Distinct original ids: never double-deleted.
+                let id = (i / 3) as u32;
+                delete_pending.push(h.submit_delete(id).expect("accepted"));
+                expected_deletes += 1;
+            }
+        }
+    }
+    // Collect mutation acks first: a complete id -> vector map for every
+    // row the searches might have seen. Original rows never move and
+    // deletes never rewrite them (tombstones only; no consolidate here),
+    // so ds rows stay authoritative for ids < 500 and the insert acks
+    // cover the rest.
+    let mut inserted: BTreeMap<u32, Vec<f32>> = BTreeMap::new();
+    for (v, rx) in insert_pending {
+        let resp = rx.recv().expect("insert answered");
+        let id = resp.result.expect("insert failed");
+        assert!(inserted.insert(id, v).is_none(), "duplicate insert id {id}");
+    }
+    for rx in delete_pending {
+        let resp = rx.recv().expect("delete answered");
+        assert!(resp.result.is_ok(), "delete failed: {:?}", resp.result);
+    }
+    for (qi, k, rx) in search_pending {
+        let resp = rx.recv().expect("search answered");
+        assert_eq!(resp.ids.len(), k, "response keyed to the wrong request");
+        assert_eq!(resp.dists.len(), k);
+        let q = ds.query_vec(qi);
+        for (&id, &d) in resp.ids.iter().zip(&resp.dists) {
+            let row: &[f32] = if (id as usize) < ds.n_base() {
+                ds.base_vec(id as usize)
+            } else {
+                inserted
+                    .get(&id)
+                    .unwrap_or_else(|| panic!("unknown id {id} in response"))
+            };
+            assert_eq!(d, ds.metric.distance(q, row), "query {qi} id {id}");
+        }
+    }
+    let snap = server.shutdown();
+    assert_eq!(snap.inserts, expected_inserts);
+    assert_eq!(snap.deletes, expected_deletes);
+    assert_eq!(snap.mutation_errors, 0);
+    assert_eq!(snap.requests, 20);
+    assert_eq!(
+        snap.live_points,
+        500 + expected_inserts - expected_deletes,
+        "live gauge must reconcile with applied mutations"
+    );
+    // The sequential epilogue is fully deterministic: an acked delete is
+    // invisible to the next search, an acked insert is findable.
+    let index2 = index.clone();
+    let server = Server::start_mutable(index2, ServerConfig::default());
+    let h = server.handle();
+    let probe = ds.query_vec(3).to_vec();
+    let ack = h.insert(probe.clone()).unwrap();
+    let new_id = ack.result.expect("insert ok");
+    let resp = h.query(probe.clone(), 1, 0).unwrap();
+    assert_eq!((resp.ids[0], resp.dists[0]), (new_id, 0.0));
+    let ack = h.delete(new_id).unwrap();
+    assert_eq!(ack.result, Ok(new_id));
+    let resp = h.query(probe, 1, 0).unwrap();
+    assert_ne!(resp.ids[0], new_id, "acked delete resurfaced");
+    server.shutdown();
+}

@@ -215,100 +215,10 @@ fn prop_batch_kernels_match_per_pair() {
     });
 }
 
-/// Acceptance criterion for the batch-first pipeline: `search_batch` is
-/// bitwise identical — distances AND ids — to per-query
-/// `search_with_dists`, for **all six index types** under L2, Angular and
-/// Ip, across several batch shapes (the whole query set as one batch,
-/// chunked batches with a trailing partial chunk, and one-element
-/// batches). This is the trait-level extension of the kernel-level
-/// batch==per-pair identity.
-#[test]
-fn prop_search_batch_matches_per_query_bitwise() {
-    // No ground truth needed — the property is batch==per-query identity,
-    // not recall.
-    let mut datasets = Vec::new();
-    let sp = synth::spec("demo-64").unwrap();
-    datasets.push(synth::generate_counts(sp, 500, 24, 81));
-    let sp = synth::spec("glove-25-angular").unwrap();
-    datasets.push(synth::generate_counts(sp, 500, 24, 82));
-    // No Ip preset: reuse the demo manifold under the Ip convention.
-    let sp = synth::spec("demo-64").unwrap();
-    let mut ip = synth::generate_counts(sp, 500, 24, 83);
-    ip.metric = Metric::Ip;
-    datasets.push(ip);
-
-    for ds in &datasets {
-        let vs = || VectorSet::from_dataset(ds);
-        let indexes: Vec<Box<dyn AnnIndex>> = vec![
-            Box::new(crinn::anns::bruteforce::BruteForceIndex::build(vs())),
-            Box::new(crinn::anns::hnsw::HnswIndex::build(
-                vs(),
-                &crinn::variants::ConstructionKnobs::default(),
-                crinn::variants::SearchKnobs::crinn_discovered(),
-                7,
-            )),
-            Box::new(crinn::anns::glass::GlassIndex::build(
-                vs(),
-                VariantConfig::crinn_full(),
-                7,
-            )),
-            Box::new(crinn::anns::ivf::IvfIndex::build(
-                vs(),
-                crinn::anns::ivf::IvfParams::default(),
-                7,
-            )),
-            Box::new(crinn::anns::vamana::VamanaIndex::build(
-                vs(),
-                crinn::anns::vamana::VamanaParams::default(),
-                7,
-            )),
-            Box::new(crinn::anns::nndescent::NnDescentIndex::build(
-                vs(),
-                crinn::anns::nndescent::NnDescentParams::pynndescent(),
-                7,
-            )),
-        ];
-        let queries: Vec<&[f32]> = (0..ds.n_queries()).map(|qi| ds.query_vec(qi)).collect();
-        for idx in &indexes {
-            for (k, ef) in [(10usize, 64usize), (5, 16)] {
-                let per_query: Vec<Vec<(f32, u32)>> = queries
-                    .iter()
-                    .map(|q| idx.search_with_dists(q, k, ef))
-                    .collect();
-                // Whole set as one batch.
-                assert_eq!(
-                    idx.search_batch(&queries, k, ef),
-                    per_query,
-                    "{} {:?} k={k} ef={ef} (single batch)",
-                    idx.name(),
-                    ds.metric
-                );
-                // Chunked batches, including a trailing partial chunk and
-                // singleton batches.
-                for bs in [1usize, 7] {
-                    let chunked: Vec<Vec<(f32, u32)>> = queries
-                        .chunks(bs)
-                        .flat_map(|chunk| idx.search_batch(chunk, k, ef))
-                        .collect();
-                    assert_eq!(
-                        chunked,
-                        per_query,
-                        "{} {:?} k={k} ef={ef} bs={bs}",
-                        idx.name(),
-                        ds.metric
-                    );
-                }
-                // Ids-only `search` is exactly the projection.
-                for (qi, q) in queries.iter().enumerate() {
-                    let ids: Vec<u32> = per_query[qi].iter().map(|&(_, i)| i).collect();
-                    assert_eq!(idx.search(q, k, ef), ids, "{} projection", idx.name());
-                }
-            }
-        }
-        // Empty batch: well-formed, no output.
-        assert!(indexes[1].search_batch(&[], 10, 64).is_empty());
-    }
-}
+// NOTE: the per-index batch==per-query bitwise identity that used to live
+// here (`prop_search_batch_matches_per_query_bitwise`) moved into the
+// table-driven cross-index suite in `tests/conformance.rs`, which runs it
+// together with the recall-floor checks over one shared index table.
 
 /// Parallel query evaluation is bit-identical to sequential: the same
 /// index answers the same query set through a forced 4-thread
