@@ -1,6 +1,6 @@
 # Convenience targets. Rust work happens in rust/ (see README.md §Quickstart).
 
-.PHONY: build test bench bench-distance artifacts clean
+.PHONY: build test test-filtered bench bench-distance bench-filtered artifacts clean
 
 build:
 	cd rust && cargo build --release
@@ -16,6 +16,15 @@ bench:
 # EXPERIMENTS.md §Perf).
 bench-distance:
 	cd rust && cargo bench --bench micro_distance
+
+# Filtered-search conformance + property tests (the CI filtered lane).
+test-filtered:
+	cd rust && CRINN_THREADS=2 cargo test -q filtered && CRINN_THREADS=2 cargo test -q conformance
+
+# Filtered-QPS vs selectivity sweep -> reports/filtered_sweep.csv
+# (EXPERIMENTS.md §Filtered-recall).
+bench-filtered:
+	cd rust && cargo bench --bench filtered_sweep
 
 # Lower the L2 JAX graphs + L1 Pallas kernels to HLO text artifacts
 # consumed by rust/src/runtime. Needs JAX; see DESIGN.md §Hardware-Adaptation.

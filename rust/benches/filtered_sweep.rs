@@ -1,0 +1,74 @@
+//! Filtered-QPS vs selectivity sweep — the bench hook for the filtered
+//! search path (DESIGN.md §Filtered-search).
+//!
+//! For each bench dataset, builds the Figure-1 algorithm roster and
+//! measures filtered recall@k / QPS against *filtered* ground truth at
+//! three selectivity tiers (~90%, ~10%, ~1% of the base set matching).
+//! The 1% tier typically lands below the brute-force fallback threshold,
+//! so this sweep exercises both the admit-filtered beam path and the
+//! exact fallback. Emits `reports/filtered_sweep.csv` with one row per
+//! (dataset, algorithm, tier, ef).
+//!
+//! Scale/grid env overrides as in the other benches: `CRINN_BENCH_N`,
+//! `CRINN_BENCH_QUERIES`, `CRINN_BENCH_EF`, `CRINN_BENCH_DATASETS`.
+
+use crinn::anns::FilterBitset;
+use crinn::eval::harness;
+use crinn::eval::report;
+use std::fmt::Write as _;
+
+fn main() -> crinn::Result<()> {
+    let k = crinn::DEFAULT_K;
+    let ef_grid = harness::bench_ef_grid();
+    let mut csv = String::from(
+        "dataset,algorithm,filter,selectivity,popcount,k,ef,recall,qps,mean_latency_s,p99_latency_s\n",
+    );
+    for name in harness::bench_dataset_names() {
+        let ds = harness::bench_dataset(&name, k)?;
+        eprintln!(
+            "== {} (n={}, {} queries, k={k}) ==",
+            ds.name,
+            ds.n_base(),
+            ds.n_queries()
+        );
+        // Modulus predicates over the id space: selectivity is exact and
+        // reproducible without a metadata store in the loop.
+        let tiers: Vec<(&str, FilterBitset)> = vec![
+            ("sel90", FilterBitset::from_predicate(ds.n_base(), |id| id % 10 != 0)),
+            ("sel10", FilterBitset::from_predicate(ds.n_base(), |id| id % 10 == 0)),
+            ("sel1", FilterBitset::from_predicate(ds.n_base(), |id| id % 100 == 0)),
+        ];
+        for (label, builder) in harness::algorithms() {
+            let index = builder(&ds, 42);
+            for (tier, filter) in &tiers {
+                let selectivity = filter.count() as f64 / ds.n_base().max(1) as f64;
+                for &ef in &ef_grid {
+                    let p = crinn::eval::measure_filtered_point(index.as_ref(), &ds, k, ef, filter);
+                    eprintln!(
+                        "  [{label}] {tier} ef={ef:<4} recall={:.4} qps={:.0}",
+                        p.recall, p.qps
+                    );
+                    let _ = writeln!(
+                        csv,
+                        "{},{},{},{:.4},{},{},{},{:.6},{:.2},{:.9},{:.9}",
+                        ds.name,
+                        label,
+                        tier,
+                        selectivity,
+                        filter.count(),
+                        k,
+                        ef,
+                        p.recall,
+                        p.qps,
+                        p.mean_latency_s,
+                        p.p99_latency_s
+                    );
+                }
+            }
+        }
+    }
+    let path = harness::reports_dir().join("filtered_sweep.csv");
+    report::save(&path, &csv)?;
+    eprintln!("wrote {}", path.display());
+    Ok(())
+}

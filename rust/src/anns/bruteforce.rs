@@ -5,6 +5,7 @@
 //! AOT Pallas scan artifact — the integration tests cross-check the Rust
 //! scalar scan against the compiled kernel's results.
 
+use crate::anns::filter::FilterBitset;
 use crate::anns::scratch::ScratchPool;
 use crate::anns::tombstones::Tombstones;
 use crate::anns::{AnnIndex, MutableAnnIndex, VectorSet};
@@ -68,6 +69,29 @@ impl BruteForceIndex {
             )
         }
     }
+
+    /// Filtered variant of [`Self::search_one`]: the predicate threads
+    /// straight into the blocked oracle scan, so filtered brute force IS
+    /// the filtered ground truth. No fallback threshold — this already is
+    /// the fallback.
+    fn search_one_filtered(
+        &self,
+        query: &[f32],
+        k: usize,
+        ctx: &mut crate::anns::hnsw::search::SearchContext,
+        filter: &FilterBitset,
+    ) -> Vec<(f32, u32)> {
+        crate::dataset::gt::topk_pairs_for_query_filtered(
+            &self.vectors.data,
+            query,
+            self.vectors.dim,
+            self.vectors.metric,
+            k,
+            &mut ctx.batch,
+            &mut ctx.dists,
+            |i| self.deleted.is_live(i) && filter.matches(i),
+        )
+    }
 }
 
 impl AnnIndex for BruteForceIndex {
@@ -87,6 +111,37 @@ impl AnnIndex for BruteForceIndex {
         queries
             .iter()
             .map(|q| self.search_one(q, k, &mut ctx))
+            .collect()
+    }
+
+    fn search_filtered_with_dists(
+        &self,
+        query: &[f32],
+        k: usize,
+        _ef: usize,
+        filter: Option<&FilterBitset>,
+    ) -> Vec<(f32, u32)> {
+        let mut ctx = self.scratch.checkout(0);
+        match filter {
+            None => self.search_one(query, k, &mut ctx),
+            Some(f) => self.search_one_filtered(query, k, &mut ctx, f),
+        }
+    }
+
+    fn search_filtered_batch(
+        &self,
+        queries: &[&[f32]],
+        k: usize,
+        _ef: usize,
+        filter: Option<&FilterBitset>,
+    ) -> Vec<Vec<(f32, u32)>> {
+        let mut ctx = self.scratch.checkout(0);
+        queries
+            .iter()
+            .map(|q| match filter {
+                None => self.search_one(q, k, &mut ctx),
+                Some(f) => self.search_one_filtered(q, k, &mut ctx, f),
+            })
             .collect()
     }
 
@@ -145,6 +200,34 @@ mod tests {
         let idx = BruteForceIndex::build(vs);
         assert_eq!(idx.search(&[1.4], 2, 0), vec![1, 2]);
         assert_eq!(idx.len(), 4);
+    }
+
+    #[test]
+    fn filtered_bruteforce_is_the_filtered_oracle() {
+        let vs = VectorSet::new(vec![0.0, 1.0, 2.0, 3.0, 10.0], 1, Metric::L2);
+        let mut idx = BruteForceIndex::build(vs);
+        // filter=None identical to the plain scan.
+        assert_eq!(
+            idx.search_filtered_with_dists(&[1.4], 3, 0, None),
+            idx.search_with_dists(&[1.4], 3, 0)
+        );
+        // Allow odd ids only.
+        let odd = FilterBitset::from_predicate(5, |id| id % 2 == 1);
+        assert_eq!(idx.search_filtered(&[1.4], 3, 0, Some(&odd)), vec![1, 3]);
+        // A tombstoned matching id drops out.
+        idx.delete(1).unwrap();
+        assert_eq!(idx.search_filtered(&[1.4], 3, 0, Some(&odd)), vec![3]);
+        // Filtered batch == filtered per-query (including the None arm).
+        let queries: Vec<&[f32]> = vec![&[1.4], &[9.0]];
+        for f in [None, Some(&odd)] {
+            let batched = idx.search_filtered_batch(&queries, 2, 0, f);
+            for (qi, q) in queries.iter().enumerate() {
+                assert_eq!(batched[qi], idx.search_filtered_with_dists(q, 2, 0, f));
+            }
+        }
+        // Empty filter: no results, no panic.
+        let nothing = FilterBitset::new(5);
+        assert!(idx.search_filtered(&[1.4], 3, 0, Some(&nothing)).is_empty());
     }
 
     #[test]

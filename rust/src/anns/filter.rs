@@ -1,0 +1,252 @@
+//! Per-id search filters: the scan/beam-time predicate generalized from
+//! "not deleted" ([`crate::anns::tombstones::Tombstones`]) to arbitrary
+//! allow-lists.
+//!
+//! A [`FilterBitset`] is the compiled form of a query predicate ("tenant
+//! = X ∧ tag ∈ S"): one bit per id, **set = matching/allowed** — the
+//! inverse convention of `Tombstones` (set = dead), because a filter is
+//! an allow-list while tombstones are a deny-list. Out-of-range ids never
+//! match, so a bitset compiled against a snapshot of the metadata store
+//! is safe to apply to an index that has since grown: freshly inserted
+//! points are simply invisible to the stale filter (deny-safe), never
+//! spuriously surfaced.
+//!
+//! [`Admit`] conjoins the two predicates — liveness and filter — into the
+//! single result-admission check the beams and scans apply at
+//! `results.push`. Both sides are `Option`s whose `None` compiles to the
+//! constant-true arm, so the unfiltered path keeps the exact behavior
+//! (and results) it had before filters existed.
+
+use crate::anns::tombstones::Tombstones;
+
+/// Default popcount threshold below which filtered graph search routes to
+/// exact brute force over the matching ids (see
+/// [`crate::anns::AnnIndex::search_filtered_with_dists`]): with only a
+/// few dozen candidates, a blocked exact scan is both faster and exact,
+/// while a beam would spend its budget traversing non-matching regions.
+/// Exposed as a per-index tunable (`set_filtered_fallback`); measured by
+/// `eval::sweep::measure_filtered_point`.
+pub const DEFAULT_FILTERED_FALLBACK: usize = 64;
+
+/// An allow-list bitset over ids `0..len`: bit set = id matches the
+/// filter. Storage mirrors [`Tombstones`] (LSB-first u64 words, an
+/// incrementally maintained popcount) with the inverted semantics.
+#[derive(Clone, Debug)]
+pub struct FilterBitset {
+    words: Vec<u64>,
+    n: usize,
+    /// Number of set (matching) bits — maintained incrementally so the
+    /// selectivity-fallback decision is O(1) per query.
+    count: usize,
+}
+
+impl FilterBitset {
+    /// An empty (match-nothing) filter over `n` ids.
+    pub fn new(n: usize) -> FilterBitset {
+        FilterBitset {
+            words: vec![0u64; n.div_ceil(64)],
+            n,
+            count: 0,
+        }
+    }
+
+    /// Compile a predicate into a bitset over `n` ids.
+    pub fn from_predicate(n: usize, pred: impl Fn(u32) -> bool) -> FilterBitset {
+        let mut f = FilterBitset::new(n);
+        for id in 0..n as u32 {
+            if pred(id) {
+                f.set(id);
+            }
+        }
+        f
+    }
+
+    /// Number of ids the bitset spans (NOT the number of matches).
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Number of matching ids — the popcount the selectivity fallback
+    /// tests against its threshold.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Does `id` match? Out-of-range ids never match (deny-safe for
+    /// points inserted after the filter was compiled).
+    #[inline]
+    pub fn matches(&self, id: u32) -> bool {
+        self.words
+            .get(id as usize / 64)
+            .is_some_and(|w| (w >> (id % 64)) & 1 == 1)
+    }
+
+    /// Mark `id` as matching. Returns false if it already matched.
+    pub fn set(&mut self, id: u32) -> bool {
+        assert!((id as usize) < self.n, "filter id {id} out of range {}", self.n);
+        let (w, b) = (id as usize / 64, id % 64);
+        if (self.words[w] >> b) & 1 == 1 {
+            return false;
+        }
+        self.words[w] |= 1 << b;
+        self.count += 1;
+        true
+    }
+
+    /// Unmark `id`. Returns false if it was not matching.
+    pub fn clear(&mut self, id: u32) -> bool {
+        let (w, b) = (id as usize / 64, id % 64);
+        match self.words.get_mut(w) {
+            Some(word) if (*word >> b) & 1 == 1 => {
+                *word &= !(1 << b);
+                self.count -= 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Matching ids, ascending — the candidate list the brute-force
+    /// fallback scans.
+    pub fn iter_set(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.count);
+        for (wi, &word) in self.words.iter().enumerate() {
+            let mut w = word;
+            while w != 0 {
+                out.push((wi * 64 + w.trailing_zeros() as usize) as u32);
+                w &= w - 1;
+            }
+        }
+        out
+    }
+
+    /// Raw words (LSB-first), for persistence/translation.
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Rebuild from raw words with hostile-input validation: the word
+    /// count must match `n`, no phantom bit may mark an id ≥ `n`, and the
+    /// popcount is recomputed (never trusted).
+    pub fn from_words(words: Vec<u64>, n: usize) -> Result<FilterBitset, String> {
+        if words.len() != n.div_ceil(64) {
+            return Err(format!(
+                "filter bitset has {} words for {n} ids (want {})",
+                words.len(),
+                n.div_ceil(64)
+            ));
+        }
+        if n % 64 != 0 {
+            if let Some(&last) = words.last() {
+                if last >> (n % 64) != 0 {
+                    return Err(format!("filter bitset marks ids beyond {n}"));
+                }
+            }
+        }
+        let count = words.iter().map(|w| w.count_ones() as usize).sum();
+        Ok(FilterBitset { words, n, count })
+    }
+}
+
+/// The conjoined result-admission predicate a beam or scan applies at
+/// `results.push`: an id is admitted iff it is live (not tombstoned) AND
+/// matches the filter. Frontier admission never consults this — dead and
+/// non-matching nodes stay traversable (the PR 5 tombstone discipline),
+/// which is what keeps recall usable under selective filters.
+#[derive(Clone, Copy, Default)]
+pub struct Admit<'a> {
+    /// Deny-list: set bit = deleted. `None` = everything live.
+    pub deleted: Option<&'a Tombstones>,
+    /// Allow-list: set bit = matching. `None` = everything matches.
+    pub filter: Option<&'a FilterBitset>,
+}
+
+impl<'a> Admit<'a> {
+    /// The unfiltered predicate (constant true).
+    pub fn none() -> Admit<'static> {
+        Admit {
+            deleted: None,
+            filter: None,
+        }
+    }
+
+    /// Liveness only — exactly the predicate the pre-filter
+    /// `search_filtered(.., Option<&Tombstones>)` signature carried.
+    pub fn live_only(deleted: Option<&'a Tombstones>) -> Admit<'a> {
+        Admit {
+            deleted,
+            filter: None,
+        }
+    }
+
+    #[inline]
+    pub fn allows(&self, id: u32) -> bool {
+        self.deleted.map_or(true, |t| !t.contains(id))
+            && self.filter.map_or(true, |f| f.matches(id))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn filtered_bitset_set_clear_count_matches() {
+        let mut f = FilterBitset::new(130);
+        assert_eq!(f.count(), 0);
+        assert!(!f.matches(0));
+        assert!(f.set(0));
+        assert!(f.set(64));
+        assert!(f.set(129));
+        assert!(!f.set(129), "double set must report no-op");
+        assert_eq!(f.count(), 3);
+        assert!(f.matches(0) && f.matches(64) && f.matches(129));
+        assert!(!f.matches(1));
+        // Out of range never matches (and clear is a safe no-op).
+        assert!(!f.matches(130));
+        assert!(!f.matches(u32::MAX));
+        assert!(!f.clear(500));
+        assert!(f.clear(64));
+        assert!(!f.clear(64));
+        assert_eq!(f.count(), 2);
+        assert_eq!(f.iter_set(), vec![0, 129]);
+    }
+
+    #[test]
+    fn filtered_bitset_from_predicate_and_words_roundtrip() {
+        let f = FilterBitset::from_predicate(200, |id| id % 3 == 0);
+        assert_eq!(f.count(), 67);
+        assert!(f.matches(0) && f.matches(198) && !f.matches(199));
+        let back = FilterBitset::from_words(f.words().to_vec(), 200).unwrap();
+        assert_eq!(back.count(), f.count());
+        assert_eq!(back.iter_set(), f.iter_set());
+        // Hostile inputs: wrong word count, phantom bits beyond n.
+        assert!(FilterBitset::from_words(vec![0; 3], 200).is_err());
+        let mut words = f.words().to_vec();
+        *words.last_mut().unwrap() |= 1 << 63; // id 255 of a 200-id set
+        assert!(FilterBitset::from_words(words, 200).is_err());
+    }
+
+    #[test]
+    fn filtered_admit_conjoins_liveness_and_filter() {
+        let mut dead = Tombstones::new(10);
+        dead.set(3);
+        let mut f = FilterBitset::new(10);
+        f.set(3);
+        f.set(4);
+        let admit = Admit {
+            deleted: Some(&dead),
+            filter: Some(&f),
+        };
+        assert!(!admit.allows(3), "dead beats matching");
+        assert!(admit.allows(4));
+        assert!(!admit.allows(5), "non-matching denied");
+        assert!(Admit::none().allows(3));
+        assert!(!Admit::live_only(Some(&dead)).allows(3));
+        assert!(Admit::live_only(Some(&dead)).allows(5));
+    }
+}

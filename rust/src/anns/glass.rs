@@ -15,14 +15,17 @@
 //! (`runtime::Engine::rerank`) — used by the serving coordinator; the
 //! per-query path below stays in Rust.
 
-use crate::anns::heap::TopK;
-use crate::anns::hnsw::graph::HnswGraph;
-use crate::anns::hnsw::search::{greedy_descent, search_filtered, SearchContext};
+use crate::anns::filter::{Admit, FilterBitset, DEFAULT_FILTERED_FALLBACK};
 use crate::anns::hnsw::builder;
+use crate::anns::hnsw::graph::HnswGraph;
+use crate::anns::hnsw::search::{
+    beam_search0, greedy_descent, search_admit, BeamScorer, SearchContext,
+};
 use crate::anns::scratch::ScratchPool;
 use crate::anns::tombstones::Tombstones;
 use crate::anns::{AnnIndex, MutableAnnIndex, VectorSet};
 use crate::distance::quant::QuantizedStore;
+use crate::distance::Metric;
 use crate::util::rng::Rng;
 use crate::variants::VariantConfig;
 
@@ -45,6 +48,9 @@ pub struct GlassIndex {
     pub(crate) free: Vec<u32>,
     /// Level-sampling stream for online inserts (deterministic per seed).
     rng: Rng,
+    /// Selectivity crossover for filtered search (see
+    /// [`AnnIndex::filtered_fallback_threshold`]).
+    filtered_fallback: usize,
 }
 
 impl GlassIndex {
@@ -62,12 +68,19 @@ impl GlassIndex {
             deleted,
             free: Vec::new(),
             rng: Rng::new(seed ^ 0x61A5_61A5),
+            filtered_fallback: DEFAULT_FILTERED_FALLBACK,
         }
     }
 
     pub fn with_label(mut self, label: &str) -> Self {
         self.label = label.to_string();
         self
+    }
+
+    /// Tune the selectivity crossover: filters with at most this many
+    /// matching ids take the exact-scan fallback instead of the beam.
+    pub fn set_filtered_fallback(&mut self, threshold: usize) {
+        self.filtered_fallback = threshold;
     }
 
     /// Reassemble from persisted parts (see [`crate::anns::persist`]).
@@ -82,6 +95,7 @@ impl GlassIndex {
             deleted,
             free: Vec::new(),
             rng: Rng::new(0x61A5_61A5),
+            filtered_fallback: DEFAULT_FILTERED_FALLBACK,
         }
     }
 
@@ -107,13 +121,6 @@ impl GlassIndex {
         self.rng.state()
     }
 
-    /// `true` when `id` may appear in results (see
-    /// [`Tombstones::is_live`]).
-    #[inline]
-    fn live(&self, id: u32) -> bool {
-        self.deleted.is_live(id)
-    }
-
     /// Tombstone filter for the full-precision fallback path (see
     /// [`Tombstones::filter_ref`]).
     fn tombstone_ref(&self) -> Option<&Tombstones> {
@@ -129,173 +136,95 @@ impl GlassIndex {
     }
 
     /// One query through the full pipeline with caller-provided scratch —
-    /// the shared body of `search_with_dists` and `search_batch`.
+    /// the shared body of the (filtered and unfiltered) search and batch
+    /// entry points. `filter = None` takes exactly the pre-filter path.
     fn search_one(
         &self,
         query: &[f32],
         k: usize,
         ef: usize,
         ctx: &mut SearchContext,
+        filter: Option<&FilterBitset>,
     ) -> Vec<(f32, u32)> {
         if self.graph.is_empty() {
             return Vec::new();
         }
+        if let Some(f) = filter {
+            // Selectivity fallback: with only a handful of matching ids an
+            // exact scan beats (and out-recalls) any beam.
+            if f.count() <= self.filtered_fallback {
+                return crate::anns::filtered_exact_fallback(
+                    &self.graph.vectors,
+                    query,
+                    k,
+                    &mut ctx.batch,
+                    &mut ctx.dists,
+                    self.tombstone_ref(),
+                    f,
+                );
+            }
+        }
+        let admit = Admit {
+            deleted: self.tombstone_ref(),
+            filter,
+        };
         if !self.config.refine.quantized_primary {
             // Plain full-precision HNSW search (refinement disabled point
             // in the action space).
-            return search_filtered(
-                &self.graph,
-                &self.config.search,
-                ctx,
-                query,
-                k,
-                ef,
-                self.tombstone_ref(),
-            );
+            return search_admit(&self.graph, &self.config.search, ctx, query, k, ef, admit);
         }
-        let pool = self.quantized_beam(query, k, ef, ctx);
+        let pool = self.quantized_beam(query, k, ef, ctx, admit);
         self.rerank(query, k, ef, pool, ctx)
     }
 
     /// Layer-0 beam search over int8 codes (§2.3 quantized preliminary
-    /// search) with the search-module knobs.
+    /// search) with the search-module knobs. The beam control flow is the
+    /// shared [`beam_search0`] — only the SQ8 scoring/prefetch behavior
+    /// ([`QuantScorer`]) lives here. Tombstoned/non-matching nodes
+    /// seed/extend the frontier (they stay traversable) but never enter
+    /// the result pool — same contract as
+    /// [`crate::anns::hnsw::search::search_admit`].
     fn quantized_beam(
         &self,
         query: &[f32],
         k: usize,
         ef: usize,
         ctx: &mut SearchContext,
+        admit: Admit<'_>,
     ) -> Vec<(f32, u32)> {
         let g = &self.graph;
         let knobs = &self.config.search;
         let refine = &self.config.refine;
-        let ef = ef.max(k);
         let qcode = self.quant.encode_query(query);
         let metric = g.vectors.metric;
-
-        ctx.visited.clear();
-        ctx.frontier.clear();
-        let mut results = TopK::new(ef);
-
-        // Tier-1 entry from full-precision greedy descent. Tombstoned
-        // nodes seed/extend the frontier (they stay traversable) but never
-        // enter the result pool — same contract as
-        // [`crate::anns::hnsw::search::search_filtered`].
+        // Tier-1 entry from full-precision greedy descent, re-scored in the
+        // quantized space the beam ranks in.
         let (_, e0) = greedy_descent(g, query);
         let d0 = self.quant.distance(metric, &qcode, e0 as usize);
-        ctx.visited.insert(e0);
-        ctx.frontier.push(d0, e0);
-        if self.live(e0) {
-            results.push(d0, e0);
-        }
-        // Extra tiers (§6.2) from the diverse entry-point set. Tier 1 uses
-        // only the greedy-descended entry (same fix as `hnsw::search`: the
-        // old `_ => 1` fallback silently ran tier-2 behavior).
-        let extra = match (knobs.entry_tiers, ef) {
-            (t, ef) if t >= 3 && ef >= knobs.tier_budget_2 => g.entry_points.len(),
-            (t, ef) if t >= 2 && ef >= knobs.tier_budget_1 => 3,
-            _ => 0,
+        let scorer = QuantScorer {
+            quant: &self.quant,
+            graph: g,
+            qcode: &qcode,
+            metric,
+            batch_lookahead: if refine.adaptive_prefetch {
+                knobs.prefetch_depth.max(1)
+            } else {
+                0
+            },
+            seq_lookahead: refine.lookahead.max(1),
+            adaptive_prefetch: refine.adaptive_prefetch,
+            precomputed_metadata: refine.precomputed_metadata,
+            locality: knobs.prefetch_locality,
         };
-        for &ep in g.entry_points.iter().take(extra) {
-            if ctx.visited.insert(ep) {
-                let d = self.quant.distance(metric, &qcode, ep as usize);
-                ctx.frontier.push(d, ep);
-                if self.live(ep) {
-                    results.push(d, ep);
-                }
-            }
-        }
-
-        let mut no_improve = 0usize;
-        let patience = knobs.patience.max(1) * 4;
-        while let Some((d, u)) = ctx.frontier.pop() {
-            if d > results.bound() {
-                break;
-            }
-            // §6.3 precomputed metadata vs sentinel scan.
-            let neighbors: &[u32] = if refine.precomputed_metadata {
-                g.neighbors0_meta(u)
-            } else {
-                g.neighbors0_scan(u)
-            };
-            let mut improved = false;
-            if knobs.edge_batch {
-                // Gather unvisited neighbors, then evaluate each batch with
-                // one one-to-many i8 kernel call into the pooled `dists`
-                // buffer (same shape as the f32 HNSW edge batching) —
-                // prefetch of code row `i + depth` is pipelined inside the
-                // kernel while row `i` is evaluated. Distances are exactly
-                // equal to the per-pair path (i32 accumulation), so batching
-                // never changes search results.
-                let bs = knobs.batch_size.max(1);
-                let lookahead = if refine.adaptive_prefetch {
-                    knobs.prefetch_depth.max(1)
-                } else {
-                    0
-                };
-                let mut idx = 0;
-                while idx < neighbors.len() {
-                    ctx.batch.clear();
-                    while idx < neighbors.len() && ctx.batch.len() < bs {
-                        let nb = neighbors[idx];
-                        idx += 1;
-                        if ctx.visited.insert(nb) {
-                            ctx.batch.push(nb);
-                        }
-                    }
-                    self.quant.distance_batch_with(
-                        metric,
-                        &qcode,
-                        &ctx.batch,
-                        lookahead,
-                        knobs.prefetch_locality,
-                        &mut ctx.dists,
-                    );
-                    for (&nb, &dnb) in ctx.batch.iter().zip(ctx.dists.iter()) {
-                        if dnb < results.bound() {
-                            if self.live(nb) && results.push(dnb, nb) {
-                                improved = true;
-                            }
-                            ctx.frontier.push(dnb, nb);
-                        }
-                    }
-                }
-            } else {
-                for (j, &nb) in neighbors.iter().enumerate() {
-                    // §6.3 adaptive lookahead prefetch over future edges.
-                    if refine.adaptive_prefetch {
-                        let ahead = j + refine.lookahead.max(1);
-                        if ahead < neighbors.len() {
-                            prefetch_code(
-                                self.quant.code(neighbors[ahead] as usize),
-                                knobs.prefetch_locality,
-                            );
-                        }
-                    }
-                    if !ctx.visited.insert(nb) {
-                        continue;
-                    }
-                    let dnb = self.quant.distance(metric, &qcode, nb as usize);
-                    if dnb < results.bound() {
-                        if self.live(nb) && results.push(dnb, nb) {
-                            improved = true;
-                        }
-                        ctx.frontier.push(dnb, nb);
-                    }
-                }
-            }
-            if knobs.early_termination {
-                if improved {
-                    no_improve = 0;
-                } else {
-                    no_improve += 1;
-                    if no_improve >= patience && results.is_full() {
-                        break;
-                    }
-                }
-            }
-        }
-        results.into_sorted()
+        beam_search0(
+            &scorer,
+            knobs,
+            ctx,
+            (d0, e0),
+            &g.entry_points,
+            ef.max(k),
+            &admit,
+        )
     }
 
     /// Exact re-rank of the quantized survivors (§6.3 knobs). With
@@ -347,21 +276,84 @@ impl GlassIndex {
     /// `search_with_dists` at both points of the action space.
     pub fn candidates_for_rerank(&self, query: &[f32], k: usize, ef: usize) -> Vec<u32> {
         let mut ctx = self.scratch.checkout(self.graph.len());
+        let live = Admit::live_only(self.tombstone_ref());
         let pool = if self.config.refine.quantized_primary {
-            self.quantized_beam(query, k, ef, &mut ctx)
+            self.quantized_beam(query, k, ef, &mut ctx, live)
         } else {
-            search_filtered(
+            search_admit(
                 &self.graph,
                 &self.config.search,
                 &mut ctx,
                 query,
                 ef.max(k),
                 ef,
-                self.tombstone_ref(),
+                live,
             )
         };
         let take = self.config.refine.rerank_count(k, ef).min(pool.len());
         pool.into_iter().take(take).map(|(_, i)| i).collect()
+    }
+}
+
+/// SQ8 scorer for the shared beam: distances come from the int8 code
+/// rows, adjacency honors the §6.3 precomputed-metadata knob, and the
+/// prefetch hooks carry the §6.3 adaptive-lookahead schedule (code-row
+/// prefetch on the sequential path, kernel-pipelined lookahead on the
+/// batched path). No warmup — the quantized path never had one: code rows
+/// are small enough that the sliding lookahead alone covers the latency.
+struct QuantScorer<'a> {
+    quant: &'a QuantizedStore,
+    graph: &'a HnswGraph,
+    qcode: &'a [i8],
+    metric: Metric,
+    /// Lookahead depth for the one-to-many i8 kernel (edge-batch path).
+    batch_lookahead: usize,
+    /// Lookahead distance for the sequential scan (§6.3 `refine.lookahead`).
+    seq_lookahead: usize,
+    adaptive_prefetch: bool,
+    precomputed_metadata: bool,
+    locality: i32,
+}
+
+impl BeamScorer for QuantScorer<'_> {
+    fn score(&self, id: u32) -> f32 {
+        self.quant.distance(self.metric, self.qcode, id as usize)
+    }
+
+    fn score_batch(&self, ids: &[u32], out: &mut Vec<f32>) {
+        // One one-to-many i8 kernel call per gathered batch — prefetch of
+        // code row `i + lookahead` is pipelined inside the kernel while row
+        // `i` is evaluated. Distances are exactly equal to the per-pair
+        // path (i32 accumulation), so batching never changes results.
+        self.quant.distance_batch_with(
+            self.metric,
+            self.qcode,
+            ids,
+            self.batch_lookahead,
+            self.locality,
+            out,
+        );
+    }
+
+    fn neighbors(&self, u: u32) -> &[u32] {
+        // §6.3 precomputed metadata vs sentinel scan.
+        if self.precomputed_metadata {
+            self.graph.neighbors0_meta(u)
+        } else {
+            self.graph.neighbors0_scan(u)
+        }
+    }
+
+    fn warmup(&self, _neighbors: &[u32]) {}
+
+    fn lookahead(&self, neighbors: &[u32], j: usize) {
+        // §6.3 adaptive lookahead prefetch over future edges.
+        if self.adaptive_prefetch {
+            let ahead = j + self.seq_lookahead;
+            if ahead < neighbors.len() {
+                prefetch_code(self.quant.code(neighbors[ahead] as usize), self.locality);
+            }
+        }
     }
 }
 
@@ -383,7 +375,7 @@ impl AnnIndex for GlassIndex {
     /// Search returning `(exact_dist, id)` nearest-first.
     fn search_with_dists(&self, query: &[f32], k: usize, ef: usize) -> Vec<(f32, u32)> {
         let mut ctx = self.scratch.checkout(self.graph.len());
-        self.search_one(query, k, ef, &mut ctx)
+        self.search_one(query, k, ef, &mut ctx, None)
     }
 
     fn search_batch(&self, queries: &[&[f32]], k: usize, ef: usize) -> Vec<Vec<(f32, u32)>> {
@@ -393,8 +385,37 @@ impl AnnIndex for GlassIndex {
         let mut ctx = self.scratch.checkout(self.graph.len());
         queries
             .iter()
-            .map(|q| self.search_one(q, k, ef, &mut ctx))
+            .map(|q| self.search_one(q, k, ef, &mut ctx, None))
             .collect()
+    }
+
+    fn search_filtered_with_dists(
+        &self,
+        query: &[f32],
+        k: usize,
+        ef: usize,
+        filter: Option<&FilterBitset>,
+    ) -> Vec<(f32, u32)> {
+        let mut ctx = self.scratch.checkout(self.graph.len());
+        self.search_one(query, k, ef, &mut ctx, filter)
+    }
+
+    fn search_filtered_batch(
+        &self,
+        queries: &[&[f32]],
+        k: usize,
+        ef: usize,
+        filter: Option<&FilterBitset>,
+    ) -> Vec<Vec<(f32, u32)>> {
+        let mut ctx = self.scratch.checkout(self.graph.len());
+        queries
+            .iter()
+            .map(|q| self.search_one(q, k, ef, &mut ctx, filter))
+            .collect()
+    }
+
+    fn filtered_fallback_threshold(&self) -> usize {
+        self.filtered_fallback
     }
 
     fn len(&self) -> usize {
@@ -733,6 +754,85 @@ mod tests {
         assert_eq!(id2, id, "freed slot must be recycled");
         assert_eq!(idx.quant.len(), n0 + 1, "recycle must not grow the codes");
         assert_eq!(idx.search(&v, 1, 64), vec![id2]);
+    }
+
+    #[test]
+    fn filtered_glass_respects_filter_across_pipeline_shapes() {
+        // Every pipeline shape (quantized/full-precision × sequential/
+        // edge-batch beams) must honor the allow-list, and `filter = None`
+        // must stay bitwise identical to the unfiltered entry points.
+        let ds = dataset();
+        let n = ds.n_base();
+        let filter = FilterBitset::from_predicate(n, |id| id % 3 == 0);
+        for (edge_batch, quantized) in [(false, true), (true, true), (false, false)] {
+            let mut cfg = VariantConfig::glass_baseline();
+            cfg.search.edge_batch = edge_batch;
+            cfg.refine.quantized_primary = quantized;
+            let idx = GlassIndex::build(VectorSet::from_dataset(&ds), cfg, 3);
+            for qi in 0..ds.n_queries().min(8) {
+                let q = ds.query_vec(qi);
+                assert_eq!(
+                    idx.search_filtered_with_dists(q, 10, 128, None),
+                    idx.search_with_dists(q, 10, 128),
+                    "filter=None diverged (edge_batch={edge_batch} quantized={quantized})"
+                );
+                let got = idx.search_filtered_with_dists(q, 10, 128, Some(&filter));
+                assert_eq!(got.len(), 10);
+                assert!(
+                    got.iter().all(|&(_, id)| id % 3 == 0),
+                    "non-matching id surfaced (edge_batch={edge_batch} quantized={quantized})"
+                );
+            }
+            // Batch == per-query under a filter.
+            let queries: Vec<&[f32]> = (0..ds.n_queries().min(8)).map(|qi| ds.query_vec(qi)).collect();
+            let batched = idx.search_filtered_batch(&queries, 10, 128, Some(&filter));
+            for (qi, q) in queries.iter().enumerate() {
+                assert_eq!(
+                    batched[qi],
+                    idx.search_filtered_with_dists(q, 10, 128, Some(&filter)),
+                    "filtered batch diverged at query {qi}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn filtered_glass_fallback_is_exact_and_skips_tombstones() {
+        // A filter below the fallback threshold routes to the exact scan:
+        // results must equal the filtered ground truth, and deleting a
+        // matching id must drop it from the scan.
+        let ds = dataset();
+        let mut idx = GlassIndex::build(
+            VectorSet::from_dataset(&ds),
+            VariantConfig::glass_baseline(),
+            3,
+        );
+        let n = ds.n_base();
+        let filter = FilterBitset::from_predicate(n, |id| id % 100 == 0); // 15 ids
+        assert!(filter.count() <= idx.filtered_fallback_threshold());
+        let q = ds.query_vec(0);
+        let mut ids = Vec::new();
+        let mut dists = Vec::new();
+        let want = crate::dataset::gt::topk_pairs_for_query_filtered(
+            &ds.base,
+            q,
+            ds.dim,
+            ds.metric,
+            10,
+            &mut ids,
+            &mut dists,
+            |i| filter.matches(i),
+        );
+        assert_eq!(idx.search_filtered_with_dists(q, 10, 128, Some(&filter)), want);
+        let victim = want[0].1;
+        idx.delete(victim).unwrap();
+        let after = idx.search_filtered_with_dists(q, 10, 128, Some(&filter));
+        assert!(after.iter().all(|&(_, id)| id != victim));
+        // Raising the threshold to 0 sends the same filter through the
+        // beam instead; still no non-matching or dead id.
+        idx.set_filtered_fallback(0);
+        let beamed = idx.search_filtered_with_dists(q, 10, 256, Some(&filter));
+        assert!(beamed.iter().all(|&(_, id)| id % 100 == 0 && id != victim));
     }
 
     #[test]

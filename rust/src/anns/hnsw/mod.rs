@@ -16,6 +16,7 @@ pub mod select;
 
 pub use graph::HnswGraph;
 
+use crate::anns::filter::{Admit, FilterBitset, DEFAULT_FILTERED_FALLBACK};
 use crate::anns::scratch::ScratchPool;
 use crate::anns::tombstones::Tombstones;
 use crate::anns::{AnnIndex, MutableAnnIndex, VectorSet};
@@ -45,6 +46,9 @@ pub struct HnswIndex {
     free: Vec<u32>,
     /// Level-sampling stream for online inserts (deterministic per seed).
     rng: Rng,
+    /// Selectivity crossover for filtered search (see
+    /// [`AnnIndex::filtered_fallback_threshold`]).
+    filtered_fallback: usize,
 }
 
 impl HnswIndex {
@@ -66,6 +70,7 @@ impl HnswIndex {
             deleted,
             free: Vec::new(),
             rng: Rng::new(seed ^ 0x11FE_11FE),
+            filtered_fallback: DEFAULT_FILTERED_FALLBACK,
         }
     }
 
@@ -74,10 +79,54 @@ impl HnswIndex {
         self
     }
 
+    /// Tune the selectivity crossover: filters with at most this many
+    /// matching ids take the exact-scan fallback instead of the beam.
+    pub fn set_filtered_fallback(&mut self, threshold: usize) {
+        self.filtered_fallback = threshold;
+    }
+
     /// The tombstone filter handed to the beam (see
     /// [`Tombstones::filter_ref`]).
     fn tombstone_ref(&self) -> Option<&Tombstones> {
         self.deleted.filter_ref()
+    }
+
+    /// Shared body of the filtered search/batch entry points: selectivity
+    /// fallback for very selective filters, else the admission-filtered
+    /// beam. `filter = None` is exactly the unfiltered path.
+    fn search_one_filtered(
+        &self,
+        query: &[f32],
+        k: usize,
+        ef: usize,
+        ctx: &mut search::SearchContext,
+        filter: Option<&FilterBitset>,
+    ) -> Vec<(f32, u32)> {
+        if let Some(f) = filter {
+            if f.count() <= self.filtered_fallback {
+                return crate::anns::filtered_exact_fallback(
+                    &self.graph.vectors,
+                    query,
+                    k,
+                    &mut ctx.batch,
+                    &mut ctx.dists,
+                    self.tombstone_ref(),
+                    f,
+                );
+            }
+        }
+        search::search_admit(
+            &self.graph,
+            &self.knobs,
+            ctx,
+            query,
+            k,
+            ef,
+            Admit {
+                deleted: self.tombstone_ref(),
+                filter,
+            },
+        )
     }
 }
 
@@ -109,6 +158,35 @@ impl AnnIndex for HnswIndex {
             .iter()
             .map(|q| search::search_filtered(&self.graph, &self.knobs, &mut ctx, q, k, ef, deleted))
             .collect()
+    }
+
+    fn search_filtered_with_dists(
+        &self,
+        query: &[f32],
+        k: usize,
+        ef: usize,
+        filter: Option<&FilterBitset>,
+    ) -> Vec<(f32, u32)> {
+        let mut ctx = self.scratch.checkout(self.graph.len());
+        self.search_one_filtered(query, k, ef, &mut ctx, filter)
+    }
+
+    fn search_filtered_batch(
+        &self,
+        queries: &[&[f32]],
+        k: usize,
+        ef: usize,
+        filter: Option<&FilterBitset>,
+    ) -> Vec<Vec<(f32, u32)>> {
+        let mut ctx = self.scratch.checkout(self.graph.len());
+        queries
+            .iter()
+            .map(|q| self.search_one_filtered(q, k, ef, &mut ctx, filter))
+            .collect()
+    }
+
+    fn filtered_fallback_threshold(&self) -> usize {
+        self.filtered_fallback
     }
 
     fn len(&self) -> usize {
@@ -452,6 +530,61 @@ mod tests {
         probe.knobs = tier3;
         let out = probe.search_with_dists(&[0.0; 8], 10, 64);
         assert_eq!(out.len(), 10);
+    }
+
+    #[test]
+    fn filtered_hnsw_search_and_fallback() {
+        let ds = small_dataset();
+        let mut idx = HnswIndex::build(
+            VectorSet::from_dataset(&ds),
+            &ConstructionKnobs::default(),
+            SearchKnobs::default(),
+            7,
+        );
+        let n = ds.n_base();
+        // filter=None is bitwise the unfiltered path.
+        for qi in 0..5 {
+            let q = ds.query_vec(qi);
+            assert_eq!(
+                idx.search_filtered_with_dists(q, 10, 64, None),
+                idx.search_with_dists(q, 10, 64)
+            );
+        }
+        // ~50% selective beam-path filter: results stay inside the set.
+        let half = crate::anns::FilterBitset::from_predicate(n, |id| id % 2 == 0);
+        assert!(half.count() > idx.filtered_fallback_threshold());
+        let got = idx.search_filtered_with_dists(ds.query_vec(0), 10, 64, Some(&half));
+        assert_eq!(got.len(), 10);
+        assert!(got.iter().all(|&(_, id)| id % 2 == 0));
+        // Very selective filter: exact fallback equals the filtered oracle
+        // and skips tombstones.
+        let rare = crate::anns::FilterBitset::from_predicate(n, |id| id % 100 == 0);
+        assert!(rare.count() <= idx.filtered_fallback_threshold());
+        let q = ds.query_vec(1);
+        let (mut ids, mut dists) = (Vec::new(), Vec::new());
+        let want = crate::dataset::gt::topk_pairs_for_query_filtered(
+            &ds.base,
+            q,
+            ds.dim,
+            ds.metric,
+            10,
+            &mut ids,
+            &mut dists,
+            |i| rare.matches(i),
+        );
+        assert_eq!(idx.search_filtered_with_dists(q, 10, 64, Some(&rare)), want);
+        idx.delete(want[0].1).unwrap();
+        let after = idx.search_filtered_with_dists(q, 10, 64, Some(&rare));
+        assert!(after.iter().all(|&(_, id)| id != want[0].1));
+        // Filtered batch == filtered per-query.
+        let queries: Vec<&[f32]> = (0..5).map(|qi| ds.query_vec(qi)).collect();
+        let batched = idx.search_filtered_batch(&queries, 10, 64, Some(&half));
+        for (qi, q) in queries.iter().enumerate() {
+            assert_eq!(
+                batched[qi],
+                idx.search_filtered_with_dists(q, 10, 64, Some(&half))
+            );
+        }
     }
 
     #[test]

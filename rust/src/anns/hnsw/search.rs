@@ -15,6 +15,7 @@
 //! The same layer search (minus the search-module knobs) backs graph
 //! construction via [`search_layer`].
 
+use crate::anns::filter::Admit;
 use crate::anns::heap::{dist_cmp, MinQueue, TopK};
 use crate::anns::hnsw::graph::HnswGraph;
 use crate::anns::tombstones::Tombstones;
@@ -109,37 +110,155 @@ pub fn search_filtered(
     ef: usize,
     deleted: Option<&Tombstones>,
 ) -> Vec<(f32, u32)> {
+    search_admit(graph, knobs, ctx, q, k, ef, Admit::live_only(deleted))
+}
+
+/// [`search_filtered`] under the full admission predicate: liveness AND an
+/// optional per-id allow-list ([`crate::anns::FilterBitset`]). Dead and
+/// non-matching nodes stay traversable but are filtered at `results.push`,
+/// so with `Admit::none()` / `Admit::live_only(None)` the path is
+/// byte-identical to [`search`].
+#[allow(clippy::too_many_arguments)]
+pub fn search_admit(
+    graph: &HnswGraph,
+    knobs: &SearchKnobs,
+    ctx: &mut SearchContext,
+    q: &[f32],
+    k: usize,
+    ef: usize,
+    admit: Admit<'_>,
+) -> Vec<(f32, u32)> {
     if graph.is_empty() {
         return Vec::new();
     }
-    let live = |id: u32| deleted.map_or(true, |t| !t.contains(id));
-    let ef = ef.max(k);
+    let entry = greedy_descent(graph, q);
+    let scorer = GraphScorer {
+        graph,
+        q,
+        depth: knobs.prefetch_depth,
+        locality: knobs.prefetch_locality,
+    };
+    let mut out = beam_search0(
+        &scorer,
+        knobs,
+        ctx,
+        entry,
+        &graph.entry_points,
+        ef.max(k),
+        &admit,
+    );
+    out.truncate(k);
+    out
+}
+
+/// Scoring/adjacency interface walked by [`beam_search0`]: the exact
+/// f32 implementation lives here ([`GraphScorer`]); the SQ8 quantized
+/// implementation lives in `anns::glass`. Only representation-specific
+/// operations belong on the scorer — the beam's control flow (entry
+/// tiers, frontier/result admission, edge batching, early termination)
+/// has exactly one copy.
+pub(crate) trait BeamScorer {
+    /// Distance from the query to `id`.
+    fn score(&self, id: u32) -> f32;
+    /// One-to-many kernel for the edge-batching knob; fills `out` aligned
+    /// with `ids`.
+    fn score_batch(&self, ids: &[u32], out: &mut Vec<f32>);
+    /// Layer-0 adjacency of `u`.
+    fn neighbors(&self, u: u32) -> &[u32];
+    /// Warm the prefetch window before a sequential scan of `neighbors`
+    /// (no-op where the representation needs none).
+    fn warmup(&self, neighbors: &[u32]);
+    /// Sliding-window prefetch issued while evaluating `neighbors[j]`.
+    fn lookahead(&self, neighbors: &[u32], j: usize);
+}
+
+/// Exact-distance scorer over the HNSW layer-0 graph.
+struct GraphScorer<'a> {
+    graph: &'a HnswGraph,
+    q: &'a [f32],
+    depth: usize,
+    locality: i32,
+}
+
+impl BeamScorer for GraphScorer<'_> {
+    fn score(&self, id: u32) -> f32 {
+        self.graph.vectors.distance(self.q, id)
+    }
+
+    fn score_batch(&self, ids: &[u32], out: &mut Vec<f32>) {
+        self.graph
+            .vectors
+            .distance_batch_with(self.q, ids, self.depth, self.locality, out);
+    }
+
+    fn neighbors(&self, u: u32) -> &[u32] {
+        self.graph.neighbors0_meta(u)
+    }
+
+    fn warmup(&self, neighbors: &[u32]) {
+        if self.depth > 0 {
+            for &nb in neighbors.iter().take(self.depth) {
+                prefetch(self.graph.vectors.vec(nb), self.locality);
+            }
+        }
+    }
+
+    fn lookahead(&self, neighbors: &[u32], j: usize) {
+        if self.depth > 0 {
+            if let Some(&ahead) = neighbors.get(j + self.depth) {
+                prefetch(self.graph.vectors.vec(ahead), self.locality);
+            }
+        }
+    }
+}
+
+/// THE layer-0 beam: entry seeding (greedy entry + §6.2 entry tiers),
+/// frontier admission, result admission via `admit`, edge batching, and
+/// early termination — one copy shared by the exact (HNSW) and quantized
+/// (GLASS) beams. PR 2's entry-selection bug had to be fixed in two
+/// copy-pasted versions of this loop; keeping the predicate
+/// generalization here means it cannot diverge again.
+///
+/// Dead/non-matching nodes stay fully traversable (they seed and extend
+/// the frontier, preserving connectivity) but never enter the result
+/// pool, so the beam bound is computed over admitted candidates only.
+/// Returns the full sorted pool (up to `ef` entries); callers truncate to
+/// `k` or hand the pool to a reranker.
+pub(crate) fn beam_search0<S: BeamScorer>(
+    scorer: &S,
+    knobs: &SearchKnobs,
+    ctx: &mut SearchContext,
+    entry: (f32, u32),
+    entry_points: &[u32],
+    ef: usize,
+    admit: &Admit<'_>,
+) -> Vec<(f32, u32)> {
     ctx.visited.clear();
     ctx.frontier.clear();
-    let mut results = TopK::new(ef);
+    let mut results = TopK::new(ef.max(1));
 
     // --- Multi-tier entry selection (§6.2). Tier 1: the greedy-descended
     // global entry. Tiers 2/3 admit extra diverse entry points when the
     // search budget crosses the thresholds.
-    let (d0, e0) = greedy_descent(graph, q);
+    let (d0, e0) = entry;
     ctx.visited.insert(e0);
     ctx.frontier.push(d0, e0);
-    if live(e0) {
+    if admit.allows(e0) {
         results.push(d0, e0);
     }
     let extra = match (knobs.entry_tiers, ef) {
-        (t, ef) if t >= 3 && ef >= knobs.tier_budget_2 => graph.entry_points.len(),
+        (t, ef) if t >= 3 && ef >= knobs.tier_budget_2 => entry_points.len(),
         (t, ef) if t >= 2 && ef >= knobs.tier_budget_1 => 3,
         // Tier 1 must use only the greedy-descended entry: admitting
         // `entry_points[0]` here silently ran tier-2 behavior and skewed
         // every entry_tiers ablation.
         _ => 0,
     };
-    for &ep in graph.entry_points.iter().take(extra) {
+    for &ep in entry_points.iter().take(extra) {
         if ctx.visited.insert(ep) {
-            let d = graph.vectors.distance(q, ep);
+            let d = scorer.score(ep);
             ctx.frontier.push(d, ep);
-            if live(ep) {
+            if admit.allows(ep) {
                 results.push(d, ep);
             }
         }
@@ -152,7 +271,7 @@ pub fn search_filtered(
         if d > results.bound() {
             break;
         }
-        let neighbors = graph.neighbors0_meta(u);
+        let neighbors = scorer.neighbors(u);
         let mut improved = false;
 
         if knobs.edge_batch {
@@ -171,16 +290,10 @@ pub fn search_filtered(
                         ctx.batch.push(nb);
                     }
                 }
-                graph.vectors.distance_batch_with(
-                    q,
-                    &ctx.batch,
-                    knobs.prefetch_depth,
-                    knobs.prefetch_locality,
-                    &mut ctx.dists,
-                );
+                scorer.score_batch(&ctx.batch, &mut ctx.dists);
                 for (&nb, &dnb) in ctx.batch.iter().zip(ctx.dists.iter()) {
                     if dnb < results.bound() {
-                        if live(nb) && results.push(dnb, nb) {
+                        if admit.allows(nb) && results.push(dnb, nb) {
                             improved = true;
                         }
                         ctx.frontier.push(dnb, nb);
@@ -188,29 +301,19 @@ pub fn search_filtered(
                 }
             }
         } else {
-            // Baseline: sequential scan with a sliding `prefetch_depth`-deep
-            // lookahead window — warm the first `depth` vectors, then keep
-            // prefetching `neighbors[j + depth]` while evaluating
-            // `neighbors[j]` (the old code only prefetched the first
-            // `depth` neighbors one step ahead).
-            let depth = knobs.prefetch_depth;
-            if depth > 0 {
-                for &nb in neighbors.iter().take(depth) {
-                    prefetch(graph.vectors.vec(nb), knobs.prefetch_locality);
-                }
-            }
+            // Baseline: sequential scan with a sliding lookahead window —
+            // warm the scorer's prefetch window, then keep prefetching
+            // ahead of `neighbors[j]` while evaluating it (the old code
+            // only prefetched the first `depth` neighbors one step ahead).
+            scorer.warmup(neighbors);
             for (j, &nb) in neighbors.iter().enumerate() {
-                if depth > 0 {
-                    if let Some(&ahead) = neighbors.get(j + depth) {
-                        prefetch(graph.vectors.vec(ahead), knobs.prefetch_locality);
-                    }
-                }
+                scorer.lookahead(neighbors, j);
                 if !ctx.visited.insert(nb) {
                     continue;
                 }
-                let dnb = graph.vectors.distance(q, nb);
+                let dnb = scorer.score(nb);
                 if dnb < results.bound() {
-                    if live(nb) && results.push(dnb, nb) {
+                    if admit.allows(nb) && results.push(dnb, nb) {
                         improved = true;
                     }
                     ctx.frontier.push(dnb, nb);
@@ -231,9 +334,7 @@ pub fn search_filtered(
         }
     }
 
-    let mut out = results.into_sorted();
-    out.truncate(k);
-    out
+    results.into_sorted()
 }
 
 /// Construction-time layer search: beam search at an arbitrary `level`
@@ -468,6 +569,41 @@ mod tests {
             search_filtered(&g, &knobs, &mut ctx, &q, 5, 64, Some(&none)),
             base
         );
+    }
+
+    #[test]
+    fn filtered_beam_respects_allow_list_and_none_is_identical() {
+        let g = grid_graph();
+        let mut ctx = SearchContext::new(g.len());
+        let knobs = SearchKnobs::default();
+        let q = [4.9f32, 5.1];
+        let base = search(&g, &knobs, &mut ctx, &q, 5, 64);
+        // No filter at all: bit-identical to the plain search.
+        assert_eq!(
+            search_admit(&g, &knobs, &mut ctx, &q, 5, 64, Admit::none()),
+            base
+        );
+        // Allow only even ids: every result must be even, and the ranking
+        // must equal the post-filtered unfiltered ranking (the beam covers
+        // the whole 100-point component at ef=64... results are a subset).
+        let filter = crate::anns::FilterBitset::from_predicate(g.len(), |id| id % 2 == 0);
+        let admit = Admit {
+            deleted: None,
+            filter: Some(&filter),
+        };
+        let got = search_admit(&g, &knobs, &mut ctx, &q, 5, 64, admit);
+        assert_eq!(got.len(), 5);
+        assert!(got.iter().all(|&(_, id)| id % 2 == 0));
+        // Conjunction with tombstones: a dead-but-matching id never
+        // surfaces either.
+        let mut dead = crate::anns::tombstones::Tombstones::new(g.len());
+        dead.set(got[0].1);
+        let both = Admit {
+            deleted: Some(&dead),
+            filter: Some(&filter),
+        };
+        let again = search_admit(&g, &knobs, &mut ctx, &q, 5, 64, both);
+        assert!(again.iter().all(|&(_, id)| id != got[0].1 && id % 2 == 0));
     }
 
     #[test]

@@ -17,6 +17,7 @@
 //! The `ef` sweep parameter maps to `nprobe` (cells probed), giving IVF the
 //! same recall↔QPS dial as the graph methods in Figure 1.
 
+use crate::anns::filter::{Admit, FilterBitset, DEFAULT_FILTERED_FALLBACK};
 use crate::anns::heap::dist_cmp;
 use crate::anns::hnsw::search::SearchContext;
 use crate::anns::scratch::ScratchPool;
@@ -80,6 +81,9 @@ pub struct IvfIndex {
     /// Shared scratch: cell-ranking, gather and distance buffers that the
     /// old code allocated fresh on every query.
     scratch: ScratchPool,
+    /// Selectivity crossover for filtered search (see
+    /// [`AnnIndex::filtered_fallback_threshold`]).
+    filtered_fallback: usize,
 }
 
 impl IvfIndex {
@@ -184,7 +188,14 @@ impl IvfIndex {
             deleted,
             free: Vec::new(),
             scratch: ScratchPool::new(),
+            filtered_fallback: DEFAULT_FILTERED_FALLBACK,
         }
+    }
+
+    /// Tune the selectivity crossover: filters with at most this many
+    /// matching ids take the exact-scan fallback instead of the probe scan.
+    pub fn set_filtered_fallback(&mut self, threshold: usize) {
+        self.filtered_fallback = threshold;
     }
 
     /// Rank cells by centroid distance to `q` into the caller's buffer
@@ -214,42 +225,57 @@ impl IvfIndex {
         &self.cells[c as usize]
     }
 
-    /// `true` when `id` may appear in results (see
-    /// [`Tombstones::is_live`]).
-    #[inline]
-    fn live(&self, id: u32) -> bool {
-        self.deleted.is_live(id)
-    }
-
-    /// One query with caller-provided scratch — the shared body of
-    /// `search_with_dists` and `search_batch`. `ef` maps to nprobe (≥1),
-    /// scaled down since cells ≫ beam widths.
+    /// One query with caller-provided scratch — the shared body of the
+    /// (filtered and unfiltered) search and batch entry points. `ef` maps
+    /// to nprobe (≥1), scaled down since cells ≫ beam widths. Non-matching
+    /// members still get a (discarded) distance — the batch kernel runs
+    /// whole posting lists — but never enter the pool, exactly the
+    /// tombstone treatment; `filter = None` is byte-identical to the
+    /// pre-filter path.
     fn search_one(
         &self,
         query: &[f32],
         k: usize,
         ef: usize,
         ctx: &mut SearchContext,
+        filter: Option<&FilterBitset>,
     ) -> Vec<(f32, u32)> {
         let n = self.vectors.len();
         if n == 0 {
             return Vec::new();
         }
+        if let Some(f) = filter {
+            // Selectivity fallback: scan just the matching ids exactly
+            // instead of probing cells that mostly don't contain them.
+            if f.count() <= self.filtered_fallback {
+                return crate::anns::filtered_exact_fallback(
+                    &self.vectors,
+                    query,
+                    k,
+                    &mut ctx.batch,
+                    &mut ctx.dists,
+                    self.deleted.filter_ref(),
+                    f,
+                );
+            }
+        }
+        let admit = Admit {
+            deleted: self.deleted.filter_ref(),
+            filter,
+        };
         let nprobe = (ef / 8).clamp(1, self.nlist);
         self.rank_cells(query, &mut ctx.cands);
 
         let Some(quant) = &self.quant else {
             // Exact IVFFlat: full-precision posting-list scan through the
             // f32 one-to-many kernel; no rerank pass needed. Tombstoned
-            // members still get a (discarded) distance — the batch kernel
-            // runs whole posting lists — but never enter the pool; their
-            // cost disappears at the next consolidate.
+            // members' cost disappears at the next consolidate.
             let mut pool = crate::anns::heap::TopK::new(k);
             for &(_, c) in ctx.cands.iter().take(nprobe) {
                 let members = self.cell_members(c);
                 self.vectors.distance_batch(query, members, &mut ctx.dists);
                 for (&i, &d) in members.iter().zip(&ctx.dists) {
-                    if self.live(i) {
+                    if admit.allows(i) {
                         pool.push(d, i);
                     }
                 }
@@ -267,7 +293,7 @@ impl IvfIndex {
             let members = self.cell_members(c);
             quant.distance_batch(metric, &qc, members, &mut ctx.dists);
             for (&i, &d) in members.iter().zip(&ctx.dists) {
-                if self.live(i) {
+                if admit.allows(i) {
                     pool.push(d, i);
                 }
             }
@@ -310,7 +336,7 @@ impl AnnIndex for IvfIndex {
 
     fn search_with_dists(&self, query: &[f32], k: usize, ef: usize) -> Vec<(f32, u32)> {
         let mut ctx = self.scratch.checkout(0);
-        self.search_one(query, k, ef, &mut ctx)
+        self.search_one(query, k, ef, &mut ctx, None)
     }
 
     fn search_batch(&self, queries: &[&[f32]], k: usize, ef: usize) -> Vec<Vec<(f32, u32)>> {
@@ -319,8 +345,37 @@ impl AnnIndex for IvfIndex {
         let mut ctx = self.scratch.checkout(0);
         queries
             .iter()
-            .map(|q| self.search_one(q, k, ef, &mut ctx))
+            .map(|q| self.search_one(q, k, ef, &mut ctx, None))
             .collect()
+    }
+
+    fn search_filtered_with_dists(
+        &self,
+        query: &[f32],
+        k: usize,
+        ef: usize,
+        filter: Option<&FilterBitset>,
+    ) -> Vec<(f32, u32)> {
+        let mut ctx = self.scratch.checkout(0);
+        self.search_one(query, k, ef, &mut ctx, filter)
+    }
+
+    fn search_filtered_batch(
+        &self,
+        queries: &[&[f32]],
+        k: usize,
+        ef: usize,
+        filter: Option<&FilterBitset>,
+    ) -> Vec<Vec<(f32, u32)>> {
+        let mut ctx = self.scratch.checkout(0);
+        queries
+            .iter()
+            .map(|q| self.search_one(q, k, ef, &mut ctx, filter))
+            .collect()
+    }
+
+    fn filtered_fallback_threshold(&self) -> usize {
+        self.filtered_fallback
     }
 
     fn len(&self) -> usize {
@@ -526,6 +581,66 @@ mod tests {
             let id2 = idx.insert(&v).unwrap();
             assert!(doomed.contains(&id2), "expected a recycled slot, got {id2}");
             assert!(idx.search(&v, 2, 100_000).contains(&id2));
+        }
+    }
+
+    #[test]
+    fn filtered_ivf_both_scan_modes_honor_filter() {
+        // Full-probe filtered search in exact mode must equal the filtered
+        // ground truth exactly; quantized mode must at least never surface
+        // a non-matching or tombstoned id. filter=None stays bitwise
+        // identical to the unfiltered path in both modes.
+        let sp = synth::spec("demo-64").unwrap();
+        let ds = synth::generate_counts(sp, 800, 20, 58);
+        for quantized_scan in [false, true] {
+            let params = IvfParams { quantized_scan, ..IvfParams::default() };
+            let mut idx = IvfIndex::build(VectorSet::from_dataset(&ds), params, 1);
+            let filter = FilterBitset::from_predicate(800, |id| id % 3 == 0);
+            assert!(filter.count() > idx.filtered_fallback_threshold());
+            for qi in 0..ds.n_queries() {
+                let q = ds.query_vec(qi);
+                assert_eq!(
+                    idx.search_filtered_with_dists(q, 10, 100_000, None),
+                    idx.search_with_dists(q, 10, 100_000),
+                    "filter=None diverged (qs={quantized_scan})"
+                );
+                let got = idx.search_filtered_with_dists(q, 10, 100_000, Some(&filter));
+                assert_eq!(got.len(), 10);
+                assert!(got.iter().all(|&(_, id)| id % 3 == 0));
+                if !quantized_scan {
+                    let (mut ids, mut dists) = (Vec::new(), Vec::new());
+                    let want = crate::dataset::gt::topk_pairs_for_query_filtered(
+                        &ds.base,
+                        q,
+                        ds.dim,
+                        ds.metric,
+                        10,
+                        &mut ids,
+                        &mut dists,
+                        |i| filter.matches(i),
+                    );
+                    assert_eq!(got, want, "exact full-probe filtered != oracle");
+                }
+            }
+            // Sparse filter takes the exact fallback and skips tombstones.
+            let rare = FilterBitset::from_predicate(800, |id| id % 80 == 0); // 10 ids
+            assert!(rare.count() <= idx.filtered_fallback_threshold());
+            let q = ds.query_vec(0);
+            let before = idx.search_filtered_with_dists(q, 10, 8, Some(&rare));
+            assert_eq!(before.len(), 10);
+            assert!(before.iter().all(|&(_, id)| id % 80 == 0));
+            idx.delete(before[0].1).unwrap();
+            let after = idx.search_filtered_with_dists(q, 10, 8, Some(&rare));
+            assert!(after.iter().all(|&(_, id)| id != before[0].1));
+            // Filtered batch == filtered per-query.
+            let queries: Vec<&[f32]> = (0..ds.n_queries()).map(|qi| ds.query_vec(qi)).collect();
+            let batched = idx.search_filtered_batch(&queries, 10, 256, Some(&filter));
+            for (qi, q) in queries.iter().enumerate() {
+                assert_eq!(
+                    batched[qi],
+                    idx.search_filtered_with_dists(q, 10, 256, Some(&filter))
+                );
+            }
         }
     }
 

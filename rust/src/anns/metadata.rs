@@ -1,0 +1,322 @@
+//! Per-id metadata for filtered / multi-tenant search: each id carries an
+//! optional tenant and a set of tags, and a query-side [`FilterExpr`]
+//! (tenant equality, tag membership, conjunction) compiles against the
+//! store into a [`FilterBitset`] the index scans/beams consume.
+//!
+//! Strings are interned once into a shared name table (tenants and tags
+//! draw from the same table), so the per-id storage is plain `u32`s —
+//! compact, order-stable, and directly serializable by `anns::persist`.
+//! Ids the store has never seen (points inserted after the last metadata
+//! write) have no tenant and no tags, so they match no tenant/tag
+//! predicate: deny-safe, same convention as
+//! [`FilterBitset::matches`] on out-of-range ids.
+
+use crate::anns::filter::FilterBitset;
+use std::collections::HashMap;
+
+/// Sentinel for "no tenant" in the per-id tenant column.
+pub const NO_TENANT: u32 = u32::MAX;
+
+/// A query-side filter over the metadata store. Conjunction-only by
+/// design: "tenant = X ∧ tag ∈ {a, b}" covers the multi-tenant RAG
+/// shape, and a conjunction's compiled bitset is the intersection of its
+/// parts — monotone, so selectivity only ever shrinks.
+#[derive(Clone, Debug, PartialEq)]
+pub enum FilterExpr {
+    /// Id's tenant equals this name.
+    Tenant(String),
+    /// Id's tag set contains this name.
+    HasTag(String),
+    /// Every sub-expression holds. `And(vec![])` matches everything the
+    /// store knows about (the neutral element of conjunction).
+    And(Vec<FilterExpr>),
+}
+
+impl FilterExpr {
+    pub fn tenant(name: &str) -> FilterExpr {
+        FilterExpr::Tenant(name.to_string())
+    }
+
+    pub fn tag(name: &str) -> FilterExpr {
+        FilterExpr::HasTag(name.to_string())
+    }
+
+    pub fn and(parts: Vec<FilterExpr>) -> FilterExpr {
+        FilterExpr::And(parts)
+    }
+}
+
+/// Id → (tenant, tag set) with interned names.
+#[derive(Clone, Debug, Default)]
+pub struct MetadataStore {
+    /// Intern table: names[i] is the string with id `i`.
+    names: Vec<String>,
+    /// Reverse lookup for interning.
+    by_name: HashMap<String, u32>,
+    /// Per-id tenant name id ([`NO_TENANT`] = none).
+    tenants: Vec<u32>,
+    /// Per-id tag name ids (sorted, deduped — membership is a binary
+    /// search and the persisted form is canonical).
+    tags: Vec<Vec<u32>>,
+}
+
+impl MetadataStore {
+    pub fn new() -> MetadataStore {
+        MetadataStore::default()
+    }
+
+    /// Number of ids with metadata rows (ids ≥ this have none).
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    fn intern(&mut self, name: &str) -> u32 {
+        if let Some(&id) = self.by_name.get(name) {
+            return id;
+        }
+        let id = self.names.len() as u32;
+        self.names.push(name.to_string());
+        self.by_name.insert(name.to_string(), id);
+        id
+    }
+
+    /// Append the next id's metadata (id == current `len()`).
+    pub fn push(&mut self, tenant: Option<&str>, tags: &[&str]) {
+        let t = tenant.map_or(NO_TENANT, |t| self.intern(t));
+        let mut tg: Vec<u32> = tags.iter().map(|s| self.intern(s)).collect();
+        tg.sort_unstable();
+        tg.dedup();
+        self.tenants.push(t);
+        self.tags.push(tg);
+    }
+
+    /// Set (or overwrite) metadata for `id`, growing the store with
+    /// no-tenant/no-tag rows as needed — the recycled-slot path: an
+    /// insert that reuses a consolidated slot replaces the old point's
+    /// metadata wholesale.
+    pub fn set_for(&mut self, id: u32, tenant: Option<&str>, tags: &[&str]) {
+        while self.tenants.len() <= id as usize {
+            self.tenants.push(NO_TENANT);
+            self.tags.push(Vec::new());
+        }
+        let t = tenant.map_or(NO_TENANT, |t| self.intern(t));
+        let mut tg: Vec<u32> = tags.iter().map(|s| self.intern(s)).collect();
+        tg.sort_unstable();
+        tg.dedup();
+        self.tenants[id as usize] = t;
+        self.tags[id as usize] = tg;
+    }
+
+    /// Tenant of `id` (None for no tenant or unknown id).
+    pub fn tenant(&self, id: u32) -> Option<&str> {
+        match self.tenants.get(id as usize) {
+            Some(&t) if t != NO_TENANT => Some(&self.names[t as usize]),
+            _ => None,
+        }
+    }
+
+    /// Does `id` carry `tag`? Unknown ids and unknown tags never match.
+    pub fn has_tag(&self, id: u32, tag: &str) -> bool {
+        match (self.tags.get(id as usize), self.by_name.get(tag)) {
+            (Some(tg), Some(t)) => tg.binary_search(t).is_ok(),
+            _ => false,
+        }
+    }
+
+    /// Does `id` satisfy `expr`? A name the store has never interned
+    /// matches nothing (an unknown tenant owns no points).
+    pub fn matches_expr(&self, id: u32, expr: &FilterExpr) -> bool {
+        match expr {
+            FilterExpr::Tenant(name) => match self.by_name.get(name) {
+                Some(&t) => self.tenants.get(id as usize) == Some(&t),
+                None => false,
+            },
+            FilterExpr::HasTag(name) => self.has_tag(id, name),
+            FilterExpr::And(parts) => parts.iter().all(|p| self.matches_expr(id, p)),
+        }
+    }
+
+    /// Compile `expr` into an allow-list bitset over ids `0..n` (`n` is
+    /// the index's point count — ids beyond the store's rows stay
+    /// unmatched, ids beyond `n` don't exist).
+    pub fn compile(&self, expr: &FilterExpr, n: usize) -> FilterBitset {
+        let upto = n.min(self.len());
+        let mut f = FilterBitset::new(n);
+        for id in 0..upto as u32 {
+            if self.matches_expr(id, expr) {
+                f.set(id);
+            }
+        }
+        f
+    }
+
+    // --- Persistence accessors (see `anns::persist`): the raw columns,
+    // and reconstruction with hostile-input validation.
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn tenants(&self) -> &[u32] {
+        &self.tenants
+    }
+
+    pub fn tags(&self) -> &[Vec<u32>] {
+        &self.tags
+    }
+
+    /// Rebuild from persisted columns. Every name id must be in range
+    /// (`tenant == NO_TENANT` allowed), the two per-id columns must
+    /// agree on length, and tag rows are re-canonicalized (sorted,
+    /// deduped) so a permuted-but-valid file loads to the same store.
+    pub fn from_columns(
+        names: Vec<String>,
+        tenants: Vec<u32>,
+        tags: Vec<Vec<u32>>,
+    ) -> Result<MetadataStore, String> {
+        if tenants.len() != tags.len() {
+            return Err(format!(
+                "metadata column mismatch: {} tenants vs {} tag rows",
+                tenants.len(),
+                tags.len()
+            ));
+        }
+        let n_names = names.len() as u32;
+        for (id, &t) in tenants.iter().enumerate() {
+            if t != NO_TENANT && t >= n_names {
+                return Err(format!("metadata tenant id {t} of row {id} out of range {n_names}"));
+            }
+        }
+        let mut canon = Vec::with_capacity(tags.len());
+        for (id, mut row) in tags.into_iter().enumerate() {
+            if let Some(&bad) = row.iter().find(|&&t| t >= n_names) {
+                return Err(format!("metadata tag id {bad} of row {id} out of range {n_names}"));
+            }
+            row.sort_unstable();
+            row.dedup();
+            canon.push(row);
+        }
+        let mut by_name = HashMap::with_capacity(names.len());
+        for (i, name) in names.iter().enumerate() {
+            if by_name.insert(name.clone(), i as u32).is_some() {
+                return Err(format!("metadata name table repeats {name:?}"));
+            }
+        }
+        Ok(MetadataStore {
+            names,
+            by_name,
+            tenants,
+            tags: canon,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_store() -> MetadataStore {
+        let mut m = MetadataStore::new();
+        for id in 0..100u32 {
+            let tenant = format!("t{}", id % 10);
+            let mut tags: Vec<&str> = Vec::new();
+            if id % 10 != 0 {
+                tags.push("hot");
+            }
+            if id % 50 == 0 {
+                tags.push("rare");
+            }
+            m.push(Some(&tenant), &tags);
+        }
+        m
+    }
+
+    #[test]
+    fn filtered_metadata_lookup_and_expr() {
+        let m = demo_store();
+        assert_eq!(m.len(), 100);
+        assert_eq!(m.tenant(23), Some("t3"));
+        assert!(m.has_tag(23, "hot"));
+        assert!(!m.has_tag(20, "hot"));
+        assert!(m.has_tag(50, "rare"));
+        assert!(!m.has_tag(200, "hot"), "unknown id matches nothing");
+        assert!(!m.has_tag(1, "absent"), "unknown tag matches nothing");
+        assert!(m.matches_expr(23, &FilterExpr::tenant("t3")));
+        assert!(!m.matches_expr(23, &FilterExpr::tenant("t4")));
+        assert!(!m.matches_expr(23, &FilterExpr::tenant("never-seen")));
+        let both = FilterExpr::and(vec![FilterExpr::tenant("t0"), FilterExpr::tag("rare")]);
+        assert!(m.matches_expr(0, &both) && m.matches_expr(50, &both));
+        assert!(!m.matches_expr(10, &both), "t0 but not rare");
+        assert!(m.matches_expr(7, &FilterExpr::and(vec![])), "empty AND is true");
+    }
+
+    #[test]
+    fn filtered_metadata_compile_counts_selectivity() {
+        let m = demo_store();
+        let tenant = m.compile(&FilterExpr::tenant("t3"), 100);
+        assert_eq!(tenant.count(), 10);
+        assert!(tenant.matches(3) && tenant.matches(93) && !tenant.matches(4));
+        let hot = m.compile(&FilterExpr::tag("hot"), 100);
+        assert_eq!(hot.count(), 90);
+        let rare = m.compile(&FilterExpr::tag("rare"), 100);
+        assert_eq!(rare.count(), 2);
+        // Compiling over a larger index: ids beyond the store never match.
+        let grown = m.compile(&FilterExpr::tag("hot"), 150);
+        assert_eq!(grown.count(), 90);
+        assert!(!grown.matches(120));
+        // Over a smaller one: capped at n.
+        let cut = m.compile(&FilterExpr::tag("hot"), 20);
+        assert_eq!(cut.count(), 18);
+    }
+
+    #[test]
+    fn filtered_metadata_set_for_grows_and_overwrites() {
+        let mut m = MetadataStore::new();
+        m.set_for(5, Some("a"), &["x"]);
+        assert_eq!(m.len(), 6);
+        assert_eq!(m.tenant(5), Some("a"));
+        assert_eq!(m.tenant(2), None);
+        assert!(!m.has_tag(2, "x"));
+        // Recycled slot: metadata replaced wholesale.
+        m.set_for(5, Some("b"), &[]);
+        assert_eq!(m.tenant(5), Some("b"));
+        assert!(!m.has_tag(5, "x"));
+    }
+
+    #[test]
+    fn filtered_metadata_columns_roundtrip_and_hostile_reject() {
+        let m = demo_store();
+        let back = MetadataStore::from_columns(
+            m.names().to_vec(),
+            m.tenants().to_vec(),
+            m.tags().to_vec(),
+        )
+        .unwrap();
+        for id in 0..100u32 {
+            assert_eq!(back.tenant(id), m.tenant(id));
+            assert_eq!(back.has_tag(id, "hot"), m.has_tag(id, "hot"));
+        }
+        // Hostile columns: length mismatch, out-of-range ids, dup names.
+        assert!(MetadataStore::from_columns(vec![], vec![0], vec![]).is_err());
+        assert!(
+            MetadataStore::from_columns(vec!["a".into()], vec![1], vec![vec![]]).is_err(),
+            "tenant id beyond name table"
+        );
+        assert!(
+            MetadataStore::from_columns(vec!["a".into()], vec![NO_TENANT], vec![vec![9]])
+                .is_err(),
+            "tag id beyond name table"
+        );
+        assert!(
+            MetadataStore::from_columns(vec!["a".into(), "a".into()], vec![0], vec![vec![]])
+                .is_err(),
+            "duplicate interned name"
+        );
+        // NO_TENANT is always acceptable.
+        assert!(MetadataStore::from_columns(vec![], vec![NO_TENANT], vec![vec![]]).is_ok());
+    }
+}

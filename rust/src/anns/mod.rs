@@ -11,10 +11,12 @@
 //! live traffic.
 
 pub mod bruteforce;
+pub mod filter;
 pub mod glass;
 pub mod heap;
 pub mod hnsw;
 pub mod ivf;
+pub mod metadata;
 pub mod nndescent;
 pub mod persist;
 pub mod scratch;
@@ -22,6 +24,8 @@ pub mod tombstones;
 pub mod vamana;
 pub mod visited;
 
+pub use filter::FilterBitset;
+pub use metadata::{FilterExpr, MetadataStore};
 pub use tombstones::Tombstones;
 
 /// A built, queryable index.
@@ -68,6 +72,82 @@ pub trait AnnIndex: Send + Sync {
             .iter()
             .map(|q| self.search_with_dists(q, k, ef))
             .collect()
+    }
+
+    /// [`AnnIndex::search_with_dists`] restricted to ids the filter
+    /// allows — the predicate-constrained ("tenant = X ∧ tag ∈ S") query
+    /// path. `filter = None` **is** the unfiltered path: every index
+    /// delegates it to `search_with_dists`, so results are bitwise
+    /// identical to a plain call. With `Some(f)`, no id with
+    /// `f.matches(id) == false` (and no tombstoned id) ever surfaces;
+    /// graph beams keep admitting non-matching nodes to the frontier and
+    /// filter only at result admission (the tombstone discipline), and
+    /// indexes route very selective filters (popcount ≤
+    /// [`AnnIndex::filtered_fallback_threshold`]) to an exact scan over
+    /// the matching ids instead of a beam.
+    ///
+    /// The default is a **best-effort post-filter** (search, drop
+    /// non-matching) for exotic trait impls; all six index types and both
+    /// sharded routers override it with true scan/beam-time filtering.
+    fn search_filtered_with_dists(
+        &self,
+        query: &[f32],
+        k: usize,
+        ef: usize,
+        filter: Option<&filter::FilterBitset>,
+    ) -> Vec<(f32, u32)> {
+        match filter {
+            None => self.search_with_dists(query, k, ef),
+            Some(f) => {
+                let mut out = self.search_with_dists(query, k, ef.max(k));
+                out.retain(|&(_, id)| f.matches(id));
+                out.truncate(k);
+                out
+            }
+        }
+    }
+
+    /// Ids-only projection of [`AnnIndex::search_filtered_with_dists`].
+    fn search_filtered(
+        &self,
+        query: &[f32],
+        k: usize,
+        ef: usize,
+        filter: Option<&filter::FilterBitset>,
+    ) -> Vec<u32> {
+        self.search_filtered_with_dists(query, k, ef, filter)
+            .into_iter()
+            .map(|(_, i)| i)
+            .collect()
+    }
+
+    /// Batched [`AnnIndex::search_filtered_with_dists`]: one result list
+    /// per query under a shared filter, each bitwise identical to the
+    /// per-query call (same contract as [`AnnIndex::search_batch`]).
+    /// Indexes override to amortize scratch checkout; the sharded routers
+    /// override to translate the global bitset once per shard and fan the
+    /// whole batch out.
+    fn search_filtered_batch(
+        &self,
+        queries: &[&[f32]],
+        k: usize,
+        ef: usize,
+        filter: Option<&filter::FilterBitset>,
+    ) -> Vec<Vec<(f32, u32)>> {
+        queries
+            .iter()
+            .map(|q| self.search_filtered_with_dists(q, k, ef, filter))
+            .collect()
+    }
+
+    /// The selectivity crossover this index applies in
+    /// [`AnnIndex::search_filtered_with_dists`]: filters whose popcount is
+    /// at or below this route to exact brute force over the matching ids.
+    /// 0 (the default) means "never falls back" — brute force is already
+    /// exact, and exotic impls don't fall back. Advisory: the serving
+    /// metrics use it to count fallback-routed queries.
+    fn filtered_fallback_threshold(&self) -> usize {
+        0
     }
 
     /// Number of indexed vectors.
@@ -192,6 +272,38 @@ pub(crate) fn recycle_or_append(
             (id, false)
         }
     }
+}
+
+/// Shared selectivity fallback for filtered search: an exact scan over
+/// the (few) ids the filter allows, used by every graph/IVF index when
+/// the filter's popcount is at or below its fallback threshold. Gathers
+/// the live matching ids, scores them in one SIMD batch
+/// ([`VectorSet::distance_batch`] — bitwise identical to per-pair
+/// distances), and sorts by [`heap::dist_cmp`] (distance then id) — the
+/// exact ordering of `gt::topk_pairs_for_query_filtered`, so the
+/// fallback's results ARE the filtered ground truth for those queries.
+pub(crate) fn filtered_exact_fallback(
+    vectors: &VectorSet,
+    query: &[f32],
+    k: usize,
+    ids_buf: &mut Vec<u32>,
+    dists_buf: &mut Vec<f32>,
+    deleted: Option<&Tombstones>,
+    filter: &filter::FilterBitset,
+) -> Vec<(f32, u32)> {
+    ids_buf.clear();
+    ids_buf.extend(filter.iter_set().into_iter().filter(|&id| {
+        (id as usize) < vectors.len() && deleted.map_or(true, |t| !t.contains(id))
+    }));
+    vectors.distance_batch(query, ids_buf, dists_buf);
+    let mut out: Vec<(f32, u32)> = dists_buf
+        .iter()
+        .copied()
+        .zip(ids_buf.iter().copied())
+        .collect();
+    out.sort_by(heap::dist_cmp);
+    out.truncate(k);
+    out
 }
 
 /// Owned view of base vectors shared by index implementations.

@@ -10,6 +10,7 @@
 //! * `pynndescent` — diversified graph (occlusion pruning) + backtracking
 //!   beam, which trades build time for better high-recall behavior.
 
+use crate::anns::filter::{Admit, FilterBitset, DEFAULT_FILTERED_FALLBACK};
 use crate::anns::heap::{dist_cmp, TopK};
 use crate::anns::hnsw::search::SearchContext;
 use crate::anns::scratch::ScratchPool;
@@ -67,6 +68,8 @@ pub struct NnDescentIndex {
     label: String,
     seed: u64,
     scratch: ScratchPool,
+    /// Filters with popcount at or below this route to exact fallback.
+    filtered_fallback: usize,
 }
 
 const NONE: u32 = u32::MAX;
@@ -196,7 +199,14 @@ impl NnDescentIndex {
             params,
             seed,
             scratch: ScratchPool::new(),
+            filtered_fallback: DEFAULT_FILTERED_FALLBACK,
         }
+    }
+
+    /// Tune the selectivity crossover: filters with `count() <=
+    /// threshold` skip the beam and scan the matching ids exactly.
+    pub fn set_filtered_fallback(&mut self, threshold: usize) {
+        self.filtered_fallback = threshold;
     }
 
     #[inline]
@@ -219,18 +229,40 @@ impl NnDescentIndex {
     }
 
     /// One beam search with caller-provided scratch — the shared body of
-    /// `search_with_dists` and `search_batch`.
+    /// the (filtered and unfiltered) search and batch entry points. The
+    /// admission discipline matches the graph indexes: non-matching nodes
+    /// still seed and extend the frontier, they are only withheld from
+    /// `results.push`, so `filter = None` compiles to the constant-true
+    /// predicate and stays bitwise identical to the pre-filter path.
     fn search_one(
         &self,
         query: &[f32],
         k: usize,
         ef: usize,
         ctx: &mut SearchContext,
+        filter: Option<&FilterBitset>,
     ) -> Vec<(f32, u32)> {
         let n = self.vectors.len();
         if n == 0 {
             return Vec::new();
         }
+        if let Some(f) = filter {
+            if f.count() <= self.filtered_fallback {
+                return crate::anns::filtered_exact_fallback(
+                    &self.vectors,
+                    query,
+                    k,
+                    &mut ctx.batch,
+                    &mut ctx.dists,
+                    None,
+                    f,
+                );
+            }
+        }
+        let admit = Admit {
+            deleted: None,
+            filter,
+        };
         let ef = ef.max(k);
         ctx.visited.clear();
         ctx.frontier.clear();
@@ -247,7 +279,9 @@ impl NnDescentIndex {
             if ctx.visited.insert(e) {
                 let d = self.vectors.distance(query, e);
                 ctx.frontier.push(d, e);
-                results.push(d, e);
+                if admit.allows(e) {
+                    results.push(d, e);
+                }
             }
         }
 
@@ -261,7 +295,9 @@ impl NnDescentIndex {
                 }
                 let dnb = self.vectors.distance(query, nb);
                 if dnb < results.bound() {
-                    results.push(dnb, nb);
+                    if admit.allows(nb) {
+                        results.push(dnb, nb);
+                    }
                     ctx.frontier.push(dnb, nb);
                 }
             }
@@ -279,15 +315,44 @@ impl AnnIndex for NnDescentIndex {
 
     fn search_with_dists(&self, query: &[f32], k: usize, ef: usize) -> Vec<(f32, u32)> {
         let mut ctx = self.scratch.checkout(self.vectors.len());
-        self.search_one(query, k, ef, &mut ctx)
+        self.search_one(query, k, ef, &mut ctx, None)
     }
 
     fn search_batch(&self, queries: &[&[f32]], k: usize, ef: usize) -> Vec<Vec<(f32, u32)>> {
         let mut ctx = self.scratch.checkout(self.vectors.len());
         queries
             .iter()
-            .map(|q| self.search_one(q, k, ef, &mut ctx))
+            .map(|q| self.search_one(q, k, ef, &mut ctx, None))
             .collect()
+    }
+
+    fn search_filtered_with_dists(
+        &self,
+        query: &[f32],
+        k: usize,
+        ef: usize,
+        filter: Option<&FilterBitset>,
+    ) -> Vec<(f32, u32)> {
+        let mut ctx = self.scratch.checkout(self.vectors.len());
+        self.search_one(query, k, ef, &mut ctx, filter)
+    }
+
+    fn search_filtered_batch(
+        &self,
+        queries: &[&[f32]],
+        k: usize,
+        ef: usize,
+        filter: Option<&FilterBitset>,
+    ) -> Vec<Vec<(f32, u32)>> {
+        let mut ctx = self.scratch.checkout(self.vectors.len());
+        queries
+            .iter()
+            .map(|q| self.search_one(q, k, ef, &mut ctx, filter))
+            .collect()
+    }
+
+    fn filtered_fallback_threshold(&self) -> usize {
+        self.filtered_fallback
     }
 
     fn len(&self) -> usize {
@@ -361,6 +426,66 @@ mod tests {
         assert_eq!(idx.name(), "pynndescent");
         let found = idx.search(ds.query_vec(0), 10, 64);
         assert_eq!(found.len(), 10);
+    }
+
+    #[test]
+    fn filtered_nndescent_beam_and_fallback_paths() {
+        let ds = dataset();
+        let mut idx = NnDescentIndex::build(
+            VectorSet::from_dataset(&ds),
+            NnDescentParams::default(),
+            3,
+        );
+        let n = idx.len();
+        // filter=None is bitwise identical to the unfiltered path.
+        for qi in 0..8 {
+            let q = ds.query_vec(qi);
+            assert_eq!(
+                idx.search_filtered_with_dists(q, 10, 96, None),
+                idx.search_with_dists(q, 10, 96)
+            );
+        }
+        // Wide filter takes the beam; results all match.
+        let third = FilterBitset::from_predicate(n, |id| id % 3 == 0);
+        assert!(third.count() > idx.filtered_fallback);
+        for qi in 0..8 {
+            let found = idx.search_filtered(ds.query_vec(qi), 10, 96, Some(&third));
+            assert!(!found.is_empty());
+            assert!(found.iter().all(|&id| id % 3 == 0), "leak in {found:?}");
+        }
+        // Rare filter routes to exact fallback and equals the oracle.
+        let rare = FilterBitset::from_predicate(n, |id| id % 100 == 0);
+        assert!(rare.count() <= idx.filtered_fallback);
+        let (mut ids, mut dists) = (Vec::new(), Vec::new());
+        for qi in 0..8 {
+            let q = ds.query_vec(qi);
+            let want = crate::dataset::gt::topk_pairs_for_query_filtered(
+                &idx.vectors.data,
+                q,
+                idx.vectors.dim,
+                idx.vectors.metric,
+                5,
+                &mut ids,
+                &mut dists,
+                |i| rare.matches(i),
+            );
+            assert_eq!(idx.search_filtered_with_dists(q, 5, 96, Some(&rare)), want);
+        }
+        // Forced beam on the rare filter still never leaks.
+        idx.set_filtered_fallback(0);
+        for qi in 0..8 {
+            let found = idx.search_filtered(ds.query_vec(qi), 5, 96, Some(&rare));
+            assert!(found.iter().all(|&id| id % 100 == 0));
+        }
+        idx.set_filtered_fallback(DEFAULT_FILTERED_FALLBACK);
+        // Filtered batch == filtered per-query.
+        let queries: Vec<&[f32]> = (0..8).map(|qi| ds.query_vec(qi)).collect();
+        for f in [None, Some(&third), Some(&rare)] {
+            let batched = idx.search_filtered_batch(&queries, 10, 96, f);
+            for (qi, q) in queries.iter().enumerate() {
+                assert_eq!(batched[qi], idx.search_filtered_with_dists(q, 10, 96, f));
+            }
+        }
     }
 
     #[test]

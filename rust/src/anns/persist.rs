@@ -5,7 +5,8 @@
 //! binary container (`CRNN` magic + version) carrying the vector set, the
 //! layered graph, the quantized codes, the variant configuration (encoded
 //! through the same action space the RL uses, which keeps the format
-//! stable as knobs evolve) and — since v2 — the mutation state: the
+//! stable as knobs evolve) and — since v2 — an optional id → tenant/tags
+//! metadata section (for filtered serving) plus the mutation state: the
 //! tombstone bitset and the free-slot list, so a snapshot taken under
 //! live traffic restores with exactly the same live set.
 //!
@@ -16,6 +17,7 @@
 //! marked, unique, in-range slot.
 
 use crate::anns::hnsw::graph::HnswGraph;
+use crate::anns::metadata::MetadataStore;
 use crate::anns::tombstones::Tombstones;
 use crate::anns::VectorSet;
 use crate::distance::quant::QuantizedStore;
@@ -153,6 +155,24 @@ impl<'a, T: Read> R<'a, T> {
 
 /// Save a built GLASS index (graph + codes + config) to `path`.
 pub fn save_glass(idx: &crate::anns::glass::GlassIndex, path: &Path) -> Result<()> {
+    save_glass_impl(idx, None, path)
+}
+
+/// [`save_glass`] plus the id → tenant/tags store, so a filtered-serving
+/// deployment snapshots index and metadata as one artifact.
+pub fn save_glass_with_metadata(
+    idx: &crate::anns::glass::GlassIndex,
+    metadata: &MetadataStore,
+    path: &Path,
+) -> Result<()> {
+    save_glass_impl(idx, Some(metadata), path)
+}
+
+fn save_glass_impl(
+    idx: &crate::anns::glass::GlassIndex,
+    metadata: Option<&MetadataStore>,
+    path: &Path,
+) -> Result<()> {
     let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
     let mut bw = BufWriter::new(f);
     let mut w = W(&mut bw);
@@ -193,6 +213,39 @@ pub fn save_glass(idx: &crate::anns::glass::GlassIndex, path: &Path) -> Result<(
             w.f64(v)?;
         }
     }
+    // v2: metadata section — a presence flag, then (when present) the
+    // store's interned columns: row count, name table, per-row tenant name
+    // ids, row-delimiting tag offsets, and the flat tag name ids. Plain
+    // [`save_glass`] writes flag 0 only, so index-only snapshots cost 8
+    // extra bytes and round-trip unchanged.
+    match metadata {
+        None => w.u64(0)?,
+        Some(meta) => {
+            crate::ensure!(
+                meta.len() <= g.len(),
+                "metadata store has {} rows but the index has {} points",
+                meta.len(),
+                g.len()
+            );
+            w.u64(1)?;
+            w.u64(meta.len() as u64)?;
+            let names = meta.names();
+            w.u64(names.len() as u64)?;
+            for name in names {
+                w.u8s(name.as_bytes())?;
+            }
+            w.u32s(meta.tenants())?;
+            let mut offsets = Vec::with_capacity(meta.len() + 1);
+            let mut tag_ids: Vec<u32> = Vec::new();
+            offsets.push(0u64);
+            for row in meta.tags() {
+                tag_ids.extend_from_slice(row);
+                offsets.push(tag_ids.len() as u64);
+            }
+            w.u64s(&offsets)?;
+            w.u32s(&tag_ids)?;
+        }
+    }
     // v2: mutation state — declared tombstone count, bitset words, free
     // list, insert-level RNG state (4 fixed u64s). The count is redundant
     // with the words' popcount; writing both lets the reader cross-check
@@ -219,6 +272,18 @@ pub fn save_glass(idx: &crate::anns::glass::GlassIndex, path: &Path) -> Result<(
 /// **persisted** frozen scale, never a re-fit, so an index that absorbed
 /// online inserts restores bit-identically.
 pub fn load_glass(path: &Path) -> Result<crate::anns::glass::GlassIndex> {
+    Ok(load_glass_with_metadata(path)?.0)
+}
+
+/// [`load_glass`] plus the persisted metadata store (`None` for index-only
+/// snapshots and v1 files). The metadata columns get the same
+/// hostile-input treatment as the mutation state: row count capped by the
+/// point count, name ids range-checked, tag offsets monotone and
+/// consistent with the flat tag array — reject with `Err`, never
+/// trust-and-crash later.
+pub fn load_glass_with_metadata(
+    path: &Path,
+) -> Result<(crate::anns::glass::GlassIndex, Option<MetadataStore>)> {
     let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
     let limit = f
         .metadata()
@@ -283,6 +348,70 @@ pub fn load_glass(path: &Path) -> Result<crate::anns::glass::GlassIndex> {
         }
         config = decode_action(&config, module, &a);
     }
+    // v2: metadata section (v1 files predate it, like the mutation tail).
+    let n_points = graph.len();
+    let metadata = if version >= 2 {
+        let has_meta = r.u64()?;
+        crate::ensure!(
+            has_meta <= 1,
+            "corrupt index: metadata flag {has_meta} is not 0 or 1"
+        );
+        if has_meta == 1 {
+            let n_meta = r.u64()?;
+            crate::ensure!(
+                n_meta <= n_points as u64,
+                "corrupt index: metadata rows {n_meta} exceed point count {n_points}"
+            );
+            // Each name costs at least its 8-byte length prefix.
+            let n_names = r.len(8)?;
+            let mut names = Vec::with_capacity(n_names);
+            for _ in 0..n_names {
+                let raw = r.u8s()?;
+                names.push(String::from_utf8(raw).map_err(|_| {
+                    Error::msg("corrupt index: metadata name is not UTF-8".to_string())
+                })?);
+            }
+            let tenants = r.u32s()?;
+            crate::ensure!(
+                tenants.len() as u64 == n_meta,
+                "corrupt index: metadata tenant column has {} rows, expected {n_meta}",
+                tenants.len()
+            );
+            let offsets = r.u64s()?;
+            crate::ensure!(
+                offsets.len() as u64 == n_meta + 1,
+                "corrupt index: metadata tag offsets has {} entries, expected {}",
+                offsets.len(),
+                n_meta + 1
+            );
+            crate::ensure!(
+                offsets.first() == Some(&0),
+                "corrupt index: metadata tag offsets must start at 0"
+            );
+            crate::ensure!(
+                offsets.windows(2).all(|w| w[0] <= w[1]),
+                "corrupt index: metadata tag offsets are not monotone"
+            );
+            let tag_ids = r.u32s()?;
+            crate::ensure!(
+                *offsets.last().unwrap() == tag_ids.len() as u64,
+                "corrupt index: metadata tag offsets end at {} but {} tag ids follow",
+                offsets.last().unwrap(),
+                tag_ids.len()
+            );
+            let tags: Vec<Vec<u32>> = offsets
+                .windows(2)
+                .map(|w| tag_ids[w[0] as usize..w[1] as usize].to_vec())
+                .collect();
+            let store = MetadataStore::from_columns(names, tenants, tags)
+                .map_err(|e| Error::msg(format!("corrupt index: {e}")))?;
+            Some(store)
+        } else {
+            None
+        }
+    } else {
+        None
+    };
     // v2: mutation state (v1 files predate it — `from_parts`' defaults,
     // empty tombstones / empty free list / fresh RNG plus a re-fit scale,
     // are exactly the v1 semantics, so old snapshots keep loading).
@@ -291,7 +420,6 @@ pub fn load_glass(path: &Path) -> Result<crate::anns::glass::GlassIndex> {
     // live/duplicate/out-of-range slots all indicate a corrupted or
     // hostile file (same discipline as the length-field hardening above —
     // fail with Err, never trust-and-crash later).
-    let n_points = graph.len();
     let mutation_state = if version >= 2 {
         let declared_dead = r.u64()?;
         crate::ensure!(
@@ -351,7 +479,7 @@ pub fn load_glass(path: &Path) -> Result<crate::anns::glass::GlassIndex> {
     if let Some((deleted, free, rng_state, _)) = mutation_state {
         idx.restore_mutation_state(deleted, free, rng_state);
     }
-    Ok(idx)
+    Ok((idx, metadata))
 }
 
 #[cfg(test)]
@@ -619,8 +747,9 @@ mod tests {
         save_glass(&idx, &path).unwrap();
         let full = std::fs::read(&path).unwrap();
         // Tail with zero deletes/free slots: 8 (dead) + 8 (wlen) + 40
-        // (words) + 8 (flen) + 0 (free) + 32 (rng) + 4 (scale) = 100.
-        let mut v1 = full[..full.len() - 100].to_vec();
+        // (words) + 8 (flen) + 0 (free) + 32 (rng) + 4 (scale) = 100, plus
+        // the 8-byte has-metadata flag in front of it.
+        let mut v1 = full[..full.len() - 108].to_vec();
         v1[4..8].copy_from_slice(&1u32.to_le_bytes());
         std::fs::write(&path, &v1).unwrap();
         let loaded = load_glass(&path).unwrap();
@@ -639,6 +768,131 @@ mod tests {
         std::fs::write(&path, &v9).unwrap();
         let err = load_glass(&path).unwrap_err();
         assert!(format!("{err:#}").contains("unsupported index version"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// The shared fixture for the metadata-section tests: 300 points,
+    /// tenant `t{id%3}` and tag `"even"` on even ids, so the name table is
+    /// `["t0", "even", "t1", "t2"]` and the flat tag array has 150 ids.
+    fn meta_fixture() -> MetadataStore {
+        let mut meta = MetadataStore::new();
+        for id in 0..300u32 {
+            let tenant = format!("t{}", id % 3);
+            let tags: &[&str] = if id % 2 == 0 { &["even"] } else { &[] };
+            meta.push(Some(&tenant), tags);
+        }
+        meta
+    }
+
+    #[test]
+    fn filtered_metadata_roundtrip() {
+        use crate::anns::{FilterExpr, MutableAnnIndex};
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 300, 5, 83);
+        ds.compute_ground_truth(10);
+        let mut idx = GlassIndex::build(
+            crate::anns::VectorSet::from_dataset(&ds),
+            VariantConfig::glass_baseline(),
+            7,
+        );
+        idx.delete(5).unwrap(); // metadata + mutation state coexist
+        let meta = meta_fixture();
+        let path = tmp("metaroundtrip.idx");
+        save_glass_with_metadata(&idx, &meta, &path).unwrap();
+        let (loaded, loaded_meta) = load_glass_with_metadata(&path).unwrap();
+        let loaded_meta = loaded_meta.expect("metadata section must round-trip");
+        assert_eq!(loaded_meta.names(), meta.names());
+        assert_eq!(loaded_meta.tenants(), meta.tenants());
+        assert_eq!(loaded_meta.tags(), meta.tags());
+        assert_eq!(loaded.deleted_count(), 1);
+        // Compiled filters agree, and filtered search is identical across
+        // the reload (same graph, same tombstones, same bitset).
+        let expr = FilterExpr::and(vec![FilterExpr::tenant("t1"), FilterExpr::tag("even")]);
+        let f0 = meta.compile(&expr, idx.len());
+        let f1 = loaded_meta.compile(&expr, loaded.len());
+        assert_eq!(f0.words(), f1.words());
+        for qi in 0..ds.n_queries() {
+            assert_eq!(
+                idx.search_filtered_with_dists(ds.query_vec(qi), 10, 64, Some(&f0)),
+                loaded.search_filtered_with_dists(ds.query_vec(qi), 10, 64, Some(&f1)),
+                "filtered search diverged after reload at query {qi}"
+            );
+        }
+        // The plain loader still accepts the file (drops the metadata).
+        let plain = load_glass(&path).unwrap();
+        assert_eq!(
+            plain.search_with_dists(ds.query_vec(0), 10, 64),
+            loaded.search_with_dists(ds.query_vec(0), 10, 64)
+        );
+        // And an index-only snapshot reports no metadata.
+        save_glass(&idx, &path).unwrap();
+        let (_, none_meta) = load_glass_with_metadata(&path).unwrap();
+        assert!(none_meta.is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt_filtered_metadata_section() {
+        // Byte-patch the metadata section of a valid snapshot. Layout for
+        // the fixture (no deletes, n=300): from EOF, the 100-byte mutation
+        // tail, then [tag_ids: 8 + 4*150][offsets: 8 + 8*301]
+        // [tenants: 8 + 4*300][names payload: 10+12+10+10]
+        // [n_names: 8][n_meta: 8][has_meta: 8].
+        let sp = synth::spec("demo-64").unwrap();
+        let ds = synth::generate_counts(sp, 300, 5, 84);
+        let idx = GlassIndex::build(
+            crate::anns::VectorSet::from_dataset(&ds),
+            VariantConfig::glass_baseline(),
+            7,
+        );
+        let meta = meta_fixture();
+        let path = tmp("metacorrupt.idx");
+        save_glass_with_metadata(&idx, &meta, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        let tail = 100;
+        let tag_ids_at = tail + 8 + 4 * 150; // count field of the flat tag array
+        let offsets_at = tag_ids_at + 8 + 8 * 301; // count field of the offsets
+        let tenants_at = offsets_at + 8 + 4 * 300; // count field of the tenant column
+        let n_names_at = tenants_at + 42 + 8; // 42 payload bytes + its count
+        let n_meta_at = n_names_at + 8;
+        let has_meta_at = n_meta_at + 8;
+        assert!(load_glass_with_metadata(&path).is_ok(), "pristine file must load");
+
+        // (a) Row count exceeding the point count (and the overflow case).
+        for bad in [301u64, u64::MAX] {
+            std::fs::write(&path, patched(&full, n_meta_at, &bad.to_le_bytes())).unwrap();
+            let err = load_glass_with_metadata(&path).expect_err("hostile row count accepted");
+            assert!(format!("{err:#}").contains("corrupt index"), "unexpected: {err:#}");
+        }
+        // (b) A flag value that is neither 0 nor 1.
+        std::fs::write(&path, patched(&full, has_meta_at, &7u64.to_le_bytes())).unwrap();
+        let err = load_glass_with_metadata(&path).expect_err("hostile flag accepted");
+        assert!(format!("{err:#}").contains("metadata flag"), "unexpected: {err:#}");
+        // (c) A tenant name id beyond the name table (first tenant value
+        // sits right after the tenant column's count field).
+        std::fs::write(
+            &path,
+            patched(&full, tenants_at - 8, &999u32.to_le_bytes()),
+        )
+        .unwrap();
+        let err = load_glass_with_metadata(&path).expect_err("out-of-range tenant accepted");
+        assert!(format!("{err:#}").contains("out of range"), "unexpected: {err:#}");
+        // (d) Offsets inconsistent with the flat tag array: shrinking the
+        // final offset breaks monotonicity / the end-of-array cross-check.
+        std::fs::write(
+            &path,
+            patched(&full, tag_ids_at + 8, &149u64.to_le_bytes()),
+        )
+        .unwrap();
+        let err = load_glass_with_metadata(&path).expect_err("offset mismatch accepted");
+        assert!(format!("{err:#}").contains("corrupt index"), "unexpected: {err:#}");
+        // (e) A tag-array count that disagrees with the offsets.
+        std::fs::write(&path, patched(&full, tag_ids_at, &149u64.to_le_bytes())).unwrap();
+        let err = load_glass_with_metadata(&path).expect_err("short tag array accepted");
+        assert!(format!("{err:#}").contains("corrupt index"), "unexpected: {err:#}");
+        // (f) Truncation inside the metadata section.
+        std::fs::write(&path, &full[..full.len() - offsets_at + 16]).unwrap();
+        assert!(load_glass_with_metadata(&path).is_err(), "truncated metadata loaded");
         std::fs::remove_file(&path).ok();
     }
 

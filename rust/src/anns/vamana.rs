@@ -8,6 +8,7 @@
 //!
 //! Search: single-layer beam from the medoid (no hierarchy).
 
+use crate::anns::filter::{Admit, FilterBitset, DEFAULT_FILTERED_FALLBACK};
 use crate::anns::heap::{dist_cmp, MinQueue, TopK};
 use crate::anns::scratch::ScratchPool;
 use crate::anns::visited::VisitedSet;
@@ -49,6 +50,9 @@ pub struct VamanaIndex {
     degree: usize,
     medoid: u32,
     scratch: ScratchPool,
+    /// Selectivity crossover for filtered search (see
+    /// [`AnnIndex::filtered_fallback_threshold`]).
+    filtered_fallback: usize,
 }
 
 const NONE: u32 = u32::MAX;
@@ -67,6 +71,7 @@ impl VamanaIndex {
                 degree: r,
                 medoid: 0,
                 scratch: ScratchPool::new(),
+                filtered_fallback: DEFAULT_FILTERED_FALLBACK,
             };
         }
         let mut rng = Rng::new(seed ^ 0xABBA);
@@ -132,7 +137,14 @@ impl VamanaIndex {
             degree: r,
             medoid,
             scratch: ScratchPool::new(),
+            filtered_fallback: DEFAULT_FILTERED_FALLBACK,
         }
+    }
+
+    /// Tune the selectivity crossover: filters with at most this many
+    /// matching ids take the exact-scan fallback instead of the beam.
+    pub fn set_filtered_fallback(&mut self, threshold: usize) {
+        self.filtered_fallback = threshold;
     }
 
     #[inline]
@@ -180,13 +192,46 @@ fn beam_from(
     visited: &mut VisitedSet,
     frontier: &mut MinQueue,
 ) -> Vec<(f32, u32)> {
+    beam_from_admit(
+        vs,
+        graph,
+        degrees,
+        r,
+        entry,
+        q,
+        beam,
+        visited,
+        frontier,
+        &Admit::none(),
+    )
+}
+
+/// [`beam_from`] under an admission predicate: non-matching nodes stay
+/// traversable (they extend the frontier) but never enter the result pool
+/// — the same discipline as the HNSW/GLASS shared beam. `Admit::none()`
+/// keeps construction and unfiltered search on the exact pre-filter path.
+#[allow(clippy::too_many_arguments)]
+fn beam_from_admit(
+    vs: &VectorSet,
+    graph: &[u32],
+    degrees: &[u16],
+    r: usize,
+    entry: u32,
+    q: &[f32],
+    beam: usize,
+    visited: &mut VisitedSet,
+    frontier: &mut MinQueue,
+    admit: &Admit<'_>,
+) -> Vec<(f32, u32)> {
     visited.clear();
     frontier.clear();
     let mut results = TopK::new(beam.max(1));
     let d0 = vs.distance(q, entry);
     visited.insert(entry);
     frontier.push(d0, entry);
-    results.push(d0, entry);
+    if admit.allows(entry) {
+        results.push(d0, entry);
+    }
     while let Some((d, u)) = frontier.pop() {
         if d > results.bound() {
             break;
@@ -198,7 +243,9 @@ fn beam_from(
             }
             let dnb = vs.distance(q, nb);
             if dnb < results.bound() {
-                results.push(dnb, nb);
+                if admit.allows(nb) {
+                    results.push(dnb, nb);
+                }
                 frontier.push(dnb, nb);
             }
         }
@@ -243,18 +290,34 @@ fn add_reverse(
 
 impl VamanaIndex {
     /// One beam search with caller-provided scratch — the shared body of
-    /// `search_with_dists` and `search_batch`.
+    /// the (filtered and unfiltered) search and batch entry points.
+    /// `filter = None` is exactly the pre-filter path (Vamana is static,
+    /// so the admission predicate is the filter alone).
     fn search_one(
         &self,
         query: &[f32],
         k: usize,
         ef: usize,
         ctx: &mut crate::anns::hnsw::search::SearchContext,
+        filter: Option<&FilterBitset>,
     ) -> Vec<(f32, u32)> {
         if self.vectors.is_empty() {
             return Vec::new();
         }
-        let mut out = beam_from(
+        if let Some(f) = filter {
+            if f.count() <= self.filtered_fallback {
+                return crate::anns::filtered_exact_fallback(
+                    &self.vectors,
+                    query,
+                    k,
+                    &mut ctx.batch,
+                    &mut ctx.dists,
+                    None,
+                    f,
+                );
+            }
+        }
+        let mut out = beam_from_admit(
             &self.vectors,
             &self.graph,
             &self.degrees,
@@ -264,6 +327,10 @@ impl VamanaIndex {
             ef.max(k),
             &mut ctx.visited,
             &mut ctx.frontier,
+            &Admit {
+                deleted: None,
+                filter,
+            },
         );
         out.truncate(k);
         out
@@ -277,15 +344,44 @@ impl AnnIndex for VamanaIndex {
 
     fn search_with_dists(&self, query: &[f32], k: usize, ef: usize) -> Vec<(f32, u32)> {
         let mut ctx = self.scratch.checkout(self.vectors.len());
-        self.search_one(query, k, ef, &mut ctx)
+        self.search_one(query, k, ef, &mut ctx, None)
     }
 
     fn search_batch(&self, queries: &[&[f32]], k: usize, ef: usize) -> Vec<Vec<(f32, u32)>> {
         let mut ctx = self.scratch.checkout(self.vectors.len());
         queries
             .iter()
-            .map(|q| self.search_one(q, k, ef, &mut ctx))
+            .map(|q| self.search_one(q, k, ef, &mut ctx, None))
             .collect()
+    }
+
+    fn search_filtered_with_dists(
+        &self,
+        query: &[f32],
+        k: usize,
+        ef: usize,
+        filter: Option<&FilterBitset>,
+    ) -> Vec<(f32, u32)> {
+        let mut ctx = self.scratch.checkout(self.vectors.len());
+        self.search_one(query, k, ef, &mut ctx, filter)
+    }
+
+    fn search_filtered_batch(
+        &self,
+        queries: &[&[f32]],
+        k: usize,
+        ef: usize,
+        filter: Option<&FilterBitset>,
+    ) -> Vec<Vec<(f32, u32)>> {
+        let mut ctx = self.scratch.checkout(self.vectors.len());
+        queries
+            .iter()
+            .map(|q| self.search_one(q, k, ef, &mut ctx, filter))
+            .collect()
+    }
+
+    fn filtered_fallback_threshold(&self) -> usize {
+        self.filtered_fallback
     }
 
     fn len(&self) -> usize {
@@ -335,6 +431,63 @@ mod tests {
         }
         let recall = acc / ds.n_queries() as f64;
         assert!(recall > 0.85, "vamana recall {recall}");
+    }
+
+    #[test]
+    fn filtered_vamana_beam_and_fallback_paths() {
+        let sp = synth::spec("demo-64").unwrap();
+        let ds = synth::generate_counts(sp, 900, 8, 43);
+        let mut idx = VamanaIndex::build(VectorSet::from_dataset(&ds), VamanaParams::default(), 1);
+        let n = idx.len() as u32;
+        // filter=None is bitwise identical to the unfiltered path.
+        for qi in 0..ds.n_queries() {
+            let q = ds.query_vec(qi);
+            assert_eq!(
+                idx.search_filtered_with_dists(q, 10, 96, None),
+                idx.search_with_dists(q, 10, 96)
+            );
+        }
+        // A wide filter (beam path): every result matches.
+        let third = FilterBitset::from_predicate(n as usize, |id| id % 3 == 0);
+        assert!(third.count() > idx.filtered_fallback);
+        for qi in 0..ds.n_queries() {
+            let found = idx.search_filtered(ds.query_vec(qi), 10, 96, Some(&third));
+            assert!(!found.is_empty());
+            assert!(found.iter().all(|&id| id % 3 == 0), "leak in {found:?}");
+        }
+        // A rare filter routes to the exact fallback and equals the oracle.
+        let rare = FilterBitset::from_predicate(n as usize, |id| id % 90 == 0);
+        assert!(rare.count() <= idx.filtered_fallback);
+        let (mut ids, mut dists) = (Vec::new(), Vec::new());
+        for qi in 0..ds.n_queries() {
+            let q = ds.query_vec(qi);
+            let want = crate::dataset::gt::topk_pairs_for_query_filtered(
+                &idx.vectors.data,
+                q,
+                idx.vectors.dim,
+                idx.vectors.metric,
+                5,
+                &mut ids,
+                &mut dists,
+                |i| rare.matches(i),
+            );
+            assert_eq!(idx.search_filtered_with_dists(q, 5, 96, Some(&rare)), want);
+        }
+        // Forcing the beam path on the rare filter still never leaks.
+        idx.set_filtered_fallback(0);
+        for qi in 0..ds.n_queries() {
+            let found = idx.search_filtered(ds.query_vec(qi), 5, 96, Some(&rare));
+            assert!(found.iter().all(|&id| id % 90 == 0));
+        }
+        idx.set_filtered_fallback(DEFAULT_FILTERED_FALLBACK);
+        // Filtered batch == filtered per-query.
+        let queries: Vec<&[f32]> = (0..ds.n_queries()).map(|qi| ds.query_vec(qi)).collect();
+        for f in [None, Some(&third), Some(&rare)] {
+            let batched = idx.search_filtered_batch(&queries, 10, 96, f);
+            for (qi, q) in queries.iter().enumerate() {
+                assert_eq!(batched[qi], idx.search_filtered_with_dists(q, 10, 96, f));
+            }
+        }
     }
 
     #[test]

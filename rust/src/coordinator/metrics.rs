@@ -21,6 +21,13 @@ pub struct Metrics {
     /// Gauge: live (searchable) points after the most recent mutation —
     /// 0 until the first mutation on a mutable backend.
     pub live_points: AtomicU64,
+    /// Searches that carried a filter expression.
+    pub filtered_queries: AtomicU64,
+    /// Filtered searches whose compiled bitset popcount was at or below
+    /// the backend's selectivity crossover — served (entirely, for single
+    /// indexes; per matching shard, for routers) by the exact fallback
+    /// scan rather than the beam.
+    pub filtered_fallbacks: AtomicU64,
     /// Reservoir of recent request latencies (seconds).
     latencies: Mutex<Vec<f64>>,
 }
@@ -73,6 +80,16 @@ impl Metrics {
         self.mutation_errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record `n` filtered searches (one compiled bitset served them all).
+    pub fn record_filtered(&self, n: usize) {
+        self.filtered_queries.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
+    /// Record `n` filtered searches that routed to the exact fallback.
+    pub fn record_filtered_fallback(&self, n: usize) {
+        self.filtered_fallbacks.fetch_add(n as u64, Ordering::Relaxed);
+    }
+
     /// Update the live-point gauge (called with the index's `live_count`
     /// while the mutation still holds the write lock, so the gauge never
     /// lags the index it describes).
@@ -92,6 +109,8 @@ impl Metrics {
             deletes: self.deletes.load(Ordering::Relaxed),
             mutation_errors: self.mutation_errors.load(Ordering::Relaxed),
             live_points: self.live_points.load(Ordering::Relaxed),
+            filtered_queries: self.filtered_queries.load(Ordering::Relaxed),
+            filtered_fallbacks: self.filtered_fallbacks.load(Ordering::Relaxed),
             latency: crate::util::bench::Stats::from_samples(lat),
         }
     }
@@ -108,6 +127,8 @@ pub struct MetricsSnapshot {
     pub deletes: u64,
     pub mutation_errors: u64,
     pub live_points: u64,
+    pub filtered_queries: u64,
+    pub filtered_fallbacks: u64,
     pub latency: crate::util::bench::Stats,
 }
 
@@ -161,5 +182,18 @@ mod tests {
         assert_eq!(s.deletes, 1);
         assert_eq!(s.mutation_errors, 1);
         assert_eq!(s.live_points, 42);
+    }
+
+    #[test]
+    fn filtered_counters_accumulate() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!((s.filtered_queries, s.filtered_fallbacks), (0, 0));
+        m.record_filtered(3);
+        m.record_filtered(1);
+        m.record_filtered_fallback(1);
+        let s = m.snapshot();
+        assert_eq!(s.filtered_queries, 4);
+        assert_eq!(s.filtered_fallbacks, 1);
     }
 }

@@ -9,8 +9,9 @@
 //! * [`server`] — thread-based request loop with bounded queues
 //!   (backpressure), a search + insert/delete update path
 //!   ([`server::QueryRequest`] is an enum; `Server::start_mutable` serves
-//!   a `MutableAnnIndex` behind an `RwLock`), and latency/throughput/
-//!   mutation metrics.
+//!   a `MutableAnnIndex` behind an `RwLock`), filtered search (filter
+//!   expressions compiled once per batch group against a shared metadata
+//!   store), and latency/throughput/mutation/filtered metrics.
 
 pub mod batcher;
 pub mod metrics;
@@ -19,5 +20,6 @@ pub mod server;
 
 pub use router::{MutableShardedRouter, ShardedRouter};
 pub use server::{
-    MutationResponse, QueryRequest, QueryResponse, Server, ServerConfig, SharedMutableIndex,
+    MutationResponse, QueryRequest, QueryResponse, Server, ServerConfig, SharedMetadata,
+    SharedMutableIndex,
 };

@@ -15,7 +15,7 @@
 //!   compacting.
 
 use crate::anns::heap::dist_cmp;
-use crate::anns::{AnnIndex, MutableAnnIndex};
+use crate::anns::{AnnIndex, FilterBitset, MutableAnnIndex};
 use crate::anns::VectorSet;
 use crate::dataset::Dataset;
 use crate::variants::VariantConfig;
@@ -155,6 +155,73 @@ impl AnnIndex for ShardedRouter {
             .collect()
     }
 
+    fn search_filtered_with_dists(
+        &self,
+        query: &[f32],
+        k: usize,
+        ef: usize,
+        filter: Option<&FilterBitset>,
+    ) -> Vec<(f32, u32)> {
+        self.search_filtered_batch(&[query], k, ef, filter)
+            .pop()
+            .expect("one result list per query")
+    }
+
+    /// Filtered fan-out: the global bitset is sliced into one local bitset
+    /// per shard (global id `offsets[s] + local`), each shard runs its own
+    /// filtered batch (including its own selectivity fallback against its
+    /// slice's popcount), and the merge is the unfiltered merge verbatim.
+    /// Sequential over shards — filtered traffic is correctness-first; the
+    /// unfiltered batch path remains the high-throughput read path.
+    fn search_filtered_batch(
+        &self,
+        queries: &[&[f32]],
+        k: usize,
+        ef: usize,
+        filter: Option<&FilterBitset>,
+    ) -> Vec<Vec<(f32, u32)>> {
+        let filter = match filter {
+            None => return self.search_batch(queries, k, ef),
+            Some(f) => f,
+        };
+        let per_shard: Vec<Vec<Vec<(f32, u32)>>> = self
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(s, shard)| {
+                let lo = self.offsets[s];
+                let hi = self.offsets[s + 1];
+                let local =
+                    FilterBitset::from_predicate((hi - lo) as usize, |l| filter.matches(lo + l));
+                shard.search_filtered_batch(queries, k, ef, Some(&local))
+            })
+            .collect();
+        (0..queries.len())
+            .map(|qi| {
+                let mut merged: Vec<(f32, u32)> = Vec::with_capacity(k * self.shards.len());
+                for (s, shard_results) in per_shard.iter().enumerate() {
+                    let base = self.offsets[s];
+                    for &(d, local) in &shard_results[qi] {
+                        merged.push((d, base + local));
+                    }
+                }
+                merged.sort_by(dist_cmp);
+                merged.truncate(k);
+                merged
+            })
+            .collect()
+    }
+
+    /// Advisory crossover for the coordinator's fallback counter: the
+    /// largest threshold any shard would apply to its slice.
+    fn filtered_fallback_threshold(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.filtered_fallback_threshold())
+            .max()
+            .unwrap_or(0)
+    }
+
     fn len(&self) -> usize {
         *self.offsets.last().unwrap() as usize
     }
@@ -263,6 +330,78 @@ impl AnnIndex for MutableShardedRouter {
                 merged
             })
             .collect()
+    }
+
+    fn search_filtered_with_dists(
+        &self,
+        query: &[f32],
+        k: usize,
+        ef: usize,
+        filter: Option<&FilterBitset>,
+    ) -> Vec<(f32, u32)> {
+        self.search_filtered_batch(&[query], k, ef, filter)
+            .pop()
+            .expect("one result list per query")
+    }
+
+    /// Filtered fan-out under the interleaved mapping: one pass over the
+    /// global bitset's set ids scatters them to per-shard local bitsets
+    /// (`global % n_shards` owns, `global / n_shards` is the local id; ids
+    /// beyond a shard's physical size are dropped, matching the deny-safe
+    /// out-of-range semantics of [`FilterBitset::matches`]). Each shard
+    /// then runs its own filtered batch, and the merge is the unfiltered
+    /// merge verbatim.
+    fn search_filtered_batch(
+        &self,
+        queries: &[&[f32]],
+        k: usize,
+        ef: usize,
+        filter: Option<&FilterBitset>,
+    ) -> Vec<Vec<(f32, u32)>> {
+        let filter = match filter {
+            None => return self.search_batch(queries, k, ef),
+            Some(f) => f,
+        };
+        let mut locals: Vec<FilterBitset> = self
+            .shards
+            .iter()
+            .map(|shard| FilterBitset::new(shard.len()))
+            .collect();
+        for gid in filter.iter_set() {
+            let (s, local) = self.locate(gid);
+            if (local as usize) < self.shards[s].len() {
+                locals[s].set(local);
+            }
+        }
+        let per_shard: Vec<Vec<Vec<(f32, u32)>>> = self
+            .shards
+            .iter()
+            .zip(locals.iter())
+            .map(|(shard, local)| shard.search_filtered_batch(queries, k, ef, Some(local)))
+            .collect();
+        (0..queries.len())
+            .map(|qi| {
+                let mut merged: Vec<(f32, u32)> = Vec::with_capacity(k * self.shards.len());
+                for (s, shard_results) in per_shard.iter().enumerate() {
+                    for &(d, local) in &shard_results[qi] {
+                        merged.push((d, self.global(s, local)));
+                    }
+                }
+                merged.sort_by(dist_cmp);
+                merged.truncate(k);
+                merged
+            })
+            .collect()
+    }
+
+    /// Advisory crossover for the coordinator's fallback counter: the
+    /// largest threshold any shard would apply to its slice.
+    fn filtered_fallback_threshold(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.filtered_fallback_threshold())
+            .max()
+            .unwrap_or(0)
     }
 
     /// Total physical slots across shards (count semantics; the global id
@@ -454,6 +593,97 @@ mod tests {
             new_ids.iter().any(|id| doomed.contains(id)),
             "no freed slot was recycled: {new_ids:?} vs doomed {doomed:?}"
         );
+    }
+
+    #[test]
+    fn filtered_fanout_slices_bitset_per_shard() {
+        let sp = synth::spec("demo-64").unwrap();
+        let ds = synth::generate_counts(sp, 900, 12, 93);
+        let router = ShardedRouter::build_glass(&ds, &VariantConfig::glass_baseline(), 3, 5);
+        let n = router.len();
+        let queries: Vec<&[f32]> = (0..ds.n_queries()).map(|qi| ds.query_vec(qi)).collect();
+        // filter=None routes to the unfiltered batch path bitwise.
+        assert_eq!(
+            router.search_filtered_batch(&queries, 10, 64, None),
+            router.search_batch(&queries, 10, 64)
+        );
+        // Wide filter: every merged global id matches the predicate.
+        let third = FilterBitset::from_predicate(n, |gid| gid % 3 == 0);
+        for q in &queries {
+            let found = router.search_filtered(q, 10, 64, Some(&third));
+            assert!(!found.is_empty());
+            assert!(found.iter().all(|&gid| gid % 3 == 0), "leak in {found:?}");
+        }
+        // Rare filter: each shard's slice popcount is under its fallback
+        // threshold, so every shard answers exactly and the merge equals
+        // the global filtered oracle.
+        let rare = FilterBitset::from_predicate(n, |gid| gid % 100 == 0);
+        let (mut ids, mut dists) = (Vec::new(), Vec::new());
+        for q in &queries {
+            let want = crate::dataset::gt::topk_pairs_for_query_filtered(
+                &ds.base,
+                q,
+                ds.dim,
+                ds.metric,
+                5,
+                &mut ids,
+                &mut dists,
+                |gid| rare.matches(gid),
+            );
+            assert_eq!(router.search_filtered_with_dists(q, 5, 64, Some(&rare)), want);
+        }
+        // Filtered batch == filtered per-query.
+        let batched = router.search_filtered_batch(&queries, 10, 64, Some(&third));
+        for (qi, q) in queries.iter().enumerate() {
+            assert_eq!(batched[qi], router.search_filtered_with_dists(q, 10, 64, Some(&third)));
+        }
+    }
+
+    #[test]
+    fn filtered_mutable_fanout_scatters_interleaved_ids() {
+        let sp = synth::spec("demo-64").unwrap();
+        let ds = synth::generate_counts(sp, 600, 10, 97);
+        let mut router =
+            MutableShardedRouter::build_glass(&ds, &VariantConfig::glass_baseline(), 4, 5);
+        let n = router.len();
+        let queries: Vec<&[f32]> = (0..ds.n_queries()).map(|qi| ds.query_vec(qi)).collect();
+        assert_eq!(
+            router.search_filtered_batch(&queries, 10, 96, None),
+            router.search_batch(&queries, 10, 96)
+        );
+        // Rare filter: exact per shard, so the merge equals the global
+        // filtered oracle (global id == dataset row after round-robin
+        // build).
+        let rare = FilterBitset::from_predicate(n, |gid| gid % 60 == 0);
+        let (mut ids, mut dists) = (Vec::new(), Vec::new());
+        for q in &queries {
+            let want = crate::dataset::gt::topk_pairs_for_query_filtered(
+                &ds.base,
+                q,
+                ds.dim,
+                ds.metric,
+                5,
+                &mut ids,
+                &mut dists,
+                |gid| rare.matches(gid),
+            );
+            assert_eq!(router.search_filtered_with_dists(q, 5, 96, Some(&rare)), want);
+        }
+        // Deleting a matching id removes it from filtered results even
+        // though the bitset still names it (tombstones conjoin).
+        let victim = router.search_filtered(queries[0], 1, 96, Some(&rare))[0];
+        router.delete(victim).unwrap();
+        for q in &queries {
+            let found = router.search_filtered(q, 5, 96, Some(&rare));
+            assert!(!found.contains(&victim), "tombstoned id resurfaced");
+            assert!(found.iter().all(|&gid| gid % 60 == 0));
+        }
+        // Filtered batch == filtered per-query after the mutation.
+        let wide = FilterBitset::from_predicate(n, |gid| gid % 2 == 1);
+        let batched = router.search_filtered_batch(&queries, 10, 96, Some(&wide));
+        for (qi, q) in queries.iter().enumerate() {
+            assert_eq!(batched[qi], router.search_filtered_with_dists(q, 10, 96, Some(&wide)));
+        }
     }
 
     #[test]

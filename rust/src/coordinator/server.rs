@@ -21,7 +21,7 @@
 //! give (as in any concurrent store); every response is keyed to its own
 //! reply channel, so results never cross requests.
 
-use crate::anns::{AnnIndex, MutableAnnIndex};
+use crate::anns::{AnnIndex, FilterBitset, FilterExpr, MetadataStore, MutableAnnIndex};
 use crate::coordinator::batcher::{group_by_key, next_batch_or_stop, BatchPolicy};
 use crate::coordinator::metrics::Metrics;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -31,6 +31,11 @@ use std::time::Instant;
 
 /// The shared-ownership shape a mutable backend is served from.
 pub type SharedMutableIndex = Arc<RwLock<Box<dyn MutableAnnIndex>>>;
+
+/// The shared-ownership shape the id → tenant/tags store is served from:
+/// searches compile filter expressions under the read lock, inserts that
+/// carry metadata update it under the write lock.
+pub type SharedMetadata = Arc<RwLock<MetadataStore>>;
 
 /// One request through the serving queue: a search or a mutation.
 pub enum QueryRequest {
@@ -44,6 +49,11 @@ pub struct SearchRequest {
     pub query: Vec<f32>,
     pub k: usize,
     pub ef: usize,
+    /// Optional metadata predicate (tenant equality, tag membership,
+    /// conjunctions). Compiled to a [`FilterBitset`] against the server's
+    /// metadata store once per `(k, ef, filter)` batch group; `None` is
+    /// the unfiltered fast path, bitwise identical to pre-filter serving.
+    pub filter: Option<FilterExpr>,
     pub submitted: Instant,
     /// Reply channel.
     pub reply: SyncSender<QueryResponse>,
@@ -52,6 +62,10 @@ pub struct SearchRequest {
 /// One online insert.
 pub struct InsertRequest {
     pub vector: Vec<f32>,
+    /// Metadata recorded for the assigned id (only when the server was
+    /// started with a metadata store).
+    pub tenant: Option<String>,
+    pub tags: Vec<String>,
     pub submitted: Instant,
     pub reply: SyncSender<MutationResponse>,
 }
@@ -114,6 +128,35 @@ impl Backend {
         }
     }
 
+    fn search_filtered_batch(
+        &self,
+        queries: &[&[f32]],
+        k: usize,
+        ef: usize,
+        filter: Option<&FilterBitset>,
+    ) -> Vec<Vec<(f32, u32)>> {
+        match self {
+            Backend::Fixed(index) => index.search_filtered_batch(queries, k, ef, filter),
+            Backend::Mutable(index) => {
+                index.read().unwrap().search_filtered_batch(queries, k, ef, filter)
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        match self {
+            Backend::Fixed(index) => index.len(),
+            Backend::Mutable(index) => index.read().unwrap().len(),
+        }
+    }
+
+    fn filtered_fallback_threshold(&self) -> usize {
+        match self {
+            Backend::Fixed(index) => index.filtered_fallback_threshold(),
+            Backend::Mutable(index) => index.read().unwrap().filtered_fallback_threshold(),
+        }
+    }
+
     /// Apply one mutation under the write lock. The live-point gauge is
     /// updated while the lock is still held, so concurrent workers can
     /// never publish a stale count over a newer one.
@@ -153,9 +196,20 @@ pub struct Server {
 
 impl Server {
     /// Start worker threads over a shared read-only index. Mutation
-    /// requests submitted to this server are answered with an error.
+    /// requests submitted to this server are answered with an error, and
+    /// filtered searches (there is no metadata store) match nothing.
     pub fn start(index: Arc<dyn AnnIndex>, config: ServerConfig) -> Server {
-        Server::start_backend(Backend::Fixed(index), config)
+        Server::start_backend(Backend::Fixed(index), None, config)
+    }
+
+    /// [`Server::start`] plus a metadata store: filter expressions compile
+    /// against it, and inserts are still rejected (read-only backend).
+    pub fn start_with_metadata(
+        index: Arc<dyn AnnIndex>,
+        metadata: SharedMetadata,
+        config: ServerConfig,
+    ) -> Server {
+        Server::start_backend(Backend::Fixed(index), Some(metadata), config)
     }
 
     /// Start worker threads over a mutable index: searches share the read
@@ -163,12 +217,30 @@ impl Server {
     /// tombstone/consolidation semantics come from the index itself.
     pub fn start_mutable(index: SharedMutableIndex, config: ServerConfig) -> Server {
         let metrics_live = index.read().unwrap().live_count() as u64;
-        let server = Server::start_backend(Backend::Mutable(index), config);
+        let server = Server::start_backend(Backend::Mutable(index), None, config);
         server.metrics.set_live_points(metrics_live);
         server
     }
 
-    fn start_backend(backend: Backend, config: ServerConfig) -> Server {
+    /// [`Server::start_mutable`] plus a metadata store: filter expressions
+    /// compile against it and successful inserts record their
+    /// tenant/tags for the assigned id.
+    pub fn start_mutable_with_metadata(
+        index: SharedMutableIndex,
+        metadata: SharedMetadata,
+        config: ServerConfig,
+    ) -> Server {
+        let metrics_live = index.read().unwrap().live_count() as u64;
+        let server = Server::start_backend(Backend::Mutable(index), Some(metadata), config);
+        server.metrics.set_live_points(metrics_live);
+        server
+    }
+
+    fn start_backend(
+        backend: Backend,
+        metadata: Option<SharedMetadata>,
+        config: ServerConfig,
+    ) -> Server {
         let (tx, rx) = sync_channel::<QueryRequest>(config.queue_depth.max(1));
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(Metrics::new());
@@ -178,6 +250,7 @@ impl Server {
         for _ in 0..config.workers.max(1) {
             let rx = rx.clone();
             let backend = backend.clone();
+            let metadata = metadata.clone();
             let metrics = metrics.clone();
             let policy = config.batch.clone();
             let inflight = inflight.clone();
@@ -201,19 +274,32 @@ impl Server {
                 // the accounting protocol cannot drift between them.
                 let mut searches = Vec::with_capacity(batch.len());
                 for req in batch {
-                    let (op, reply, submitted, is_insert) = match req {
+                    let (op, reply, submitted, ins_meta) = match req {
                         QueryRequest::Search(s) => {
                             searches.push(s);
                             continue;
                         }
-                        QueryRequest::Insert(r) => {
-                            (Mutation::Insert(r.vector), r.reply, r.submitted, true)
-                        }
+                        QueryRequest::Insert(r) => (
+                            Mutation::Insert(r.vector),
+                            r.reply,
+                            r.submitted,
+                            Some((r.tenant, r.tags)),
+                        ),
                         QueryRequest::Delete(r) => {
-                            (Mutation::Delete(r.id), r.reply, r.submitted, false)
+                            (Mutation::Delete(r.id), r.reply, r.submitted, None)
                         }
                     };
+                    let is_insert = ins_meta.is_some();
                     let result = backend.apply(op, &metrics);
+                    // Record the insert's tenant/tags under the assigned id
+                    // before replying: once the client holds the ack, a
+                    // filtered search must already see the metadata.
+                    if let (Ok(id), Some(meta), Some((tenant, tags))) =
+                        (&result, metadata.as_ref(), ins_meta)
+                    {
+                        let tags: Vec<&str> = tags.iter().map(|t| t.as_str()).collect();
+                        meta.write().unwrap().set_for(*id, tenant.as_deref(), &tags);
+                    }
                     match (&result, is_insert) {
                         (Ok(_), true) => metrics.record_insert(),
                         (Ok(_), false) => metrics.record_delete(),
@@ -225,14 +311,34 @@ impl Server {
                     });
                     inflight.fetch_sub(1, Ordering::Relaxed);
                 }
-                // Serve each (k, ef) group through one multi-query
+                // Serve each (k, ef, filter) group through one multi-query
                 // `search_batch` call — the index reuses a single pooled
                 // scratch context across the group, and results are
                 // bitwise identical to per-request `search_with_dists`.
-                for ((k, ef), group) in group_by_key(searches, |r| (r.k, r.ef)) {
+                // A filter expression is compiled to a bitset ONCE per
+                // group under the metadata read lock; with no store, a
+                // filtered query matches nothing (deny-safe).
+                for ((k, ef, filter), group) in
+                    group_by_key(searches, |r| (r.k, r.ef, r.filter.clone()))
+                {
                     let queries: Vec<&[f32]> =
                         group.iter().map(|r| r.query.as_slice()).collect();
-                    let results = backend.search_batch(&queries, k, ef);
+                    let results = match &filter {
+                        None => backend.search_batch(&queries, k, ef),
+                        Some(expr) => {
+                            let bitset = match metadata.as_ref() {
+                                Some(meta) => {
+                                    meta.read().unwrap().compile(expr, backend.len())
+                                }
+                                None => FilterBitset::new(backend.len()),
+                            };
+                            metrics.record_filtered(group.len());
+                            if bitset.count() <= backend.filtered_fallback_threshold() {
+                                metrics.record_filtered_fallback(group.len());
+                            }
+                            backend.search_filtered_batch(&queries, k, ef, Some(&bitset))
+                        }
+                    };
                     metrics.record_group(group.len());
                     for (req, pairs) in group.into_iter().zip(results) {
                         let latency = req.submitted.elapsed().as_secs_f64();
@@ -310,11 +416,24 @@ impl ServerHandle {
     /// Submit a query; returns the reply receiver, or `None` when the
     /// server rejects (shutting down / queue full — backpressure).
     pub fn submit(&self, query: Vec<f32>, k: usize, ef: usize) -> Option<Receiver<QueryResponse>> {
+        self.submit_filtered(query, k, ef, None)
+    }
+
+    /// Submit a query with an optional metadata filter; `filter = None`
+    /// is exactly [`Self::submit`].
+    pub fn submit_filtered(
+        &self,
+        query: Vec<f32>,
+        k: usize,
+        ef: usize,
+        filter: Option<FilterExpr>,
+    ) -> Option<Receiver<QueryResponse>> {
         let (reply_tx, reply_rx) = sync_channel(1);
         self.push(QueryRequest::Search(SearchRequest {
             query,
             k,
             ef,
+            filter,
             submitted: Instant::now(),
             reply: reply_tx,
         }))
@@ -323,9 +442,22 @@ impl ServerHandle {
 
     /// Submit an online insert; same admission control as [`Self::submit`].
     pub fn submit_insert(&self, vector: Vec<f32>) -> Option<Receiver<MutationResponse>> {
+        self.submit_insert_with_metadata(vector, None, Vec::new())
+    }
+
+    /// Submit an online insert carrying tenant/tags for the assigned id
+    /// (recorded only when the server holds a metadata store).
+    pub fn submit_insert_with_metadata(
+        &self,
+        vector: Vec<f32>,
+        tenant: Option<String>,
+        tags: Vec<String>,
+    ) -> Option<Receiver<MutationResponse>> {
         let (reply_tx, reply_rx) = sync_channel(1);
         self.push(QueryRequest::Insert(InsertRequest {
             vector,
+            tenant,
+            tags,
             submitted: Instant::now(),
             reply: reply_tx,
         }))
@@ -349,9 +481,32 @@ impl ServerHandle {
         self.submit(query, k, ef)?.recv().ok()
     }
 
+    /// Blocking convenience: filtered submit + wait.
+    pub fn query_filtered(
+        &self,
+        query: Vec<f32>,
+        k: usize,
+        ef: usize,
+        filter: Option<FilterExpr>,
+    ) -> Option<QueryResponse> {
+        self.submit_filtered(query, k, ef, filter)?.recv().ok()
+    }
+
     /// Blocking convenience: insert + wait for the assigned id.
     pub fn insert(&self, vector: Vec<f32>) -> Option<MutationResponse> {
         self.submit_insert(vector)?.recv().ok()
+    }
+
+    /// Blocking convenience: insert with tenant/tags + wait.
+    pub fn insert_with_metadata(
+        &self,
+        vector: Vec<f32>,
+        tenant: Option<String>,
+        tags: Vec<String>,
+    ) -> Option<MutationResponse> {
+        self.submit_insert_with_metadata(vector, tenant, tags)?
+            .recv()
+            .ok()
     }
 
     /// Blocking convenience: delete + wait for the ack.
@@ -527,6 +682,94 @@ mod tests {
         let snap = server.shutdown();
         assert_eq!(snap.mutation_errors, 2);
         assert_eq!((snap.inserts, snap.deletes), (0, 0));
+    }
+
+    #[test]
+    fn filtered_queries_end_to_end() {
+        // Filter expressions compile against the metadata store, inserts
+        // carry tenant/tags, and the counters reconcile.
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 300, 10, 90);
+        ds.compute_ground_truth(5);
+        let index: crate::coordinator::SharedMutableIndex = Arc::new(RwLock::new(Box::new(
+            BruteForceIndex::build(VectorSet::from_dataset(&ds)),
+        )));
+        let mut store = MetadataStore::new();
+        for id in 0..300u32 {
+            let tenant = format!("t{}", id % 3);
+            let tags: &[&str] = if id % 2 == 0 { &["even"] } else { &[] };
+            store.push(Some(&tenant), tags);
+        }
+        let metadata: SharedMetadata = Arc::new(RwLock::new(store));
+        let server = Server::start_mutable_with_metadata(
+            index,
+            metadata.clone(),
+            ServerConfig {
+                workers: 2,
+                queue_depth: 128,
+                batch: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: std::time::Duration::from_millis(1),
+                },
+            },
+        );
+        let h = server.handle();
+        // filter=None serves the unfiltered path.
+        let resp = h.query_filtered(ds.query_vec(0).to_vec(), 5, 0, None).unwrap();
+        assert_eq!(resp.ids, ds.gt[0][..5].to_vec());
+        // Tenant filter: every id belongs to t1.
+        let resp = h
+            .query_filtered(ds.query_vec(0).to_vec(), 5, 0, Some(FilterExpr::tenant("t1")))
+            .unwrap();
+        assert_eq!(resp.ids.len(), 5);
+        assert!(resp.ids.iter().all(|&id| id % 3 == 1), "{:?}", resp.ids);
+        // Conjunction: tenant t1 AND tag "even" → id ≡ 4 (mod 6).
+        let conj = FilterExpr::and(vec![FilterExpr::tenant("t1"), FilterExpr::tag("even")]);
+        let resp = h
+            .query_filtered(ds.query_vec(1).to_vec(), 5, 0, Some(conj))
+            .unwrap();
+        assert!(resp.ids.iter().all(|&id| id % 3 == 1 && id % 2 == 0));
+        // Unknown names match nothing.
+        let resp = h
+            .query_filtered(ds.query_vec(0).to_vec(), 5, 0, Some(FilterExpr::tag("nope")))
+            .unwrap();
+        assert!(resp.ids.is_empty());
+        // An insert carrying metadata is immediately filterable once acked.
+        let ack = h
+            .insert_with_metadata(
+                ds.query_vec(2).to_vec(),
+                Some("t1".to_string()),
+                vec!["even".to_string()],
+            )
+            .unwrap();
+        let new_id = ack.result.expect("insert must succeed");
+        let resp = h
+            .query_filtered(ds.query_vec(2).to_vec(), 1, 0, Some(FilterExpr::tenant("t1")))
+            .unwrap();
+        assert_eq!((resp.ids, resp.dists), (vec![new_id], vec![0.0]));
+        assert_eq!(metadata.read().unwrap().tenant(new_id), Some("t1"));
+        let snap = server.shutdown();
+        assert_eq!(snap.filtered_queries, 4);
+        assert_eq!(snap.requests, 5);
+    }
+
+    #[test]
+    fn filtered_query_without_store_matches_nothing() {
+        // A filter on a server started without a metadata store is
+        // deny-safe: it cannot be satisfied, so it returns no ids (rather
+        // than silently ignoring the predicate).
+        let (server, ds) = make_server(64);
+        let h = server.handle();
+        let resp = h
+            .query_filtered(ds.query_vec(0).to_vec(), 5, 0, Some(FilterExpr::tenant("t0")))
+            .unwrap();
+        assert!(resp.ids.is_empty());
+        let unfiltered = h.query_filtered(ds.query_vec(0).to_vec(), 5, 0, None).unwrap();
+        assert_eq!(unfiltered.ids, ds.gt[0][..5].to_vec());
+        let snap = server.shutdown();
+        assert_eq!(snap.filtered_queries, 1);
+        // The empty bitset is at or below every fallback threshold.
+        assert_eq!(snap.filtered_fallbacks, 1);
     }
 
     #[test]

@@ -6,8 +6,8 @@ pub mod report;
 pub mod sweep;
 
 pub use sweep::{
-    batch_mode, measure_mutations, measure_point, measure_point_with_mode, sweep_index,
-    CurvePoint, MutationStats, SweepResult,
+    batch_mode, measure_filtered_point, measure_mutations, measure_point,
+    measure_point_with_mode, sweep_index, CurvePoint, MutationStats, SweepResult,
 };
 
 /// Default ef sweep grid (ann-benchmarks-like spacing).

@@ -173,6 +173,76 @@ pub fn measure_point_with_mode(
     }
 }
 
+/// Measure one ef setting under a filter bitset: recall is computed
+/// against the **filtered** ground truth (the exact top-k over the ids
+/// the bitset allows — `gt::topk_pairs_for_query_filtered` is the
+/// oracle), and the timed passes run `search_filtered` per query. The
+/// companion to [`measure_point`] for the filtered-QPS-vs-selectivity
+/// rows in EXPERIMENTS.md: sweep the same index over filters of
+/// decreasing popcount to see beam-path throughput hand over to the
+/// exact fallback at the crossover threshold.
+pub fn measure_filtered_point(
+    index: &dyn AnnIndex,
+    ds: &Dataset,
+    k: usize,
+    ef: usize,
+    filter: &crate::anns::FilterBitset,
+) -> CurvePoint {
+    let nq = ds.n_queries();
+    // Exact filtered ground truth, untimed (the stored ds.gt is unfiltered
+    // and useless here).
+    let gt: Vec<Vec<u32>> = parallel_map(nq, 2, |qi| {
+        let (mut ids, mut dists) = (Vec::new(), Vec::new());
+        crate::dataset::gt::topk_pairs_for_query_filtered(
+            &ds.base,
+            ds.query_vec(qi),
+            ds.dim,
+            ds.metric,
+            k,
+            &mut ids,
+            &mut dists,
+            |i| filter.matches(i),
+        )
+        .into_iter()
+        .map(|(_, id)| id)
+        .collect()
+    });
+    // Untimed recall pass — doubles as warmup, like `measure_point`'s.
+    let recalls: Vec<f64> = parallel_map(nq, 4, |qi| {
+        let found = index.search_filtered(ds.query_vec(qi), k, ef, Some(filter));
+        recall_at_k(&found, &gt[qi], k)
+    });
+    let recall_acc: f64 = recalls.iter().sum();
+    const MIN_SECS: f64 = 0.04;
+    const MAX_PASSES: usize = 8;
+    let mut lat = Vec::with_capacity(nq * 2);
+    let mut passes = 0usize;
+    let mut wall = 0.0f64;
+    while passes < MAX_PASSES && (passes == 0 || wall < MIN_SECS) {
+        let t_pass = Instant::now();
+        let pass: Vec<f64> = parallel_map(nq, 4, |qi| {
+            let t = Instant::now();
+            std::hint::black_box(index.search_filtered(ds.query_vec(qi), k, ef, Some(filter)));
+            t.elapsed().as_secs_f64()
+        });
+        lat.extend(pass);
+        wall += t_pass.elapsed().as_secs_f64();
+        passes += 1;
+    }
+    let stats = crate::util::bench::Stats::from_samples(lat);
+    CurvePoint {
+        ef,
+        recall: recall_acc / nq as f64,
+        qps: if wall > 0.0 {
+            (nq * passes) as f64 / wall
+        } else {
+            0.0
+        },
+        mean_latency_s: stats.mean,
+        p99_latency_s: stats.p99,
+    }
+}
+
 /// Measured insert/delete throughput for a mutable index — the
 /// EXPERIMENTS.md "Live updates" row. Wall-clock, sequential (the
 /// mutation path is serialized by design; concurrency belongs to the
@@ -353,6 +423,39 @@ mod tests {
             1,
         );
         assert!(measure_mutations(&mut vam, &inserts, &[]).is_err());
+    }
+
+    #[test]
+    fn filtered_point_uses_filtered_ground_truth() {
+        use crate::anns::FilterBitset;
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 600, 20, 67);
+        ds.compute_ground_truth(10);
+        // Brute force is the filtered oracle, so its filtered recall is
+        // exactly 1.0 at every selectivity — including popcounts below k,
+        // where recall_at_k caps k at the matching-set size.
+        let idx = BruteForceIndex::build(VectorSet::from_dataset(&ds));
+        for modulus in [2u32, 10, 100] {
+            let f = FilterBitset::from_predicate(600, |id| id % modulus == 0);
+            let p = measure_filtered_point(&idx, &ds, 10, 0, &f);
+            assert!(
+                (p.recall - 1.0).abs() < 1e-9,
+                "modulus {modulus}: filtered recall {}",
+                p.recall
+            );
+            assert!(p.qps > 0.0 && p.mean_latency_s > 0.0);
+        }
+        // A graph index under a wide filter still scores against the
+        // filtered ground truth and lands in a sane recall band.
+        let hnsw = crate::anns::hnsw::HnswIndex::build(
+            VectorSet::from_dataset(&ds),
+            &crate::variants::ConstructionKnobs::default(),
+            crate::variants::SearchKnobs::default(),
+            1,
+        );
+        let half = FilterBitset::from_predicate(600, |id| id % 2 == 0);
+        let p = measure_filtered_point(&hnsw, &ds, 10, 128, &half);
+        assert!(p.recall > 0.8, "filtered hnsw recall {}", p.recall);
     }
 
     #[test]

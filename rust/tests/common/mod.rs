@@ -14,7 +14,7 @@
 
 #![allow(dead_code)]
 
-use crinn::anns::{AnnIndex, MutableAnnIndex, VectorSet};
+use crinn::anns::{AnnIndex, MetadataStore, MutableAnnIndex, VectorSet};
 use crinn::dataset::{synth, Dataset};
 use crinn::distance::Metric;
 use crinn::variants::{ConstructionKnobs, SearchKnobs, VariantConfig};
@@ -187,6 +187,27 @@ pub fn mutable_index_cases() -> Vec<MutableCase> {
             },
         },
     ]
+}
+
+/// Metadata fixture for the filtered-conformance dimension: tenant
+/// `t{id%10}` (so any one tenant is ~10% of the base set), tag `"hot"` on
+/// ids with `id % 10 != 0` (~90% selectivity), and tag `"rare"` on ids
+/// with `id % 100 == 0` (~1% — below the default brute-force fallback
+/// threshold at conformance scale, so the exact path is exercised too).
+pub fn tenant_tag_metadata(n: usize) -> MetadataStore {
+    let mut meta = MetadataStore::new();
+    for id in 0..n {
+        let tenant = format!("t{}", id % 10);
+        let mut tags: Vec<&str> = Vec::new();
+        if id % 10 != 0 {
+            tags.push("hot");
+        }
+        if id % 100 == 0 {
+            tags.push("rare");
+        }
+        meta.push(Some(&tenant), &tags);
+    }
+    meta
 }
 
 /// Mean recall@10 of an index over a dataset's query set at one `ef`.

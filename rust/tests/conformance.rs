@@ -13,6 +13,11 @@
 //!    `search_with_dists`.
 //! 4. **Well-formedness** — results sorted by `(dist, id)`, distinct,
 //!    in id range.
+//! 5. **Filtered recall** — `search_filtered_with_dists` holds recall@10
+//!    floors against *filtered* ground truth at ~90% / ~10% / ~1%
+//!    selectivity, surfaces only matching ids, keeps filtered batch ==
+//!    per-query bitwise, and is bitwise identical to the unfiltered
+//!    entry points when `filter=None`.
 //!
 //! This replaces the per-index ad-hoc copies that used to live in
 //! `properties.rs` (`prop_search_batch_matches_per_query_bitwise`) with a
@@ -114,6 +119,125 @@ fn conformance_for_metric(metric: Metric, seed: u64) {
     }
 }
 
+/// Filtered-recall dimension: every index type is held to recall@10
+/// floors against *filtered* ground truth at three selectivity tiers,
+/// with the filter bitsets compiled from `FilterExpr`s through a
+/// `MetadataStore` — the same pipeline the coordinator uses:
+///
+/// * `sel90` (tag "hot", ~90% of ids) — beam path, floors track the
+///   unfiltered collapse floors;
+/// * `sel10` (tenant "t3", ~10%) — beam path under a sparse filter,
+///   loosened floors (fewer admissible candidates per beam);
+/// * `sel1` (tag "rare", ~1%, popcount 12 at this scale) — below the
+///   default fallback threshold, so every index answers via filtered
+///   brute force and recall must be exact.
+///
+/// Also holds the contract invariants under filters: only matching ids
+/// surface, filtered batch == filtered per-query bitwise, and
+/// `filter=None` is bitwise identical to the unfiltered entry points.
+fn filtered_conformance_for_metric(metric: Metric, seed: u64) {
+    let ds = common::metric_dataset(metric, 1200, 24, seed);
+    let n = ds.n_base();
+    let meta = common::tenant_tag_metadata(n);
+    let queries: Vec<&[f32]> = (0..ds.n_queries()).map(|qi| ds.query_vec(qi)).collect();
+    let tiers: Vec<(&str, crinn::anns::FilterExpr)> = vec![
+        ("sel90", crinn::anns::FilterExpr::tag("hot")),
+        ("sel10", crinn::anns::FilterExpr::tenant("t3")),
+        ("sel1", crinn::anns::FilterExpr::tag("rare")),
+    ];
+
+    for case in common::static_index_cases() {
+        let idx = (case.build)(VectorSet::from_dataset(&ds), 7);
+
+        for (tier, expr) in &tiers {
+            let filter = meta.compile(expr, n);
+            // Filtered ground truth through the oracle the filtered
+            // brute-force path is held identical to.
+            let (mut idbuf, mut dbuf) = (Vec::new(), Vec::new());
+            let gt: Vec<Vec<u32>> = queries
+                .iter()
+                .map(|q| {
+                    crinn::dataset::gt::topk_pairs_for_query_filtered(
+                        &ds.base,
+                        q,
+                        ds.dim,
+                        ds.metric,
+                        10,
+                        &mut idbuf,
+                        &mut dbuf,
+                        |i| filter.matches(i),
+                    )
+                    .into_iter()
+                    .map(|(_, i)| i)
+                    .collect()
+                })
+                .collect();
+
+            let per_query: Vec<Vec<(f32, u32)>> = queries
+                .iter()
+                .map(|q| idx.search_filtered_with_dists(q, 10, case.ef, Some(&filter)))
+                .collect();
+
+            let mut acc = 0.0;
+            for (qi, res) in per_query.iter().enumerate() {
+                for &(_, id) in res {
+                    assert!(
+                        filter.matches(id),
+                        "{} {metric:?} {tier}: non-matching id {id} surfaced",
+                        case.name
+                    );
+                }
+                let ids: Vec<u32> = res.iter().map(|&(_, i)| i).collect();
+                acc += crinn::dataset::gt::recall_at_k(&ids, &gt[qi], 10);
+            }
+            let recall = acc / queries.len() as f64;
+            let floor = match *tier {
+                // ~90% selectivity barely changes the problem; the
+                // unfiltered collapse floors apply (eased a touch for
+                // the GT shift from dropping every 10th id).
+                "sel90" => (common::floor_for(&case, metric) - 0.05).max(0.05),
+                // Sparse beam tier: only ~1 in 10 visited nodes is
+                // admissible, so the floors are collapse detectors only.
+                // Brute force stays exact at any selectivity.
+                "sel10" if case.name == "bruteforce" => 0.999,
+                "sel10" => (common::floor_for(&case, metric) - 0.25).max(0.10),
+                // Below the fallback threshold: exact by construction.
+                _ => 0.999,
+            };
+            assert!(
+                recall >= floor,
+                "{} {metric:?} {tier}: filtered recall@10 {recall:.3} below floor {floor}",
+                case.name
+            );
+
+            // Filtered batch == filtered per-query, bitwise.
+            assert_eq!(
+                idx.search_filtered_batch(&queries, 10, case.ef, Some(&filter)),
+                per_query,
+                "{} {metric:?} {tier}: filtered batch != per-query",
+                case.name
+            );
+        }
+
+        // filter=None is the unfiltered path, bitwise.
+        let ef = case.ef.max(64);
+        for q in &queries {
+            assert_eq!(
+                idx.search_filtered_with_dists(q, 10, ef, None),
+                idx.search_with_dists(q, 10, ef),
+                "{} {metric:?}: filter=None diverges from search_with_dists",
+                case.name
+            );
+        }
+        assert_eq!(
+            idx.search_filtered_batch(&queries, 10, ef, None),
+            idx.search_batch(&queries, 10, ef),
+            "{} {metric:?}: filter=None diverges from search_batch",
+            case.name
+        );
+    }
+}
+
 #[test]
 fn conformance_batch_identity_and_recall_l2() {
     conformance_for_metric(Metric::L2, 81);
@@ -127,4 +251,19 @@ fn conformance_batch_identity_and_recall_angular() {
 #[test]
 fn conformance_batch_identity_and_recall_ip() {
     conformance_for_metric(Metric::Ip, 83);
+}
+
+#[test]
+fn filtered_conformance_recall_l2() {
+    filtered_conformance_for_metric(Metric::L2, 81);
+}
+
+#[test]
+fn filtered_conformance_recall_angular() {
+    filtered_conformance_for_metric(Metric::Angular, 82);
+}
+
+#[test]
+fn filtered_conformance_recall_ip() {
+    filtered_conformance_for_metric(Metric::Ip, 83);
 }

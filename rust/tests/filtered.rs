@@ -1,0 +1,276 @@
+//! Filtered-search property tests — the live-traffic contract of
+//! `search_filtered_with_dists` under mutation, mirroring
+//! `tests/mutation.rs`: random interleaved insert/delete/consolidate/
+//! filtered-search sequences on every natively-mutable index type,
+//! graded against an externally-tracked mirror of the live set AND its
+//! metadata.
+//!
+//! The central properties:
+//! * a filtered search NEVER surfaces a tombstoned id or an id outside
+//!   the filter, at any point in the interleaving;
+//! * returned distances stay exact against the mirror;
+//! * filtered batch == filtered per-query, bitwise;
+//! * `filter=None` is bitwise identical to the unfiltered entry points;
+//! * a filter below the brute-force fallback threshold answers bitwise
+//!   identically to the exact oracle over the live matching set — even
+//!   mid-mutation, and even when the filter still names deleted ids;
+//! * post-consolidation filtered recall over the live matching set
+//!   clears a loosened static floor.
+
+mod common;
+
+use crinn::anns::{FilterBitset, FilterExpr, MetadataStore, MutableAnnIndex, VectorSet};
+use crinn::distance::Metric;
+use crinn::util::rng::Rng;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Exact top-k of the live mirror restricted to `keep`, sorted by
+/// (dist, id) — the oracle filtered searches are graded against.
+fn live_filtered_topk(
+    live: &BTreeMap<u32, Vec<f32>>,
+    keep: impl Fn(u32) -> bool,
+    q: &[f32],
+    metric: Metric,
+    k: usize,
+) -> Vec<(f32, u32)> {
+    let mut all: Vec<(f32, u32)> = live
+        .iter()
+        .filter(|(&id, _)| keep(id))
+        .map(|(&id, v)| (metric.distance(q, v), id))
+        .collect();
+    all.sort_by(crinn::anns::heap::dist_cmp);
+    all.truncate(k);
+    all
+}
+
+/// The metadata mirror: tenant group `t{id % 4}` for every id, tag
+/// `"vip"` on ids divisible by 50 (rare enough to stay below the default
+/// fallback threshold for the whole run).
+fn assign(meta: &mut MetadataStore, vip: &mut BTreeSet<u32>, id: u32) {
+    let tenant = format!("t{}", id % 4);
+    if id % 50 == 0 {
+        vip.insert(id);
+        meta.set_for(id, Some(&tenant), &["vip"]);
+    } else {
+        // Inserts can recycle a consolidated slot that used to be vip.
+        vip.remove(&id);
+        meta.set_for(id, Some(&tenant), &[]);
+    }
+}
+
+/// One round of filtered checks against the mirrors.
+fn check_filtered(
+    idx: &dyn MutableAnnIndex,
+    live: &BTreeMap<u32, Vec<f32>>,
+    vip: &BTreeSet<u32>,
+    meta: &MetadataStore,
+    queries: &[&[f32]],
+    metric: Metric,
+    ef: usize,
+    label: &str,
+) {
+    let n = idx.len();
+
+    // --- Tenant filter (~25% selectivity): beam / scan path.
+    let tenant_filter = meta.compile(&FilterExpr::tenant("t1"), n);
+    let per_query: Vec<Vec<(f32, u32)>> = queries
+        .iter()
+        .map(|q| idx.search_filtered_with_dists(q, 10, ef, Some(&tenant_filter)))
+        .collect();
+    assert_eq!(
+        idx.search_filtered_batch(queries, 10, ef, Some(&tenant_filter)),
+        per_query,
+        "{label}: filtered batch != per-query"
+    );
+    for (q, res) in queries.iter().zip(&per_query) {
+        for &(d, id) in res {
+            assert!(id % 4 == 1, "{label}: id {id} outside tenant filter");
+            assert!(!idx.is_deleted(id), "{label}: tombstoned id {id} surfaced");
+            let v = live
+                .get(&id)
+                .unwrap_or_else(|| panic!("{label}: non-live id {id} surfaced"));
+            assert_eq!(d, metric.distance(q, v), "{label}: inexact distance for {id}");
+        }
+        let ids: std::collections::HashSet<u32> = res.iter().map(|&(_, i)| i).collect();
+        assert_eq!(ids.len(), res.len(), "{label}: duplicate ids");
+        for w in res.windows(2) {
+            assert!(
+                crinn::anns::heap::dist_cmp(&w[0], &w[1]) != std::cmp::Ordering::Greater,
+                "{label}: unsorted filtered results"
+            );
+        }
+    }
+
+    // --- filter=None is bitwise the unfiltered path.
+    let unfiltered: Vec<Vec<(f32, u32)>> = queries
+        .iter()
+        .map(|q| idx.search_with_dists(q, 10, ef))
+        .collect();
+    let none: Vec<Vec<(f32, u32)>> = queries
+        .iter()
+        .map(|q| idx.search_filtered_with_dists(q, 10, ef, None))
+        .collect();
+    assert_eq!(none, unfiltered, "{label}: filter=None diverges per-query");
+    assert_eq!(
+        idx.search_filtered_batch(queries, 10, ef, None),
+        unfiltered,
+        "{label}: filter=None diverges batched"
+    );
+
+    // --- Rare "vip" filter: below the fallback threshold, so the answer
+    // must be bitwise the exact oracle over the live matching set. The
+    // bitset still names deleted vip ids — they must not resurface.
+    let vip_filter = meta.compile(&FilterExpr::tag("vip"), n);
+    assert!(
+        vip_filter.count() <= crinn::anns::filter::DEFAULT_FILTERED_FALLBACK,
+        "{label}: vip fixture grew past the fallback threshold"
+    );
+    for q in queries {
+        let got = idx.search_filtered_with_dists(q, 10, ef, Some(&vip_filter));
+        let want = live_filtered_topk(live, |id| vip.contains(&id), q, metric, 10);
+        assert_eq!(got, want, "{label}: rare-filter fallback != exact oracle");
+    }
+}
+
+/// The acceptance property, per mutable index type and seed.
+fn interleaved_filtered_property(case: &common::MutableCase, seed: u64) {
+    let label = format!("{} seed {seed}", case.name);
+    let ds = common::metric_dataset(Metric::L2, 900, 20, 2000 + seed);
+    let mut idx = (case.build)(VectorSet::from_dataset(&ds), 7 + seed);
+    let metric = ds.metric;
+    let dim = ds.dim;
+
+    // External mirrors: live set (id -> vector), metadata store, vip set.
+    let mut live: BTreeMap<u32, Vec<f32>> = (0..ds.n_base() as u32)
+        .map(|i| (i, ds.base_vec(i as usize).to_vec()))
+        .collect();
+    let mut meta = MetadataStore::new();
+    let mut vip: BTreeSet<u32> = BTreeSet::new();
+    for id in 0..ds.n_base() as u32 {
+        assign(&mut meta, &mut vip, id);
+    }
+    let mut rng = Rng::new(0xF117 ^ seed);
+    let queries: Vec<&[f32]> = (0..ds.n_queries()).map(|qi| ds.query_vec(qi)).collect();
+
+    for step in 0..100 {
+        match rng.next_below(10) {
+            0..=3 => {
+                let v: Vec<f32> = (0..dim).map(|_| rng.next_gaussian_f32()).collect();
+                let id = idx.insert(&v).unwrap_or_else(|e| panic!("{label}: insert: {e:#}"));
+                assert!(
+                    live.insert(id, v).is_none(),
+                    "{label}: insert returned live id {id}"
+                );
+                assign(&mut meta, &mut vip, id);
+            }
+            4..=6 => {
+                if live.len() > ds.n_base() / 2 {
+                    let keys: Vec<u32> = live.keys().copied().collect();
+                    let id = keys[rng.next_below(keys.len())];
+                    idx.delete(id).unwrap_or_else(|e| panic!("{label}: delete {id}: {e:#}"));
+                    // Metadata is NOT erased on delete: the filter keeps
+                    // naming the id, the tombstone must hide it.
+                    live.remove(&id);
+                }
+            }
+            _ => {
+                let qi = rng.next_below(queries.len());
+                check_filtered(
+                    &*idx,
+                    &live,
+                    &vip,
+                    &meta,
+                    &queries[qi..qi + 1],
+                    metric,
+                    case.ef,
+                    &label,
+                );
+            }
+        }
+        if step == 50 {
+            idx.consolidate().unwrap_or_else(|e| panic!("{label}: consolidate: {e:#}"));
+            check_filtered(&*idx, &live, &vip, &meta, &queries, metric, case.ef, &label);
+        }
+    }
+
+    // Final consolidation, full check, then the filtered recall bar over
+    // the live tenant-t1 set (loosened: ~25% of visited nodes admissible).
+    idx.consolidate().unwrap();
+    check_filtered(&*idx, &live, &vip, &meta, &queries, metric, case.ef, &label);
+    let tenant_filter = meta.compile(&FilterExpr::tenant("t1"), idx.len());
+    let mut acc = 0.0;
+    for q in &queries {
+        let found: Vec<u32> = idx
+            .search_filtered_with_dists(q, 10, case.ef, Some(&tenant_filter))
+            .into_iter()
+            .map(|(_, i)| i)
+            .collect();
+        let gt: Vec<u32> = live_filtered_topk(&live, |id| id % 4 == 1, q, metric, 10)
+            .into_iter()
+            .map(|(_, i)| i)
+            .collect();
+        acc += crinn::dataset::gt::recall_at_k(&found, &gt, 10);
+    }
+    let recall = acc / queries.len() as f64;
+    let floor = if case.name == "bruteforce" {
+        0.999
+    } else {
+        (case.static_floor - 0.25).max(0.10)
+    };
+    assert!(
+        recall >= floor,
+        "{label}: post-consolidate filtered recall {recall:.3} below floor {floor}"
+    );
+}
+
+#[test]
+fn filtered_interleaved_property_bruteforce() {
+    for seed in 0..2 {
+        interleaved_filtered_property(&common::mutable_index_cases()[0], seed);
+    }
+}
+
+#[test]
+fn filtered_interleaved_property_hnsw() {
+    for seed in 0..2 {
+        interleaved_filtered_property(&common::mutable_index_cases()[1], seed);
+    }
+}
+
+#[test]
+fn filtered_interleaved_property_glass() {
+    for seed in 0..2 {
+        interleaved_filtered_property(&common::mutable_index_cases()[2], seed);
+    }
+}
+
+#[test]
+fn filtered_interleaved_property_ivf() {
+    for seed in 0..2 {
+        interleaved_filtered_property(&common::mutable_index_cases()[3], seed);
+    }
+}
+
+/// An out-of-range / empty filter is deny-safe: a bitset sized smaller
+/// than the index never surfaces ids beyond its range, and an all-zero
+/// bitset returns nothing from every index type.
+#[test]
+fn filtered_deny_safe_bitsets() {
+    let ds = common::metric_dataset(Metric::L2, 400, 5, 3000);
+    let queries: Vec<&[f32]> = (0..ds.n_queries()).map(|qi| ds.query_vec(qi)).collect();
+    for case in common::static_index_cases() {
+        let idx = (case.build)(VectorSet::from_dataset(&ds), 7);
+        let empty = FilterBitset::new(ds.n_base());
+        let short = FilterBitset::from_predicate(100, |_| true);
+        for q in &queries {
+            assert!(
+                idx.search_filtered_with_dists(q, 10, case.ef, Some(&empty)).is_empty(),
+                "{}: empty filter returned results",
+                case.name
+            );
+            for (_, id) in idx.search_filtered_with_dists(q, 10, case.ef, Some(&short)) {
+                assert!(id < 100, "{}: id {id} beyond the bitset range", case.name);
+            }
+        }
+    }
+}
