@@ -1,174 +1,53 @@
-//! Index persistence: save/load built GLASS/HNSW indexes.
+//! The v1/v2 sequential-stream snapshot format, kept as a compatibility
+//! shim: one little-endian stream (`CRNN` magic + version) carrying the
+//! vector set, the layered graph, the quantized codes, the variant
+//! configuration and — since v2 — an optional id → tenant/tags metadata
+//! section plus the mutation-state tail (tombstone bitset, free-slot
+//! list, insert-level RNG state, frozen quantizer scale).
 //!
-//! A deployment builds once and serves many times — ann-benchmarks and
-//! every production store persist their graphs. Format: a little-endian
-//! binary container (`CRNN` magic + version) carrying the vector set, the
-//! layered graph, the quantized codes, the variant configuration (encoded
-//! through the same action space the RL uses, which keeps the format
-//! stable as knobs evolve) and — since v2 — an optional id → tenant/tags
-//! metadata section (for filtered serving) plus the mutation state: the
-//! tombstone bitset and the free-slot list, so a snapshot taken under
-//! live traffic restores with exactly the same live set.
-//!
-//! Readers are hostile-input hardened: every `u64` length field is
-//! overflow-checked against the file size before any allocation, the
-//! tombstone count may never exceed the point count, the bitset may not
-//! mark slots beyond the point count, and every free-list entry must be a
-//! marked, unique, in-range slot.
+//! The reader here is what keeps pre-container snapshots loading; the
+//! writer is retained so the byte-offset corruption fixtures in the tests
+//! below stay exact. Readers are hostile-input hardened: every `u64`
+//! length field is overflow-checked against the file size before any
+//! allocation, the tombstone count may never exceed the point count, the
+//! bitset may not mark slots beyond the point count, and every free-list
+//! entry must be a marked, unique, in-range slot.
 
+use super::reader::R;
+use super::writer::W;
+use super::MAGIC;
 use crate::anns::hnsw::graph::HnswGraph;
 use crate::anns::metadata::MetadataStore;
 use crate::anns::tombstones::Tombstones;
 use crate::anns::VectorSet;
+use crate::bail;
 use crate::distance::quant::QuantizedStore;
 use crate::distance::Metric;
-use crate::variants::{decode_action, encode_action, Module, VariantConfig};
-use crate::bail;
 use crate::util::error::{Context, Error, Result};
+use crate::variants::{decode_action, encode_action, Module, VariantConfig};
 use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::Path;
 
-const MAGIC: &[u8; 4] = b"CRNN";
 /// v2 appended the mutation-state tail (tombstone bitset + free list +
 /// insert-level RNG state + frozen quantizer scale). The reader still
 /// accepts v1 files (no tail; empty mutation state, re-fit scale).
-const VERSION: u32 = 2;
+pub(crate) const VERSION_V2: u32 = 2;
 
-struct W<'a, T: Write>(&'a mut T);
-
-impl<'a, T: Write> W<'a, T> {
-    fn u32(&mut self, v: u32) -> Result<()> {
-        self.0.write_all(&v.to_le_bytes())?;
-        Ok(())
-    }
-    fn u64(&mut self, v: u64) -> Result<()> {
-        self.0.write_all(&v.to_le_bytes())?;
-        Ok(())
-    }
-    fn f64(&mut self, v: f64) -> Result<()> {
-        self.0.write_all(&v.to_le_bytes())?;
-        Ok(())
-    }
-    fn f32s(&mut self, v: &[f32]) -> Result<()> {
-        self.u64(v.len() as u64)?;
-        for x in v {
-            self.0.write_all(&x.to_le_bytes())?;
-        }
-        Ok(())
-    }
-    fn u32s(&mut self, v: &[u32]) -> Result<()> {
-        self.u64(v.len() as u64)?;
-        for x in v {
-            self.0.write_all(&x.to_le_bytes())?;
-        }
-        Ok(())
-    }
-    fn u8s(&mut self, v: &[u8]) -> Result<()> {
-        self.u64(v.len() as u64)?;
-        self.0.write_all(v)?;
-        Ok(())
-    }
-    fn u64s(&mut self, v: &[u64]) -> Result<()> {
-        self.u64(v.len() as u64)?;
-        for x in v {
-            self.0.write_all(&x.to_le_bytes())?;
-        }
-        Ok(())
-    }
+/// Write a v2 sequential-stream snapshot (index only).
+pub(crate) fn save_v2(idx: &crate::anns::glass::GlassIndex, path: &Path) -> Result<()> {
+    save_v2_impl(idx, None, path)
 }
 
-struct R<'a, T: Read> {
-    inner: &'a mut T,
-    /// Total file size in bytes — the sanity cap for every `u64` length
-    /// field. A valid field can never describe more payload than the file
-    /// holds, so anything larger is corruption (or a hostile header) and
-    /// must return `Err` instead of feeding `vec![0u8; huge]` and
-    /// OOM-aborting the process.
-    limit: u64,
-}
-
-impl<'a, T: Read> R<'a, T> {
-    fn u32(&mut self) -> Result<u32> {
-        let mut b = [0u8; 4];
-        self.inner.read_exact(&mut b)?;
-        Ok(u32::from_le_bytes(b))
-    }
-    fn u64(&mut self) -> Result<u64> {
-        let mut b = [0u8; 8];
-        self.inner.read_exact(&mut b)?;
-        Ok(u64::from_le_bytes(b))
-    }
-    fn f64(&mut self) -> Result<f64> {
-        let mut b = [0u8; 8];
-        self.inner.read_exact(&mut b)?;
-        Ok(f64::from_le_bytes(b))
-    }
-    /// Read a `u64` element count and validate it against the file size
-    /// (overflow-checked multiply by the per-element byte width) before any
-    /// allocation sized by it.
-    fn len(&mut self, elem_bytes: u64) -> Result<usize> {
-        let n = self.u64()?;
-        let bytes = n
-            .checked_mul(elem_bytes)
-            .ok_or_else(|| Error::msg(format!("corrupt index: length field {n} overflows")))?;
-        crate::ensure!(
-            bytes <= self.limit,
-            "corrupt index: length field {n} ({bytes} bytes) exceeds file size {}",
-            self.limit
-        );
-        Ok(n as usize)
-    }
-    fn f32s(&mut self) -> Result<Vec<f32>> {
-        let n = self.len(4)?;
-        let mut raw = vec![0u8; n * 4];
-        self.inner.read_exact(&mut raw)?;
-        Ok(raw
-            .chunks_exact(4)
-            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
-    }
-    fn u32s(&mut self) -> Result<Vec<u32>> {
-        let n = self.len(4)?;
-        let mut raw = vec![0u8; n * 4];
-        self.inner.read_exact(&mut raw)?;
-        Ok(raw
-            .chunks_exact(4)
-            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-            .collect())
-    }
-    fn u8s(&mut self) -> Result<Vec<u8>> {
-        let n = self.len(1)?;
-        let mut v = vec![0u8; n];
-        self.inner.read_exact(&mut v)?;
-        Ok(v)
-    }
-    fn u64s(&mut self) -> Result<Vec<u64>> {
-        let n = self.len(8)?;
-        let mut raw = vec![0u8; n * 8];
-        self.inner.read_exact(&mut raw)?;
-        Ok(raw
-            .chunks_exact(8)
-            .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
-            .collect())
-    }
-}
-
-/// Save a built GLASS index (graph + codes + config) to `path`.
-pub fn save_glass(idx: &crate::anns::glass::GlassIndex, path: &Path) -> Result<()> {
-    save_glass_impl(idx, None, path)
-}
-
-/// [`save_glass`] plus the id → tenant/tags store, so a filtered-serving
-/// deployment snapshots index and metadata as one artifact.
-pub fn save_glass_with_metadata(
+/// Write a v2 sequential-stream snapshot with the metadata section.
+pub(crate) fn save_v2_with_metadata(
     idx: &crate::anns::glass::GlassIndex,
     metadata: &MetadataStore,
     path: &Path,
 ) -> Result<()> {
-    save_glass_impl(idx, Some(metadata), path)
+    save_v2_impl(idx, Some(metadata), path)
 }
 
-fn save_glass_impl(
+fn save_v2_impl(
     idx: &crate::anns::glass::GlassIndex,
     metadata: Option<&MetadataStore>,
     path: &Path,
@@ -177,7 +56,7 @@ fn save_glass_impl(
     let mut bw = BufWriter::new(f);
     let mut w = W(&mut bw);
     w.0.write_all(MAGIC)?;
-    w.u32(VERSION)?;
+    w.u32(VERSION_V2)?;
     // Vector set.
     let g = &idx.graph;
     w.u32(g.vectors.dim as u32)?;
@@ -216,7 +95,7 @@ fn save_glass_impl(
     // v2: metadata section — a presence flag, then (when present) the
     // store's interned columns: row count, name table, per-row tenant name
     // ids, row-delimiting tag offsets, and the flat tag name ids. Plain
-    // [`save_glass`] writes flag 0 only, so index-only snapshots cost 8
+    // [`save_v2`] writes flag 0 only, so index-only snapshots cost 8
     // extra bytes and round-trip unchanged.
     match metadata {
         None => w.u64(0)?,
@@ -266,22 +145,12 @@ fn save_glass_impl(
     Ok(())
 }
 
-/// Load a GLASS index saved with [`save_glass`]. Codes and degree
-/// metadata are rebuilt from the payload (cheaper than storing them and
-/// immune to quantizer-version drift); the codes re-derive from the
-/// **persisted** frozen scale, never a re-fit, so an index that absorbed
-/// online inserts restores bit-identically.
-pub fn load_glass(path: &Path) -> Result<crate::anns::glass::GlassIndex> {
-    Ok(load_glass_with_metadata(path)?.0)
-}
-
-/// [`load_glass`] plus the persisted metadata store (`None` for index-only
-/// snapshots and v1 files). The metadata columns get the same
-/// hostile-input treatment as the mutation state: row count capped by the
-/// point count, name ids range-checked, tag offsets monotone and
-/// consistent with the flat tag array — reject with `Err`, never
-/// trust-and-crash later.
-pub fn load_glass_with_metadata(
+/// Load a v1/v2 sequential-stream snapshot. Codes and degree metadata are
+/// rebuilt from the payload; the codes re-derive from the **persisted**
+/// frozen scale (v2), never a re-fit, so an index that absorbed online
+/// inserts restores bit-identically. v1 files predate the metadata and
+/// mutation sections and load with everything-live defaults.
+pub(crate) fn load(
     path: &Path,
 ) -> Result<(crate::anns::glass::GlassIndex, Option<MetadataStore>)> {
     let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
@@ -297,7 +166,7 @@ pub fn load_glass_with_metadata(
         bail!("not a CRINN index file");
     }
     let version = r.u32()?;
-    if version != 1 && version != VERSION {
+    if version != 1 && version != VERSION_V2 {
         bail!("unsupported index version {version}");
     }
     let dim = r.u32()? as usize;
@@ -320,7 +189,7 @@ pub fn load_glass_with_metadata(
 
     let mut graph = HnswGraph::new(vs, m);
     crate::ensure!(graph.layer0.len() == layer0.len(), "layer0 size mismatch");
-    graph.layer0 = layer0;
+    graph.layer0 = layer0.into();
     graph.levels = levels;
     graph.entry = entry;
     graph.max_level = max_level;
@@ -435,20 +304,8 @@ pub fn load_glass_with_metadata(
             deleted.count()
         );
         let free = r.u32s()?;
-        crate::ensure!(
-            free.len() <= deleted.count(),
-            "corrupt index: free list ({}) larger than tombstone count ({})",
-            free.len(),
-            deleted.count()
-        );
-        let mut seen = std::collections::HashSet::with_capacity(free.len());
-        for &f in &free {
-            crate::ensure!(
-                (f as usize) < n_points && deleted.contains(f),
-                "corrupt index: free slot {f} is not a tombstoned point"
-            );
-            crate::ensure!(seen.insert(f), "corrupt index: duplicate free slot {f}");
-        }
+        crate::anns::tombstones::validate_free_list(&free, &deleted, n_points)
+            .map_err(|e| Error::msg(format!("corrupt index: {e}")))?;
         // Insert-level RNG state: 4 fixed u64s, any value accepted (the
         // degenerate all-zero orbit falls back to the default seed inside
         // `Rng::from_state`).
@@ -486,6 +343,7 @@ pub fn load_glass_with_metadata(
 mod tests {
     use super::*;
     use crate::anns::glass::GlassIndex;
+    use crate::anns::persist::{load_glass, load_glass_with_metadata};
     use crate::anns::AnnIndex;
     use crate::dataset::synth;
 
@@ -494,7 +352,7 @@ mod tests {
     }
 
     #[test]
-    fn glass_roundtrip_identical_results() {
+    fn glass_v2_roundtrip_identical_results() {
         let sp = synth::spec("demo-64").unwrap();
         let mut ds = synth::generate_counts(sp, 800, 30, 77);
         ds.compute_ground_truth(10);
@@ -503,8 +361,8 @@ mod tests {
             VariantConfig::crinn_full(),
             7,
         );
-        let path = tmp("roundtrip.idx");
-        save_glass(&idx, &path).unwrap();
+        let path = tmp("roundtrip_v2.idx");
+        save_v2(&idx, &path).unwrap();
         let loaded = load_glass(&path).unwrap();
         assert_eq!(loaded.len(), idx.len());
         for qi in 0..ds.n_queries() {
@@ -524,7 +382,7 @@ mod tests {
     }
 
     #[test]
-    fn rejects_truncated_file() {
+    fn rejects_truncated_v2_file() {
         // A valid index cut off at various points must error cleanly (no
         // panic, no abort) — both mid-payload and mid-length-field.
         let sp = synth::spec("demo-64").unwrap();
@@ -534,8 +392,8 @@ mod tests {
             VariantConfig::glass_baseline(),
             7,
         );
-        let path = tmp("truncated.idx");
-        save_glass(&idx, &path).unwrap();
+        let path = tmp("truncated_v2.idx");
+        save_v2(&idx, &path).unwrap();
         let full = std::fs::read(&path).unwrap();
         for frac in [0.05, 0.3, 0.6, 0.95] {
             let cut = (full.len() as f64 * frac) as usize;
@@ -554,7 +412,7 @@ mod tests {
         for huge in [u64::MAX, u64::MAX / 2, 1u64 << 40] {
             let mut f = Vec::new();
             f.extend_from_slice(MAGIC);
-            f.extend_from_slice(&VERSION.to_le_bytes());
+            f.extend_from_slice(&VERSION_V2.to_le_bytes());
             f.extend_from_slice(&64u32.to_le_bytes()); // dim
             f.extend_from_slice(&0u32.to_le_bytes()); // metric = L2
             f.extend_from_slice(&huge.to_le_bytes()); // f32s length field
@@ -569,7 +427,7 @@ mod tests {
     }
 
     #[test]
-    fn mutation_state_roundtrip() {
+    fn mutation_state_v2_roundtrip() {
         use crate::anns::MutableAnnIndex;
         let sp = synth::spec("demo-64").unwrap();
         let mut ds = synth::generate_counts(sp, 300, 10, 80);
@@ -582,8 +440,8 @@ mod tests {
         for id in [3u32, 77, 150, 299] {
             idx.delete(id).unwrap();
         }
-        let path = tmp("mutstate.idx");
-        save_glass(&idx, &path).unwrap();
+        let path = tmp("mutstate_v2.idx");
+        save_v2(&idx, &path).unwrap();
         let loaded = load_glass(&path).unwrap();
         assert_eq!(loaded.live_count(), idx.live_count());
         assert_eq!(loaded.deleted_count(), 4);
@@ -603,7 +461,7 @@ mod tests {
         // Free list round-trips: a consolidated snapshot restores with its
         // recyclable slots, and the next insert reuses one.
         idx.consolidate().unwrap();
-        save_glass(&idx, &path).unwrap();
+        save_v2(&idx, &path).unwrap();
         let mut reloaded = load_glass(&path).unwrap();
         assert_eq!(reloaded.deleted_count(), 0);
         assert_eq!(reloaded.live_count(), 296);
@@ -633,7 +491,7 @@ mod tests {
         // restores bit-identical codes (no re-fit over the grown payload),
         // so the reload reproduces the in-memory quantized pipeline
         // exactly.
-        save_glass(&idx, &path).unwrap();
+        save_v2(&idx, &path).unwrap();
         let post = load_glass(&path).unwrap();
         assert_eq!(post.quant.scale, idx.quant.scale, "scale was re-fit on load");
         for qi in 0..ds.n_queries() {
@@ -667,8 +525,8 @@ mod tests {
         );
         idx.delete(5).unwrap();
         idx.consolidate().unwrap(); // free = [5]
-        let path = tmp("mutcorrupt.idx");
-        save_glass(&idx, &path).unwrap();
+        let path = tmp("mutcorrupt_v2.idx");
+        save_v2(&idx, &path).unwrap();
         let full = std::fs::read(&path).unwrap();
         // n=300 => 5 bitset words; tail = 8 (dead) + 8 (wlen) + 40 (words)
         // + 8 (flen) + 4 (one free id) + 32 (rng state) + 4 (scale) = 104.
@@ -744,7 +602,7 @@ mod tests {
             7,
         );
         let path = tmp("v1compat.idx");
-        save_glass(&idx, &path).unwrap();
+        save_v2(&idx, &path).unwrap();
         let full = std::fs::read(&path).unwrap();
         // Tail with zero deletes/free slots: 8 (dead) + 8 (wlen) + 40
         // (words) + 8 (flen) + 0 (free) + 32 (rng) + 4 (scale) = 100, plus
@@ -785,7 +643,7 @@ mod tests {
     }
 
     #[test]
-    fn filtered_metadata_roundtrip() {
+    fn filtered_metadata_v2_roundtrip() {
         use crate::anns::{FilterExpr, MutableAnnIndex};
         let sp = synth::spec("demo-64").unwrap();
         let mut ds = synth::generate_counts(sp, 300, 5, 83);
@@ -797,8 +655,8 @@ mod tests {
         );
         idx.delete(5).unwrap(); // metadata + mutation state coexist
         let meta = meta_fixture();
-        let path = tmp("metaroundtrip.idx");
-        save_glass_with_metadata(&idx, &meta, &path).unwrap();
+        let path = tmp("metaroundtrip_v2.idx");
+        save_v2_with_metadata(&idx, &meta, &path).unwrap();
         let (loaded, loaded_meta) = load_glass_with_metadata(&path).unwrap();
         let loaded_meta = loaded_meta.expect("metadata section must round-trip");
         assert_eq!(loaded_meta.names(), meta.names());
@@ -825,7 +683,7 @@ mod tests {
             loaded.search_with_dists(ds.query_vec(0), 10, 64)
         );
         // And an index-only snapshot reports no metadata.
-        save_glass(&idx, &path).unwrap();
+        save_v2(&idx, &path).unwrap();
         let (_, none_meta) = load_glass_with_metadata(&path).unwrap();
         assert!(none_meta.is_none());
         std::fs::remove_file(&path).ok();
@@ -846,8 +704,8 @@ mod tests {
             7,
         );
         let meta = meta_fixture();
-        let path = tmp("metacorrupt.idx");
-        save_glass_with_metadata(&idx, &meta, &path).unwrap();
+        let path = tmp("metacorrupt_v2.idx");
+        save_v2_with_metadata(&idx, &meta, &path).unwrap();
         let full = std::fs::read(&path).unwrap();
         let tail = 100;
         let tag_ids_at = tail + 8 + 4 * 150; // count field of the flat tag array
@@ -897,7 +755,7 @@ mod tests {
     }
 
     #[test]
-    fn config_survives_roundtrip() {
+    fn config_survives_v2_roundtrip() {
         let sp = synth::spec("demo-64").unwrap();
         let ds = synth::generate_counts(sp, 300, 5, 78);
         let idx = GlassIndex::build(
@@ -905,8 +763,8 @@ mod tests {
             VariantConfig::crinn_full(),
             7,
         );
-        let path = tmp("config.idx");
-        save_glass(&idx, &path).unwrap();
+        let path = tmp("config_v2.idx");
+        save_v2(&idx, &path).unwrap();
         let loaded = load_glass(&path).unwrap();
         assert_eq!(
             loaded.config.search.early_termination,

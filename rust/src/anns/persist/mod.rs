@@ -1,0 +1,67 @@
+//! Index persistence: save/load built GLASS/HNSW indexes.
+//!
+//! A deployment builds once and serves many times — ann-benchmarks and
+//! every production store persist their graphs. The module tree:
+//!
+//! * [`writer`] — little-endian stream-writer primitives;
+//! * [`reader`] — hostile-input hardened stream-reader primitives (every
+//!   `u64` length field is overflow-checked against the file size before
+//!   any allocation);
+//! * [`compat`] — the v1/v2 sequential-stream format, kept as a
+//!   compatibility shim so snapshots written before the paged container
+//!   landed keep loading.
+//!
+//! The container carries the vector set, the layered graph, the
+//! quantized codes, the variant configuration (encoded through the same
+//! action space the RL uses, which keeps the format stable as knobs
+//! evolve), an optional id → tenant/tags metadata section (for filtered
+//! serving), and the mutation state: the tombstone bitset and the
+//! free-slot list, so a snapshot taken under live traffic restores with
+//! exactly the same live set.
+
+pub(crate) mod compat;
+pub(crate) mod reader;
+pub(crate) mod writer;
+
+use crate::anns::metadata::MetadataStore;
+use crate::util::error::Result;
+use std::path::Path;
+
+/// File magic shared by every snapshot version.
+pub(crate) const MAGIC: &[u8; 4] = b"CRNN";
+
+/// Save a built GLASS index (graph + codes + config) to `path`.
+pub fn save_glass(idx: &crate::anns::glass::GlassIndex, path: &Path) -> Result<()> {
+    compat::save_v2(idx, path)
+}
+
+/// [`save_glass`] plus the id → tenant/tags store, so a filtered-serving
+/// deployment snapshots index and metadata as one artifact.
+pub fn save_glass_with_metadata(
+    idx: &crate::anns::glass::GlassIndex,
+    metadata: &MetadataStore,
+    path: &Path,
+) -> Result<()> {
+    compat::save_v2_with_metadata(idx, metadata, path)
+}
+
+/// Load a GLASS index saved with [`save_glass`]. Codes and degree
+/// metadata are rebuilt from the payload (cheaper than storing them and
+/// immune to quantizer-version drift); the codes re-derive from the
+/// **persisted** frozen scale, never a re-fit, so an index that absorbed
+/// online inserts restores bit-identically.
+pub fn load_glass(path: &Path) -> Result<crate::anns::glass::GlassIndex> {
+    Ok(load_glass_with_metadata(path)?.0)
+}
+
+/// [`load_glass`] plus the persisted metadata store (`None` for index-only
+/// snapshots and v1 files). The metadata columns get the same
+/// hostile-input treatment as the mutation state: row count capped by the
+/// point count, name ids range-checked, tag offsets monotone and
+/// consistent with the flat tag array — reject with `Err`, never
+/// trust-and-crash later.
+pub fn load_glass_with_metadata(
+    path: &Path,
+) -> Result<(crate::anns::glass::GlassIndex, Option<MetadataStore>)> {
+    compat::load(path)
+}

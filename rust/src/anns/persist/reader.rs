@@ -1,0 +1,83 @@
+//! Hostile-input hardened stream-reader primitives shared by every
+//! snapshot reader: fixed-width scalars plus `u64`-count-prefixed arrays,
+//! with every length field overflow-checked against the file size before
+//! any allocation sized by it.
+
+use crate::util::error::{Error, Result};
+use std::io::Read;
+
+pub(crate) struct R<'a, T: Read> {
+    pub(crate) inner: &'a mut T,
+    /// Total file size in bytes — the sanity cap for every `u64` length
+    /// field. A valid field can never describe more payload than the file
+    /// holds, so anything larger is corruption (or a hostile header) and
+    /// must return `Err` instead of feeding `vec![0u8; huge]` and
+    /// OOM-aborting the process.
+    pub(crate) limit: u64,
+}
+
+impl<'a, T: Read> R<'a, T> {
+    pub(crate) fn u32(&mut self) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.inner.read_exact(&mut b)?;
+        Ok(u32::from_le_bytes(b))
+    }
+    pub(crate) fn u64(&mut self) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.inner.read_exact(&mut b)?;
+        Ok(u64::from_le_bytes(b))
+    }
+    pub(crate) fn f64(&mut self) -> Result<f64> {
+        let mut b = [0u8; 8];
+        self.inner.read_exact(&mut b)?;
+        Ok(f64::from_le_bytes(b))
+    }
+    /// Read a `u64` element count and validate it against the file size
+    /// (overflow-checked multiply by the per-element byte width) before any
+    /// allocation sized by it.
+    pub(crate) fn len(&mut self, elem_bytes: u64) -> Result<usize> {
+        let n = self.u64()?;
+        let bytes = n
+            .checked_mul(elem_bytes)
+            .ok_or_else(|| Error::msg(format!("corrupt index: length field {n} overflows")))?;
+        crate::ensure!(
+            bytes <= self.limit,
+            "corrupt index: length field {n} ({bytes} bytes) exceeds file size {}",
+            self.limit
+        );
+        Ok(n as usize)
+    }
+    pub(crate) fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.len(4)?;
+        let mut raw = vec![0u8; n * 4];
+        self.inner.read_exact(&mut raw)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+    pub(crate) fn u32s(&mut self) -> Result<Vec<u32>> {
+        let n = self.len(4)?;
+        let mut raw = vec![0u8; n * 4];
+        self.inner.read_exact(&mut raw)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+    pub(crate) fn u8s(&mut self) -> Result<Vec<u8>> {
+        let n = self.len(1)?;
+        let mut v = vec![0u8; n];
+        self.inner.read_exact(&mut v)?;
+        Ok(v)
+    }
+    pub(crate) fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.len(8)?;
+        let mut raw = vec![0u8; n * 8];
+        self.inner.read_exact(&mut raw)?;
+        Ok(raw
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+            .collect())
+    }
+}

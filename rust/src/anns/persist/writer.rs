@@ -1,0 +1,48 @@
+//! Little-endian stream-writer primitives shared by every snapshot
+//! writer: fixed-width scalars plus `u64`-count-prefixed arrays.
+
+use crate::util::error::Result;
+use std::io::Write;
+
+pub(crate) struct W<'a, T: Write>(pub(crate) &'a mut T);
+
+impl<'a, T: Write> W<'a, T> {
+    pub(crate) fn u32(&mut self, v: u32) -> Result<()> {
+        self.0.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+    pub(crate) fn u64(&mut self, v: u64) -> Result<()> {
+        self.0.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+    pub(crate) fn f64(&mut self, v: f64) -> Result<()> {
+        self.0.write_all(&v.to_le_bytes())?;
+        Ok(())
+    }
+    pub(crate) fn f32s(&mut self, v: &[f32]) -> Result<()> {
+        self.u64(v.len() as u64)?;
+        for x in v {
+            self.0.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+    pub(crate) fn u32s(&mut self, v: &[u32]) -> Result<()> {
+        self.u64(v.len() as u64)?;
+        for x in v {
+            self.0.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+    pub(crate) fn u8s(&mut self, v: &[u8]) -> Result<()> {
+        self.u64(v.len() as u64)?;
+        self.0.write_all(v)?;
+        Ok(())
+    }
+    pub(crate) fn u64s(&mut self, v: &[u64]) -> Result<()> {
+        self.u64(v.len() as u64)?;
+        for x in v {
+            self.0.write_all(&x.to_le_bytes())?;
+        }
+        Ok(())
+    }
+}

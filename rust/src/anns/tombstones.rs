@@ -188,6 +188,35 @@ impl Tombstones {
     }
 }
 
+/// Shared free-list validation for snapshot readers and log replay: every
+/// entry must be an in-range, tombstoned, unique slot. (Free slots stay
+/// marked in the bitset until an insert recycles them, so a free-list
+/// entry that is live or out of range can only come from a corrupted or
+/// hostile file.)
+pub(crate) fn validate_free_list(
+    free: &[u32],
+    deleted: &Tombstones,
+    n_points: usize,
+) -> Result<(), String> {
+    if free.len() > deleted.count() {
+        return Err(format!(
+            "free list ({}) larger than tombstone count ({})",
+            free.len(),
+            deleted.count()
+        ));
+    }
+    let mut seen = std::collections::HashSet::with_capacity(free.len());
+    for &f in free {
+        if (f as usize) >= n_points || !deleted.contains(f) {
+            return Err(format!("free slot {f} is not a tombstoned point"));
+        }
+        if !seen.insert(f) {
+            return Err(format!("duplicate free slot {f}"));
+        }
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -270,6 +299,22 @@ mod tests {
         assert_eq!(t.pending(&[]), vec![2, 9, 17, 33]);
         assert_eq!(t.pending(&[9, 33]), vec![2, 17]);
         assert_eq!(t.pending(&[2, 9, 17, 33]), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn validate_free_list_rejects_bad_entries() {
+        let mut t = Tombstones::new(50);
+        for id in [2u32, 9, 17] {
+            t.set(id);
+        }
+        assert!(validate_free_list(&[2, 9], &t, 50).is_ok());
+        assert!(validate_free_list(&[], &t, 50).is_ok());
+        // Longer than the tombstone count.
+        assert!(validate_free_list(&[2, 9, 17, 17], &t, 50).is_err());
+        // A live (non-tombstoned) slot, an out-of-range slot, a duplicate.
+        assert!(validate_free_list(&[3], &t, 50).is_err());
+        assert!(validate_free_list(&[60], &t, 50).is_err());
+        assert!(validate_free_list(&[2, 2], &t, 50).is_err());
     }
 
     #[test]
