@@ -2,13 +2,17 @@
 //!
 //! Layer 0 is a flat `[n * m0]` u32 array (CSR with fixed stride) — the
 //! search hot path walks it with sequential loads and optional prefetch.
-//! Upper layers are sparse (`HashMap` per level): only ~n/2^l nodes exist
-//! there and they're touched a handful of times per query.
+//! It lives behind a [`Segment`], so a snapshot-served graph reads its
+//! adjacency straight out of an mmapped section (zero-copy) and promotes
+//! to heap only when the first online insert mutates it. Upper layers
+//! are sparse (`HashMap` per level): only ~n/2^l nodes exist there and
+//! they're touched a handful of times per query.
 //!
 //! `degree0` stores the §6.3 "pre-computed edge metadata": per-node edge
 //! counts maintained at build time so searches avoid scanning for the
 //! `NONE` sentinel when the refinement knob enables it.
 
+use crate::anns::store::region::Segment;
 use crate::anns::VectorSet;
 use std::collections::HashMap;
 
@@ -24,8 +28,9 @@ pub struct HnswGraph {
     pub m0: usize,
     /// Level of each node (0 = base layer only).
     pub levels: Vec<u8>,
-    /// Flat layer-0 adjacency `[n * m0]`, `NONE`-padded.
-    pub layer0: Vec<u32>,
+    /// Flat layer-0 adjacency `[n * m0]`, `NONE`-padded — owned when
+    /// built in memory, a mapped section view when snapshot-served.
+    pub layer0: Segment<u32>,
     /// Pre-computed layer-0 degrees (§6.3 metadata).
     pub degree0: Vec<u16>,
     /// Upper layers: `upper[l-1][node]` = neighbor list at level `l`.
@@ -46,7 +51,7 @@ impl HnswGraph {
             m,
             m0: m * 2,
             levels: vec![0; n],
-            layer0: vec![NONE; n * m * 2],
+            layer0: vec![NONE; n * m * 2].into(),
             degree0: vec![0; n],
             upper: Vec::new(),
             entry: 0,
@@ -97,7 +102,8 @@ impl HnswGraph {
     pub fn set_neighbors0(&mut self, i: u32, neighbors: &[u32]) {
         debug_assert!(neighbors.len() <= self.m0);
         let start = i as usize * self.m0;
-        for (s, &nb) in self.layer0[start..start + self.m0]
+        let end = start + self.m0;
+        for (s, &nb) in self.layer0.to_mut()[start..end]
             .iter_mut()
             .zip(neighbors.iter().chain(std::iter::repeat(&NONE)))
         {
@@ -112,7 +118,8 @@ impl HnswGraph {
         if d >= self.m0 {
             return false;
         }
-        self.layer0[i as usize * self.m0 + d] = nb;
+        let at = i as usize * self.m0 + d;
+        self.layer0.to_mut()[at] = nb;
         self.degree0[i as usize] = (d + 1) as u16;
         true
     }
@@ -142,7 +149,8 @@ impl HnswGraph {
         let id = self.len() as u32;
         self.vectors.data.extend_from_slice(v);
         self.levels.push(0);
-        self.layer0.extend(std::iter::repeat(NONE).take(self.m0));
+        let m0 = self.m0;
+        self.layer0.to_mut().extend(std::iter::repeat(NONE).take(m0));
         self.degree0.push(0);
         id
     }
@@ -474,7 +482,7 @@ mod tests {
         assert!(g.validate().is_err());
         g.set_neighbors0(2, &[]);
         // Metadata mismatch.
-        g.layer0[0] = 1;
+        g.layer0.to_mut()[0] = 1;
         assert!(g.validate().is_err());
     }
 }

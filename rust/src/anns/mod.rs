@@ -20,6 +20,7 @@ pub mod metadata;
 pub mod nndescent;
 pub mod persist;
 pub mod scratch;
+pub mod store;
 pub mod tombstones;
 pub mod vamana;
 pub mod visited;

@@ -1,0 +1,12 @@
+//! Disk-resident storage tier: the byte-level substrate under the paged
+//! snapshot format and the mutation log.
+//!
+//! * [`region`] — [`region::MappedRegion`], a read-only byte region that
+//!   is either `mmap(2)`-backed (zero-copy serving straight out of the
+//!   page cache) or heap-backed (tests, non-unix targets, small files),
+//!   plus [`region::Segment`], the copy-on-write typed view the graph
+//!   adjacency and SQ8 code arrays live behind.
+
+pub mod region;
+
+pub use region::{MappedRegion, Segment};

@@ -1,0 +1,445 @@
+//! Read-only byte regions and typed copy-on-write views over them.
+//!
+//! [`MappedRegion`] abstracts "a contiguous run of immutable bytes":
+//! either a private read-only `mmap(2)` of a snapshot file (zero-copy
+//! serving — pages fault in on first touch and stay evictable) or a
+//! heap buffer (tests, non-unix targets, and files read the classic
+//! way). The mmap shim is declared locally over the raw C ABI — this
+//! crate takes no dependencies, `libc` included — and is compiled only
+//! on 64-bit unix; everywhere else [`MappedRegion::map_file`] silently
+//! degrades to a heap read, so callers never branch on platform.
+//!
+//! [`Segment`] is the typed view index structures store: a flat `[T]`
+//! array that is either owned (built in memory, mutated freely) or a
+//! slice straight into a mapped region (validated once at construction:
+//! bounds and alignment). Mutation promotes a mapped segment to an owned
+//! copy first ([`Segment::to_mut`]) — copy-on-write at the whole-array
+//! granularity, which is exactly the mutability the mutable indexes
+//! need (a served snapshot flips to heap on the first insert).
+//!
+//! The snapshot format stores raw little-endian payloads and serves
+//! them as native-endian slices; the identity only holds on LE hosts.
+#[cfg(target_endian = "big")]
+compile_error!("the paged snapshot format assumes a little-endian host");
+
+use crate::util::error::{Context, Result};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Plain-old-data element types a [`Segment`] may carry: fixed-width
+/// primitives with no padding, no invalid bit patterns, and no drop
+/// glue, so a byte region reinterpreted as `[T]` is always valid.
+///
+/// # Safety
+///
+/// Implementors must be inhabited for every bit pattern of their size.
+pub unsafe trait Pod: Copy + 'static {}
+unsafe impl Pod for i8 {}
+unsafe impl Pod for u8 {}
+unsafe impl Pod for u16 {}
+unsafe impl Pod for u32 {}
+unsafe impl Pod for u64 {}
+unsafe impl Pod for f32 {}
+unsafe impl Pod for f64 {}
+
+/// Reinterpret a Pod slice as its raw little-endian bytes (the host is
+/// guaranteed LE by the `compile_error!` above) — how section writers
+/// serialize flat arrays without a per-element loop.
+pub fn as_bytes<T: Pod>(v: &[T]) -> &[u8] {
+    // Safety: T is Pod (no padding, any bit pattern valid), the length
+    // math cannot overflow for an existing allocation.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, std::mem::size_of_val(v)) }
+}
+
+#[cfg(all(unix, target_pointer_width = "64"))]
+mod ffi {
+    use std::ffi::c_void;
+
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+enum Backing {
+    /// Heap bytes in a `u64` buffer, so the base pointer is 8-byte
+    /// aligned for every Pod type even without mmap's page alignment.
+    Heap(#[allow(dead_code)] Vec<u64>),
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    Mmap {
+        base: *mut std::ffi::c_void,
+        map_len: usize,
+    },
+}
+
+/// A contiguous, immutable, 8-byte-aligned byte region — mmap-backed or
+/// heap-backed (see the module docs).
+pub struct MappedRegion {
+    ptr: *const u8,
+    len: usize,
+    backing: Backing,
+}
+
+// Safety: the region is immutable after construction (PROT_READ mapping
+// or a never-mutated heap buffer), so shared access across threads is
+// sound; the raw pointers are what inhibit the auto impls.
+unsafe impl Send for MappedRegion {}
+unsafe impl Sync for MappedRegion {}
+
+impl MappedRegion {
+    /// Wrap owned bytes in a heap-backed region (copies once into an
+    /// 8-byte-aligned buffer).
+    pub fn from_vec(bytes: Vec<u8>) -> MappedRegion {
+        let mut words = vec![0u64; bytes.len().div_ceil(8)];
+        // Safety: the u64 buffer holds at least bytes.len() bytes.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                bytes.as_ptr(),
+                words.as_mut_ptr() as *mut u8,
+                bytes.len(),
+            );
+        }
+        MappedRegion {
+            ptr: words.as_ptr() as *const u8,
+            len: bytes.len(),
+            backing: Backing::Heap(words),
+        }
+    }
+
+    /// Read `path` entirely into a heap-backed region.
+    pub fn read_file(path: &Path) -> Result<MappedRegion> {
+        let bytes = std::fs::read(path).with_context(|| format!("read {path:?}"))?;
+        Ok(MappedRegion::from_vec(bytes))
+    }
+
+    /// Map `path` read-only. Zero-copy on 64-bit unix; on other targets
+    /// (and for empty files, which `mmap` rejects) this degrades to
+    /// [`MappedRegion::read_file`] so callers never branch on platform.
+    #[cfg(all(unix, target_pointer_width = "64"))]
+    pub fn map_file(path: &Path) -> Result<MappedRegion> {
+        use std::os::unix::io::AsRawFd;
+        let f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+        let len = f
+            .metadata()
+            .with_context(|| format!("stat {path:?}"))?
+            .len() as usize;
+        if len == 0 {
+            return Ok(MappedRegion::from_vec(Vec::new()));
+        }
+        // Safety: a fresh private read-only mapping of a file we hold
+        // open; the fd may close after mmap returns (POSIX keeps the
+        // mapping alive).
+        let base = unsafe {
+            ffi::mmap(
+                std::ptr::null_mut(),
+                len,
+                ffi::PROT_READ,
+                ffi::MAP_PRIVATE,
+                f.as_raw_fd(),
+                0,
+            )
+        };
+        crate::ensure!(
+            base as isize != -1,
+            "mmap of {path:?} ({len} bytes) failed"
+        );
+        Ok(MappedRegion {
+            ptr: base as *const u8,
+            len,
+            backing: Backing::Mmap { base, map_len: len },
+        })
+    }
+
+    /// Heap fallback for targets without the mmap shim.
+    #[cfg(not(all(unix, target_pointer_width = "64")))]
+    pub fn map_file(path: &Path) -> Result<MappedRegion> {
+        MappedRegion::read_file(path)
+    }
+
+    /// Total bytes in the region.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// True when the region is an actual file mapping (not heap bytes).
+    pub fn is_mmap(&self) -> bool {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        {
+            matches!(self.backing, Backing::Mmap { .. })
+        }
+        #[cfg(not(all(unix, target_pointer_width = "64")))]
+        {
+            false
+        }
+    }
+
+    /// The whole region as bytes.
+    pub fn as_slice(&self) -> &[u8] {
+        // Safety: ptr/len describe the live backing; for len == 0 the
+        // pointer is dangling-but-aligned (empty Vec), which zero-length
+        // slices permit.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    /// A typed view of `len` elements of `T` starting at byte `offset`:
+    /// overflow-checked bounds, element alignment verified against the
+    /// actual address. This is the one gate between untrusted file bytes
+    /// and a `&[T]` — every failure is a corrupt/hostile file, never UB.
+    pub fn view<T: Pod>(&self, offset: usize, len: usize) -> Result<&[T]> {
+        if len == 0 {
+            return Ok(&[]);
+        }
+        let elem = std::mem::size_of::<T>();
+        let bytes = len
+            .checked_mul(elem)
+            .ok_or_else(|| crate::util::error::Error::msg("section view length overflows"))?;
+        let end = offset
+            .checked_add(bytes)
+            .ok_or_else(|| crate::util::error::Error::msg("section view offset overflows"))?;
+        crate::ensure!(
+            end <= self.len,
+            "section view [{offset}, {end}) exceeds region size {}",
+            self.len
+        );
+        let addr = self.ptr as usize + offset;
+        crate::ensure!(
+            addr % std::mem::align_of::<T>() == 0,
+            "section view at offset {offset} is misaligned for {}-byte elements",
+            std::mem::align_of::<T>()
+        );
+        // Safety: bounds and alignment checked above; T is Pod so any
+        // bit pattern is a valid value; the region is immutable.
+        Ok(unsafe { std::slice::from_raw_parts(addr as *const T, len) })
+    }
+}
+
+impl Drop for MappedRegion {
+    fn drop(&mut self) {
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        if let Backing::Mmap { base, map_len } = &self.backing {
+            // Safety: unmapping the exact mapping we created.
+            unsafe {
+                ffi::munmap(*base, *map_len);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for MappedRegion {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MappedRegion")
+            .field("len", &self.len)
+            .field("mmap", &self.is_mmap())
+            .finish()
+    }
+}
+
+enum Repr<T: Pod> {
+    Owned(Vec<T>),
+    Mapped {
+        region: Arc<MappedRegion>,
+        offset: usize,
+        len: usize,
+    },
+}
+
+/// A flat `[T]` array that is either owned or a validated slice into a
+/// shared [`MappedRegion`] — the copy-on-write storage behind the graph
+/// adjacency and the SQ8 code matrix. Reads go through `Deref<[T]>`
+/// either way; the first mutation of a mapped segment promotes it to an
+/// owned copy ([`Segment::to_mut`]).
+pub struct Segment<T: Pod>(Repr<T>);
+
+impl<T: Pod> Segment<T> {
+    /// A segment viewing `len` elements at byte `offset` of `region`.
+    /// Bounds and alignment are validated here, once — after this,
+    /// every read is infallible.
+    pub fn from_region(region: Arc<MappedRegion>, offset: usize, len: usize) -> Result<Segment<T>> {
+        region.view::<T>(offset, len)?;
+        Ok(Segment(Repr::Mapped { region, offset, len }))
+    }
+
+    /// The elements as a slice (also available through `Deref`).
+    #[inline]
+    pub fn as_slice(&self) -> &[T] {
+        match &self.0 {
+            Repr::Owned(v) => v,
+            Repr::Mapped { region, offset, len } => region
+                .view::<T>(*offset, *len)
+                .expect("segment validated at construction"),
+        }
+    }
+
+    /// Mutable access, promoting a mapped segment to an owned copy
+    /// first (copy-on-write).
+    pub fn to_mut(&mut self) -> &mut Vec<T> {
+        if let Repr::Mapped { .. } = self.0 {
+            self.0 = Repr::Owned(self.as_slice().to_vec());
+        }
+        match &mut self.0 {
+            Repr::Owned(v) => v,
+            Repr::Mapped { .. } => unreachable!("promoted above"),
+        }
+    }
+
+    /// True while the segment still reads straight out of a mapped
+    /// region (i.e. no mutation has promoted it to heap).
+    pub fn is_mapped(&self) -> bool {
+        matches!(self.0, Repr::Mapped { .. })
+    }
+}
+
+impl<T: Pod> From<Vec<T>> for Segment<T> {
+    fn from(v: Vec<T>) -> Segment<T> {
+        Segment(Repr::Owned(v))
+    }
+}
+
+impl<T: Pod> std::ops::Deref for Segment<T> {
+    type Target = [T];
+    #[inline]
+    fn deref(&self) -> &[T] {
+        self.as_slice()
+    }
+}
+
+impl<T: Pod> Clone for Segment<T> {
+    fn clone(&self) -> Segment<T> {
+        match &self.0 {
+            Repr::Owned(v) => Segment(Repr::Owned(v.clone())),
+            Repr::Mapped { region, offset, len } => Segment(Repr::Mapped {
+                region: Arc::clone(region),
+                offset: *offset,
+                len: *len,
+            }),
+        }
+    }
+}
+
+impl<T: Pod + PartialEq> PartialEq for Segment<T> {
+    fn eq(&self, other: &Segment<T>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl<T: Pod + std::fmt::Debug> std::fmt::Debug for Segment<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.as_slice().fmt(f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("crinn_{}_{}", std::process::id(), name))
+    }
+
+    #[test]
+    fn region_heap_and_mmap_bytes_identical() {
+        let bytes: Vec<u8> = (0..=255u8).cycle().take(4096 + 13).collect();
+        let path = tmp("region_bytes.bin");
+        std::fs::write(&path, &bytes).unwrap();
+        let heap = MappedRegion::read_file(&path).unwrap();
+        let mapped = MappedRegion::map_file(&path).unwrap();
+        assert_eq!(heap.as_slice(), &bytes[..]);
+        assert_eq!(mapped.as_slice(), &bytes[..]);
+        assert_eq!(heap.len(), mapped.len());
+        #[cfg(all(unix, target_pointer_width = "64"))]
+        assert!(mapped.is_mmap());
+        assert!(!heap.is_mmap());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn region_empty_file_and_missing_file() {
+        let path = tmp("region_empty.bin");
+        std::fs::write(&path, b"").unwrap();
+        let r = MappedRegion::map_file(&path).unwrap();
+        assert!(r.is_empty());
+        assert_eq!(r.as_slice(), &[] as &[u8]);
+        assert!(r.view::<u32>(0, 0).unwrap().is_empty());
+        std::fs::remove_file(&path).ok();
+        assert!(MappedRegion::map_file(&path).is_err());
+        assert!(MappedRegion::read_file(&path).is_err());
+    }
+
+    #[test]
+    fn view_checks_bounds_and_alignment() {
+        let mut bytes = vec![0u8; 64];
+        for (i, b) in bytes.iter_mut().enumerate() {
+            *b = i as u8;
+        }
+        let r = MappedRegion::from_vec(bytes);
+        // A valid aligned u32 view reads LE words.
+        let v: &[u32] = r.view(4, 2).unwrap();
+        assert_eq!(v, &[u32::from_le_bytes([4, 5, 6, 7]), u32::from_le_bytes([8, 9, 10, 11])]);
+        // Out of bounds: length, offset, and overflowing combinations.
+        assert!(r.view::<u32>(0, 17).is_err());
+        assert!(r.view::<u8>(65, 1).is_err());
+        assert!(r.view::<u64>(usize::MAX - 2, 1).is_err());
+        assert!(r.view::<u64>(0, usize::MAX / 4).is_err());
+        // Misaligned offset for 4-byte elements (heap base is 8-aligned).
+        assert!(r.view::<u32>(2, 1).is_err());
+        // Zero-length views are fine anywhere in range.
+        assert!(r.view::<u64>(64, 0).is_ok());
+    }
+
+    #[test]
+    fn segment_cow_promotes_on_mutation() {
+        let bytes: Vec<u8> = (0u32..32).flat_map(|x| x.to_le_bytes()).collect();
+        let region = Arc::new(MappedRegion::from_vec(bytes));
+        let mut seg: Segment<u32> = Segment::from_region(Arc::clone(&region), 0, 32).unwrap();
+        assert!(seg.is_mapped());
+        assert_eq!(seg[5], 5);
+        assert_eq!(seg.len(), 32);
+        // Clones share the region; mutation promotes only the mutated one.
+        let frozen = seg.clone();
+        seg.to_mut()[5] = 99;
+        assert!(!seg.is_mapped());
+        assert!(frozen.is_mapped());
+        assert_eq!(seg[5], 99);
+        assert_eq!(frozen[5], 5);
+        assert_ne!(seg, frozen);
+        // Owned round-trip.
+        let owned: Segment<u32> = vec![1, 2, 3].into();
+        assert!(!owned.is_mapped());
+        assert_eq!(&owned[..], &[1, 2, 3]);
+    }
+
+    #[test]
+    fn segment_from_region_rejects_bad_views() {
+        let region = Arc::new(MappedRegion::from_vec(vec![0u8; 40]));
+        assert!(Segment::<u32>::from_region(Arc::clone(&region), 0, 10).is_ok());
+        assert!(Segment::<u32>::from_region(Arc::clone(&region), 0, 11).is_err());
+        assert!(Segment::<u32>::from_region(Arc::clone(&region), 2, 1).is_err());
+        assert!(Segment::<u64>::from_region(region, 48, 1).is_err());
+    }
+
+    #[test]
+    fn as_bytes_roundtrip() {
+        let v: Vec<u32> = vec![1, 0x01020304, u32::MAX];
+        let b = as_bytes(&v);
+        assert_eq!(b.len(), 12);
+        assert_eq!(&b[4..8], &[4, 3, 2, 1]);
+        let f: Vec<f32> = vec![1.5, -2.25];
+        assert_eq!(as_bytes(&f).len(), 8);
+        assert_eq!(&as_bytes(&f)[0..4], &1.5f32.to_le_bytes());
+        assert!(as_bytes::<u64>(&[]).is_empty());
+    }
+}

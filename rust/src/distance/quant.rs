@@ -16,14 +16,18 @@
 //! ([`QuantizedStore::distance_batch`]) produce **exactly** the same
 //! numbers — quantized search results never depend on which path ran.
 
+use crate::anns::store::region::Segment;
 use crate::distance::{simd, Metric};
 
 /// A quantized vector store: row-major `[n, dim]` i8 codes + one scale.
+/// The codes live behind a [`Segment`], so a snapshot-served store reads
+/// them straight out of an mmapped section (zero-copy) and promotes to
+/// heap only when the first online insert mutates a row.
 #[derive(Clone, Debug)]
 pub struct QuantizedStore {
     pub dim: usize,
     pub scale: f32,
-    codes: Vec<i8>,
+    codes: Segment<i8>,
 }
 
 impl QuantizedStore {
@@ -41,11 +45,32 @@ impl QuantizedStore {
     pub fn with_scale(data: &[f32], dim: usize, scale: f32) -> QuantizedStore {
         assert!(dim > 0 && data.len() % dim == 0);
         let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
-        let codes = data
+        let codes: Vec<i8> = data
             .iter()
             .map(|&x| (x * inv).round().clamp(-127.0, 127.0) as i8)
             .collect();
-        QuantizedStore { dim, scale, codes }
+        QuantizedStore { dim, scale, codes: codes.into() }
+    }
+
+    /// Assemble a store from already-encoded codes — the snapshot-serving
+    /// path: the codes segment views an mmapped section directly, so no
+    /// re-quantization (or allocation) happens at load. The caller
+    /// guarantees the codes were produced under `scale` by the formula
+    /// [`QuantizedStore::with_scale`] uses.
+    pub fn from_parts(dim: usize, scale: f32, codes: Segment<i8>) -> Result<QuantizedStore, String> {
+        if dim == 0 {
+            return Err("quantized store dimension is 0".to_string());
+        }
+        if codes.len() % dim != 0 {
+            return Err(format!(
+                "quantized codes length {} is not a multiple of dim {dim}",
+                codes.len()
+            ));
+        }
+        if !(scale.is_finite() && scale > 0.0) {
+            return Err(format!("quantizer scale {scale} is not a positive finite value"));
+        }
+        Ok(QuantizedStore { dim, scale, codes })
     }
 
     pub fn len(&self) -> usize {
@@ -146,6 +171,7 @@ impl QuantizedStore {
         assert_eq!(v.len(), self.dim, "append dimension mismatch");
         let inv = if self.scale > 0.0 { 1.0 / self.scale } else { 0.0 };
         self.codes
+            .to_mut()
             .extend(v.iter().map(|&x| (x * inv).round().clamp(-127.0, 127.0) as i8));
     }
 
@@ -153,10 +179,8 @@ impl QuantizedStore {
     pub fn reencode(&mut self, i: usize, v: &[f32]) {
         assert_eq!(v.len(), self.dim, "reencode dimension mismatch");
         let inv = if self.scale > 0.0 { 1.0 / self.scale } else { 0.0 };
-        for (c, &x) in self.codes[i * self.dim..(i + 1) * self.dim]
-            .iter_mut()
-            .zip(v.iter())
-        {
+        let (start, end) = (i * self.dim, (i + 1) * self.dim);
+        for (c, &x) in self.codes.to_mut()[start..end].iter_mut().zip(v.iter()) {
             *c = (x * inv).round().clamp(-127.0, 127.0) as i8;
         }
     }
