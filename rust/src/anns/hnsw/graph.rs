@@ -60,6 +60,60 @@ impl HnswGraph {
         }
     }
 
+    /// Reassemble a graph from persisted storage parts (the paged-snapshot
+    /// loader) — `layer0` may be a zero-copy view into a mapped section.
+    /// Cross-field shape is validated here; edge-level invariants (degree
+    /// metadata, neighbor ids, entry level) are the caller's
+    /// [`HnswGraph::validate`] pass. Upper layers start empty; the caller
+    /// fills them via [`HnswGraph::set_neighbors_upper`].
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn from_storage(
+        vectors: VectorSet,
+        m: usize,
+        levels: Vec<u8>,
+        layer0: Segment<u32>,
+        degree0: Vec<u16>,
+        entry: u32,
+        max_level: u8,
+        entry_points: Vec<u32>,
+    ) -> Result<HnswGraph, String> {
+        let n = vectors.len();
+        if m == 0 {
+            return Err("graph degree m is 0".to_string());
+        }
+        if levels.len() != n {
+            return Err(format!("levels column has {} rows, expected {n}", levels.len()));
+        }
+        if degree0.len() != n {
+            return Err(format!("degree column has {} rows, expected {n}", degree0.len()));
+        }
+        if layer0.len() != n * m * 2 {
+            return Err(format!(
+                "layer0 adjacency has {} slots, expected {}",
+                layer0.len(),
+                n * m * 2
+            ));
+        }
+        if n > 0 && entry as usize >= n {
+            return Err(format!("entry point {entry} out of range for {n} points"));
+        }
+        if n > 0 && entry_points.is_empty() {
+            return Err("entry point list is empty".to_string());
+        }
+        Ok(HnswGraph {
+            vectors,
+            m,
+            m0: m * 2,
+            levels,
+            layer0,
+            degree0,
+            upper: Vec::new(),
+            entry,
+            max_level,
+            entry_points,
+        })
+    }
+
     #[inline]
     pub fn len(&self) -> usize {
         self.vectors.len()

@@ -3,10 +3,15 @@
 //! A deployment builds once and serves many times — ann-benchmarks and
 //! every production store persist their graphs. The module tree:
 //!
-//! * [`writer`] — little-endian stream-writer primitives;
+//! * [`sections`] — the v3 paged section container: a checksummed
+//!   section directory with 64-byte-aligned payloads, so every logical
+//!   piece of the index (vectors, SQ8 codes, graph adjacency, metadata,
+//!   mutation state) is independently addressable;
+//! * [`writer`] — little-endian stream-writer primitives plus the v3
+//!   save;
 //! * [`reader`] — hostile-input hardened stream-reader primitives (every
 //!   `u64` length field is overflow-checked against the file size before
-//!   any allocation);
+//!   any allocation) plus the v3 load, heap- or mmap-served;
 //! * [`compat`] — the v1/v2 sequential-stream format, kept as a
 //!   compatibility shim so snapshots written before the paged container
 //!   landed keep loading.
@@ -18,21 +23,30 @@
 //! serving), and the mutation state: the tombstone bitset and the
 //! free-slot list, so a snapshot taken under live traffic restores with
 //! exactly the same live set.
+//!
+//! Saves write v3. Loads sniff the version and dispatch; the mmap entry
+//! points ([`load_glass_mmap`]) serve the big read-only sections (codes,
+//! layer-0 adjacency) zero-copy out of the page cache and are bitwise
+//! result-identical to the heap load.
 
 pub(crate) mod compat;
 pub(crate) mod reader;
+pub(crate) mod sections;
 pub(crate) mod writer;
 
 use crate::anns::metadata::MetadataStore;
-use crate::util::error::Result;
+use crate::bail;
+use crate::util::error::{Context, Error, Result};
+use std::io::Read;
 use std::path::Path;
 
 /// File magic shared by every snapshot version.
 pub(crate) const MAGIC: &[u8; 4] = b"CRNN";
 
-/// Save a built GLASS index (graph + codes + config) to `path`.
+/// Save a built GLASS index (graph + codes + config) to `path` in the
+/// v3 paged container format.
 pub fn save_glass(idx: &crate::anns::glass::GlassIndex, path: &Path) -> Result<()> {
-    compat::save_v2(idx, path)
+    writer::save_v3(idx, None, path)
 }
 
 /// [`save_glass`] plus the id → tenant/tags store, so a filtered-serving
@@ -42,20 +56,20 @@ pub fn save_glass_with_metadata(
     metadata: &MetadataStore,
     path: &Path,
 ) -> Result<()> {
-    compat::save_v2_with_metadata(idx, metadata, path)
+    writer::save_v3(idx, Some(metadata), path)
 }
 
-/// Load a GLASS index saved with [`save_glass`]. Codes and degree
-/// metadata are rebuilt from the payload (cheaper than storing them and
-/// immune to quantizer-version drift); the codes re-derive from the
-/// **persisted** frozen scale, never a re-fit, so an index that absorbed
-/// online inserts restores bit-identically.
+/// Load a GLASS index saved with [`save_glass`] (any version: v3 paged
+/// containers load their persisted code rows directly; v1/v2 stream
+/// files re-derive codes from the **persisted** frozen scale, never a
+/// re-fit, so an index that absorbed online inserts restores
+/// bit-identically either way).
 pub fn load_glass(path: &Path) -> Result<crate::anns::glass::GlassIndex> {
     Ok(load_glass_with_metadata(path)?.0)
 }
 
-/// [`load_glass`] plus the persisted metadata store (`None` for index-only
-/// snapshots and v1 files). The metadata columns get the same
+/// [`load_glass`] plus the persisted metadata store (`None` for
+/// index-only snapshots and v1 files). The metadata columns get the same
 /// hostile-input treatment as the mutation state: row count capped by the
 /// point count, name ids range-checked, tag offsets monotone and
 /// consistent with the flat tag array — reject with `Err`, never
@@ -63,5 +77,41 @@ pub fn load_glass(path: &Path) -> Result<crate::anns::glass::GlassIndex> {
 pub fn load_glass_with_metadata(
     path: &Path,
 ) -> Result<(crate::anns::glass::GlassIndex, Option<MetadataStore>)> {
-    compat::load(path)
+    match sniff_version(path)? {
+        1 | 2 => compat::load(path),
+        sections::VERSION_V3 => reader::load_v3(path, false),
+        v => bail!("unsupported index version {v}"),
+    }
+}
+
+/// [`load_glass`], serving the large read-only sections (SQ8 codes,
+/// layer-0 adjacency) zero-copy out of a private read-only `mmap(2)` of
+/// the snapshot — cold starts skip copying them onto the heap and the
+/// pages stay evictable. Search results are bitwise identical to the
+/// heap load; the first online insert promotes the touched section to
+/// heap (copy-on-write). v1/v2 stream files predate the mappable layout
+/// and degrade to the classic heap load.
+pub fn load_glass_mmap(path: &Path) -> Result<crate::anns::glass::GlassIndex> {
+    Ok(load_glass_mmap_with_metadata(path)?.0)
+}
+
+/// [`load_glass_mmap`] plus the persisted metadata store.
+pub fn load_glass_mmap_with_metadata(
+    path: &Path,
+) -> Result<(crate::anns::glass::GlassIndex, Option<MetadataStore>)> {
+    match sniff_version(path)? {
+        1 | 2 => compat::load(path),
+        sections::VERSION_V3 => reader::load_v3(path, true),
+        v => bail!("unsupported index version {v}"),
+    }
+}
+
+/// Read magic + version without touching the rest of the file.
+fn sniff_version(path: &Path) -> Result<u32> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("open {path:?}"))?;
+    let mut head = [0u8; 8];
+    f.read_exact(&mut head)
+        .map_err(|_| Error::msg("not a CRINN index file".to_string()))?;
+    crate::ensure!(&head[0..4] == MAGIC, "not a CRINN index file");
+    Ok(u32::from_le_bytes([head[4], head[5], head[6], head[7]]))
 }

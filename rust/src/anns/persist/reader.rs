@@ -1,10 +1,30 @@
 //! Hostile-input hardened stream-reader primitives shared by every
-//! snapshot reader: fixed-width scalars plus `u64`-count-prefixed arrays,
+//! snapshot reader (fixed-width scalars plus `u64`-count-prefixed arrays,
 //! with every length field overflow-checked against the file size before
-//! any allocation sized by it.
+//! any allocation sized by it), and the v3 paged-container load.
+//!
+//! The v3 loader is "map (or read) the file, validate the directory,
+//! point slices at it": the directory and every section checksum are
+//! verified up front — on BOTH the heap and mmap paths — then the
+//! zero-copy sections (SQ8 codes, layer-0 adjacency) become
+//! [`Segment`] views straight into the region while the small or
+//! structured sections parse into owned values through the same
+//! hardened primitives the v1/v2 shim uses.
 
+use super::sections::{self, Directory};
+use crate::anns::hnsw::graph::HnswGraph;
+use crate::anns::metadata::MetadataStore;
+use crate::anns::store::region::{MappedRegion, Segment};
+use crate::anns::tombstones::Tombstones;
+use crate::anns::VectorSet;
+use crate::bail;
+use crate::distance::quant::QuantizedStore;
+use crate::distance::Metric;
 use crate::util::error::{Error, Result};
+use crate::variants::{decode_action, Module, VariantConfig};
 use std::io::Read;
+use std::path::Path;
+use std::sync::Arc;
 
 pub(crate) struct R<'a, T: Read> {
     pub(crate) inner: &'a mut T,
@@ -79,5 +99,538 @@ impl<'a, T: Read> R<'a, T> {
             .chunks_exact(8)
             .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
             .collect())
+    }
+}
+
+/// Load a v3 paged snapshot. `mmap = true` serves the zero-copy sections
+/// (codes, layer-0 adjacency) straight out of a private read-only file
+/// mapping; `mmap = false` reads the file into an aligned heap region
+/// and views the same offsets there — the two paths interpret identical
+/// bytes through identical code, so their search results are bitwise
+/// equal.
+pub(crate) fn load_v3(
+    path: &Path,
+    mmap: bool,
+) -> Result<(crate::anns::glass::GlassIndex, Option<MetadataStore>)> {
+    let region = Arc::new(if mmap {
+        MappedRegion::map_file(path)?
+    } else {
+        MappedRegion::read_file(path)?
+    });
+    let dir = Directory::parse(&region)?;
+    // Integrity first, on both paths: after this, every section byte the
+    // loader (or a served search) touches has a verified checksum.
+    dir.verify_checksums(&region)?;
+
+    // SEC_INDEX: the fixed header the other sections are sized against.
+    let (hoff, hlen) = dir.require(sections::SEC_INDEX)?;
+    crate::ensure!(
+        hlen == 40,
+        "corrupt index: index header section is {hlen} bytes, expected 40"
+    );
+    let mut s = &region.as_slice()[hoff..hoff + hlen];
+    let mut r = R { inner: &mut s, limit: hlen as u64 };
+    let dim = r.u32()? as usize;
+    let metric = match r.u32()? {
+        0 => Metric::L2,
+        1 => Metric::Angular,
+        2 => Metric::Ip,
+        m => bail!("bad metric tag {m}"),
+    };
+    let n = r.u64()?;
+    let m = r.u32()? as usize;
+    let entry = r.u32()?;
+    let max_level = r.u32()?;
+    let scale = f32::from_bits(r.u32()?);
+    let declared_dead = r.u64()?;
+    crate::ensure!(dim >= 1, "corrupt index: dimension is 0");
+    crate::ensure!(m >= 1, "corrupt index: graph degree m is 0");
+    crate::ensure!(
+        max_level <= u8::MAX as u32,
+        "corrupt index: max level {max_level} exceeds the level cap"
+    );
+    crate::ensure!(
+        scale.is_finite() && scale > 0.0,
+        "corrupt index: quantizer scale {scale} is not a positive finite value"
+    );
+
+    // Every raw-array section must be exactly the size the header
+    // implies — u64 arithmetic so hostile counts can't overflow.
+    let sized = |id: u32, elem_bytes: u64, elems: u64, what: &str| -> Result<(usize, usize)> {
+        let (off, len) = dir.require(id)?;
+        let want = elems
+            .checked_mul(elem_bytes)
+            .ok_or_else(|| Error::msg(format!("corrupt index: {what} size overflows")))?;
+        crate::ensure!(
+            len as u64 == want,
+            "corrupt index: {what} section is {len} bytes, expected {want}"
+        );
+        Ok((off, len))
+    };
+    let per_point = |k: u64| n.checked_mul(k);
+    let nd = per_point(dim as u64)
+        .ok_or_else(|| Error::msg("corrupt index: point count overflows".to_string()))?;
+    let nm0 = per_point(m as u64 * 2)
+        .ok_or_else(|| Error::msg("corrupt index: adjacency size overflows".to_string()))?;
+
+    let (voff, _) = sized(sections::SEC_VECTORS, 4, nd, "vectors")?;
+    let (coff, _) = sized(sections::SEC_CODES, 1, nd, "codes")?;
+    let (loff, _) = sized(sections::SEC_LAYER0, 4, nm0, "layer0 adjacency")?;
+    let (lvoff, _) = sized(sections::SEC_LEVELS, 1, n, "levels")?;
+    let (doff, _) = sized(sections::SEC_DEGREE0, 2, n, "degree metadata")?;
+    let (eoff, elen) = dir.require(sections::SEC_ENTRY_POINTS)?;
+    crate::ensure!(
+        elen % 4 == 0,
+        "corrupt index: entry-point section is {elen} bytes, not a u32 array"
+    );
+
+    // n (and n*dim, n*m0) fit usize: the sections above exist in a real
+    // file, so each product is bounded by the file size.
+    let n = n as usize;
+    let data = region.view::<f32>(voff, n * dim)?.to_vec();
+    let vs = VectorSet::new(data, dim, metric);
+    let levels = region.view::<u8>(lvoff, n)?.to_vec();
+    let degree0 = region.view::<u16>(doff, n)?.to_vec();
+    let entry_points = region.view::<u32>(eoff, elen / 4)?.to_vec();
+    // The zero-copy sections: views into the shared region, owned by the
+    // index only through the refcount. Mutation promotes to heap (CoW).
+    let layer0: Segment<u32> = Segment::from_region(Arc::clone(&region), loff, n * m * 2)?;
+    let codes: Segment<i8> = Segment::from_region(Arc::clone(&region), coff, n * dim)?;
+
+    let mut graph = HnswGraph::from_storage(
+        vs,
+        m,
+        levels,
+        layer0,
+        degree0,
+        entry,
+        max_level as u8,
+        entry_points,
+    )
+    .map_err(|e| Error::msg(format!("corrupt index: {e}")))?;
+
+    // SEC_UPPER: sparse upper layers.
+    let (uoff, ulen) = dir.require(sections::SEC_UPPER)?;
+    let mut s = &region.as_slice()[uoff..uoff + ulen];
+    {
+        let mut r = R { inner: &mut s, limit: ulen as u64 };
+        let n_layers = r.u32()? as usize;
+        crate::ensure!(
+            n_layers <= u8::MAX as usize,
+            "corrupt index: {n_layers} upper layers exceed the level cap"
+        );
+        for l in 0..n_layers {
+            // Each upper-layer entry is at least 12 bytes (u32 key + u64 len).
+            let count = r.len(12)?;
+            for _ in 0..count {
+                let k = r.u32()?;
+                crate::ensure!(
+                    (k as usize) < n,
+                    "corrupt index: upper-layer node {k} out of range"
+                );
+                let nbs = r.u32s()?;
+                graph.set_neighbors_upper((l + 1) as u8, k, nbs);
+            }
+        }
+    }
+    crate::ensure!(s.is_empty(), "corrupt index: trailing bytes in upper-layer section");
+
+    // SEC_CONFIG: via the stable action encoding.
+    let (cfoff, cflen) = dir.require(sections::SEC_CONFIG)?;
+    let mut s = &region.as_slice()[cfoff..cfoff + cflen];
+    let mut config = VariantConfig::glass_baseline();
+    {
+        let mut r = R { inner: &mut s, limit: cflen as u64 };
+        for module in Module::ALL {
+            let len = r.len(8)?;
+            let mut a = Vec::with_capacity(len);
+            for _ in 0..len {
+                a.push(r.f64()?);
+            }
+            config = decode_action(&config, module, &a);
+        }
+    }
+    crate::ensure!(s.is_empty(), "corrupt index: trailing bytes in config section");
+
+    // SEC_METADATA (optional): same column validation as the v2 shim.
+    let metadata = match dir.get(sections::SEC_METADATA) {
+        Some((moff, mlen)) => Some(parse_metadata(&region.as_slice()[moff..moff + mlen], n)?),
+        None => None,
+    };
+
+    // SEC_MUTATION: tombstones + free list + RNG state, with the same
+    // rejection rules as the v2 tail (phantom slots, popcount mismatch,
+    // live/duplicate/out-of-range free entries).
+    let (moff, mlen) = dir.require(sections::SEC_MUTATION)?;
+    let mut s = &region.as_slice()[moff..moff + mlen];
+    let (deleted, free, rng_state);
+    {
+        let mut r = R { inner: &mut s, limit: mlen as u64 };
+        let words = r.u64s()?;
+        deleted = Tombstones::from_words(words, n)
+            .map_err(|e| Error::msg(format!("corrupt index: {e}")))?;
+        crate::ensure!(
+            deleted.count() as u64 == declared_dead,
+            "corrupt index: tombstone bitset popcount {} != declared count {declared_dead}",
+            deleted.count()
+        );
+        free = r.u32s()?;
+        crate::anns::tombstones::validate_free_list(&free, &deleted, n)
+            .map_err(|e| Error::msg(format!("corrupt index: {e}")))?;
+        let mut state = [0u64; 4];
+        for x in state.iter_mut() {
+            *x = r.u64()?;
+        }
+        rng_state = state;
+    }
+    crate::ensure!(s.is_empty(), "corrupt index: trailing bytes in mutation section");
+
+    graph
+        .validate()
+        .map_err(|e| Error::msg(format!("loaded graph invalid: {e}")))?;
+    let quant = QuantizedStore::from_parts(dim, scale, codes)
+        .map_err(|e| Error::msg(format!("corrupt index: {e}")))?;
+    let mut idx = crate::anns::glass::GlassIndex::from_parts(graph, quant, config);
+    idx.restore_mutation_state(deleted, free, rng_state);
+    Ok((idx, metadata))
+}
+
+/// Parse the optional metadata section into a [`MetadataStore`], with
+/// the same hostile-input rules as the v2 stream section: row count
+/// capped by the point count, tenant/offset/tag columns cross-checked,
+/// name ids range-checked by `from_columns`.
+fn parse_metadata(bytes: &[u8], n_points: usize) -> Result<MetadataStore> {
+    let mut s = bytes;
+    let store;
+    {
+        let mut r = R { inner: &mut s, limit: bytes.len() as u64 };
+        let n_meta = r.u64()?;
+        crate::ensure!(
+            n_meta <= n_points as u64,
+            "corrupt index: metadata rows {n_meta} exceed point count {n_points}"
+        );
+        // Each name costs at least its 8-byte length prefix.
+        let n_names = r.len(8)?;
+        let mut names = Vec::with_capacity(n_names);
+        for _ in 0..n_names {
+            let raw = r.u8s()?;
+            names.push(String::from_utf8(raw).map_err(|_| {
+                Error::msg("corrupt index: metadata name is not UTF-8".to_string())
+            })?);
+        }
+        let tenants = r.u32s()?;
+        crate::ensure!(
+            tenants.len() as u64 == n_meta,
+            "corrupt index: metadata tenant column has {} rows, expected {n_meta}",
+            tenants.len()
+        );
+        let offsets = r.u64s()?;
+        crate::ensure!(
+            offsets.len() as u64 == n_meta + 1,
+            "corrupt index: metadata tag offsets has {} entries, expected {}",
+            offsets.len(),
+            n_meta + 1
+        );
+        crate::ensure!(
+            offsets.first() == Some(&0),
+            "corrupt index: metadata tag offsets must start at 0"
+        );
+        crate::ensure!(
+            offsets.windows(2).all(|w| w[0] <= w[1]),
+            "corrupt index: metadata tag offsets are not monotone"
+        );
+        let tag_ids = r.u32s()?;
+        crate::ensure!(
+            *offsets.last().unwrap() == tag_ids.len() as u64,
+            "corrupt index: metadata tag offsets end at {} but {} tag ids follow",
+            offsets.last().unwrap(),
+            tag_ids.len()
+        );
+        let tags: Vec<Vec<u32>> = offsets
+            .windows(2)
+            .map(|w| tag_ids[w[0] as usize..w[1] as usize].to_vec())
+            .collect();
+        store = MetadataStore::from_columns(names, tenants, tags)
+            .map_err(|e| Error::msg(format!("corrupt index: {e}")))?;
+    }
+    crate::ensure!(s.is_empty(), "corrupt index: trailing bytes in metadata section");
+    Ok(store)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::anns::glass::GlassIndex;
+    use crate::anns::persist::{
+        load_glass, load_glass_mmap, load_glass_mmap_with_metadata, load_glass_with_metadata,
+        save_glass, save_glass_with_metadata,
+    };
+    use crate::anns::{AnnIndex, MutableAnnIndex};
+    use crate::dataset::synth;
+    use crate::variants::VariantConfig;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("crinn_{}_{}", std::process::id(), name))
+    }
+
+    fn patched_at(full: &[u8], at: usize, bytes: &[u8]) -> Vec<u8> {
+        let mut f = full.to_vec();
+        f[at..at + bytes.len()].copy_from_slice(bytes);
+        f
+    }
+
+    /// Directory slot of the i-th section in `save_v3`'s insertion order:
+    /// INDEX, VECTORS, CODES, LAYER0, LEVELS, DEGREE0, ENTRY_POINTS,
+    /// UPPER, CONFIG, [METADATA], MUTATION.
+    fn entry_at(i: usize) -> usize {
+        sections::HEADER_BYTES + i * sections::DIR_ENTRY_BYTES
+    }
+
+    #[test]
+    fn v3_roundtrip_heap_and_mmap_bitwise_identical() {
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 800, 30, 90);
+        ds.compute_ground_truth(10);
+        let idx = GlassIndex::build(
+            crate::anns::VectorSet::from_dataset(&ds),
+            VariantConfig::crinn_full(),
+            7,
+        );
+        let path = tmp("roundtrip_v3.idx");
+        save_glass(&idx, &path).unwrap();
+        let heap = load_glass(&path).unwrap();
+        let mapped = load_glass_mmap(&path).unwrap();
+        assert_eq!(heap.len(), idx.len());
+        assert_eq!(mapped.len(), idx.len());
+        // The mmap load serves adjacency as a region view (zero-copy);
+        // the heap load views a heap region — neither copied into a Vec.
+        assert!(mapped.graph.layer0.is_mapped());
+        assert!(heap.graph.layer0.is_mapped());
+        assert_eq!(heap.quant.scale, idx.quant.scale);
+        assert_eq!(mapped.quant.scale, idx.quant.scale);
+        for qi in 0..ds.n_queries() {
+            let want = idx.search_with_dists(ds.query_vec(qi), 10, 64);
+            assert_eq!(heap.search_with_dists(ds.query_vec(qi), 10, 64), want, "heap q{qi}");
+            assert_eq!(mapped.search_with_dists(ds.query_vec(qi), 10, 64), want, "mmap q{qi}");
+        }
+        // Batch path too (the conformance suite covers this per metric;
+        // this is the cheap smoke check).
+        let queries: Vec<&[f32]> = (0..5).map(|qi| ds.query_vec(qi)).collect();
+        assert_eq!(
+            heap.search_batch(&queries, 10, 64),
+            mapped.search_batch(&queries, 10, 64)
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v3_mutation_state_roundtrip_and_insert_determinism() {
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 300, 10, 91);
+        ds.compute_ground_truth(10);
+        let mut idx = GlassIndex::build(
+            crate::anns::VectorSet::from_dataset(&ds),
+            VariantConfig::glass_baseline(),
+            7,
+        );
+        for id in [3u32, 77, 150, 299] {
+            idx.delete(id).unwrap();
+        }
+        let path = tmp("mutstate_v3.idx");
+        save_glass(&idx, &path).unwrap();
+        for load in [load_glass, load_glass_mmap] {
+            let loaded = load(&path).unwrap();
+            assert_eq!(loaded.live_count(), idx.live_count());
+            assert_eq!(loaded.deleted_count(), 4);
+            for id in [3u32, 77, 150, 299] {
+                assert!(loaded.is_deleted(id));
+            }
+            for qi in 0..ds.n_queries() {
+                assert_eq!(
+                    loaded.search_with_dists(ds.query_vec(qi), 10, 64),
+                    idx.search_with_dists(ds.query_vec(qi), 10, 64),
+                    "query {qi} diverged after reload"
+                );
+            }
+        }
+        // Free list + RNG stream: a consolidated snapshot recycles slots
+        // and replays the same insert stream as the in-memory index —
+        // including when the snapshot is mmap-served (inserts promote the
+        // mapped sections to heap copy-on-write).
+        idx.consolidate().unwrap();
+        save_glass(&idx, &path).unwrap();
+        let mut reloaded = load_glass_mmap(&path).unwrap();
+        assert!(reloaded.graph.layer0.is_mapped());
+        assert_eq!(reloaded.deleted_count(), 0);
+        let id = reloaded.insert(ds.query_vec(0)).unwrap();
+        let id2 = idx.insert(ds.query_vec(0)).unwrap();
+        assert_eq!(id2, id, "reloaded snapshot diverged on slot choice");
+        assert!(!reloaded.graph.layer0.is_mapped(), "insert must promote to heap");
+        for extra in 1..4 {
+            assert_eq!(
+                idx.insert(ds.query_vec(extra)).unwrap(),
+                reloaded.insert(ds.query_vec(extra)).unwrap()
+            );
+        }
+        assert_eq!(idx.graph.levels, reloaded.graph.levels, "level streams diverged");
+        for qi in 0..ds.n_queries() {
+            assert_eq!(
+                idx.search_with_dists(ds.query_vec(qi), 10, 64),
+                reloaded.search_with_dists(ds.query_vec(qi), 10, 64),
+                "post-reload insert stream diverged at query {qi}"
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v3_metadata_roundtrip_and_unknown_section_ignored() {
+        use crate::anns::metadata::MetadataStore;
+        let sp = synth::spec("demo-64").unwrap();
+        let ds = synth::generate_counts(sp, 200, 5, 92);
+        let idx = GlassIndex::build(
+            crate::anns::VectorSet::from_dataset(&ds),
+            VariantConfig::glass_baseline(),
+            7,
+        );
+        let mut meta = MetadataStore::new();
+        for id in 0..200u32 {
+            let tenant = format!("t{}", id % 3);
+            let tags: &[&str] = if id % 2 == 0 { &["even"] } else { &[] };
+            meta.push(Some(&tenant), tags);
+        }
+        let path = tmp("meta_v3.idx");
+        save_glass_with_metadata(&idx, &meta, &path).unwrap();
+        for load in [load_glass_with_metadata, load_glass_mmap_with_metadata] {
+            let (loaded, loaded_meta) = load(&path).unwrap();
+            let loaded_meta = loaded_meta.expect("metadata section must round-trip");
+            assert_eq!(loaded_meta.names(), meta.names());
+            assert_eq!(loaded_meta.tenants(), meta.tenants());
+            assert_eq!(loaded_meta.tags(), meta.tags());
+            assert_eq!(
+                loaded.search_with_dists(ds.query_vec(0), 10, 64),
+                idx.search_with_dists(ds.query_vec(0), 10, 64)
+            );
+        }
+        // Index-only snapshots report no metadata.
+        save_glass(&idx, &path).unwrap();
+        let (_, none_meta) = load_glass_with_metadata(&path).unwrap();
+        assert!(none_meta.is_none());
+        // Forward compatibility: a section with an unknown id is ignored,
+        // not an error. Rewrite the metadata entry's id (slot 9 of the
+        // directory) to an id no current reader knows.
+        save_glass_with_metadata(&idx, &meta, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        std::fs::write(&path, patched_at(&full, entry_at(9), &0xBEEFu32.to_le_bytes())).unwrap();
+        let (ok, no_meta) = load_glass_with_metadata(&path).unwrap();
+        assert!(no_meta.is_none(), "unknown section must be skipped");
+        assert_eq!(ok.len(), idx.len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v3_rejects_truncated_file() {
+        let sp = synth::spec("demo-64").unwrap();
+        let ds = synth::generate_counts(sp, 300, 5, 93);
+        let idx = GlassIndex::build(
+            crate::anns::VectorSet::from_dataset(&ds),
+            VariantConfig::glass_baseline(),
+            7,
+        );
+        let path = tmp("truncated_v3.idx");
+        save_glass(&idx, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        for cut in [6usize, 14, 100, full.len() / 2, full.len() - 3] {
+            std::fs::write(&path, &full[..cut]).unwrap();
+            assert!(load_glass(&path).is_err(), "truncated at {cut}/{} loaded", full.len());
+            assert!(load_glass_mmap(&path).is_err(), "truncated at {cut} mmap-loaded");
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v3_rejects_hostile_section_directory() {
+        let sp = synth::spec("demo-64").unwrap();
+        let ds = synth::generate_counts(sp, 300, 5, 94);
+        let idx = GlassIndex::build(
+            crate::anns::VectorSet::from_dataset(&ds),
+            VariantConfig::glass_baseline(),
+            7,
+        );
+        let path = tmp("hostile_v3.idx");
+        save_glass(&idx, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        assert!(load_glass(&path).is_ok(), "pristine file must load");
+        let expect_err = |bytes: Vec<u8>, what: &str, needle: &str| {
+            std::fs::write(&path, bytes).unwrap();
+            for (label, res) in [
+                ("heap", load_glass(&path)),
+                ("mmap", load_glass_mmap(&path)),
+            ] {
+                let err = res.err().unwrap_or_else(|| panic!("{what} accepted ({label})"));
+                let msg = format!("{err:#}");
+                assert!(msg.contains(needle), "{what} ({label}): unexpected error: {msg}");
+            }
+        };
+
+        // (a) Duplicate section ids: entry 1 (vectors) renamed to id 1
+        // (the index header's id).
+        expect_err(
+            patched_at(&full, entry_at(1), &sections::SEC_INDEX.to_le_bytes()),
+            "duplicate id",
+            "duplicate section id",
+        );
+        // (b) Misaligned payload offset.
+        expect_err(
+            patched_at(&full, entry_at(1) + 8, &4u64.to_le_bytes()),
+            "misaligned offset",
+            "not 64-byte aligned",
+        );
+        // (c) Offset beyond EOF (64-aligned so the alignment check passes).
+        let beyond = ((full.len() as u64 / 64) + 2) * 64;
+        expect_err(
+            patched_at(&full, entry_at(1) + 8, &beyond.to_le_bytes()),
+            "out-of-bounds offset",
+            "exceeds file size",
+        );
+        // (d) A length that overflows offset + len past u64.
+        expect_err(
+            patched_at(&full, entry_at(1) + 16, &u64::MAX.to_le_bytes()),
+            "overflowing length",
+            "length overflows",
+        );
+        // (e) Overlapping sections: point the codes entry (slot 2) at the
+        // layer0 entry's (slot 3) offset.
+        let layer0_off = u64::from_le_bytes(
+            full[entry_at(3) + 8..entry_at(3) + 16].try_into().unwrap(),
+        );
+        expect_err(
+            patched_at(&full, entry_at(2) + 8, &layer0_off.to_le_bytes()),
+            "overlapping sections",
+            "overlap",
+        );
+        // (f) Checksum mismatch: flip one payload byte (the file's last
+        // byte belongs to the mutation section's payload).
+        let mut flipped = full.clone();
+        *flipped.last_mut().unwrap() ^= 0x01;
+        expect_err(flipped, "corrupted payload", "checksum mismatch");
+        // (g) A hostile section count whose directory dwarfs the file.
+        expect_err(
+            patched_at(&full, 8, &u32::MAX.to_le_bytes()),
+            "huge section count",
+            "exceeds file size",
+        );
+        // (h) A declared tombstone count inconsistent with the (empty)
+        // bitset: flip the SEC_INDEX payload's declared_dead field — and
+        // restore the section checksum so only the semantic check can
+        // catch it.
+        let index_off = u64::from_le_bytes(
+            full[entry_at(0) + 8..entry_at(0) + 16].try_into().unwrap(),
+        ) as usize;
+        let mut deep = patched_at(&full, index_off + 32, &2u64.to_le_bytes());
+        let sum = sections::checksum(&deep[index_off..index_off + 40]);
+        deep = patched_at(&deep, entry_at(0) + 24, &sum.to_le_bytes());
+        expect_err(deep, "popcount mismatch", "popcount");
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -1,0 +1,289 @@
+//! The v3 paged section container: a section *directory* instead of one
+//! sequential stream.
+//!
+//! Layout (all little-endian):
+//!
+//! ```text
+//! [0..4)   magic "CRNN"
+//! [4..8)   version (3)
+//! [8..12)  section count
+//! [12..16) reserved (0)
+//! 16 + 32*i, one per section:
+//!   [+0..+4)   section id
+//!   [+4..+8)   reserved (0)
+//!   [+8..+16)  payload offset (64-byte aligned, ascending)
+//!   [+16..+24) payload length in bytes
+//!   [+24..+32) payload checksum (word-at-a-time FNV-1a-64)
+//! ...zero padding to each aligned offset, then the payload bytes...
+//! ```
+//!
+//! Every section is independently addressable: a reader seeks (or maps)
+//! exactly the payloads it wants, and the 64-byte alignment means any
+//! flat-array payload can be viewed in place as `&[T]` for every Pod
+//! element type. Unknown section ids are ignored (forward compatibility:
+//! an old reader skips sections a newer writer added); duplicate ids,
+//! overlapping payloads, misaligned or out-of-bounds offsets, and
+//! checksum mismatches are all hard errors — a snapshot either validates
+//! completely or refuses to load.
+
+use super::MAGIC;
+use crate::anns::store::region::MappedRegion;
+use crate::util::error::{Context, Error, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// v3 introduced the paged section container.
+pub(crate) const VERSION_V3: u32 = 3;
+/// Payload alignment: one cache line, and a multiple of every Pod
+/// element size, so in-place `&[T]` views are always aligned.
+pub(crate) const ALIGN: usize = 64;
+pub(crate) const HEADER_BYTES: usize = 16;
+pub(crate) const DIR_ENTRY_BYTES: usize = 32;
+
+/// Fixed-size index header: dim, metric, point count, graph degree,
+/// entry, max level, frozen quantizer scale, declared tombstone count.
+pub(crate) const SEC_INDEX: u32 = 1;
+/// Raw `[n * dim]` f32 vector rows.
+pub(crate) const SEC_VECTORS: u32 = 2;
+/// Raw `[n * dim]` i8 SQ8 code rows (served zero-copy).
+pub(crate) const SEC_CODES: u32 = 3;
+/// Raw `[n * m0]` u32 layer-0 adjacency (served zero-copy).
+pub(crate) const SEC_LAYER0: u32 = 4;
+/// Raw `[n]` u8 per-node levels.
+pub(crate) const SEC_LEVELS: u32 = 5;
+/// Raw `[n]` u16 precomputed layer-0 degrees.
+pub(crate) const SEC_DEGREE0: u32 = 6;
+/// Raw u32 diverse entry-point list.
+pub(crate) const SEC_ENTRY_POINTS: u32 = 7;
+/// Structured sparse upper layers (count-prefixed, sorted by node id).
+pub(crate) const SEC_UPPER: u32 = 8;
+/// Variant configuration via the stable action encoding.
+pub(crate) const SEC_CONFIG: u32 = 9;
+/// Optional id → tenant/tags metadata columns.
+pub(crate) const SEC_METADATA: u32 = 10;
+/// Mutation state: tombstone bitset words, free list, insert RNG state.
+pub(crate) const SEC_MUTATION: u32 = 11;
+
+/// Word-at-a-time FNV-1a-64 over the payload bytes: 8 bytes per round
+/// (LE-read into the accumulator), remainder bytes one at a time — for
+/// inputs shorter than 8 bytes this is exactly byte-wise FNV-1a-64.
+/// Not cryptographic; it catches torn writes, truncation and bit rot,
+/// which is the threat model for a local snapshot file.
+pub(crate) fn checksum(bytes: &[u8]) -> u64 {
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut chunks = bytes.chunks_exact(8);
+    for c in &mut chunks {
+        h ^= u64::from_le_bytes(c.try_into().unwrap());
+        h = h.wrapping_mul(PRIME);
+    }
+    for &b in chunks.remainder() {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+fn align_up(x: usize) -> usize {
+    x.div_ceil(ALIGN) * ALIGN
+}
+
+/// Accumulates `(id, payload)` sections and writes the container:
+/// header, directory (offsets assigned in insertion order, each aligned
+/// up), zero padding, payloads.
+pub(crate) struct SectionBuilder {
+    sections: Vec<(u32, Vec<u8>)>,
+}
+
+impl SectionBuilder {
+    pub(crate) fn new() -> SectionBuilder {
+        SectionBuilder { sections: Vec::new() }
+    }
+
+    pub(crate) fn add(&mut self, id: u32, payload: Vec<u8>) {
+        self.sections.push((id, payload));
+    }
+
+    pub(crate) fn write_to(&self, path: &Path) -> Result<()> {
+        let f = std::fs::File::create(path).with_context(|| format!("create {path:?}"))?;
+        let mut bw = std::io::BufWriter::new(f);
+        let count = self.sections.len();
+        bw.write_all(MAGIC)?;
+        bw.write_all(&VERSION_V3.to_le_bytes())?;
+        bw.write_all(&(count as u32).to_le_bytes())?;
+        bw.write_all(&0u32.to_le_bytes())?;
+        // Directory: assign ascending aligned offsets in insertion order.
+        let mut offsets = Vec::with_capacity(count);
+        let mut offset = align_up(HEADER_BYTES + count * DIR_ENTRY_BYTES);
+        for (id, payload) in &self.sections {
+            bw.write_all(&id.to_le_bytes())?;
+            bw.write_all(&0u32.to_le_bytes())?;
+            bw.write_all(&(offset as u64).to_le_bytes())?;
+            bw.write_all(&(payload.len() as u64).to_le_bytes())?;
+            bw.write_all(&checksum(payload).to_le_bytes())?;
+            offsets.push(offset);
+            offset = align_up(offset + payload.len());
+        }
+        // Payloads, zero-padded out to each directory offset.
+        let mut at = HEADER_BYTES + count * DIR_ENTRY_BYTES;
+        for ((_, payload), &off) in self.sections.iter().zip(&offsets) {
+            let pad = [0u8; ALIGN];
+            bw.write_all(&pad[..off - at])?;
+            bw.write_all(payload)?;
+            at = off + payload.len();
+        }
+        bw.flush()?;
+        Ok(())
+    }
+}
+
+/// The parsed, fully validated section directory of a v3 container.
+pub(crate) struct Directory {
+    /// `(id, offset, len, checksum)` in directory order; ids unique.
+    entries: Vec<(u32, usize, usize, u64)>,
+}
+
+impl Directory {
+    /// Parse and validate the directory (not the payloads): magic,
+    /// version, directory bounds, per-entry alignment and bounds,
+    /// duplicate ids, pairwise overlap. Payload integrity is the
+    /// separate [`Directory::verify_checksums`] pass.
+    pub(crate) fn parse(region: &MappedRegion) -> Result<Directory> {
+        let bytes = region.as_slice();
+        crate::ensure!(
+            bytes.len() >= HEADER_BYTES,
+            "corrupt index: {} bytes is too small for a section container",
+            bytes.len()
+        );
+        crate::ensure!(&bytes[0..4] == MAGIC, "not a CRINN index file");
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        crate::ensure!(version == VERSION_V3, "unsupported index version {version}");
+        let count = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let dir_end = count
+            .checked_mul(DIR_ENTRY_BYTES)
+            .and_then(|x| x.checked_add(HEADER_BYTES))
+            .ok_or_else(|| Error::msg("corrupt index: section count overflows".to_string()))?;
+        crate::ensure!(
+            dir_end <= bytes.len(),
+            "corrupt index: directory of {count} sections exceeds file size {}",
+            bytes.len()
+        );
+        let mut entries = Vec::with_capacity(count);
+        let mut seen = std::collections::HashSet::new();
+        for i in 0..count {
+            let e = &bytes[HEADER_BYTES + i * DIR_ENTRY_BYTES..HEADER_BYTES + (i + 1) * DIR_ENTRY_BYTES];
+            let id = u32::from_le_bytes(e[0..4].try_into().unwrap());
+            let offset = u64::from_le_bytes(e[8..16].try_into().unwrap());
+            let len = u64::from_le_bytes(e[16..24].try_into().unwrap());
+            let sum = u64::from_le_bytes(e[24..32].try_into().unwrap());
+            crate::ensure!(seen.insert(id), "corrupt index: duplicate section id {id}");
+            crate::ensure!(
+                offset % ALIGN as u64 == 0,
+                "corrupt index: section {id} at offset {offset} is not {ALIGN}-byte aligned"
+            );
+            crate::ensure!(
+                offset >= dir_end as u64,
+                "corrupt index: section {id} at offset {offset} overlaps the directory"
+            );
+            let end = offset.checked_add(len).ok_or_else(|| {
+                Error::msg(format!("corrupt index: section {id} length overflows"))
+            })?;
+            crate::ensure!(
+                end <= bytes.len() as u64,
+                "corrupt index: section {id} [{offset}, {end}) exceeds file size {}",
+                bytes.len()
+            );
+            entries.push((id, offset as usize, len as usize, sum));
+        }
+        let mut by_offset = entries.clone();
+        by_offset.sort_by_key(|&(_, offset, _, _)| offset);
+        for w in by_offset.windows(2) {
+            let (a, a_off, a_len, _) = w[0];
+            let (b, b_off, _, _) = w[1];
+            crate::ensure!(
+                a_off + a_len <= b_off,
+                "corrupt index: sections {a} and {b} overlap"
+            );
+        }
+        Ok(Directory { entries })
+    }
+
+    /// Verify every payload checksum against its directory entry. Both
+    /// load paths run this — an mmap-served snapshot is checked as
+    /// eagerly as a heap-loaded one, so serving never reads bytes whose
+    /// integrity was not established at load.
+    pub(crate) fn verify_checksums(&self, region: &MappedRegion) -> Result<()> {
+        let bytes = region.as_slice();
+        for &(id, offset, len, sum) in &self.entries {
+            let got = checksum(&bytes[offset..offset + len]);
+            crate::ensure!(
+                got == sum,
+                "corrupt index: section {id} checksum mismatch \
+                 (stored {sum:#018x}, computed {got:#018x})"
+            );
+        }
+        Ok(())
+    }
+
+    /// Byte range of section `id`, if present. Unknown ids in the file
+    /// are simply never asked for — forward compatibility.
+    pub(crate) fn get(&self, id: u32) -> Option<(usize, usize)> {
+        self.entries
+            .iter()
+            .find(|&&(eid, _, _, _)| eid == id)
+            .map(|&(_, offset, len, _)| (offset, len))
+    }
+
+    /// Byte range of a section every v3 snapshot must carry.
+    pub(crate) fn require(&self, id: u32) -> Result<(usize, usize)> {
+        self.get(id)
+            .ok_or_else(|| Error::msg(format!("corrupt index: missing section {id}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("crinn_{}_{}", std::process::id(), name))
+    }
+
+    #[test]
+    fn checksum_matches_fnv1a_vectors_and_detects_flips() {
+        // Short inputs are exactly byte-wise FNV-1a-64 (published vectors).
+        assert_eq!(checksum(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(checksum(b"a"), 0xaf63_dc4c_8601_ec8c);
+        // Word-at-a-time sensitivity: any single-byte flip changes the sum.
+        let base: Vec<u8> = (0..=255u8).cycle().take(1024 + 5).collect();
+        let want = checksum(&base);
+        for at in [0usize, 7, 8, 512, 1024, 1028] {
+            let mut b = base.clone();
+            b[at] ^= 0x40;
+            assert_ne!(checksum(&b), want, "flip at {at} undetected");
+        }
+    }
+
+    #[test]
+    fn builder_roundtrips_through_directory() {
+        let path = tmp("container_roundtrip.bin");
+        let mut b = SectionBuilder::new();
+        b.add(7, vec![1, 2, 3]);
+        b.add(900, Vec::new()); // empty + unknown ids are fine
+        b.add(2, (0..200u8).collect());
+        b.write_to(&path).unwrap();
+        let region = MappedRegion::read_file(&path).unwrap();
+        let dir = Directory::parse(&region).unwrap();
+        dir.verify_checksums(&region).unwrap();
+        let (off, len) = dir.require(7).unwrap();
+        assert_eq!(off % ALIGN, 0);
+        assert_eq!(&region.as_slice()[off..off + len], &[1, 2, 3]);
+        let (_, len) = dir.get(900).unwrap();
+        assert_eq!(len, 0);
+        let (off2, len2) = dir.require(2).unwrap();
+        assert_eq!(region.as_slice()[off2..off2 + len2], (0..200u8).collect::<Vec<_>>());
+        assert!(dir.get(4).is_none());
+        assert!(format!("{:#}", dir.require(4).unwrap_err()).contains("missing section"));
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,8 +1,17 @@
 //! Little-endian stream-writer primitives shared by every snapshot
-//! writer: fixed-width scalars plus `u64`-count-prefixed arrays.
+//! writer, plus the v3 paged-container save: each logical piece of the
+//! index (vectors, codes, adjacency, …) becomes an independently
+//! addressable section (see [`super::sections`]), with the big flat
+//! arrays written as raw bytes so a reader can view them in place.
 
+use super::sections::{self, SectionBuilder};
+use crate::anns::metadata::MetadataStore;
+use crate::anns::store::region::as_bytes;
+use crate::distance::Metric;
 use crate::util::error::Result;
+use crate::variants::{encode_action, Module};
 use std::io::Write;
+use std::path::Path;
 
 pub(crate) struct W<'a, T: Write>(pub(crate) &'a mut T);
 
@@ -45,4 +54,129 @@ impl<'a, T: Write> W<'a, T> {
         }
         Ok(())
     }
+}
+
+/// Write a v3 paged snapshot. The raw-array sections ([`sections::SEC_VECTORS`],
+/// [`sections::SEC_CODES`], [`sections::SEC_LAYER0`], [`sections::SEC_LEVELS`],
+/// [`sections::SEC_DEGREE0`], [`sections::SEC_ENTRY_POINTS`]) are the in-memory
+/// arrays verbatim; the structured sections reuse the count-prefixed
+/// stream primitives above inside their payload.
+pub(crate) fn save_v3(
+    idx: &crate::anns::glass::GlassIndex,
+    metadata: Option<&MetadataStore>,
+    path: &Path,
+) -> Result<()> {
+    let g = &idx.graph;
+    let mut b = SectionBuilder::new();
+
+    // SEC_INDEX: the 40-byte fixed header every other section is
+    // interpreted against.
+    let mut buf = Vec::new();
+    {
+        let mut w = W(&mut buf);
+        w.u32(g.vectors.dim as u32)?;
+        w.u32(match g.vectors.metric {
+            Metric::L2 => 0,
+            Metric::Angular => 1,
+            Metric::Ip => 2,
+        })?;
+        w.u64(g.len() as u64)?;
+        w.u32(g.m as u32)?;
+        w.u32(g.entry)?;
+        w.u32(g.max_level as u32)?;
+        // The frozen quantizer scale (exact f32 bits): the codes section
+        // below was encoded under it, and post-load online inserts keep
+        // encoding with it — never a re-fit.
+        w.u32(idx.quant.scale.to_bits())?;
+        w.u64(idx.deleted.count() as u64)?;
+    }
+    b.add(sections::SEC_INDEX, buf);
+
+    b.add(sections::SEC_VECTORS, as_bytes(g.vectors.data.as_slice()).to_vec());
+    b.add(sections::SEC_CODES, as_bytes(idx.quant.codes()).to_vec());
+    b.add(sections::SEC_LAYER0, as_bytes(g.layer0.as_slice()).to_vec());
+    b.add(sections::SEC_LEVELS, g.levels.clone());
+    b.add(sections::SEC_DEGREE0, as_bytes(g.degree0.as_slice()).to_vec());
+    b.add(sections::SEC_ENTRY_POINTS, as_bytes(g.entry_points.as_slice()).to_vec());
+
+    // SEC_UPPER: sparse upper layers, sorted by node id per layer for
+    // deterministic output.
+    let mut buf = Vec::new();
+    {
+        let mut w = W(&mut buf);
+        w.u32(g.upper.len() as u32)?;
+        for layer in &g.upper {
+            w.u64(layer.len() as u64)?;
+            let mut keys: Vec<u32> = layer.keys().copied().collect();
+            keys.sort_unstable();
+            for k in keys {
+                w.u32(k)?;
+                w.u32s(&layer[&k])?;
+            }
+        }
+    }
+    b.add(sections::SEC_UPPER, buf);
+
+    // SEC_CONFIG: via the stable action encoding (keeps the format
+    // stable as knobs evolve).
+    let mut buf = Vec::new();
+    {
+        let mut w = W(&mut buf);
+        for module in Module::ALL {
+            let a = encode_action(&idx.config, module);
+            w.u64(a.len() as u64)?;
+            for v in a {
+                w.f64(v)?;
+            }
+        }
+    }
+    b.add(sections::SEC_CONFIG, buf);
+
+    // SEC_METADATA (optional): the id → tenant/tags columns, same
+    // interned shape as the v2 stream section.
+    if let Some(meta) = metadata {
+        crate::ensure!(
+            meta.len() <= g.len(),
+            "metadata store has {} rows but the index has {} points",
+            meta.len(),
+            g.len()
+        );
+        let mut buf = Vec::new();
+        {
+            let mut w = W(&mut buf);
+            w.u64(meta.len() as u64)?;
+            let names = meta.names();
+            w.u64(names.len() as u64)?;
+            for name in names {
+                w.u8s(name.as_bytes())?;
+            }
+            w.u32s(meta.tenants())?;
+            let mut offsets = Vec::with_capacity(meta.len() + 1);
+            let mut tag_ids: Vec<u32> = Vec::new();
+            offsets.push(0u64);
+            for row in meta.tags() {
+                tag_ids.extend_from_slice(row);
+                offsets.push(tag_ids.len() as u64);
+            }
+            w.u64s(&offsets)?;
+            w.u32s(&tag_ids)?;
+        }
+        b.add(sections::SEC_METADATA, buf);
+    }
+
+    // SEC_MUTATION: tombstone bitset words, free-slot list, insert-level
+    // RNG state (the declared tombstone count lives in SEC_INDEX for the
+    // popcount cross-check).
+    let mut buf = Vec::new();
+    {
+        let mut w = W(&mut buf);
+        w.u64s(idx.deleted.words())?;
+        w.u32s(&idx.free)?;
+        for x in idx.rng_state() {
+            w.u64(x)?;
+        }
+    }
+    b.add(sections::SEC_MUTATION, buf);
+
+    b.write_to(path)
 }

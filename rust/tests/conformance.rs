@@ -238,6 +238,51 @@ fn filtered_conformance_for_metric(metric: Metric, seed: u64) {
     }
 }
 
+/// Disk-serving dimension: a GLASS snapshot loaded back onto the heap
+/// and one served zero-copy out of an mmapped section container must
+/// both be **bitwise identical** to the in-memory index they were saved
+/// from — distances AND ids, per-query and batched, filtered and
+/// unfiltered. Storage tier (heap vs page cache) must be invisible to
+/// search results.
+fn mmap_conformance_for_metric(metric: Metric, seed: u64) {
+    let ds = common::metric_dataset(metric, 1000, 20, seed);
+    let idx = crinn::anns::glass::GlassIndex::build(
+        VectorSet::from_dataset(&ds),
+        crinn::variants::VariantConfig::crinn_full(),
+        7,
+    );
+    let path = std::env::temp_dir().join(format!(
+        "crinn_{}_conformance_mmap_{metric:?}.idx",
+        std::process::id()
+    ));
+    crinn::anns::persist::save_glass(&idx, &path).unwrap();
+    let heap = crinn::anns::persist::load_glass(&path).unwrap();
+    let mapped = crinn::anns::persist::load_glass_mmap(&path).unwrap();
+    assert!(mapped.graph.layer0.is_mapped(), "{metric:?}: adjacency not region-served");
+
+    use crinn::anns::AnnIndex;
+    let queries: Vec<&[f32]> = (0..ds.n_queries()).map(|qi| ds.query_vec(qi)).collect();
+    let n = ds.n_base();
+    let filter = crinn::anns::FilterBitset::from_predicate(n, |id| id % 3 != 0);
+    for (k, ef) in [(10usize, 128), (5, 32)] {
+        for q in &queries {
+            let want = idx.search_with_dists(q, k, ef);
+            assert_eq!(heap.search_with_dists(q, k, ef), want, "{metric:?} heap k={k}");
+            assert_eq!(mapped.search_with_dists(q, k, ef), want, "{metric:?} mmap k={k}");
+            let fwant = idx.search_filtered_with_dists(q, k, ef, Some(&filter));
+            assert_eq!(
+                mapped.search_filtered_with_dists(q, k, ef, Some(&filter)),
+                fwant,
+                "{metric:?} mmap filtered k={k}"
+            );
+        }
+        let want = idx.search_batch(&queries, k, ef);
+        assert_eq!(heap.search_batch(&queries, k, ef), want, "{metric:?} heap batch");
+        assert_eq!(mapped.search_batch(&queries, k, ef), want, "{metric:?} mmap batch");
+    }
+    std::fs::remove_file(&path).ok();
+}
+
 #[test]
 fn conformance_batch_identity_and_recall_l2() {
     conformance_for_metric(Metric::L2, 81);
@@ -266,4 +311,19 @@ fn filtered_conformance_recall_angular() {
 #[test]
 fn filtered_conformance_recall_ip() {
     filtered_conformance_for_metric(Metric::Ip, 83);
+}
+
+#[test]
+fn conformance_mmap_serving_bitwise_identical_l2() {
+    mmap_conformance_for_metric(Metric::L2, 81);
+}
+
+#[test]
+fn conformance_mmap_serving_bitwise_identical_angular() {
+    mmap_conformance_for_metric(Metric::Angular, 82);
+}
+
+#[test]
+fn conformance_mmap_serving_bitwise_identical_ip() {
+    mmap_conformance_for_metric(Metric::Ip, 83);
 }
