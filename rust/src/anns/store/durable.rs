@@ -1,0 +1,121 @@
+//! Durable restore and compaction: the glue between the paged snapshot
+//! (`anns::persist`) and the mutation log ([`super::wal::VectorLog`]).
+//!
+//! Restart is **map the snapshot, replay the log tail**: the snapshot
+//! persists the insert-level RNG state and the free-slot list, so
+//! replaying the logged mutations in order reproduces *exactly* the ids
+//! and graph the live index had — [`restore_glass`] asserts the replayed
+//! id of every logged insert against the id the log recorded at ack
+//! time, and refuses a snapshot/log pair that disagrees.
+//!
+//! Compaction ([`compact_glass`]) folds the log into the snapshot:
+//! consolidate tombstones, write a fresh v3 snapshot, truncate the log.
+//! The snapshot write lands before the truncate, so a crash between the
+//! two leaves a log whose replay fails loudly (id mismatch against the
+//! already-folded snapshot) rather than one that silently lost acked
+//! mutations.
+
+use super::wal::{LogRecord, VectorLog};
+use crate::anns::glass::GlassIndex;
+use crate::anns::{MetadataStore, MutableAnnIndex};
+use crate::util::error::{Context, Result};
+use std::path::Path;
+
+/// A restored serving state: the index with the log tail replayed, its
+/// metadata store, and the recovered log handle positioned for further
+/// appends.
+pub struct RestoredGlass {
+    pub index: GlassIndex,
+    pub metadata: MetadataStore,
+    pub log: VectorLog,
+    /// Log records replayed on top of the snapshot.
+    pub replayed: usize,
+}
+
+/// Restore a serving state from `snapshot` + `log_path`. `mmap` selects
+/// zero-copy serving of the snapshot's big sections (the first replayed
+/// insert promotes them copy-on-write). A missing log file is an empty
+/// log; a torn log tail is dropped (see [`VectorLog::recover`]).
+pub fn restore_glass(snapshot: &Path, log_path: &Path, mmap: bool) -> Result<RestoredGlass> {
+    let (mut index, metadata) = if mmap {
+        crate::anns::persist::load_glass_mmap_with_metadata(snapshot)
+    } else {
+        crate::anns::persist::load_glass_with_metadata(snapshot)
+    }
+    .with_context(|| format!("load snapshot {snapshot:?}"))?;
+    let mut metadata = metadata.unwrap_or_default();
+
+    let (records, log) = VectorLog::recover(log_path)?;
+    let replayed = records.len();
+    for (i, record) in records.into_iter().enumerate() {
+        apply_record(&mut index, &mut metadata, &record)
+            .with_context(|| format!("replay log record {i} for id {}", record.id()))?;
+    }
+    Ok(RestoredGlass {
+        index,
+        metadata,
+        log,
+        replayed,
+    })
+}
+
+/// Apply one log record to the restored state. Insert replay must
+/// reproduce the id the log recorded — the snapshot carries the RNG and
+/// free-list state that makes id assignment deterministic, so a mismatch
+/// means the snapshot and log are not a pair.
+pub fn apply_record(
+    index: &mut GlassIndex,
+    metadata: &mut MetadataStore,
+    record: &LogRecord,
+) -> Result<()> {
+    match record {
+        LogRecord::Vector { id, vector } => {
+            let got = index.insert(vector)?;
+            crate::ensure!(
+                got == *id,
+                "replayed insert assigned id {got} but the log acked id {id} \
+                 (snapshot and log are not a matching pair)"
+            );
+        }
+        LogRecord::Metadata { id, tenant, tags } => {
+            let tags: Vec<&str> = tags.iter().map(|t| t.as_str()).collect();
+            metadata.set_for(*id, tenant.as_deref(), &tags);
+        }
+        LogRecord::Tombstone { id } => index.delete(*id)?,
+    }
+    Ok(())
+}
+
+/// What [`compact_glass`] folded away.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CompactionStats {
+    /// Tombstoned points physically dropped by consolidation.
+    pub dropped: usize,
+    /// Log bytes truncated after the snapshot absorbed them.
+    pub log_bytes_truncated: u64,
+    /// Log records truncated.
+    pub log_records_truncated: u64,
+}
+
+/// Fold the mutation log into the snapshot: consolidate pending
+/// tombstones, write a fresh v3 snapshot (index + metadata) to
+/// `snapshot`, then truncate the log. Search results over the live set
+/// are preserved — consolidation repairs the graph around dropped
+/// points but never changes which points are live.
+pub fn compact_glass(
+    index: &mut GlassIndex,
+    metadata: &MetadataStore,
+    log: &mut VectorLog,
+    snapshot: &Path,
+) -> Result<CompactionStats> {
+    let dropped = index.consolidate()?;
+    crate::anns::persist::save_glass_with_metadata(index, metadata, snapshot)
+        .with_context(|| format!("write compacted snapshot {snapshot:?}"))?;
+    let stats = CompactionStats {
+        dropped,
+        log_bytes_truncated: log.bytes(),
+        log_records_truncated: log.records(),
+    };
+    log.truncate()?;
+    Ok(stats)
+}

@@ -5,8 +5,17 @@
 //!   is either `mmap(2)`-backed (zero-copy serving straight out of the
 //!   page cache) or heap-backed (tests, non-unix targets, small files),
 //!   plus [`region::Segment`], the copy-on-write typed view the graph
-//!   adjacency and SQ8 code arrays live behind.
+//!   adjacency and SQ8 code arrays live behind;
+//! * [`wal`] — [`wal::VectorLog`], the append-only mutation log: every
+//!   acked insert/delete is a checksummed, fsync'd frame, and recovery
+//!   drops exactly the torn tail;
+//! * [`durable`] — restart (map the snapshot, replay the log tail) and
+//!   compaction (fold the log into a fresh snapshot, truncate it).
 
+pub mod durable;
 pub mod region;
+pub mod wal;
 
+pub use durable::{compact_glass, restore_glass, CompactionStats, RestoredGlass};
 pub use region::{MappedRegion, Segment};
+pub use wal::{LogRecord, VectorLog};

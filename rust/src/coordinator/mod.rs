@@ -11,7 +11,9 @@
 //!   ([`server::QueryRequest`] is an enum; `Server::start_mutable` serves
 //!   a `MutableAnnIndex` behind an `RwLock`), filtered search (filter
 //!   expressions compiled once per batch group against a shared metadata
-//!   store), and latency/throughput/mutation/filtered metrics.
+//!   store), durable serving (`Server::start_durable` writes every acked
+//!   mutation through an fsync'd append-only log before replying), and
+//!   latency/throughput/mutation/filtered metrics.
 
 pub mod batcher;
 pub mod metrics;
@@ -20,6 +22,6 @@ pub mod server;
 
 pub use router::{MutableShardedRouter, ShardedRouter};
 pub use server::{
-    MutationResponse, QueryRequest, QueryResponse, Server, ServerConfig, SharedMetadata,
-    SharedMutableIndex,
+    MutationResponse, QueryRequest, QueryResponse, Server, ServerConfig, SharedLog,
+    SharedMetadata, SharedMutableIndex,
 };

@@ -21,6 +21,7 @@
 //! give (as in any concurrent store); every response is keyed to its own
 //! reply channel, so results never cross requests.
 
+use crate::anns::store::VectorLog;
 use crate::anns::{AnnIndex, FilterBitset, FilterExpr, MetadataStore, MutableAnnIndex};
 use crate::coordinator::batcher::{group_by_key, next_batch_or_stop, BatchPolicy};
 use crate::coordinator::metrics::Metrics;
@@ -36,6 +37,10 @@ pub type SharedMutableIndex = Arc<RwLock<Box<dyn MutableAnnIndex>>>;
 /// searches compile filter expressions under the read lock, inserts that
 /// carry metadata update it under the write lock.
 pub type SharedMetadata = Arc<RwLock<MetadataStore>>;
+
+/// The shared-ownership shape of the durability log: one append (with
+/// fsync) at a time, taken by whichever worker just applied a mutation.
+pub type SharedLog = Arc<Mutex<VectorLog>>;
 
 /// One request through the serving queue: a search or a mutation.
 pub enum QueryRequest {
@@ -160,7 +165,7 @@ impl Backend {
     /// Apply one mutation under the write lock. The live-point gauge is
     /// updated while the lock is still held, so concurrent workers can
     /// never publish a stale count over a newer one.
-    fn apply(&self, op: Mutation, metrics: &Metrics) -> Result<u32, String> {
+    fn apply(&self, op: &Mutation, metrics: &Metrics) -> Result<u32, String> {
         match self {
             Backend::Fixed(_) => {
                 Err("index is immutable (serve it with Server::start_mutable)".to_string())
@@ -168,9 +173,9 @@ impl Backend {
             Backend::Mutable(index) => {
                 let mut idx = index.write().unwrap();
                 let result = match op {
-                    Mutation::Insert(v) => idx.insert(&v).map_err(|e| format!("{e:#}")),
+                    Mutation::Insert(v) => idx.insert(v).map_err(|e| format!("{e:#}")),
                     Mutation::Delete(id) => {
-                        idx.delete(id).map(|_| id).map_err(|e| format!("{e:#}"))
+                        idx.delete(*id).map(|_| *id).map_err(|e| format!("{e:#}"))
                     }
                 };
                 metrics.set_live_points(idx.live_count() as u64);
@@ -199,7 +204,7 @@ impl Server {
     /// requests submitted to this server are answered with an error, and
     /// filtered searches (there is no metadata store) match nothing.
     pub fn start(index: Arc<dyn AnnIndex>, config: ServerConfig) -> Server {
-        Server::start_backend(Backend::Fixed(index), None, config)
+        Server::start_backend(Backend::Fixed(index), None, None, config)
     }
 
     /// [`Server::start`] plus a metadata store: filter expressions compile
@@ -209,7 +214,7 @@ impl Server {
         metadata: SharedMetadata,
         config: ServerConfig,
     ) -> Server {
-        Server::start_backend(Backend::Fixed(index), Some(metadata), config)
+        Server::start_backend(Backend::Fixed(index), Some(metadata), None, config)
     }
 
     /// Start worker threads over a mutable index: searches share the read
@@ -217,7 +222,7 @@ impl Server {
     /// tombstone/consolidation semantics come from the index itself.
     pub fn start_mutable(index: SharedMutableIndex, config: ServerConfig) -> Server {
         let metrics_live = index.read().unwrap().live_count() as u64;
-        let server = Server::start_backend(Backend::Mutable(index), None, config);
+        let server = Server::start_backend(Backend::Mutable(index), None, None, config);
         server.metrics.set_live_points(metrics_live);
         server
     }
@@ -231,7 +236,27 @@ impl Server {
         config: ServerConfig,
     ) -> Server {
         let metrics_live = index.read().unwrap().live_count() as u64;
-        let server = Server::start_backend(Backend::Mutable(index), Some(metadata), config);
+        let server =
+            Server::start_backend(Backend::Mutable(index), Some(metadata), None, config);
+        server.metrics.set_live_points(metrics_live);
+        server
+    }
+
+    /// [`Server::start_mutable`] with durability: every acked mutation is
+    /// appended (checksummed, fsync'd) to the shared mutation log before
+    /// the client sees the ack, so a crash loses nothing that was acked —
+    /// restart through `anns::store::restore_glass` replays the log tail
+    /// on top of the last snapshot. An apply that succeeds but fails to
+    /// log is acked as an error (`"applied but not logged"`): the client
+    /// must not count on a mutation the next restart may not see.
+    pub fn start_durable(
+        index: SharedMutableIndex,
+        metadata: Option<SharedMetadata>,
+        wal: SharedLog,
+        config: ServerConfig,
+    ) -> Server {
+        let metrics_live = index.read().unwrap().live_count() as u64;
+        let server = Server::start_backend(Backend::Mutable(index), metadata, Some(wal), config);
         server.metrics.set_live_points(metrics_live);
         server
     }
@@ -239,6 +264,7 @@ impl Server {
     fn start_backend(
         backend: Backend,
         metadata: Option<SharedMetadata>,
+        wal: Option<SharedLog>,
         config: ServerConfig,
     ) -> Server {
         let (tx, rx) = sync_channel::<QueryRequest>(config.queue_depth.max(1));
@@ -251,6 +277,7 @@ impl Server {
             let rx = rx.clone();
             let backend = backend.clone();
             let metadata = metadata.clone();
+            let wal = wal.clone();
             let metrics = metrics.clone();
             let policy = config.batch.clone();
             let inflight = inflight.clone();
@@ -290,16 +317,46 @@ impl Server {
                         }
                     };
                     let is_insert = ins_meta.is_some();
-                    let result = backend.apply(op, &metrics);
+                    let result = backend.apply(&op, &metrics);
                     // Record the insert's tenant/tags under the assigned id
                     // before replying: once the client holds the ack, a
                     // filtered search must already see the metadata.
                     if let (Ok(id), Some(meta), Some((tenant, tags))) =
-                        (&result, metadata.as_ref(), ins_meta)
+                        (&result, metadata.as_ref(), ins_meta.as_ref())
                     {
                         let tags: Vec<&str> = tags.iter().map(|t| t.as_str()).collect();
                         meta.write().unwrap().set_for(*id, tenant.as_deref(), &tags);
                     }
+                    // Durable write-through: the applied mutation reaches
+                    // the fsync'd log before the client sees the ack. A
+                    // mutation that applied but failed to log is acked as
+                    // an error — the client must not rely on state the
+                    // next restart may not replay.
+                    let result = match (result, wal.as_ref()) {
+                        (Ok(id), Some(wal)) => {
+                            let mut w = wal.lock().unwrap();
+                            let logged = match &op {
+                                Mutation::Insert(v) => {
+                                    w.append_vector(id, v).and_then(|()| match &ins_meta {
+                                        Some((tenant, tags))
+                                            if tenant.is_some() || !tags.is_empty() =>
+                                        {
+                                            let tags: Vec<&str> =
+                                                tags.iter().map(|t| t.as_str()).collect();
+                                            w.append_metadata(id, tenant.as_deref(), &tags)
+                                        }
+                                        _ => Ok(()),
+                                    })
+                                }
+                                Mutation::Delete(_) => w.append_tombstone(id),
+                            };
+                            match logged {
+                                Ok(()) => Ok(id),
+                                Err(e) => Err(format!("applied but not logged: {e:#}")),
+                            }
+                        }
+                        (other, _) => other,
+                    };
                     match (&result, is_insert) {
                         (Ok(_), true) => metrics.record_insert(),
                         (Ok(_), false) => metrics.record_delete(),
@@ -770,6 +827,73 @@ mod tests {
         assert_eq!(snap.filtered_queries, 1);
         // The empty bitset is at or below every fallback threshold.
         assert_eq!(snap.filtered_fallbacks, 1);
+    }
+
+    #[test]
+    fn durable_server_logs_every_acked_mutation() {
+        use crate::anns::store::LogRecord;
+        // Every acked mutation must be in the log after shutdown, in ack
+        // order; a rejected mutation must NOT be.
+        let sp = synth::spec("demo-64").unwrap();
+        let ds = synth::generate_counts(sp, 200, 5, 95);
+        let index: crate::coordinator::SharedMutableIndex = Arc::new(RwLock::new(Box::new(
+            BruteForceIndex::build(VectorSet::from_dataset(&ds)),
+        )));
+        let metadata: SharedMetadata = Arc::new(RwLock::new(MetadataStore::new()));
+        let path = std::env::temp_dir()
+            .join(format!("crinn_{}_server_durable.wal", std::process::id()));
+        let wal: SharedLog = Arc::new(Mutex::new(VectorLog::create(&path).unwrap()));
+        let server = Server::start_durable(
+            index,
+            Some(metadata),
+            wal,
+            ServerConfig {
+                workers: 2,
+                queue_depth: 64,
+                batch: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: std::time::Duration::from_millis(1),
+                },
+            },
+        );
+        let h = server.handle();
+        // Sequential (wait for each ack) so the log order is fixed.
+        let inserted = h
+            .insert_with_metadata(
+                ds.query_vec(0).to_vec(),
+                Some("t1".to_string()),
+                vec!["hot".to_string()],
+            )
+            .unwrap()
+            .result
+            .unwrap();
+        let plain = h.insert(ds.query_vec(1).to_vec()).unwrap().result.unwrap();
+        assert_eq!(h.delete(3).unwrap().result, Ok(3));
+        assert!(h.delete(3).unwrap().result.is_err(), "double delete rejected");
+        server.shutdown();
+
+        let (records, _) = VectorLog::recover(&path).unwrap();
+        assert_eq!(
+            records,
+            vec![
+                LogRecord::Vector {
+                    id: inserted,
+                    vector: ds.query_vec(0).to_vec()
+                },
+                LogRecord::Metadata {
+                    id: inserted,
+                    tenant: Some("t1".to_string()),
+                    tags: vec!["hot".to_string()]
+                },
+                // A metadata-free insert logs no metadata record.
+                LogRecord::Vector {
+                    id: plain,
+                    vector: ds.query_vec(1).to_vec()
+                },
+                LogRecord::Tombstone { id: 3 },
+            ]
+        );
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

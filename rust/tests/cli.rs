@@ -15,11 +15,11 @@ fn no_args_prints_usage_and_exits_2() {
     assert_eq!(out.status.code(), Some(2));
     let stderr = String::from_utf8_lossy(&out.stderr);
     assert!(
-        stderr.contains("usage: crinn <datasets|sweep|train|serve|prompt>"),
+        stderr.contains("usage: crinn <datasets|sweep|train|serve|prompt|compact>"),
         "stderr was: {stderr}"
     );
     // Every subcommand README.md §Quickstart documents is listed.
-    for sub in ["datasets", "sweep", "train", "serve", "prompt"] {
+    for sub in ["datasets", "sweep", "train", "serve", "prompt", "compact"] {
         assert!(stderr.contains(sub), "usage is missing `{sub}`");
     }
 }
@@ -101,6 +101,14 @@ fn sweep_results_identical_across_thread_counts() {
     let threaded = run("4");
     assert_eq!(sequential.len(), 2, "expected one row per ef value");
     assert_eq!(sequential, threaded);
+}
+
+#[test]
+fn compact_without_snapshot_exits_2() {
+    let out = crinn_cmd().arg("compact").output().expect("run crinn compact");
+    assert_eq!(out.status.code(), Some(2));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("--snapshot"), "stderr was: {stderr}");
 }
 
 #[test]
