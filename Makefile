@@ -1,6 +1,6 @@
 # Convenience targets. Rust work happens in rust/ (see README.md §Quickstart).
 
-.PHONY: build test test-filtered bench bench-distance bench-filtered artifacts clean
+.PHONY: build test test-filtered test-storage bench bench-distance bench-filtered bench-restart artifacts clean
 
 build:
 	cd rust && cargo build --release
@@ -25,6 +25,18 @@ test-filtered:
 # (EXPERIMENTS.md §Filtered-recall).
 bench-filtered:
 	cd rust && cargo bench --bench filtered_sweep
+
+# Storage-tier suite (the CI storage lane): the paged-snapshot and
+# section-directory groups, the region/segment + mutation-log unit
+# groups, and the crash-safety/restart property tests.
+test-storage:
+	cd rust && CRINN_THREADS=2 cargo test -q persist && CRINN_THREADS=2 cargo test -q store && CRINN_THREADS=2 cargo test -q wal
+
+# Cold-start time + RSS, heap vs mmap serving -> reports/restart.csv
+# (EXPERIMENTS.md §Restart). CRINN_BENCH_RESTART_N=100000,1000000 opts
+# into the 1M row.
+bench-restart:
+	cd rust && cargo bench --bench restart
 
 # Lower the L2 JAX graphs + L1 Pallas kernels to HLO text artifacts
 # consumed by rust/src/runtime. Needs JAX; see DESIGN.md §Hardware-Adaptation.

@@ -1,0 +1,166 @@
+//! Cold-start bench for the disk-resident storage tier (DESIGN.md
+//! §Storage-Tier): how fast does a saved index come back up, and at what
+//! resident-memory cost, heap load vs mmap serving?
+//!
+//! For each scale, builds a GLASS index, saves a v3 snapshot, then
+//! measures per serving tier:
+//!
+//! * `load_s` — snapshot open → index ready;
+//! * `first_query_s` — one query through the freshly loaded index (for
+//!   mmap this includes the first page faults on the touched sections);
+//! * `queries_s` — the full query set, batched;
+//! * `rss_delta_kb` — VmRSS growth across load + queries (Linux
+//!   `/proc/self/status`; 0 elsewhere);
+//! * a `replay` row — restart with a 200-record mutation log tail, and a
+//!   `compact` row — folding that log into a fresh snapshot.
+//!
+//! Emits `reports/restart.csv`. Scale override: `CRINN_BENCH_RESTART_N`
+//! (comma list, e.g. `100000,1000000` — the 1M row is opt-in; the
+//! default 100k keeps `make bench-restart` minutes, not tens of them).
+
+use crinn::anns::glass::GlassIndex;
+use crinn::anns::persist::{load_glass, load_glass_mmap, save_glass};
+use crinn::anns::store::{compact_glass, restore_glass, VectorLog};
+use crinn::anns::{AnnIndex, MutableAnnIndex, VectorSet};
+use crinn::dataset::synth;
+use crinn::eval::harness;
+use crinn::eval::report;
+use crinn::variants::VariantConfig;
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// VmRSS in kB from /proc/self/status (0 when unavailable).
+fn rss_kb() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    status
+        .lines()
+        .find_map(|l| l.strip_prefix("VmRSS:"))
+        .and_then(|l| l.trim().trim_end_matches("kB").trim().parse().ok())
+        .unwrap_or(0)
+}
+
+fn scales() -> Vec<usize> {
+    match std::env::var("CRINN_BENCH_RESTART_N") {
+        Ok(s) => s
+            .split(',')
+            .filter(|t| !t.trim().is_empty())
+            .map(|t| {
+                t.trim()
+                    .parse()
+                    .unwrap_or_else(|_| panic!("CRINN_BENCH_RESTART_N: bad integer {t:?}"))
+            })
+            .collect(),
+        Err(_) => vec![100_000],
+    }
+}
+
+fn main() -> crinn::Result<()> {
+    let mut csv = String::from(
+        "n,tier,snapshot_bytes,load_s,first_query_s,queries_s,rss_delta_kb,extra\n",
+    );
+    for n in scales() {
+        let nq = 200;
+        eprintln!("== restart bench: n={n}, {nq} queries ==");
+        let ds = synth::generate_counts(synth::spec("demo-64").unwrap(), n, nq, 42);
+        let queries: Vec<&[f32]> = (0..ds.n_queries()).map(|qi| ds.query_vec(qi)).collect();
+
+        let t = Instant::now();
+        let idx = GlassIndex::build(VectorSet::from_dataset(&ds), VariantConfig::crinn_full(), 42);
+        eprintln!("  built in {:.2}s", t.elapsed().as_secs_f64());
+        let snap = std::env::temp_dir().join(format!("crinn_bench_restart_{n}.idx"));
+        let t = Instant::now();
+        save_glass(&idx, &snap)?;
+        let snapshot_bytes = std::fs::metadata(&snap)?.len();
+        eprintln!(
+            "  saved {snapshot_bytes} bytes in {:.2}s",
+            t.elapsed().as_secs_f64()
+        );
+        drop(idx);
+
+        for tier in ["heap", "mmap"] {
+            let rss0 = rss_kb();
+            let t = Instant::now();
+            let loaded = match tier {
+                "heap" => load_glass(&snap)?,
+                _ => load_glass_mmap(&snap)?,
+            };
+            let load_s = t.elapsed().as_secs_f64();
+            let t = Instant::now();
+            let first = loaded.search_with_dists(queries[0], 10, 64);
+            let first_query_s = t.elapsed().as_secs_f64();
+            assert_eq!(first.len(), 10);
+            let t = Instant::now();
+            let results = loaded.search_batch(&queries, 10, 64);
+            let queries_s = t.elapsed().as_secs_f64();
+            assert_eq!(results.len(), queries.len());
+            let rss_delta = rss_kb().saturating_sub(rss0);
+            eprintln!(
+                "  [{tier}] load={load_s:.4}s first_query={first_query_s:.5}s \
+                 {nq}_queries={queries_s:.3}s rss_delta={rss_delta}kB"
+            );
+            let _ = writeln!(
+                csv,
+                "{n},{tier},{snapshot_bytes},{load_s:.6},{first_query_s:.6},{queries_s:.6},{rss_delta},"
+            );
+            drop(loaded);
+        }
+
+        // Restart with a log tail: 100 inserts + 100 deletes to replay.
+        let log_path = std::env::temp_dir().join(format!("crinn_bench_restart_{n}.wal"));
+        {
+            let mut live = load_glass(&snap)?;
+            let mut log = VectorLog::create(&log_path)?;
+            for qi in 0..100 {
+                let id = live.insert(ds.query_vec(qi % nq))?;
+                log.append_vector(id, ds.query_vec(qi % nq))?;
+            }
+            for id in 0..100u32 {
+                live.delete(id * 7)?;
+                log.append_tombstone(id * 7)?;
+            }
+        }
+        for tier in ["heap", "mmap"] {
+            let rss0 = rss_kb();
+            let t = Instant::now();
+            let restored = restore_glass(&snap, &log_path, tier == "mmap")?;
+            let load_s = t.elapsed().as_secs_f64();
+            let rss_delta = rss_kb().saturating_sub(rss0);
+            eprintln!(
+                "  [replay-{tier}] restore+replay({})={load_s:.4}s rss_delta={rss_delta}kB",
+                restored.replayed
+            );
+            let _ = writeln!(
+                csv,
+                "{n},replay-{tier},{snapshot_bytes},{load_s:.6},,,{rss_delta},replayed={}",
+                restored.replayed
+            );
+            if tier == "mmap" {
+                // Compaction timing: fold the log into a fresh snapshot.
+                let mut r = restored;
+                let compact_to = std::env::temp_dir().join(format!("crinn_bench_compact_{n}.idx"));
+                let t = Instant::now();
+                let stats = compact_glass(&mut r.index, &r.metadata, &mut r.log, &compact_to)?;
+                let compact_s = t.elapsed().as_secs_f64();
+                eprintln!(
+                    "  [compact] {compact_s:.3}s dropped={} truncated={}B",
+                    stats.dropped, stats.log_bytes_truncated
+                );
+                let _ = writeln!(
+                    csv,
+                    "{n},compact,{},{compact_s:.6},,,,dropped={}",
+                    std::fs::metadata(&compact_to)?.len(),
+                    stats.dropped
+                );
+                std::fs::remove_file(&compact_to).ok();
+            }
+        }
+        std::fs::remove_file(&snap).ok();
+        std::fs::remove_file(&log_path).ok();
+    }
+    let path = harness::reports_dir().join("restart.csv");
+    report::save(&path, &csv)?;
+    eprintln!("wrote {}", path.display());
+    Ok(())
+}
