@@ -1,6 +1,6 @@
 # Convenience targets. Rust work happens in rust/ (see README.md §Quickstart).
 
-.PHONY: build test test-filtered test-storage bench bench-distance bench-filtered bench-restart artifacts clean
+.PHONY: build test test-filtered test-storage test-tune tune-smoke bench bench-distance bench-filtered bench-restart artifacts clean
 
 build:
 	cd rust && cargo build --release
@@ -31,6 +31,22 @@ bench-filtered:
 # groups, and the crash-safety/restart property tests.
 test-storage:
 	cd rust && CRINN_THREADS=2 cargo test -q persist && CRINN_THREADS=2 cargo test -q store && CRINN_THREADS=2 cargo test -q wal
+
+# Self-tuning suite (the CI tune lane): the tuning-space round-trip,
+# oracle, Lagrangian-search, and hostile-artifact groups.
+test-tune:
+	cd rust && CRINN_THREADS=2 cargo test -q tune && CRINN_THREADS=2 cargo test -q variants
+
+# End-to-end self-tuning smoke: `crinn tune` on a tiny dataset writes a
+# checksummed artifact, `crinn serve --tuned` loads it and serves with
+# its knobs. Engine-free (--method lagrange), a few seconds total.
+tune-smoke:
+	cd rust && cargo build --release
+	cd rust && CRINN_THREADS=2 ./target/release/crinn tune --dataset demo-64 \
+		--n 2000 --queries 40 --evals 8 --floor 0.8 --out /tmp/crinn-tune-smoke.crinn
+	cd rust && CRINN_THREADS=2 ./target/release/crinn serve --dataset demo-64 \
+		--n 2000 --queries 40 --requests 200 --tuned /tmp/crinn-tune-smoke.crinn
+	rm -f /tmp/crinn-tune-smoke.crinn
 
 # Cold-start time + RSS, heap vs mmap serving -> reports/restart.csv
 # (EXPERIMENTS.md §Restart). CRINN_BENCH_RESTART_N=100000,1000000 opts

@@ -34,6 +34,10 @@ pub(crate) mod reader;
 pub(crate) mod sections;
 pub(crate) mod writer;
 
+// The section checksum doubles as the tuned-config artifact's signature
+// (`variants::artifact`) so every on-disk format shares one FNV-1a-64.
+pub(crate) use sections::checksum;
+
 use crate::anns::metadata::MetadataStore;
 use crate::bail;
 use crate::util::error::{Context, Error, Result};

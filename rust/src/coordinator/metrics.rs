@@ -28,6 +28,11 @@ pub struct Metrics {
     /// indexes; per matching shard, for routers) by the exact fallback
     /// scan rather than the beam.
     pub filtered_fallbacks: AtomicU64,
+    /// Gauge: FNV-1a-64 payload hash of the tuned-config artifact this
+    /// server was sized from (`crinn serve --tuned`) — 0 when serving an
+    /// untuned default configuration. Lets a fleet check which tuning
+    /// generation each process runs.
+    pub tuned_config_hash: AtomicU64,
     /// Reservoir of recent request latencies (seconds).
     latencies: Mutex<Vec<f64>>,
 }
@@ -97,6 +102,12 @@ impl Metrics {
         self.live_points.store(live, Ordering::Relaxed);
     }
 
+    /// Record which tuned-config artifact (by payload hash) shaped this
+    /// server's configuration.
+    pub fn set_tuned_config_hash(&self, hash: u64) {
+        self.tuned_config_hash.store(hash, Ordering::Relaxed);
+    }
+
     /// Snapshot (requests, batches, rejected, mutations, latency stats).
     pub fn snapshot(&self) -> MetricsSnapshot {
         let lat = self.latencies.lock().unwrap().clone();
@@ -111,6 +122,7 @@ impl Metrics {
             live_points: self.live_points.load(Ordering::Relaxed),
             filtered_queries: self.filtered_queries.load(Ordering::Relaxed),
             filtered_fallbacks: self.filtered_fallbacks.load(Ordering::Relaxed),
+            tuned_config_hash: self.tuned_config_hash.load(Ordering::Relaxed),
             latency: crate::util::bench::Stats::from_samples(lat),
         }
     }
@@ -129,6 +141,7 @@ pub struct MetricsSnapshot {
     pub live_points: u64,
     pub filtered_queries: u64,
     pub filtered_fallbacks: u64,
+    pub tuned_config_hash: u64,
     pub latency: crate::util::bench::Stats,
 }
 
@@ -182,6 +195,15 @@ mod tests {
         assert_eq!(s.deletes, 1);
         assert_eq!(s.mutation_errors, 1);
         assert_eq!(s.live_points, 42);
+    }
+
+    #[test]
+    fn tuned_config_hash_gauge() {
+        let m = Metrics::new();
+        assert_eq!(m.snapshot().tuned_config_hash, 0, "untuned serving reads 0");
+        m.set_tuned_config_hash(0xDEAD_BEEF_0000_0001);
+        m.set_tuned_config_hash(0xDEAD_BEEF_0000_0002); // gauge overwrites
+        assert_eq!(m.snapshot().tuned_config_hash, 0xDEAD_BEEF_0000_0002);
     }
 
     #[test]

@@ -118,6 +118,27 @@ impl Default for ServerConfig {
     }
 }
 
+impl ServerConfig {
+    /// Size the server from a tuned-config artifact's serving knobs:
+    /// worker count from `serving.threads` (0 = auto, the ambient
+    /// [`crate::util::threadpool::effective_threads`]) and the batcher's
+    /// max batch from `serving.batch`. Everything else keeps its default.
+    pub fn from_tuned(artifact: &crate::variants::TunedArtifact) -> ServerConfig {
+        let serving = &artifact.config.serving;
+        ServerConfig {
+            workers: match serving.threads {
+                0 => crate::util::threadpool::effective_threads(),
+                t => t,
+            },
+            batch: BatchPolicy {
+                max_batch: serving.batch.max(1),
+                ..BatchPolicy::default()
+            },
+            ..ServerConfig::default()
+        }
+    }
+}
+
 /// The index a worker serves from: read-only, or mutable behind a lock.
 #[derive(Clone)]
 enum Backend {

@@ -10,23 +10,34 @@
 //!    Table-1 prompt verbatim ([`prompt`]) and encodes the same content as
 //!    the policy features ([`policy`]).
 //! 3. **Speed reward** (§3.3): candidates are *actually executed* — an ef
-//!    sweep on the training dataset, filtered to recall ∈ [0.85, 0.95],
-//!    area under the QPS curve ([`reward`]).
+//!    sweep on the training dataset, filtered to the
+//!    [`RewardSpec::DEFAULT_WINDOW`] recall window, area under the QPS
+//!    curve ([`reward`]), served to both optimizers through the
+//!    [`oracle`] seam.
 //! 4. **GRPO** (§3.4, Eq. 2–3): G completions per prompt, group-normalized
 //!    advantages with smoothing, clipped surrogate + KL against the
 //!    reference policy — the update itself runs as the AOT `grpo_step`
 //!    artifact through [`crate::runtime::Engine`] ([`grpo`], [`trainer`]).
+//!
+//! Alongside the RL loop, [`tune`] implements `crinn tune`: a
+//! Lagrangian-relaxation derivative-free baseline over the same
+//! [`crate::variants::TuningSpace`] and the same [`oracle`], emitting a
+//! checksummed tuned-config artifact that `crinn serve --tuned` loads.
 //!
 //! The substitution of the paper's code-writing LLM by a policy over the
 //! structured variant space is documented in DESIGN.md §2.
 
 pub mod database;
 pub mod grpo;
+pub mod oracle;
 pub mod policy;
 pub mod prompt;
 pub mod reward;
 pub mod trainer;
+pub mod tune;
 
 pub use database::{CodeDatabase, Exemplar};
+pub use oracle::{OracleReport, RewardOracle, SweepOracle, SyntheticOracle};
 pub use reward::RewardSpec;
 pub use trainer::{CrinnTrainer, TrainerOptions};
+pub use tune::{finalize, split_queries, tune_lagrange, TuneOptions, TuneResult};

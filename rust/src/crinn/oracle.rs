@@ -1,0 +1,348 @@
+//! The reward-oracle seam: one interface between "a candidate
+//! configuration" and "its §3.3 speed reward".
+//!
+//! Both optimizers — the GRPO trainer and the Lagrangian-relaxation
+//! baseline in [`crate::crinn::tune`] — consume a [`RewardOracle`], so
+//! they compare on *exactly* the same measurement protocol. Two
+//! implementations:
+//!
+//! * [`SweepOracle`] — the real thing: builds the index a
+//!   [`TunedConfig`] describes (reusing a cached GLASS graph when only
+//!   runtime knobs changed, the §3.5 granularity), sweeps the
+//!   deterministic `ef` grid, integrates the recall-windowed QPS AUC;
+//! * [`SyntheticOracle`] — a closed-form pseudo-benchmark (pure `f64`
+//!   arithmetic, no clocks, no threads) used by determinism tests and
+//!   `--oracle synthetic` smoke runs: two identical tune runs produce
+//!   bit-identical artifacts because nothing in the loop measures time.
+
+use crate::anns::glass::GlassIndex;
+use crate::anns::VectorSet;
+use crate::crinn::reward::{window_auc, RewardSpec};
+use crate::dataset::Dataset;
+use crate::eval::sweep::{measure_point, measure_point_tuned, CurvePoint};
+use crate::variants::{build_index, IndexFamily, TunedConfig};
+
+/// What one oracle evaluation returns: the recall-windowed QPS AUC plus
+/// the full measured curve (the tuner derives the serving `ef` from it).
+#[derive(Clone, Debug)]
+pub struct OracleReport {
+    /// Window AUC per the oracle's [`RewardSpec`].
+    pub auc: f64,
+    /// One point per grid `ef`, in grid order.
+    pub points: Vec<CurvePoint>,
+}
+
+impl OracleReport {
+    /// Highest recall the curve reaches (0 for an empty curve).
+    pub fn best_recall(&self) -> f64 {
+        self.points.iter().map(|p| p.recall).fold(0.0, f64::max)
+    }
+
+    /// Smallest grid `ef` whose measured recall meets `floor` — the
+    /// operating point a tuned artifact pins for serving. `None` when the
+    /// whole curve is under the floor.
+    pub fn operating_ef(&self, floor: f64) -> Option<usize> {
+        self.points
+            .iter()
+            .filter(|p| p.recall >= floor)
+            .map(|p| p.ef)
+            .min()
+    }
+}
+
+/// Maps a candidate [`TunedConfig`] to its speed reward. Implementations
+/// must be deterministic in everything except wall-clock timing — same
+/// config, same recall curve, bit for bit.
+pub trait RewardOracle {
+    /// The sweep settings (window, `k`, `ef` grid, build seed).
+    fn spec(&self) -> &RewardSpec;
+    /// Short name for logs and artifact provenance.
+    fn name(&self) -> &str;
+    /// Build/evaluate `cfg` and return its reward report.
+    fn evaluate(&mut self, cfg: &TunedConfig) -> OracleReport;
+}
+
+/// The real oracle: index builds + timed sweeps on a held dataset.
+pub struct SweepOracle {
+    ds: Dataset,
+    spec: RewardSpec,
+    /// `false` (trainer compat): per-query protocol under the ambient
+    /// `CRINN_BATCH`/`CRINN_THREADS` — byte-compatible with what
+    /// `crinn train` always measured. `true` (tune pipeline): measure
+    /// with the **candidate's** serving knobs (batch size, threads), so
+    /// those dimensions get a reward gradient.
+    measure_serving: bool,
+    /// Evaluations performed (for provenance + test assertions).
+    pub evals: usize,
+    /// §3.5 prebuilt-graph reuse: the last GLASS build, keyed by its
+    /// construction knobs. Candidates that only move runtime knobs swap
+    /// them in via `set_runtime_knobs` instead of rebuilding.
+    cache: Option<(crate::variants::ConstructionKnobs, GlassIndex)>,
+}
+
+impl SweepOracle {
+    /// `ds` must carry ground truth (asserted).
+    pub fn new(ds: Dataset, spec: RewardSpec) -> Self {
+        assert!(!ds.gt.is_empty(), "oracle dataset needs ground truth");
+        SweepOracle {
+            ds,
+            spec,
+            measure_serving: false,
+            evals: 0,
+            cache: None,
+        }
+    }
+
+    /// Switch to the tune-pipeline protocol: score each candidate under
+    /// its own serving knobs (batch, threads) instead of the ambient env.
+    pub fn with_serving_measurement(mut self) -> Self {
+        self.measure_serving = true;
+        self
+    }
+
+    /// The dataset this oracle measures on.
+    pub fn dataset(&self) -> &Dataset {
+        &self.ds
+    }
+
+    fn sweep(&self, index: &dyn crate::anns::AnnIndex, cfg: &TunedConfig) -> Vec<CurvePoint> {
+        self.spec
+            .ef_grid
+            .iter()
+            .map(|&ef| {
+                if self.measure_serving {
+                    let threads = match cfg.serving.threads {
+                        0 => None, // auto: ambient CRINN_THREADS
+                        t => Some(t),
+                    };
+                    measure_point_tuned(
+                        index,
+                        &self.ds,
+                        self.spec.k,
+                        ef,
+                        Some(cfg.serving.batch.max(1)),
+                        threads,
+                    )
+                } else {
+                    measure_point(index, &self.ds, self.spec.k, ef)
+                }
+            })
+            .collect()
+    }
+}
+
+impl RewardOracle for SweepOracle {
+    fn spec(&self) -> &RewardSpec {
+        &self.spec
+    }
+
+    fn name(&self) -> &str {
+        "sweep"
+    }
+
+    fn evaluate(&mut self, cfg: &TunedConfig) -> OracleReport {
+        self.evals += 1;
+        let points = if cfg.family == IndexFamily::Glass {
+            // Taken out of `self` so the cached index can be borrowed
+            // mutably while `sweep` borrows the rest of the oracle.
+            let mut cache = self.cache.take();
+            let hit = matches!(&cache, Some((knobs, _)) if *knobs == cfg.variant.construction);
+            if !hit {
+                let idx = GlassIndex::build(
+                    VectorSet::from_dataset(&self.ds),
+                    cfg.variant.clone(),
+                    self.spec.seed,
+                );
+                cache = Some((cfg.variant.construction.clone(), idx));
+            }
+            let (_, idx) = cache.as_mut().expect("cache just filled");
+            idx.set_runtime_knobs(&cfg.variant);
+            let points = self.sweep(&*idx, cfg);
+            self.cache = cache;
+            points
+        } else {
+            // Non-GLASS families have no runtime-knob swap; rebuild. Their
+            // tuning spaces are small enough that this stays cheap.
+            let idx = build_index(cfg, VectorSet::from_dataset(&self.ds), self.spec.seed);
+            self.sweep(idx.as_ref(), cfg)
+        };
+        OracleReport {
+            auc: window_auc(&points, self.spec.recall_lo, self.spec.recall_hi),
+            points,
+        }
+    }
+}
+
+/// A clock-free pseudo-benchmark: recall and QPS are closed-form
+/// functions of the knobs, shaped like a real curve (recall saturates in
+/// `ef`, QPS decays in `ef`, quality knobs trade speed for recall). Used
+/// where bit-for-bit reproducibility matters more than realism.
+pub struct SyntheticOracle {
+    spec: RewardSpec,
+    /// Evaluations performed.
+    pub evals: usize,
+}
+
+impl SyntheticOracle {
+    pub fn new(spec: RewardSpec) -> Self {
+        SyntheticOracle { spec, evals: 0 }
+    }
+}
+
+impl RewardOracle for SyntheticOracle {
+    fn spec(&self) -> &RewardSpec {
+        &self.spec
+    }
+
+    fn name(&self) -> &str {
+        "synthetic"
+    }
+
+    fn evaluate(&mut self, cfg: &TunedConfig) -> OracleReport {
+        self.evals += 1;
+        // Graph quality: how fast recall saturates in `ef`. Work: per-query
+        // cost multiplier. Both depend on family-appropriate knobs so the
+        // search has a real (if artificial) landscape to climb.
+        let (quality, work) = match cfg.family {
+            IndexFamily::Ivf => {
+                let nlist = cfg.ivf.nlist.max(8) as f64;
+                ((nlist.ln() / 8.0).min(1.2), 1.0 + nlist / 1024.0)
+            }
+            _ => {
+                let m = cfg.variant.construction.m as f64;
+                let entries = cfg.variant.construction.num_entry_points as f64;
+                ((m / 32.0 + entries / 18.0).min(1.5), 1.0 + m / 64.0)
+            }
+        };
+        let mut speed = 1.0;
+        if cfg.variant.refine.quantized_primary {
+            speed *= 1.3;
+        }
+        if cfg.variant.search.edge_batch {
+            speed *= 1.1;
+        }
+        if cfg.family == IndexFamily::Ivf && cfg.ivf.quantized_scan {
+            speed *= 1.25;
+        }
+        speed *= 1.0 + (cfg.serving.batch.max(1) as f64).ln() / 10.0;
+        speed *= (cfg.serving.threads.max(1) as f64).sqrt();
+        let points: Vec<CurvePoint> = self
+            .spec
+            .ef_grid
+            .iter()
+            .map(|&ef| {
+                let e = ef as f64;
+                let recall = 1.0 - (-e * quality / 32.0).exp();
+                let qps = 1e5 * speed / (work * (e + 16.0));
+                CurvePoint {
+                    ef,
+                    recall,
+                    qps,
+                    mean_latency_s: 1.0 / qps,
+                    p99_latency_s: 1.0 / qps,
+                }
+            })
+            .collect();
+        OracleReport {
+            auc: window_auc(&points, self.spec.recall_lo, self.spec.recall_hi),
+            points,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth;
+
+    fn tiny_ds() -> Dataset {
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 500, 20, 77);
+        ds.compute_ground_truth(10);
+        ds
+    }
+
+    fn small_spec() -> RewardSpec {
+        RewardSpec {
+            ef_grid: vec![16, 32, 64, 128],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn report_helpers() {
+        let mk = |ef, recall| CurvePoint {
+            ef,
+            recall,
+            qps: 100.0,
+            mean_latency_s: 0.01,
+            p99_latency_s: 0.01,
+        };
+        let rep = OracleReport {
+            auc: 1.0,
+            points: vec![mk(16, 0.6), mk(32, 0.88), mk(64, 0.97)],
+        };
+        assert_eq!(rep.best_recall(), 0.97);
+        assert_eq!(rep.operating_ef(0.85), Some(32));
+        assert_eq!(rep.operating_ef(0.9), Some(64));
+        assert_eq!(rep.operating_ef(0.999), None);
+    }
+
+    #[test]
+    fn synthetic_oracle_is_bitwise_deterministic_and_knob_sensitive() {
+        let mut o = SyntheticOracle::new(small_spec());
+        let base = TunedConfig::default();
+        let a = o.evaluate(&base);
+        let b = o.evaluate(&base);
+        assert_eq!(a.auc.to_bits(), b.auc.to_bits());
+        for (pa, pb) in a.points.iter().zip(&b.points) {
+            assert_eq!(pa.recall.to_bits(), pb.recall.to_bits());
+            assert_eq!(pa.qps.to_bits(), pb.qps.to_bits());
+        }
+        assert_eq!(o.evals, 2);
+        // More entry points → recall saturates faster.
+        let mut rich = base.clone();
+        rich.variant.construction.num_entry_points = 9;
+        assert!(o.evaluate(&rich).best_recall() > a.best_recall());
+        // Bigger batch → faster curve.
+        let mut batched = base.clone();
+        batched.serving.batch = 128;
+        assert!(o.evaluate(&batched).points[0].qps > a.points[0].qps);
+    }
+
+    #[test]
+    fn sweep_oracle_reuses_glass_graph_across_runtime_knob_changes() {
+        let mut o = SweepOracle::new(tiny_ds(), small_spec());
+        let base = TunedConfig::default();
+        let r1 = o.evaluate(&base);
+        assert_eq!(r1.points.len(), 4);
+        assert!(r1.best_recall() > 0.5, "{:?}", r1.points);
+        // Runtime-only change: cache must survive (same construction knobs).
+        let mut runtime = base.clone();
+        runtime.variant.search.entry_tiers = 2;
+        o.evaluate(&runtime);
+        let cached = o.cache.as_ref().expect("cache populated");
+        assert_eq!(cached.0, base.variant.construction);
+        // Construction change: cache key must follow.
+        let mut rebuilt = base.clone();
+        rebuilt.variant.construction.m = 12;
+        o.evaluate(&rebuilt);
+        assert_eq!(
+            o.cache.as_ref().unwrap().0.m,
+            12,
+            "construction change must rebuild the cached graph"
+        );
+        assert_eq!(o.evals, 3);
+    }
+
+    #[test]
+    fn sweep_oracle_handles_non_glass_families() {
+        let mut o = SweepOracle::new(tiny_ds(), small_spec()).with_serving_measurement();
+        for algo in ["hnsw", "vearch-ivf"] {
+            let cfg = TunedConfig::from_algo_name(algo).unwrap();
+            let rep = o.evaluate(&cfg);
+            assert_eq!(rep.points.len(), 4, "{algo}");
+            assert!(rep.best_recall() > 0.5, "{algo}: {:?}", rep.points);
+        }
+    }
+}

@@ -25,11 +25,24 @@ pub struct RewardSpec {
     pub seed: u64,
 }
 
+impl RewardSpec {
+    /// The paper's §3.3 recall window `[0.85, 0.95]` — the single source
+    /// for every component that reasons about "the window" (trainer,
+    /// tuner, docs, CLI defaults).
+    pub const DEFAULT_WINDOW: (f64, f64) = (0.85, 0.95);
+
+    /// [`RewardSpec::DEFAULT_WINDOW`] as `(recall_lo, recall_hi)`.
+    pub fn default_window() -> (f64, f64) {
+        Self::DEFAULT_WINDOW
+    }
+}
+
 impl Default for RewardSpec {
     fn default() -> Self {
+        let (recall_lo, recall_hi) = RewardSpec::DEFAULT_WINDOW;
         RewardSpec {
-            recall_lo: 0.85,
-            recall_hi: 0.95,
+            recall_lo,
+            recall_hi,
             k: 10,
             ef_grid: vec![12, 16, 24, 32, 48, 64, 96, 128],
             seed: 7,

@@ -15,13 +15,14 @@
 
 use crate::crinn::database::{CodeDatabase, Exemplar};
 use crate::crinn::grpo::{GrpoHyper, GrpoOptimizer};
+use crate::crinn::oracle::{RewardOracle, SweepOracle};
 use crate::crinn::policy;
 use crate::crinn::reward::{self, RewardSpec};
 use crate::dataset::Dataset;
 use crate::runtime::Engine;
-use crate::util::rng::Rng;
-use crate::variants::{decode_action, Module, VariantConfig};
 use crate::util::error::Result;
+use crate::util::rng::Rng;
+use crate::variants::{decode_action, Module, TunedConfig, VariantConfig};
 
 /// Trainer options.
 #[derive(Clone, Debug)]
@@ -79,23 +80,48 @@ pub struct TrainResult {
 /// The CRINN trainer.
 pub struct CrinnTrainer<'e> {
     engine: &'e Engine,
-    ds: Dataset,
+    /// The reward seam (§3.3): every candidate is scored here. The GRPO
+    /// trainer and the `crinn tune` baseline share this interface, so
+    /// their rewards are measured by exactly the same protocol.
+    oracle: Box<dyn RewardOracle>,
+    /// Evaluation-target name for log lines (dataset name, or the
+    /// oracle's name for injected oracles).
+    target: String,
     opts: TrainerOptions,
     pub db: CodeDatabase,
 }
 
 impl<'e> CrinnTrainer<'e> {
-    /// `ds` must carry ground truth (the trainer asserts).
+    /// `ds` must carry ground truth (the oracle asserts). Wraps a
+    /// [`SweepOracle`] in trainer-compat mode: per-query protocol under
+    /// the ambient environment, the §3.5 prebuilt-graph reuse keyed on
+    /// construction knobs — identical measurements to the pre-oracle
+    /// trainer.
     pub fn new(engine: &'e Engine, ds: Dataset, opts: TrainerOptions) -> Self {
-        assert!(!ds.gt.is_empty(), "training dataset needs ground truth");
+        let target = ds.name.clone();
+        let oracle = Box::new(SweepOracle::new(ds, opts.reward.clone()));
+        let mut t = Self::with_oracle(engine, oracle, opts);
+        t.target = target;
+        t
+    }
+
+    /// Train against an injected oracle (deterministic smoke runs use
+    /// [`crate::crinn::SyntheticOracle`]).
+    pub fn with_oracle(
+        engine: &'e Engine,
+        oracle: Box<dyn RewardOracle>,
+        opts: TrainerOptions,
+    ) -> Self {
         assert_eq!(
             engine.manifest.n_knobs,
             crate::variants::N_KNOBS,
             "artifact/action-space mismatch — re-run `make artifacts`"
         );
+        let target = oracle.name().to_string();
         CrinnTrainer {
             engine,
-            ds,
+            oracle,
+            target,
             opts,
             db: CodeDatabase::new(),
         }
@@ -108,22 +134,19 @@ impl<'e> CrinnTrainer<'e> {
         let m = self.engine.manifest.clone();
 
         // Baseline: the GLASS starting point (§3.5), score := 1.0.
-        let (baseline_auc, _) = reward::evaluate_config(
-            &self.ds,
-            &VariantConfig::glass_baseline(),
-            Module::Construction,
-            None,
-            &self.opts.reward,
-        );
+        let baseline_auc = self
+            .oracle
+            .evaluate(&TunedConfig::from_variant(VariantConfig::glass_baseline()))
+            .auc;
         crate::ensure!(
             baseline_auc > 0.0,
             "baseline never reaches the reward window on {}; enlarge ef grid",
-            self.ds.name
+            self.target
         );
         if self.opts.verbose {
             eprintln!(
                 "[crinn] baseline AUC on {}: {baseline_auc:.1} (score 1.0)",
-                self.ds.name
+                self.target
             );
         }
         for module in Module::ALL {
@@ -142,17 +165,9 @@ impl<'e> CrinnTrainer<'e> {
         let mut global_iter = 0usize;
 
         for module in Module::ALL {
-            // Graph built with the best construction knobs so far; reused
-            // for search/refinement candidates (§3.5 granularity).
-            let mut prebuilt = if module != Module::Construction {
-                Some(crate::anns::glass::GlassIndex::build(
-                    crate::anns::VectorSet::from_dataset(&self.ds),
-                    best_config.clone(),
-                    self.opts.reward.seed,
-                ))
-            } else {
-                None
-            };
+            // §3.5 granularity lives in the oracle now: search/refinement
+            // candidates keep the best construction knobs, so the oracle's
+            // construction-keyed graph cache reuses one build per module.
             let mut best_module_score = self
                 .db
                 .best(module)
@@ -190,13 +205,10 @@ impl<'e> CrinnTrainer<'e> {
                         .map(|a| grp.actions[g * m.n_knobs + a] as f64)
                         .collect();
                     let cfg = decode_action(&best_config, module, &action);
-                    let (auc, _) = reward::evaluate_config(
-                        &self.ds,
-                        &cfg,
-                        module,
-                        prebuilt.as_mut(),
-                        &self.opts.reward,
-                    );
+                    let auc = self
+                        .oracle
+                        .evaluate(&TunedConfig::from_variant(cfg.clone()))
+                        .auc;
                     let score = auc / baseline_auc;
                     rewards.push(reward::smooth(score));
                     self.db.insert(Exemplar {
@@ -238,8 +250,6 @@ impl<'e> CrinnTrainer<'e> {
             }
             module_best.push((module, best_module_score));
             opt.refresh_reference();
-            // Rebuild prebuilt index if construction knobs were adopted.
-            drop(prebuilt.take());
         }
 
         Ok(TrainResult {

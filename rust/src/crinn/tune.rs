@@ -1,0 +1,390 @@
+//! `crinn tune`: self-optimization without the RL policy.
+//!
+//! A Lagrangian-relaxation derivative-free search (after the constrained
+//! auto-configuration literature): maximize the §3.3 recall-windowed QPS
+//! AUC subject to "measured recall@k ≥ floor", relaxing the constraint
+//! into the objective with a multiplier λ that grows (dual ascent)
+//! whenever a candidate lands infeasible. The search runs in the same
+//! `[-1, 1]` action coordinates the GRPO policy emits — both optimizers
+//! move through [`TuningSpace`] and score through the same
+//! [`RewardOracle`], so `--method lagrange` vs `--method grpo` is an
+//! apples-to-apples comparison.
+//!
+//! The pipeline (see `cmd_tune` in `main.rs`): split queries into
+//! train/held-out halves, search on the train half, then [`finalize`] on
+//! the held-out half — pick the smallest grid `ef` meeting the recall
+//! floor, re-measure there, and emit a checksummed
+//! [`TunedArtifact`](crate::variants::TunedArtifact) only if the
+//! held-out recall clears the floor.
+
+use crate::crinn::oracle::RewardOracle;
+use crate::dataset::Dataset;
+use crate::eval::sweep::CurvePoint;
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+use crate::variants::{TunedArtifact, TunedConfig, TuningSpace};
+
+/// Search settings.
+#[derive(Clone, Debug)]
+pub struct TuneOptions {
+    /// Total oracle evaluations (including the baseline at eval 0).
+    pub evals: usize,
+    /// Seeds the candidate sampler (and is recorded in the artifact).
+    pub seed: u64,
+    /// Constraint: measured recall@k must reach this on held-out queries.
+    pub recall_floor: f64,
+    pub verbose: bool,
+}
+
+impl Default for TuneOptions {
+    fn default() -> Self {
+        TuneOptions {
+            evals: 32,
+            seed: 17,
+            recall_floor: 0.9,
+            verbose: true,
+        }
+    }
+}
+
+/// One search-step record, for logs and EXPERIMENTS.md curves.
+#[derive(Clone, Debug)]
+pub struct TuneRecord {
+    pub eval: usize,
+    pub auc: f64,
+    pub recall: f64,
+    pub feasible: bool,
+    /// Relaxed objective at evaluation time (λ moves during the run).
+    pub score: f64,
+}
+
+/// Search outcome (pre-finalize: serving `ef` not yet pinned).
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    pub best: TunedConfig,
+    /// Train-split window AUC of `best`.
+    pub best_auc: f64,
+    /// Best recall `best`'s train-split curve reaches.
+    pub best_recall: f64,
+    /// `best`'s full train-split curve.
+    pub best_points: Vec<CurvePoint>,
+    /// Oracle evaluations actually spent.
+    pub evals: usize,
+    pub history: Vec<TuneRecord>,
+}
+
+struct Incumbent {
+    action: Vec<f64>,
+    cfg: TunedConfig,
+    auc: f64,
+    recall: f64,
+    points: Vec<CurvePoint>,
+    feasible: bool,
+    score: f64,
+}
+
+/// Run the Lagrangian-relaxation search: half the budget on uniform
+/// random exploration, the rest on coordinate descent around the
+/// incumbent with a shrinking step. Deterministic per
+/// `(space, oracle, opts.seed)` — everything random flows from one
+/// [`Rng`].
+pub fn tune_lagrange(
+    space: &TuningSpace,
+    oracle: &mut dyn RewardOracle,
+    opts: &TuneOptions,
+) -> Result<TuneResult> {
+    let mut rng = Rng::new(opts.seed);
+    let dims = space.dims();
+    let floor = opts.recall_floor;
+
+    // Eval 0: the family preset, grid-snapped through encode∘decode so the
+    // incumbent starts on the same lattice the search moves on. Its AUC
+    // normalizes every later score (scale-free, like the trainer).
+    let a0 = space.encode(&TunedConfig::for_family(space.family()));
+    let c0 = space.decode(&a0);
+    let rep0 = oracle.evaluate(&c0);
+    let baseline = if rep0.auc > 0.0 { rep0.auc } else { 1.0 };
+
+    let mut lambda = 1.0f64;
+    let relaxed = |auc: f64, recall: f64, lambda: f64| -> f64 {
+        let gap = (floor - recall).max(0.0);
+        auc / baseline - lambda * gap * 10.0
+    };
+
+    let r0 = rep0.best_recall();
+    let f0 = r0 >= floor;
+    let s0 = relaxed(rep0.auc, r0, lambda);
+    let mut best = Incumbent {
+        action: a0,
+        cfg: c0,
+        auc: rep0.auc,
+        recall: r0,
+        points: rep0.points,
+        feasible: f0,
+        score: s0,
+    };
+    let mut history = vec![TuneRecord {
+        eval: 0,
+        auc: rep0.auc,
+        recall: r0,
+        feasible: f0,
+        score: s0,
+    }];
+
+    let budget = opts.evals.max(1);
+    let explore = budget / 2;
+    let mut step = 0.5f64;
+    let mut dim_cursor = 0usize;
+    let mut evals_done = 1usize;
+
+    while evals_done < budget {
+        let action: Vec<f64> = if evals_done <= explore {
+            (0..dims).map(|_| rng.range_f64(-1.0, 1.0)).collect()
+        } else {
+            // Coordinate descent: perturb one dimension of the incumbent,
+            // random sign, step shrinking ×0.7 after each full dim sweep.
+            let mut a = best.action.clone();
+            let d = dim_cursor % dims;
+            dim_cursor += 1;
+            if dim_cursor % dims == 0 {
+                step *= 0.7;
+            }
+            let dir = if rng.next_f64() < 0.5 { -1.0 } else { 1.0 };
+            a[d] = (a[d] + dir * step).clamp(-1.0, 1.0);
+            a
+        };
+        let cfg = space.decode(&action);
+        let rep = oracle.evaluate(&cfg);
+        let recall = rep.best_recall();
+        let feasible = recall >= floor;
+        if !feasible {
+            // Dual ascent: infeasible iterates make the constraint dearer.
+            lambda = (lambda * 1.5).min(64.0);
+        }
+        let score = relaxed(rep.auc, recall, lambda);
+        history.push(TuneRecord {
+            eval: evals_done,
+            auc: rep.auc,
+            recall,
+            feasible,
+            score,
+        });
+        // Feasible beats infeasible; among feasible, raw AUC decides;
+        // among infeasible, the relaxed score decides.
+        let better = match (feasible, best.feasible) {
+            (true, true) => rep.auc > best.auc,
+            (true, false) => true,
+            (false, true) => false,
+            (false, false) => score > best.score,
+        };
+        if better {
+            best = Incumbent {
+                action,
+                cfg,
+                auc: rep.auc,
+                recall,
+                points: rep.points,
+                feasible,
+                score,
+            };
+        }
+        if opts.verbose {
+            let rec = history.last().expect("just pushed");
+            eprintln!(
+                "[tune] eval {:>3}  auc/base {:.3}  recall {:.3}{}  incumbent {:.3}",
+                rec.eval,
+                rec.auc / baseline,
+                rec.recall,
+                if rec.feasible { "" } else { " (infeasible)" },
+                best.auc / baseline,
+            );
+        }
+        evals_done += 1;
+    }
+
+    Ok(TuneResult {
+        best: best.cfg,
+        best_auc: best.auc,
+        best_recall: best.recall,
+        best_points: best.points,
+        evals: evals_done,
+        history,
+    })
+}
+
+/// Split a dataset's queries into interleaved train/held-out halves
+/// (even indexes train, odd held out). Base vectors are shared — the
+/// index under test is identical; only the measurement queries differ.
+pub fn split_queries(ds: &Dataset) -> (Dataset, Dataset) {
+    assert!(ds.n_queries() >= 2, "need at least 2 queries to split");
+    assert!(!ds.gt.is_empty(), "split needs ground truth");
+    let pick = |parity: usize, suffix: &str| -> Dataset {
+        let mut queries = Vec::new();
+        let mut gt = Vec::new();
+        for q in (parity..ds.n_queries()).step_by(2) {
+            queries.extend_from_slice(ds.query_vec(q));
+            gt.push(ds.gt[q].clone());
+        }
+        Dataset {
+            name: format!("{}/{suffix}", ds.name),
+            dim: ds.dim,
+            metric: ds.metric,
+            base: ds.base.clone(),
+            queries,
+            gt,
+            gt_k: ds.gt_k,
+        }
+    };
+    (pick(0, "train"), pick(1, "holdout"))
+}
+
+/// Pin the serving operating point on held-out data and build the
+/// artifact. Picks the smallest grid `ef` whose held-out recall meets
+/// the floor, stores that measurement, and refuses (with a loud error,
+/// not a panic) when the winning configuration cannot clear the floor on
+/// queries it never tuned against.
+pub fn finalize(
+    result: &TuneResult,
+    holdout: &mut dyn RewardOracle,
+    opts: &TuneOptions,
+    method: &str,
+    dataset_name: &str,
+) -> Result<TunedArtifact> {
+    let mut cfg = result.best.clone();
+    cfg.serving.k = holdout.spec().k;
+    let rep = holdout.evaluate(&cfg);
+    let Some(ef) = rep.operating_ef(opts.recall_floor) else {
+        crate::bail!(
+            "tuned configuration reaches recall {:.3} on held-out queries, below the {:.2} floor \
+             ({}); lower --floor or raise --evals",
+            rep.best_recall(),
+            opts.recall_floor,
+            result.best.describe(),
+        );
+    };
+    cfg.serving.ef = ef;
+    let measured = rep
+        .points
+        .iter()
+        .find(|p| p.ef == ef)
+        .map(|p| p.recall)
+        .unwrap_or(0.0);
+    crate::ensure!(
+        measured >= opts.recall_floor,
+        "held-out recall {measured:.3} at ef {ef} fell under the {:.2} floor",
+        opts.recall_floor
+    );
+    Ok(TunedArtifact {
+        config: cfg,
+        dataset: dataset_name.to_string(),
+        method: method.to_string(),
+        seed: opts.seed,
+        evals: result.evals as u32,
+        recall_floor: opts.recall_floor,
+        measured_recall: measured,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::crinn::oracle::SyntheticOracle;
+    use crate::crinn::reward::RewardSpec;
+    use crate::dataset::synth;
+    use crate::variants::IndexFamily;
+
+    fn spec() -> RewardSpec {
+        RewardSpec {
+            ef_grid: vec![16, 32, 64, 128],
+            ..Default::default()
+        }
+    }
+
+    fn opts(evals: usize, floor: f64) -> TuneOptions {
+        TuneOptions {
+            evals,
+            seed: 23,
+            recall_floor: floor,
+            verbose: false,
+        }
+    }
+
+    #[test]
+    fn lagrange_improves_on_the_synthetic_baseline() {
+        let space = TuningSpace::for_family(IndexFamily::Glass).unwrap();
+        let mut oracle = SyntheticOracle::new(spec());
+        let res = tune_lagrange(&space, &mut oracle, &opts(24, 0.5)).unwrap();
+        assert_eq!(res.evals, 24);
+        assert_eq!(res.history.len(), 24);
+        assert_eq!(oracle.evals, 24);
+        let baseline_auc = res.history[0].auc;
+        assert!(
+            res.best_auc >= baseline_auc,
+            "search must keep at least the baseline: {} vs {baseline_auc}",
+            res.best_auc
+        );
+        assert!(res.best_recall >= 0.5);
+        // The search actually moved: later evals saw different configs.
+        assert!(
+            res.history[1..].iter().any(|r| r.auc != baseline_auc),
+            "exploration never left the baseline"
+        );
+    }
+
+    #[test]
+    fn lagrange_is_deterministic_per_seed() {
+        let space = TuningSpace::for_family(IndexFamily::Ivf).unwrap();
+        let run = || {
+            let mut oracle = SyntheticOracle::new(spec());
+            tune_lagrange(&space, &mut oracle, &opts(16, 0.5)).unwrap()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.best_auc.to_bits(), b.best_auc.to_bits());
+        for (ra, rb) in a.history.iter().zip(&b.history) {
+            assert_eq!(ra.auc.to_bits(), rb.auc.to_bits());
+            assert_eq!(ra.score.to_bits(), rb.score.to_bits());
+        }
+    }
+
+    #[test]
+    fn split_queries_partitions_evenly_and_shares_base() {
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 300, 21, 91);
+        ds.compute_ground_truth(10);
+        let (train, hold) = split_queries(&ds);
+        assert_eq!(train.n_queries(), 11);
+        assert_eq!(hold.n_queries(), 10);
+        assert_eq!(train.base, ds.base);
+        assert_eq!(hold.base, ds.base);
+        assert_eq!(train.query_vec(0), ds.query_vec(0));
+        assert_eq!(hold.query_vec(0), ds.query_vec(1));
+        assert_eq!(train.gt[1], ds.gt[2]);
+        assert_eq!(hold.gt[1], ds.gt[3]);
+        assert!(train.name.ends_with("/train"));
+        assert!(hold.name.ends_with("/holdout"));
+    }
+
+    #[test]
+    fn finalize_pins_ef_and_enforces_the_floor() {
+        let space = TuningSpace::for_family(IndexFamily::Glass).unwrap();
+        let mut oracle = SyntheticOracle::new(spec());
+        let o = opts(12, 0.5);
+        let res = tune_lagrange(&space, &mut oracle, &o).unwrap();
+        let mut holdout = SyntheticOracle::new(spec());
+        let art = finalize(&res, &mut holdout, &o, "lagrange", "demo-64").unwrap();
+        assert!(art.measured_recall >= o.recall_floor);
+        assert!(spec().ef_grid.contains(&art.config.serving.ef));
+        assert_eq!(art.config.serving.k, 10);
+        assert_eq!(art.method, "lagrange");
+        assert_eq!(art.evals, 12);
+        // An unreachable floor must fail loudly, not panic.
+        let impossible = TuneOptions {
+            recall_floor: 1.5,
+            ..o
+        };
+        let err = finalize(&res, &mut holdout, &impossible, "lagrange", "demo-64")
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("floor"), "{err:#}");
+    }
+}

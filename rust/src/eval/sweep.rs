@@ -20,7 +20,7 @@
 
 use crate::anns::AnnIndex;
 use crate::dataset::{gt::recall_at_k, Dataset};
-use crate::util::threadpool::parallel_map;
+use crate::util::threadpool::{parallel_map, parallel_map_threads};
 use std::time::Instant;
 
 /// One measured point on a QPS-recall curve.
@@ -104,14 +104,34 @@ pub fn measure_point_with_mode(
     ef: usize,
     batch: Option<usize>,
 ) -> CurvePoint {
+    measure_point_tuned(index, ds, k, ef, batch, None)
+}
+
+/// [`measure_point_with_mode`] with an explicit worker count for the
+/// measurement pool (`None` = ambient `CRINN_THREADS`) — the seam the
+/// tuner's reward oracle uses to score a candidate's serving knobs
+/// (batch size, thread count) without touching process environment.
+/// Recall is batch- and thread-count-invariant (bit-identical); only the
+/// timing protocol changes.
+pub fn measure_point_tuned(
+    index: &dyn AnnIndex,
+    ds: &Dataset,
+    k: usize,
+    ef: usize,
+    batch: Option<usize>,
+    threads: Option<usize>,
+) -> CurvePoint {
     assert!(!ds.gt.is_empty(), "dataset needs ground truth");
     let nq = ds.n_queries();
+    let nthreads = threads
+        .unwrap_or_else(crate::util::threadpool::effective_threads)
+        .max(1);
     // Untimed recall pass — keeps recall_at_k out of the timed window (it
     // would bias QPS low for fast configurations) and doubles as warmup
     // (pays one-time lazy costs: SIMD kernel dispatch, context-pool
     // growth, page faults). Order-preserving map: the sequential sum below
     // is identical for every thread count.
-    let recalls: Vec<f64> = parallel_map(nq, 4, |qi| {
+    let recalls: Vec<f64> = parallel_map_threads(nq, 4, nthreads, |qi| {
         let found = index.search(ds.query_vec(qi), k, ef);
         recall_at_k(&found, &ds.gt[qi], k)
     });
@@ -128,7 +148,7 @@ pub fn measure_point_with_mode(
         let t_pass = Instant::now();
         match batch {
             None => {
-                let pass: Vec<f64> = parallel_map(nq, 4, |qi| {
+                let pass: Vec<f64> = parallel_map_threads(nq, 4, nthreads, |qi| {
                     let t = Instant::now();
                     std::hint::black_box(index.search(ds.query_vec(qi), k, ef));
                     t.elapsed().as_secs_f64()
@@ -142,15 +162,16 @@ pub fn measure_point_with_mode(
                 // so CRINN_THREADS semantics carry over.
                 let bs = bs.max(1);
                 let n_chunks = nq.div_ceil(bs);
-                let chunk_times: Vec<(f64, usize)> = parallel_map(n_chunks, 1, |ci| {
-                    let lo = ci * bs;
-                    let hi = (lo + bs).min(nq);
-                    let queries: Vec<&[f32]> =
-                        (lo..hi).map(|qi| ds.query_vec(qi)).collect();
-                    let t = Instant::now();
-                    std::hint::black_box(index.search_batch(&queries, k, ef));
-                    (t.elapsed().as_secs_f64(), hi - lo)
-                });
+                let chunk_times: Vec<(f64, usize)> =
+                    parallel_map_threads(n_chunks, 1, nthreads, |ci| {
+                        let lo = ci * bs;
+                        let hi = (lo + bs).min(nq);
+                        let queries: Vec<&[f32]> =
+                            (lo..hi).map(|qi| ds.query_vec(qi)).collect();
+                        let t = Instant::now();
+                        std::hint::black_box(index.search_batch(&queries, k, ef));
+                        (t.elapsed().as_secs_f64(), hi - lo)
+                    });
                 for (dt, cnt) in chunk_times {
                     lat.extend(std::iter::repeat(dt / cnt as f64).take(cnt));
                 }

@@ -1,0 +1,382 @@
+//! The tuned-config artifact: the versioned, checksummed file `crinn
+//! tune` writes and `crinn serve --tuned` loads at startup.
+//!
+//! Same container discipline as the v3 snapshot sections
+//! (`anns::persist::sections`): magic, version, length, FNV-1a-64
+//! checksum over the payload, and range-validated fields on load — a
+//! hostile or truncated file errors loudly and never panics. The payload
+//! is fixed-layout little-endian with no timestamps, so the same tuning
+//! outcome always serializes to the same bytes (the seeded-determinism
+//! guarantee `tests/tune.rs` asserts).
+//!
+//! Layout:
+//!
+//! ```text
+//! [0..4)   magic  "CRTC"
+//! [4..8)   version (u32 LE) = 1
+//! [8..12)  payload length (u32 LE)
+//! [12..20) FNV-1a-64 checksum of the payload (u64 LE)
+//! [20..)   payload: config knobs + provenance (fields in source order)
+//! ```
+
+use crate::util::error::{Context, Result};
+use crate::variants::space::{validate_config, IndexFamily, TunedConfig};
+use std::path::Path;
+
+pub const MAGIC: &[u8; 4] = b"CRTC";
+pub const VERSION: u32 = 1;
+/// Bytes before the checksummed payload.
+pub const HEADER_BYTES: usize = 4 + 4 + 4 + 8;
+
+/// The FNV-1a-64 the artifact is signed with (the persist tier's
+/// checksum). Public so tests can re-sign byte-patched payloads and prove
+/// range validation rejects what the checksum alone would admit.
+pub fn payload_checksum(bytes: &[u8]) -> u64 {
+    crate::anns::persist::checksum(bytes)
+}
+
+/// A tuned configuration plus the provenance of its measurement.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TunedArtifact {
+    pub config: TunedConfig,
+    /// Dataset the tuner measured on.
+    pub dataset: String,
+    /// Search method (`"lagrange"`, `"grpo"`).
+    pub method: String,
+    /// Tuner RNG seed.
+    pub seed: u64,
+    /// Oracle evaluations spent.
+    pub evals: u32,
+    /// The recall@k constraint the tuner enforced.
+    pub recall_floor: f64,
+    /// recall@k at `config.serving.ef` on the held-out query split —
+    /// deterministic (recall is timing-free), so artifact bytes are too.
+    pub measured_recall: f64,
+}
+
+impl TunedArtifact {
+    /// Stable identity of this artifact (the payload checksum) — exported
+    /// as the server's tuned-config hash gauge so a metrics snapshot
+    /// names the configuration that produced it.
+    pub fn hash(&self) -> u64 {
+        payload_checksum(&self.payload())
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let payload = self.payload();
+        let mut out = Vec::with_capacity(HEADER_BYTES + payload.len());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        out.extend_from_slice(&payload_checksum(&payload).to_le_bytes());
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<TunedArtifact> {
+        crate::ensure!(
+            bytes.len() >= HEADER_BYTES,
+            "tuned-config artifact truncated ({} bytes < {HEADER_BYTES}-byte header)",
+            bytes.len()
+        );
+        crate::ensure!(&bytes[0..4] == MAGIC, "not a CRINN tuned-config artifact");
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        crate::ensure!(
+            version == VERSION,
+            "unsupported tuned-config version {version} (this build reads {VERSION})"
+        );
+        let plen = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        crate::ensure!(
+            bytes.len() == HEADER_BYTES + plen,
+            "tuned-config payload length mismatch: header says {plen}, file carries {}",
+            bytes.len() - HEADER_BYTES
+        );
+        let stored = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
+        let payload = &bytes[HEADER_BYTES..];
+        crate::ensure!(
+            payload_checksum(payload) == stored,
+            "tuned-config checksum mismatch (corrupt artifact)"
+        );
+        let art = parse_payload(payload).map_err(|e| e.context("tuned-config payload"))?;
+        validate_config(&art.config)
+            .map_err(|e| e.context("tuned-config artifact failed range validation"))?;
+        for (name, v) in [
+            ("recall_floor", art.recall_floor),
+            ("measured_recall", art.measured_recall),
+        ] {
+            crate::ensure!(
+                v.is_finite() && (0.0..=1.0).contains(&v),
+                "tuned-config {name} = {v} outside [0, 1]"
+            );
+        }
+        Ok(art)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("writing tuned-config artifact {path:?}"))
+    }
+
+    pub fn load(path: &Path) -> Result<TunedArtifact> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading tuned-config artifact {path:?}"))?;
+        TunedArtifact::from_bytes(&bytes)
+            .map_err(|e| e.context(format!("loading tuned-config artifact {path:?}")))
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        let mut w = Writer(Vec::with_capacity(256));
+        let c = &self.config;
+        w.u32(c.family.tag());
+        w.str(&c.label);
+        let k = &c.variant.construction;
+        w.u32(k.m as u32);
+        w.u32(k.ef_construction as u32);
+        w.boolean(k.adaptive_ef);
+        w.f64(k.ef_scale);
+        w.f64(k.target_recall);
+        w.f64(k.recall_threshold);
+        w.u32(k.num_entry_points as u32);
+        w.f64(k.entry_diversity);
+        w.u32(k.prefetch_depth as u32);
+        w.u32(k.prefetch_locality.clamp(0, 255) as u32);
+        let s = &c.variant.search;
+        w.u32(s.entry_tiers as u32);
+        w.u32(s.tier_budget_1 as u32);
+        w.u32(s.tier_budget_2 as u32);
+        w.boolean(s.edge_batch);
+        w.u32(s.batch_size as u32);
+        w.boolean(s.early_termination);
+        w.u32(s.patience as u32);
+        w.u32(s.prefetch_depth as u32);
+        w.u32(s.prefetch_locality.clamp(0, 255) as u32);
+        let r = &c.variant.refine;
+        w.boolean(r.quantized_primary);
+        w.boolean(r.adaptive_prefetch);
+        w.u32(r.lookahead as u32);
+        w.boolean(r.precomputed_metadata);
+        w.f64(r.rerank_frac);
+        let i = &c.ivf;
+        w.u32(i.nlist as u32);
+        w.u32(i.kmeans_iters as u32);
+        w.u32(i.rerank_mult as u32);
+        w.boolean(i.quantized_scan);
+        let v = &c.serving;
+        w.u32(v.k as u32);
+        w.u32(v.ef as u32);
+        w.u32(v.batch as u32);
+        w.u32(v.threads as u32);
+        w.str(&self.dataset);
+        w.str(&self.method);
+        w.u64(self.seed);
+        w.u32(self.evals);
+        w.f64(self.recall_floor);
+        w.f64(self.measured_recall);
+        w.0
+    }
+}
+
+fn parse_payload(payload: &[u8]) -> Result<TunedArtifact> {
+    let mut r = Reader { bytes: payload, at: 0 };
+    let tag = r.u32()?;
+    let family = IndexFamily::from_tag(tag)
+        .ok_or_else(|| crate::Error::msg(format!("unknown index family tag {tag}")))?;
+    let label = r.str()?;
+    let mut config = TunedConfig::for_family(family);
+    config.label = label;
+    let k = &mut config.variant.construction;
+    k.m = r.u32()? as usize;
+    k.ef_construction = r.u32()? as usize;
+    k.adaptive_ef = r.boolean()?;
+    k.ef_scale = r.f64()?;
+    k.target_recall = r.f64()?;
+    k.recall_threshold = r.f64()?;
+    k.num_entry_points = r.u32()? as usize;
+    k.entry_diversity = r.f64()?;
+    k.prefetch_depth = r.u32()? as usize;
+    k.prefetch_locality = r.u32()? as i32;
+    let s = &mut config.variant.search;
+    s.entry_tiers = r.u32()? as usize;
+    s.tier_budget_1 = r.u32()? as usize;
+    s.tier_budget_2 = r.u32()? as usize;
+    s.edge_batch = r.boolean()?;
+    s.batch_size = r.u32()? as usize;
+    s.early_termination = r.boolean()?;
+    s.patience = r.u32()? as usize;
+    s.prefetch_depth = r.u32()? as usize;
+    s.prefetch_locality = r.u32()? as i32;
+    let rf = &mut config.variant.refine;
+    rf.quantized_primary = r.boolean()?;
+    rf.adaptive_prefetch = r.boolean()?;
+    rf.lookahead = r.u32()? as usize;
+    rf.precomputed_metadata = r.boolean()?;
+    rf.rerank_frac = r.f64()?;
+    let i = &mut config.ivf;
+    i.nlist = r.u32()? as usize;
+    i.kmeans_iters = r.u32()? as usize;
+    i.rerank_mult = r.u32()? as usize;
+    i.quantized_scan = r.boolean()?;
+    let v = &mut config.serving;
+    v.k = r.u32()? as usize;
+    v.ef = r.u32()? as usize;
+    v.batch = r.u32()? as usize;
+    v.threads = r.u32()? as usize;
+    let dataset = r.str()?;
+    let method = r.str()?;
+    let seed = r.u64()?;
+    let evals = r.u32()?;
+    let recall_floor = r.f64()?;
+    let measured_recall = r.f64()?;
+    crate::ensure!(
+        r.at == payload.len(),
+        "trailing bytes after tuned-config payload ({} of {})",
+        r.at,
+        payload.len()
+    );
+    Ok(TunedArtifact {
+        config,
+        dataset,
+        method,
+        seed,
+        evals,
+        recall_floor,
+        measured_recall,
+    })
+}
+
+struct Writer(Vec<u8>);
+
+impl Writer {
+    fn u32(&mut self, v: u32) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.0.extend_from_slice(&v.to_le_bytes());
+    }
+    fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+    fn boolean(&mut self, v: bool) {
+        self.0.push(v as u8);
+    }
+    fn str(&mut self, s: &str) {
+        let b = s.as_bytes();
+        debug_assert!(b.len() <= u16::MAX as usize);
+        self.0.extend_from_slice(&(b.len() as u16).to_le_bytes());
+        self.0.extend_from_slice(b);
+    }
+}
+
+struct Reader<'a> {
+    bytes: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        crate::ensure!(
+            self.at + n <= self.bytes.len(),
+            "tuned-config payload truncated at byte {} (need {n} more)",
+            self.at
+        );
+        let out = &self.bytes[self.at..self.at + n];
+        self.at += n;
+        Ok(out)
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+    fn boolean(&mut self) -> Result<bool> {
+        match self.take(1)?[0] {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => crate::bail!("bool byte {b} in tuned-config payload (want 0/1)"),
+        }
+    }
+    fn str(&mut self) -> Result<String> {
+        let len = u16::from_le_bytes(self.take(2)?.try_into().unwrap()) as usize;
+        crate::ensure!(len <= 256, "tuned-config string length {len} exceeds 256");
+        let raw = self.take(len)?;
+        String::from_utf8(raw.to_vec())
+            .map_err(|_| crate::Error::msg("tuned-config string is not UTF-8"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TunedArtifact {
+        TunedArtifact {
+            config: TunedConfig::from_algo_name("crinn").unwrap(),
+            dataset: "demo-64".into(),
+            method: "lagrange".into(),
+            seed: 17,
+            evals: 32,
+            recall_floor: 0.9,
+            measured_recall: 0.94,
+        }
+    }
+
+    #[test]
+    fn bytes_roundtrip_exactly() {
+        let a = sample();
+        let bytes = a.to_bytes();
+        let back = TunedArtifact::from_bytes(&bytes).unwrap();
+        assert_eq!(back, a);
+        assert_eq!(back.to_bytes(), bytes);
+        assert_eq!(back.hash(), a.hash());
+    }
+
+    #[test]
+    fn serialization_is_deterministic() {
+        assert_eq!(sample().to_bytes(), sample().to_bytes());
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_version() {
+        let mut b = sample().to_bytes();
+        b[0] = b'X';
+        assert!(format!("{:#}", TunedArtifact::from_bytes(&b).unwrap_err())
+            .contains("not a CRINN"));
+        let mut b = sample().to_bytes();
+        b[4] = 9; // version lives outside the checksummed payload
+        assert!(format!("{:#}", TunedArtifact::from_bytes(&b).unwrap_err())
+            .contains("version"));
+    }
+
+    #[test]
+    fn rejects_corruption_and_truncation() {
+        let bytes = sample().to_bytes();
+        let mut flipped = bytes.clone();
+        *flipped.last_mut().unwrap() ^= 0xff;
+        assert!(format!("{:#}", TunedArtifact::from_bytes(&flipped).unwrap_err())
+            .contains("checksum"));
+        for cut in 0..bytes.len() {
+            assert!(TunedArtifact::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        let mut longer = bytes.clone();
+        longer.push(0);
+        assert!(TunedArtifact::from_bytes(&longer).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_after_resign() {
+        // Byte-patch construction.m to an absurd value and re-sign the
+        // checksum: the range gate (not the checksum) must reject it.
+        let a = sample();
+        let mut bytes = a.to_bytes();
+        let m_off = HEADER_BYTES + 4 + 2 + a.config.label.len();
+        bytes[m_off..m_off + 4].copy_from_slice(&1_000_000u32.to_le_bytes());
+        let sum = payload_checksum(&bytes[HEADER_BYTES..]);
+        bytes[12..20].copy_from_slice(&sum.to_le_bytes());
+        let err = format!("{:#}", TunedArtifact::from_bytes(&bytes).unwrap_err());
+        assert!(err.contains("range"), "{err}");
+    }
+}

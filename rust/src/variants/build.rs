@@ -1,0 +1,99 @@
+//! One construction path for every index family: `crinn sweep`,
+//! `crinn serve`, and the tuner's reward oracle all build through
+//! [`build_index`], so adding a family means touching exactly one match.
+
+use crate::anns::{AnnIndex, VectorSet};
+use crate::variants::space::{IndexFamily, TunedConfig};
+use std::sync::Arc;
+
+/// Build the index a [`TunedConfig`] describes. Deterministic per
+/// `(config, vectors, seed)` — the discipline every reward measurement
+/// and every artifact replay relies on. Arm-for-arm equivalent to the
+/// former per-subcommand `match` in `main.rs`.
+pub fn build_index(cfg: &TunedConfig, vs: VectorSet, seed: u64) -> Arc<dyn AnnIndex> {
+    match cfg.family {
+        IndexFamily::BruteForce => Arc::new(crate::anns::bruteforce::BruteForceIndex::build(vs)),
+        IndexFamily::Hnsw => Arc::new(crate::anns::hnsw::HnswIndex::build(
+            vs,
+            &cfg.variant.construction,
+            cfg.variant.search.clone(),
+            seed,
+        )),
+        IndexFamily::Glass => Arc::new(
+            crate::anns::glass::GlassIndex::build(vs, cfg.variant.clone(), seed)
+                .with_label(&cfg.label),
+        ),
+        IndexFamily::Vamana => Arc::new(crate::anns::vamana::VamanaIndex::build(
+            vs,
+            crate::anns::vamana::VamanaParams::default(),
+            seed,
+        )),
+        IndexFamily::NnDescent => {
+            let params = if cfg.label == "pynndescent" {
+                crate::anns::nndescent::NnDescentParams::pynndescent()
+            } else {
+                crate::anns::nndescent::NnDescentParams::default()
+            };
+            Arc::new(crate::anns::nndescent::NnDescentIndex::build(vs, params, seed))
+        }
+        IndexFamily::Ivf => Arc::new(crate::anns::ivf::IvfIndex::build(vs, cfg.ivf_params(), seed)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth;
+
+    fn tiny_vs() -> (crate::dataset::Dataset, VectorSet) {
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 400, 10, 73);
+        ds.compute_ground_truth(10);
+        let vs = VectorSet::from_dataset(&ds);
+        (ds, vs)
+    }
+
+    #[test]
+    fn builds_every_family_and_searches() {
+        let (ds, _) = tiny_vs();
+        for algo in [
+            "bruteforce",
+            "hnsw",
+            "glass",
+            "crinn",
+            "parlayann",
+            "nndescent",
+            "pynndescent",
+            "vearch-ivf",
+        ] {
+            let cfg = TunedConfig::from_algo_name(algo).unwrap();
+            let idx = build_index(&cfg, VectorSet::from_dataset(&ds), 42);
+            assert_eq!(idx.len(), 400, "{algo}");
+            let found = idx.search(ds.query_vec(0), 10, 64);
+            assert_eq!(found.len(), 10, "{algo}");
+        }
+    }
+
+    #[test]
+    fn glass_build_matches_direct_construction_bitwise() {
+        // The dedupe must not change what `crinn sweep --algo crinn`
+        // builds: same config + seed → identical search results.
+        let (ds, vs) = tiny_vs();
+        let direct = crate::anns::glass::GlassIndex::build(
+            vs,
+            crate::variants::VariantConfig::crinn_full(),
+            42,
+        )
+        .with_label("crinn");
+        let cfg = TunedConfig::from_algo_name("crinn").unwrap();
+        let via_helper = build_index(&cfg, VectorSet::from_dataset(&ds), 42);
+        assert_eq!(via_helper.name(), "crinn");
+        for qi in 0..ds.n_queries() {
+            assert_eq!(
+                via_helper.search_with_dists(ds.query_vec(qi), 10, 48),
+                direct.search_with_dists(ds.query_vec(qi), 10, 48),
+                "query {qi}"
+            );
+        }
+    }
+}

@@ -6,6 +6,24 @@
 //! documents the substitution). Knob defaults = the GLASS baseline; the
 //! `crinn_*` constructors give the paper's discovered settings; the GRPO
 //! policy explores the full space via [`decode_action`]/[`encode_action`].
+//!
+//! [`VariantConfig`] below is the GLASS-centric compat view. The unified
+//! tuning layer generalizes it: [`space`] covers every buildable family
+//! plus serving knobs behind one [`TuningSpace`]/[`TunedConfig`] pair,
+//! [`build`] constructs any family from a [`TunedConfig`], and
+//! [`artifact`] round-trips the tuned configuration as a versioned,
+//! checksummed file (`crinn tune` → `crinn serve --tuned`).
+
+pub mod artifact;
+pub mod build;
+pub mod space;
+
+pub use artifact::TunedArtifact;
+pub use build::build_index;
+pub use space::{
+    validate_config, IndexFamily, IvfKnobs, KnobBound, KnobKind, ServingKnobs, TunedConfig,
+    TuningSpace,
+};
 
 /// Graph-construction module knobs (§6.1).
 #[derive(Clone, Debug, PartialEq)]

@@ -1,0 +1,644 @@
+//! The unified tuning space: every buildable index family, its knobs, and
+//! the serving knobs (batch size, `CRINN_THREADS` worker count) as one
+//! typed, bounded configuration with a deterministic flat-`f64` encoding.
+//!
+//! [`VariantConfig`] remains the GLASS-centric compat view the GRPO
+//! trainer and DESIGN.md §2 cite; [`TunedConfig`] embeds it and adds the
+//! family tag, IVF knobs and serving knobs so one tuner can drive HNSW,
+//! GLASS and IVF through the same [`TuningSpace::encode`]/
+//! [`TuningSpace::decode`] pair. For the `VariantConfig` portion the flat
+//! vector is exactly the action layout [`decode_action`]/[`encode_action`]
+//! already use (one [`super::N_KNOBS`]-dim block per module), so policy
+//! actions and tuner actions are the same coordinates.
+//!
+//! Decoded float knobs are snapped to a 256-step grid over their bound
+//! range, which makes `decode ∘ encode` idempotent at the config level:
+//! `decode(encode(decode(a))) == decode(a)` bit-for-bit (asserted by
+//! `tests/tune.rs`). Without the snap, `lerp`/`unlerp` round-trips drift
+//! by an ulp and artifact bytes would not be reproducible.
+
+use crate::util::error::Result;
+use crate::variants::{decode_action, encode_action, Module, VariantConfig, N_KNOBS};
+
+/// A buildable index family (the CLI `--algo` axis).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum IndexFamily {
+    BruteForce,
+    Hnsw,
+    Glass,
+    Ivf,
+    Vamana,
+    NnDescent,
+}
+
+impl IndexFamily {
+    pub const ALL: [IndexFamily; 6] = [
+        IndexFamily::BruteForce,
+        IndexFamily::Hnsw,
+        IndexFamily::Glass,
+        IndexFamily::Ivf,
+        IndexFamily::Vamana,
+        IndexFamily::NnDescent,
+    ];
+
+    /// Families with a tuning space (the rest build only at their preset).
+    pub const TUNABLE: [IndexFamily; 3] = [IndexFamily::Hnsw, IndexFamily::Glass, IndexFamily::Ivf];
+
+    /// Canonical name (the CLI algo string of the family's plain preset).
+    pub fn name(self) -> &'static str {
+        match self {
+            IndexFamily::BruteForce => "bruteforce",
+            IndexFamily::Hnsw => "hnsw",
+            IndexFamily::Glass => "glass",
+            IndexFamily::Ivf => "vearch-ivf",
+            IndexFamily::Vamana => "parlayann",
+            IndexFamily::NnDescent => "nndescent",
+        }
+    }
+
+    /// Stable artifact tag (never reorder — serialized in tuned-config
+    /// artifacts).
+    pub fn tag(self) -> u32 {
+        match self {
+            IndexFamily::BruteForce => 0,
+            IndexFamily::Hnsw => 1,
+            IndexFamily::Glass => 2,
+            IndexFamily::Ivf => 3,
+            IndexFamily::Vamana => 4,
+            IndexFamily::NnDescent => 5,
+        }
+    }
+
+    pub fn from_tag(tag: u32) -> Option<IndexFamily> {
+        IndexFamily::ALL.into_iter().find(|f| f.tag() == tag)
+    }
+
+    pub fn is_tunable(self) -> bool {
+        IndexFamily::TUNABLE.contains(&self)
+    }
+}
+
+/// IVF knobs (mirrors `anns::ivf::IvfParams`; kept here so the tuning
+/// layer has no build-time dependency direction on the index modules).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IvfKnobs {
+    /// Number of partitions (0 = `sqrt(n)` heuristic).
+    pub nlist: usize,
+    /// Lloyd iterations.
+    pub kmeans_iters: usize,
+    /// Rerank multiplier over k during the exact pass.
+    pub rerank_mult: usize,
+    /// SQ8 posting-list scan + exact rerank vs. exact IVFFlat.
+    pub quantized_scan: bool,
+}
+
+impl Default for IvfKnobs {
+    fn default() -> Self {
+        IvfKnobs {
+            nlist: 0,
+            kmeans_iters: 8,
+            rerank_mult: 4,
+            quantized_scan: true,
+        }
+    }
+}
+
+/// Serving knobs: the operating point the server defaults to.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServingKnobs {
+    /// Neighbors per query (the recall constraint is recall@k at this k).
+    pub k: usize,
+    /// Default search beam width (`nprobe` scale for IVF). Not a search
+    /// dimension: the tuner derives it from the winning curve — smallest
+    /// grid ef meeting the recall floor.
+    pub ef: usize,
+    /// Dynamic-batcher `max_batch`; also the oracle's measurement batch
+    /// when serving knobs are scored (≤ 1 = per-query protocol).
+    pub batch: usize,
+    /// Worker threads (0 = `CRINN_THREADS`/auto).
+    pub threads: usize,
+}
+
+impl Default for ServingKnobs {
+    fn default() -> Self {
+        ServingKnobs {
+            k: crate::DEFAULT_K,
+            ef: 64,
+            batch: 64,
+            threads: 0,
+        }
+    }
+}
+
+/// One point in the unified space: family + per-family knobs + serving
+/// knobs. [`VariantConfig`] is embedded as-is — the GLASS/HNSW compat
+/// view — so `crinn train`/`prompt` keep resolving unchanged.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TunedConfig {
+    pub family: IndexFamily,
+    /// CLI/display label. `"crinn"` and `"pynndescent"` select presets of
+    /// their family in [`super::build_index`]; otherwise cosmetic.
+    pub label: String,
+    pub variant: VariantConfig,
+    pub ivf: IvfKnobs,
+    pub serving: ServingKnobs,
+}
+
+impl Default for TunedConfig {
+    fn default() -> Self {
+        TunedConfig::from_variant(VariantConfig::glass_baseline())
+    }
+}
+
+impl TunedConfig {
+    /// Compat constructor: wrap a GLASS-space [`VariantConfig`] (the GRPO
+    /// trainer's currency) with default family/serving context.
+    pub fn from_variant(variant: VariantConfig) -> Self {
+        TunedConfig {
+            family: IndexFamily::Glass,
+            label: "glass".to_string(),
+            variant,
+            ivf: IvfKnobs::default(),
+            serving: ServingKnobs::default(),
+        }
+    }
+
+    /// The family's default preset (GLASS baseline knobs for the graph
+    /// families, `IvfKnobs::default` for IVF).
+    pub fn for_family(family: IndexFamily) -> Self {
+        TunedConfig {
+            family,
+            label: family.name().to_string(),
+            variant: VariantConfig::glass_baseline(),
+            ivf: IvfKnobs::default(),
+            serving: ServingKnobs::default(),
+        }
+    }
+
+    /// Map a CLI `--algo` string to its configuration — the single place
+    /// the eight algo names resolve (`cmd_sweep`, `cmd_serve` and
+    /// `crinn tune` all go through here).
+    pub fn from_algo_name(algo: &str) -> Option<Self> {
+        let mut cfg = match algo {
+            "bruteforce" => TunedConfig::for_family(IndexFamily::BruteForce),
+            "hnsw" => TunedConfig::for_family(IndexFamily::Hnsw),
+            "glass" => TunedConfig::for_family(IndexFamily::Glass),
+            "crinn" => {
+                let mut c = TunedConfig::for_family(IndexFamily::Glass);
+                c.variant = VariantConfig::crinn_full();
+                c
+            }
+            "parlayann" => TunedConfig::for_family(IndexFamily::Vamana),
+            "nndescent" | "pynndescent" => TunedConfig::for_family(IndexFamily::NnDescent),
+            "vearch-ivf" => TunedConfig::for_family(IndexFamily::Ivf),
+            _ => return None,
+        };
+        cfg.label = algo.to_string();
+        Some(cfg)
+    }
+
+    /// The `anns::ivf` parameter struct this configuration builds with.
+    pub fn ivf_params(&self) -> crate::anns::ivf::IvfParams {
+        crate::anns::ivf::IvfParams {
+            nlist: self.ivf.nlist,
+            kmeans_iters: self.ivf.kmeans_iters,
+            rerank_mult: self.ivf.rerank_mult,
+            quantized_scan: self.ivf.quantized_scan,
+        }
+    }
+
+    /// Compact one-line render (tuner logs, CLI summaries).
+    pub fn describe(&self) -> String {
+        let s = &self.serving;
+        let serving = format!("k={} ef={} batch={} threads={}", s.k, s.ef, s.batch, s.threads);
+        match self.family {
+            IndexFamily::Ivf => {
+                let i = &self.ivf;
+                format!(
+                    "{}: nlist={} kmeans_iters={} rerank_mult={} sq8={} | {serving}",
+                    self.label, i.nlist, i.kmeans_iters, i.rerank_mult, i.quantized_scan
+                )
+            }
+            _ => {
+                let c = &self.variant.construction;
+                format!(
+                    "{}: M={} efC={} entries={} | {} | {serving}",
+                    self.label,
+                    c.m,
+                    c.ef_construction,
+                    c.num_entry_points,
+                    crate::variants::describe(&self.variant, Module::Search)
+                )
+            }
+        }
+    }
+}
+
+/// Value kind of one tuning dimension.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KnobKind {
+    Int,
+    Float,
+    Bool,
+}
+
+/// One typed, bounded dimension of a [`TuningSpace`].
+#[derive(Clone, Copy, Debug)]
+pub struct KnobBound {
+    pub name: &'static str,
+    pub kind: KnobKind,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+const fn kb(name: &'static str, kind: KnobKind, lo: f64, hi: f64) -> KnobBound {
+    KnobBound { name, kind, lo, hi }
+}
+
+// The bounds below mirror the lerp ranges hardcoded in
+// `decode_action`/`encode_action` — the action layout is shared, so the
+// numbers must stay in lockstep (asserted by `bounds_match_action_space`).
+const CONSTRUCTION_BOUNDS: [KnobBound; N_KNOBS] = [
+    kb("construction.m", KnobKind::Int, 8.0, 48.0),
+    kb("construction.ef_construction", KnobKind::Int, 80.0, 500.0),
+    kb("construction.adaptive_ef", KnobKind::Bool, 0.0, 1.0),
+    kb("construction.ef_scale", KnobKind::Float, 0.0, 20.0),
+    kb("construction.num_entry_points", KnobKind::Int, 1.0, 9.0),
+    kb("construction.entry_diversity", KnobKind::Float, 0.0, 1.0),
+    kb("construction.prefetch_depth", KnobKind::Int, 0.0, 48.0),
+    kb("construction.prefetch_locality", KnobKind::Int, 1.0, 3.0),
+];
+
+const SEARCH_BOUNDS: [KnobBound; N_KNOBS] = [
+    kb("search.entry_tiers", KnobKind::Int, 1.0, 3.0),
+    kb("search.tier_budget_1", KnobKind::Int, 16.0, 128.0),
+    kb("search.tier_budget_2", KnobKind::Int, 128.0, 384.0),
+    kb("search.edge_batch", KnobKind::Bool, 0.0, 1.0),
+    kb("search.batch_size", KnobKind::Int, 4.0, 64.0),
+    kb("search.early_termination", KnobKind::Bool, 0.0, 1.0),
+    kb("search.patience", KnobKind::Int, 1.0, 8.0),
+    kb("search.prefetch_depth", KnobKind::Int, 0.0, 32.0),
+];
+
+const REFINE_BOUNDS: [KnobBound; N_KNOBS] = [
+    kb("refine.quantized_primary", KnobKind::Bool, 0.0, 1.0),
+    kb("refine.adaptive_prefetch", KnobKind::Bool, 0.0, 1.0),
+    kb("refine.lookahead", KnobKind::Int, 1.0, 8.0),
+    kb("refine.precomputed_metadata", KnobKind::Bool, 0.0, 1.0),
+    kb("refine.rerank_frac", KnobKind::Float, 0.2, 2.0),
+    // dims 5..8 reserved (artifact-shape stability, like decode_action)
+    kb("refine.reserved5", KnobKind::Float, -1.0, 1.0),
+    kb("refine.reserved6", KnobKind::Float, -1.0, 1.0),
+    kb("refine.reserved7", KnobKind::Float, -1.0, 1.0),
+];
+
+const IVF_BOUNDS: [KnobBound; 4] = [
+    kb("ivf.nlist", KnobKind::Int, 8.0, 2048.0),
+    kb("ivf.kmeans_iters", KnobKind::Int, 2.0, 20.0),
+    kb("ivf.rerank_mult", KnobKind::Int, 1.0, 16.0),
+    kb("ivf.quantized_scan", KnobKind::Bool, 0.0, 1.0),
+];
+
+const SERVING_BOUNDS: [KnobBound; 2] = [
+    kb("serving.batch", KnobKind::Int, 1.0, 128.0),
+    kb("serving.threads", KnobKind::Int, 1.0, 8.0),
+];
+
+/// Knobs where 0 is a valid sentinel outside the tuning range (`nlist`'s
+/// sqrt heuristic, `threads`' CRINN_THREADS/auto). Decode never emits 0;
+/// validation accepts it.
+const ZERO_SENTINEL_OK: [&str; 2] = ["ivf.nlist", "serving.threads"];
+
+#[inline]
+fn lerp(a: f64, b: f64, t: f64) -> f64 {
+    a + (b - a) * (t.clamp(-1.0, 1.0) + 1.0) / 2.0
+}
+
+#[inline]
+fn unlerp(a: f64, b: f64, v: f64) -> f64 {
+    (((v - a) / (b - a)) * 2.0 - 1.0).clamp(-1.0, 1.0)
+}
+
+/// Snap a float knob onto a 256-step grid over `[lo, hi]` — the
+/// quantization that makes decode idempotent (module docs).
+fn snap(v: f64, lo: f64, hi: f64) -> f64 {
+    const STEPS: f64 = 256.0;
+    let t = (((v - lo) / (hi - lo)) * STEPS).round().clamp(0.0, STEPS);
+    lo + (hi - lo) * (t / STEPS)
+}
+
+/// The typed, bounded search space of one tunable family.
+#[derive(Clone, Debug)]
+pub struct TuningSpace {
+    family: IndexFamily,
+    bounds: Vec<KnobBound>,
+}
+
+impl TuningSpace {
+    /// The space for a tunable family; errors for families that only
+    /// build at their preset (brute force, Vamana, NN-Descent).
+    pub fn for_family(family: IndexFamily) -> Result<TuningSpace> {
+        crate::ensure!(
+            family.is_tunable(),
+            "index family {} has no tuning space (preset-only build)",
+            family.name()
+        );
+        let mut bounds: Vec<KnobBound> = Vec::new();
+        match family {
+            IndexFamily::Glass => {
+                bounds.extend(CONSTRUCTION_BOUNDS);
+                bounds.extend(SEARCH_BOUNDS);
+                bounds.extend(REFINE_BOUNDS);
+            }
+            IndexFamily::Hnsw => {
+                bounds.extend(CONSTRUCTION_BOUNDS);
+                bounds.extend(SEARCH_BOUNDS);
+            }
+            IndexFamily::Ivf => bounds.extend(IVF_BOUNDS),
+            _ => unreachable!("is_tunable checked above"),
+        }
+        bounds.extend(SERVING_BOUNDS);
+        Ok(TuningSpace { family, bounds })
+    }
+
+    pub fn family(&self) -> IndexFamily {
+        self.family
+    }
+
+    /// Number of flat action dimensions.
+    pub fn dims(&self) -> usize {
+        self.bounds.len()
+    }
+
+    /// The typed bound of every dimension, in encode/decode order.
+    pub fn bounds(&self) -> &[KnobBound] {
+        &self.bounds
+    }
+
+    /// Encode a configuration to the flat action vector (each dim in
+    /// `[-1, 1]`; the `VariantConfig` blocks use [`encode_action`]'s
+    /// exact layout).
+    pub fn encode(&self, cfg: &TunedConfig) -> Vec<f64> {
+        let mut a = Vec::with_capacity(self.dims());
+        match self.family {
+            IndexFamily::Glass => {
+                a.extend(encode_action(&cfg.variant, Module::Construction));
+                a.extend(encode_action(&cfg.variant, Module::Search));
+                a.extend(encode_action(&cfg.variant, Module::Refinement));
+            }
+            IndexFamily::Hnsw => {
+                a.extend(encode_action(&cfg.variant, Module::Construction));
+                a.extend(encode_action(&cfg.variant, Module::Search));
+            }
+            IndexFamily::Ivf => {
+                let i = &cfg.ivf;
+                a.push(unlerp(IVF_BOUNDS[0].lo, IVF_BOUNDS[0].hi, i.nlist as f64));
+                a.push(unlerp(IVF_BOUNDS[1].lo, IVF_BOUNDS[1].hi, i.kmeans_iters as f64));
+                a.push(unlerp(IVF_BOUNDS[2].lo, IVF_BOUNDS[2].hi, i.rerank_mult as f64));
+                a.push(if i.quantized_scan { 0.8 } else { -0.8 });
+            }
+            _ => unreachable!("constructed only for tunable families"),
+        }
+        let s = &cfg.serving;
+        a.push(unlerp(SERVING_BOUNDS[0].lo, SERVING_BOUNDS[0].hi, s.batch as f64));
+        a.push(unlerp(
+            SERVING_BOUNDS[1].lo,
+            SERVING_BOUNDS[1].hi,
+            s.threads.max(1) as f64,
+        ));
+        a
+    }
+
+    /// Decode a flat action vector (values clamped to `[-1, 1]`) into a
+    /// full configuration; float knobs are grid-snapped (module docs).
+    pub fn decode(&self, a: &[f64]) -> TunedConfig {
+        assert!(a.len() >= self.dims(), "action has {} of {} dims", a.len(), self.dims());
+        let mut cfg = TunedConfig::for_family(self.family);
+        let serving_at = self.dims() - SERVING_BOUNDS.len();
+        match self.family {
+            IndexFamily::Glass => {
+                let v = decode_action(&cfg.variant, Module::Construction, &a[..N_KNOBS]);
+                let v = decode_action(&v, Module::Search, &a[N_KNOBS..2 * N_KNOBS]);
+                let v = decode_action(&v, Module::Refinement, &a[2 * N_KNOBS..3 * N_KNOBS]);
+                cfg.variant = v;
+                snap_variant_floats(&mut cfg.variant);
+            }
+            IndexFamily::Hnsw => {
+                let v = decode_action(&cfg.variant, Module::Construction, &a[..N_KNOBS]);
+                let v = decode_action(&v, Module::Search, &a[N_KNOBS..2 * N_KNOBS]);
+                cfg.variant = v;
+                snap_variant_floats(&mut cfg.variant);
+            }
+            IndexFamily::Ivf => {
+                let i = &mut cfg.ivf;
+                i.nlist = lerp(IVF_BOUNDS[0].lo, IVF_BOUNDS[0].hi, a[0]).round() as usize;
+                i.kmeans_iters = lerp(IVF_BOUNDS[1].lo, IVF_BOUNDS[1].hi, a[1]).round() as usize;
+                i.rerank_mult = lerp(IVF_BOUNDS[2].lo, IVF_BOUNDS[2].hi, a[2]).round() as usize;
+                i.quantized_scan = a[3] > 0.0;
+            }
+            _ => unreachable!("constructed only for tunable families"),
+        }
+        let s = &mut cfg.serving;
+        s.batch = lerp(SERVING_BOUNDS[0].lo, SERVING_BOUNDS[0].hi, a[serving_at]).round() as usize;
+        s.threads =
+            lerp(SERVING_BOUNDS[1].lo, SERVING_BOUNDS[1].hi, a[serving_at + 1]).round() as usize;
+        cfg
+    }
+
+    /// Range-validate a configuration against this space's typed bounds
+    /// (plus the family-independent checks of [`validate_config`]'s
+    /// caller). Hostile values error; nothing panics.
+    pub fn validate(&self, cfg: &TunedConfig) -> Result<()> {
+        crate::ensure!(
+            cfg.family == self.family,
+            "config family {} does not match space family {}",
+            cfg.family.name(),
+            self.family.name()
+        );
+        for b in &self.bounds {
+            let Some(v) = knob_value(cfg, b.name) else {
+                continue; // bools and reserved dims have no invalid values
+            };
+            crate::ensure!(
+                v.is_finite(),
+                "knob {} is not finite ({v})",
+                b.name
+            );
+            if v == 0.0 && ZERO_SENTINEL_OK.contains(&b.name) {
+                continue;
+            }
+            crate::ensure!(
+                v >= b.lo && v <= b.hi,
+                "knob {} = {v} out of range [{}, {}]",
+                b.name,
+                b.lo,
+                b.hi
+            );
+        }
+        Ok(())
+    }
+}
+
+fn snap_variant_floats(v: &mut VariantConfig) {
+    v.construction.ef_scale = snap(v.construction.ef_scale, 0.0, 20.0);
+    v.construction.entry_diversity = snap(v.construction.entry_diversity, 0.0, 1.0);
+    v.refine.rerank_frac = snap(v.refine.rerank_frac, 0.2, 2.0);
+}
+
+/// Numeric value of a named knob (None for bools/reserved dims).
+fn knob_value(cfg: &TunedConfig, name: &str) -> Option<f64> {
+    let c = &cfg.variant.construction;
+    let s = &cfg.variant.search;
+    let r = &cfg.variant.refine;
+    Some(match name {
+        "construction.m" => c.m as f64,
+        "construction.ef_construction" => c.ef_construction as f64,
+        "construction.ef_scale" => c.ef_scale,
+        "construction.num_entry_points" => c.num_entry_points as f64,
+        "construction.entry_diversity" => c.entry_diversity,
+        "construction.prefetch_depth" => c.prefetch_depth as f64,
+        "construction.prefetch_locality" => c.prefetch_locality as f64,
+        "search.entry_tiers" => s.entry_tiers as f64,
+        "search.tier_budget_1" => s.tier_budget_1 as f64,
+        "search.tier_budget_2" => s.tier_budget_2 as f64,
+        "search.batch_size" => s.batch_size as f64,
+        "search.patience" => s.patience as f64,
+        "search.prefetch_depth" => s.prefetch_depth as f64,
+        "refine.lookahead" => r.lookahead as f64,
+        "refine.rerank_frac" => r.rerank_frac,
+        "ivf.nlist" => cfg.ivf.nlist as f64,
+        "ivf.kmeans_iters" => cfg.ivf.kmeans_iters as f64,
+        "ivf.rerank_mult" => cfg.ivf.rerank_mult as f64,
+        "serving.batch" => cfg.serving.batch as f64,
+        "serving.threads" => cfg.serving.threads as f64,
+        _ => return None,
+    })
+}
+
+/// Validate any [`TunedConfig`] — tunable families additionally pass
+/// through their space's typed bounds. This is the artifact loader's
+/// range gate: hostile files fail loudly here, never panic.
+pub fn validate_config(cfg: &TunedConfig) -> Result<()> {
+    let s = &cfg.serving;
+    crate::ensure!(!cfg.label.is_empty() && cfg.label.len() <= 64, "bad label length");
+    crate::ensure!(s.k >= 1 && s.k <= 1024, "serving.k {} out of range [1, 1024]", s.k);
+    crate::ensure!(s.ef >= 1 && s.ef <= 100_000, "serving.ef {} out of range", s.ef);
+    crate::ensure!(
+        s.batch >= 1 && s.batch <= 4096,
+        "serving.batch {} out of range [1, 4096]",
+        s.batch
+    );
+    crate::ensure!(s.threads <= 1024, "serving.threads {} out of range", s.threads);
+    let c = &cfg.variant.construction;
+    for (name, v) in [
+        ("target_recall", c.target_recall),
+        ("recall_threshold", c.recall_threshold),
+        ("ef_scale", c.ef_scale),
+        ("entry_diversity", c.entry_diversity),
+        ("rerank_frac", cfg.variant.refine.rerank_frac),
+    ] {
+        crate::ensure!(v.is_finite(), "knob {name} is not finite");
+    }
+    if cfg.family.is_tunable() {
+        TuningSpace::for_family(cfg.family)?.validate(cfg)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_tags_roundtrip() {
+        for f in IndexFamily::ALL {
+            assert_eq!(IndexFamily::from_tag(f.tag()), Some(f));
+        }
+        assert_eq!(IndexFamily::from_tag(99), None);
+    }
+
+    #[test]
+    fn algo_names_cover_the_cli() {
+        for algo in [
+            "bruteforce",
+            "hnsw",
+            "glass",
+            "crinn",
+            "parlayann",
+            "nndescent",
+            "pynndescent",
+            "vearch-ivf",
+        ] {
+            let cfg = TunedConfig::from_algo_name(algo).unwrap();
+            assert_eq!(cfg.label, algo);
+            validate_config(&cfg).unwrap();
+        }
+        assert!(TunedConfig::from_algo_name("faiss").is_none());
+        assert_eq!(
+            TunedConfig::from_algo_name("crinn").unwrap().variant,
+            VariantConfig::crinn_full()
+        );
+    }
+
+    #[test]
+    fn bounds_match_action_space() {
+        // The GLASS space is exactly the policy's 3 × N_KNOBS action
+        // layout plus the two serving dims.
+        let glass = TuningSpace::for_family(IndexFamily::Glass).unwrap();
+        assert_eq!(glass.dims(), 3 * N_KNOBS + 2);
+        let hnsw = TuningSpace::for_family(IndexFamily::Hnsw).unwrap();
+        assert_eq!(hnsw.dims(), 2 * N_KNOBS + 2);
+        let ivf = TuningSpace::for_family(IndexFamily::Ivf).unwrap();
+        assert_eq!(ivf.dims(), 6);
+        // encode_action and the bound table agree on the m range.
+        let mut cfg = TunedConfig::for_family(IndexFamily::Glass);
+        cfg.variant = decode_action(&cfg.variant, Module::Construction, &[-1.0; N_KNOBS]);
+        assert_eq!(cfg.variant.construction.m as f64, CONSTRUCTION_BOUNDS[0].lo);
+    }
+
+    #[test]
+    fn non_tunable_families_error() {
+        for f in [IndexFamily::BruteForce, IndexFamily::Vamana, IndexFamily::NnDescent] {
+            assert!(TuningSpace::for_family(f).is_err(), "{f:?}");
+        }
+    }
+
+    #[test]
+    fn presets_validate() {
+        for f in IndexFamily::ALL {
+            validate_config(&TunedConfig::for_family(f)).unwrap();
+        }
+        validate_config(&TunedConfig::from_variant(VariantConfig::crinn_full())).unwrap();
+    }
+
+    #[test]
+    fn decode_is_idempotent_under_encode() {
+        for f in IndexFamily::TUNABLE {
+            let space = TuningSpace::for_family(f).unwrap();
+            let mut rng = crate::util::rng::Rng::new(11 + f.tag() as u64);
+            for _ in 0..20 {
+                let a: Vec<f64> = (0..space.dims()).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+                let c1 = space.decode(&a);
+                space.validate(&c1).unwrap();
+                let e1 = space.encode(&c1);
+                let c2 = space.decode(&e1);
+                assert_eq!(c1, c2, "{f:?}");
+                assert_eq!(e1, space.encode(&c2), "{f:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range() {
+        let space = TuningSpace::for_family(IndexFamily::Glass).unwrap();
+        let mut cfg = TunedConfig::for_family(IndexFamily::Glass);
+        cfg.variant.construction.m = 4000;
+        let err = space.validate(&cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("construction.m"), "{err:#}");
+        let mut cfg = TunedConfig::for_family(IndexFamily::Ivf);
+        cfg.ivf.nlist = 0; // sqrt sentinel stays valid
+        validate_config(&cfg).unwrap();
+        cfg.ivf.nlist = 1 << 20;
+        assert!(validate_config(&cfg).is_err());
+    }
+}

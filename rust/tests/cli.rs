@@ -15,11 +15,11 @@ fn no_args_prints_usage_and_exits_2() {
     assert_eq!(out.status.code(), Some(2));
     let stderr = String::from_utf8_lossy(&out.stderr);
     assert!(
-        stderr.contains("usage: crinn <datasets|sweep|train|serve|prompt|compact>"),
+        stderr.contains("usage: crinn <datasets|sweep|train|tune|serve|prompt|compact>"),
         "stderr was: {stderr}"
     );
     // Every subcommand README.md §Quickstart documents is listed.
-    for sub in ["datasets", "sweep", "train", "serve", "prompt", "compact"] {
+    for sub in ["datasets", "sweep", "train", "tune", "serve", "prompt", "compact"] {
         assert!(stderr.contains(sub), "usage is missing `{sub}`");
     }
 }
@@ -101,6 +101,94 @@ fn sweep_results_identical_across_thread_counts() {
     let threaded = run("4");
     assert_eq!(sequential.len(), 2, "expected one row per ef value");
     assert_eq!(sequential, threaded);
+}
+
+#[test]
+fn tune_then_serve_tuned_roundtrip() {
+    // The self-tuning loop end-to-end through the binary, engine-free:
+    // `crinn tune --oracle synthetic --method lagrange` writes an
+    // artifact, `crinn serve --tuned` loads it and serves with its knobs.
+    let out_path = std::env::temp_dir().join(format!(
+        "crinn_{}_tune_smoke.crinn",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&out_path);
+    let tune = crinn_cmd()
+        .args([
+            "tune",
+            "--dataset",
+            "demo-64",
+            "--n",
+            "400",
+            "--queries",
+            "20",
+            "--evals",
+            "6",
+            "--floor",
+            "0.2",
+            "--oracle",
+            "synthetic",
+            "--out",
+            out_path.to_str().unwrap(),
+        ])
+        .env("CRINN_THREADS", "2")
+        .output()
+        .expect("run crinn tune");
+    assert_eq!(
+        tune.status.code(),
+        Some(0),
+        "stderr: {}",
+        String::from_utf8_lossy(&tune.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&tune.stdout);
+    assert!(stdout.contains("held-out recall@"), "stdout: {stdout}");
+    let serve = crinn_cmd()
+        .args([
+            "serve",
+            "--dataset",
+            "demo-64",
+            "--n",
+            "400",
+            "--queries",
+            "20",
+            "--requests",
+            "40",
+            "--tuned",
+            out_path.to_str().unwrap(),
+        ])
+        .env("CRINN_THREADS", "2")
+        .output()
+        .expect("run crinn serve --tuned");
+    assert_eq!(
+        serve.status.code(),
+        Some(0),
+        "stderr: {}",
+        String::from_utf8_lossy(&serve.stderr)
+    );
+    let serve_err = String::from_utf8_lossy(&serve.stderr);
+    assert!(serve_err.contains("tuned artifact"), "stderr: {serve_err}");
+    let _ = std::fs::remove_file(&out_path);
+}
+
+#[test]
+fn serve_rejects_corrupt_tuned_artifact() {
+    // A flipped byte must fail loudly (checksum), never panic or serve.
+    let path = std::env::temp_dir().join(format!(
+        "crinn_{}_tuned_corrupt.crinn",
+        std::process::id()
+    ));
+    std::fs::write(&path, b"CRTCgarbage-that-is-not-an-artifact").unwrap();
+    let out = crinn_cmd()
+        .args([
+            "serve", "--dataset", "demo-64", "--n", "300", "--queries", "10", "--tuned",
+            path.to_str().unwrap(),
+        ])
+        .output()
+        .expect("run crinn serve --tuned");
+    assert_eq!(out.status.code(), Some(1));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("tuned-config"), "stderr: {stderr}");
+    let _ = std::fs::remove_file(&path);
 }
 
 #[test]

@@ -1,0 +1,267 @@
+//! The self-tuning contract, from the outside:
+//!
+//! * seeded determinism — two `tune` pipelines with the same seed produce
+//!   **bit-identical** artifact files (the synthetic oracle removes the
+//!   only nondeterministic input, wall-clock QPS);
+//! * held-out constraint enforcement — the artifact's recall claim is
+//!   re-measured here, independently, on the held-out split and must
+//!   clear the floor;
+//! * encode/decode round-trip identity across the whole tuning space;
+//! * hostile-artifact rejection — truncation, corruption, bad version,
+//!   and in-range checksums over out-of-range fields all error loudly;
+//! * serving-layer plumbing — `ServerConfig::from_tuned` and the metrics
+//!   hash gauge.
+
+use crinn::coordinator::ServerConfig;
+use crinn::crinn::{
+    finalize, split_queries, tune_lagrange, RewardOracle, RewardSpec, SweepOracle,
+    SyntheticOracle, TuneOptions,
+};
+use crinn::dataset::synth;
+use crinn::util::rng::Rng;
+use crinn::variants::artifact::{payload_checksum, HEADER_BYTES};
+use crinn::variants::{IndexFamily, TunedArtifact, TunedConfig, TuningSpace};
+
+fn small_spec() -> RewardSpec {
+    RewardSpec {
+        ef_grid: vec![16, 32, 64, 128],
+        ..Default::default()
+    }
+}
+
+/// The full synthetic pipeline: search, finalize, serialize.
+fn synthetic_pipeline(seed: u64) -> Vec<u8> {
+    let space = TuningSpace::for_family(IndexFamily::Glass).unwrap();
+    let opts = TuneOptions {
+        evals: 12,
+        seed,
+        recall_floor: 0.2,
+        verbose: false,
+    };
+    let mut train = SyntheticOracle::new(small_spec());
+    let res = tune_lagrange(&space, &mut train, &opts).unwrap();
+    let mut holdout = SyntheticOracle::new(small_spec());
+    let art = finalize(&res, &mut holdout, &opts, "lagrange", "demo-64").unwrap();
+    art.to_bytes()
+}
+
+#[test]
+fn tune_pipeline_is_bitwise_deterministic_per_seed() {
+    let a = synthetic_pipeline(17);
+    let b = synthetic_pipeline(17);
+    assert_eq!(a, b, "same seed must produce identical artifact bytes");
+    // A different seed explores differently but still emits a valid file.
+    let c = synthetic_pipeline(18);
+    assert!(TunedArtifact::from_bytes(&c).is_ok());
+    let art_a = TunedArtifact::from_bytes(&a).unwrap();
+    assert_eq!(art_a.seed, 17);
+    assert_eq!(art_a.method, "lagrange");
+}
+
+#[test]
+fn tune_enforces_recall_floor_on_held_out_queries() {
+    // Real oracle, easy dataset: the artifact's recall claim must hold on
+    // queries the search never saw — and we re-measure it here rather
+    // than trusting the tuner's own bookkeeping.
+    let sp = synth::spec("demo-64").unwrap();
+    let mut ds = synth::generate_counts(sp, 1_200, 40, 97);
+    ds.compute_ground_truth(10);
+    let (train, holdout) = split_queries(&ds);
+    let opts = TuneOptions {
+        evals: 6,
+        seed: 29,
+        recall_floor: 0.85,
+        verbose: false,
+    };
+    let space = TuningSpace::for_family(IndexFamily::Glass).unwrap();
+    let mut train_oracle = SweepOracle::new(train, small_spec()).with_serving_measurement();
+    let res = tune_lagrange(&space, &mut train_oracle, &opts).unwrap();
+    let mut hold_oracle =
+        SweepOracle::new(holdout.clone(), small_spec()).with_serving_measurement();
+    let art = finalize(&res, &mut hold_oracle, &opts, "lagrange", &ds.name).unwrap();
+    assert!(
+        art.measured_recall >= opts.recall_floor,
+        "artifact claims {:.3} < floor",
+        art.measured_recall
+    );
+    assert!(small_spec().ef_grid.contains(&art.config.serving.ef));
+
+    // Independent re-measurement: build the tuned index from scratch and
+    // compute recall@10 at the artifact's serving ef on the held-out set.
+    let index = crinn::variants::build_index(
+        &art.config,
+        crinn::anns::VectorSet::from_dataset(&holdout),
+        small_spec().seed,
+    );
+    let k = 10;
+    let mut recall_acc = 0.0;
+    for qi in 0..holdout.n_queries() {
+        let found = index.search(holdout.query_vec(qi), k, art.config.serving.ef);
+        recall_acc += crinn::dataset::gt::recall_at_k(&found, &holdout.gt[qi], k);
+    }
+    let recall = recall_acc / holdout.n_queries() as f64;
+    assert!(
+        recall >= opts.recall_floor,
+        "re-measured held-out recall {recall:.3} under the floor"
+    );
+}
+
+#[test]
+fn tuning_space_roundtrip_identity_everywhere() {
+    // decode ∘ encode must be the identity on decoded configs, for every
+    // tunable family, across random action vectors: this is what makes
+    // "config → action → config" reproducible regardless of which side
+    // of the seam produced the point.
+    let mut rng = Rng::new(4242);
+    for family in IndexFamily::TUNABLE {
+        let space = TuningSpace::for_family(family).unwrap();
+        for trial in 0..25 {
+            let action: Vec<f64> = (0..space.dims())
+                .map(|_| rng.range_f64(-1.0, 1.0))
+                .collect();
+            let c1 = space.decode(&action);
+            space.validate(&c1).unwrap_or_else(|e| {
+                panic!("{family:?} trial {trial}: decoded config invalid: {e:#}")
+            });
+            let e1 = space.encode(&c1);
+            let c2 = space.decode(&e1);
+            assert_eq!(c1, c2, "{family:?} trial {trial}: decode∘encode drifted");
+        }
+        // The family preset also survives the round trip once snapped.
+        let snapped = space.decode(&space.encode(&TunedConfig::for_family(family)));
+        assert_eq!(snapped, space.decode(&space.encode(&snapped)));
+    }
+}
+
+fn sample_artifact() -> TunedArtifact {
+    TunedArtifact {
+        config: TunedConfig::from_algo_name("crinn").unwrap(),
+        dataset: "demo-64".into(),
+        method: "lagrange".into(),
+        seed: 17,
+        evals: 32,
+        recall_floor: 0.9,
+        measured_recall: 0.94,
+    }
+}
+
+/// Re-sign a byte-patched artifact so only range validation can reject it.
+fn resign(bytes: &mut [u8]) {
+    let sum = payload_checksum(&bytes[HEADER_BYTES..]);
+    bytes[12..20].copy_from_slice(&sum.to_le_bytes());
+}
+
+#[test]
+fn tuned_artifact_rejects_hostile_bytes() {
+    let good = sample_artifact().to_bytes();
+    assert!(TunedArtifact::from_bytes(&good).is_ok());
+
+    // Truncation at every length, including mid-header.
+    for cut in 0..good.len() {
+        assert!(
+            TunedArtifact::from_bytes(&good[..cut]).is_err(),
+            "accepted a {cut}-byte prefix"
+        );
+    }
+    // A trailing byte is not "close enough".
+    let mut longer = good.clone();
+    longer.push(0);
+    assert!(TunedArtifact::from_bytes(&longer).is_err());
+
+    // Every single-byte corruption of the payload trips the checksum.
+    for off in HEADER_BYTES..good.len() {
+        let mut bad = good.clone();
+        bad[off] ^= 0x40;
+        assert!(
+            TunedArtifact::from_bytes(&bad).is_err(),
+            "byte {off} flip accepted"
+        );
+    }
+
+    // Wrong magic / wrong version (outside the checksummed payload).
+    let mut bad = good.clone();
+    bad[1] = b'!';
+    let err = format!("{:#}", TunedArtifact::from_bytes(&bad).unwrap_err());
+    assert!(err.contains("not a CRINN"), "{err}");
+    let mut bad = good.clone();
+    bad[4] = 200;
+    let err = format!("{:#}", TunedArtifact::from_bytes(&bad).unwrap_err());
+    assert!(err.contains("version"), "{err}");
+}
+
+#[test]
+fn tuned_artifact_rejects_out_of_range_fields_past_the_checksum() {
+    let art = sample_artifact();
+    // construction.m sits right after the family tag + label string.
+    let m_off = HEADER_BYTES + 4 + 2 + art.config.label.len();
+    let mut bad = art.to_bytes();
+    bad[m_off..m_off + 4].copy_from_slice(&500_000u32.to_le_bytes());
+    resign(&mut bad);
+    let err = format!("{:#}", TunedArtifact::from_bytes(&bad).unwrap_err());
+    assert!(err.contains("range"), "{err}");
+
+    // A bool byte of 2 is hostile, not truthy.
+    let adaptive_ef_off = m_off + 8;
+    let mut bad = art.to_bytes();
+    bad[adaptive_ef_off] = 2;
+    resign(&mut bad);
+    let err = format!("{:#}", TunedArtifact::from_bytes(&bad).unwrap_err());
+    assert!(err.contains("bool byte 2"), "{err}");
+
+    // recall fields must stay inside [0, 1]: patch measured_recall (the
+    // final f64 of the payload) to 7.0 and re-sign.
+    let mut bad = art.to_bytes();
+    let n = bad.len();
+    bad[n - 8..].copy_from_slice(&7.0f64.to_bits().to_le_bytes());
+    resign(&mut bad);
+    let err = format!("{:#}", TunedArtifact::from_bytes(&bad).unwrap_err());
+    assert!(err.contains("outside [0, 1]"), "{err}");
+}
+
+#[test]
+fn tuned_artifact_file_roundtrip_and_hash_gauge() {
+    let art = sample_artifact();
+    let path = std::env::temp_dir().join(format!(
+        "crinn_{}_tuned_roundtrip.crinn",
+        std::process::id()
+    ));
+    art.save(&path).unwrap();
+    let back = TunedArtifact::load(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(back, art);
+    assert_eq!(back.hash(), art.hash());
+    assert_ne!(art.hash(), 0);
+
+    let metrics = crinn::coordinator::metrics::Metrics::new();
+    metrics.set_tuned_config_hash(art.hash());
+    assert_eq!(metrics.snapshot().tuned_config_hash, art.hash());
+}
+
+#[test]
+fn server_config_from_tuned_maps_serving_knobs() {
+    let mut art = sample_artifact();
+    art.config.serving.threads = 3;
+    art.config.serving.batch = 48;
+    let cfg = ServerConfig::from_tuned(&art);
+    assert_eq!(cfg.workers, 3);
+    assert_eq!(cfg.batch.max_batch, 48);
+    assert_eq!(cfg.queue_depth, ServerConfig::default().queue_depth);
+
+    // threads = 0 defers to the ambient CRINN_THREADS/auto sizing.
+    art.config.serving.threads = 0;
+    let cfg = ServerConfig::from_tuned(&art);
+    assert_eq!(cfg.workers, ServerConfig::default().workers);
+}
+
+#[test]
+fn tune_oracles_share_one_spec_window() {
+    // The satellite contract: the 0.85/0.95 window lives in exactly one
+    // place and every oracle reports it from there.
+    assert_eq!(RewardSpec::DEFAULT_WINDOW, (0.85, 0.95));
+    assert_eq!(RewardSpec::default_window(), (0.85, 0.95));
+    let spec = RewardSpec::default();
+    assert_eq!((spec.recall_lo, spec.recall_hi), RewardSpec::DEFAULT_WINDOW);
+    let o = SyntheticOracle::new(small_spec());
+    assert_eq!(o.spec().recall_lo, 0.85);
+    assert_eq!(o.name(), "synthetic");
+}
