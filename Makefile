@@ -1,6 +1,6 @@
 # Convenience targets. Rust work happens in rust/ (see README.md §Quickstart).
 
-.PHONY: build test test-filtered test-storage test-tune tune-smoke bench bench-distance bench-filtered bench-restart artifacts clean
+.PHONY: build test test-filtered test-storage test-tune test-pq tune-smoke bench bench-distance bench-filtered bench-restart artifacts clean
 
 build:
 	cd rust && cargo build --release
@@ -36,6 +36,12 @@ test-storage:
 # oracle, Lagrangian-search, and hostile-artifact groups.
 test-tune:
 	cd rust && CRINN_THREADS=2 cargo test -q tune && CRINN_THREADS=2 cargo test -q variants
+
+# PQ fast-scan suite (the CI pq lane): the 4-bit ADC kernel identity
+# groups, PqStore training/persist (incl. hostile PQ sections), and the
+# IVF-PQ / GLASS PQ-beam serving modes plus conformance floors.
+test-pq:
+	cd rust && CRINN_THREADS=2 cargo test -q pq && CRINN_THREADS=2 cargo test -q conformance
 
 # End-to-end self-tuning smoke: `crinn tune` on a tiny dataset writes a
 # checksummed artifact, `crinn serve --tuned` loads it and serves with

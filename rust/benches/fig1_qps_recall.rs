@@ -1,8 +1,8 @@
-//! Figure 1: QPS versus recall curves across six datasets × seven systems.
+//! Figure 1: QPS versus recall curves across six datasets × eight systems.
 //!
 //! Regenerates the paper's headline figure at sandbox scale: for every
 //! Table-2 dataset, builds {CRINN, GLASS, ParlayANN, NNDescent,
-//! PyNNDescent, Vearch-IVF, Voyager}, sweeps ef, and emits
+//! PyNNDescent, Vearch-IVF, IVF-PQ, Voyager}, sweeps ef, and emits
 //! `reports/fig1_qps_recall.csv` + per-dataset ASCII panels.
 //!
 //! Expected *shape* (what the paper claims and we check in EXPERIMENTS.md):

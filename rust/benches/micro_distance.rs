@@ -7,6 +7,7 @@
 //! Quick iteration: `make bench-distance` from the repo root runs only
 //! this target.
 
+use crinn::anns::store::pq::{self, PqStore};
 use crinn::distance::{dot, l2_sq, l2_sq_batch, quant::QuantizedStore, simd, Metric};
 use crinn::util::bench::{report_row, time_adaptive};
 use crinn::util::rng::Rng;
@@ -17,9 +18,10 @@ const BATCH: usize = 64;
 fn main() {
     let mut rng = Rng::new(1);
     println!(
-        "## micro_distance — per-pair distance kernels (dispatch: f32 {}, i8 {})\n",
+        "## micro_distance — per-pair distance kernels (dispatch: f32 {}, i8 {}, pq {})\n",
         simd::kernels().name,
-        simd::kernels_i8().name
+        simd::kernels_i8().name,
+        simd::kernels_pq().name
     );
     for &dim in &[25usize, 100, 128, 256, 784, 960] {
         let n = 1024;
@@ -115,6 +117,57 @@ fn main() {
             black_box(qdists.last().copied());
         });
         report_row(&format!("l2_i8_batch x{BATCH} d={dim}"), &s);
+        println!(
+            "{:>60}",
+            format!("~{:.1} ns/pair amortized", s.mean / BATCH as f64 * 1e9)
+        );
+
+        // 4-bit PQ fast-scan: query→LUT build, per-row ADC (scalar table
+        // walk), the dispatched 32-row block kernel over position-major
+        // blocks (the IVF posting-list shape), and the gathered batch
+        // (the GLASS beam / rerank shape).
+        let pq_store = PqStore::build(&data, dim, 16, 1);
+        let s = time_adaptive(0.3, 1000, || {
+            black_box(pq_store.lut(Metric::L2, &q));
+        });
+        report_row(&format!("pq lut-build m=16 d={dim}"), &s);
+
+        let lut = pq_store.lut(Metric::L2, &q);
+        let mut i = 0;
+        let s = time_adaptive(0.3, 1000, || {
+            i = (i + 1) % n;
+            black_box(pq_store.distance(&lut, i));
+        });
+        report_row(&format!("pq_adc portable d={dim}"), &s);
+
+        let rb = pq_store.row_bytes();
+        let mut blocks: Vec<u8> = Vec::new();
+        for r in 0..n {
+            pq::scatter_row(&mut blocks, rb, r, pq_store.code(r));
+        }
+        let n_blocks = blocks.len() / pq::block_bytes(rb);
+        let mut sums = [0u32; simd::PQ_BLOCK];
+        let mut b = 0;
+        let s = time_adaptive(0.3, 1000, || {
+            b = (b + 1) % n_blocks;
+            let block = &blocks[b * pq::block_bytes(rb)..(b + 1) * pq::block_bytes(rb)];
+            (simd::kernels_pq().block)(&lut, block, &mut sums);
+            black_box(sums[0]);
+        });
+        report_row(&format!("pq_adc block32 d={dim}"), &s);
+        println!(
+            "{:>60}",
+            format!("~{:.1} ns/pair amortized", s.mean / simd::PQ_BLOCK as f64 * 1e9)
+        );
+
+        let mut pq_out: Vec<f32> = Vec::with_capacity(BATCH);
+        let mut b = 0;
+        let s = time_adaptive(0.3, 1000, || {
+            b = (b + 1) % (n / BATCH);
+            pq_store.distance_batch(&lut, &ids[b * BATCH..(b + 1) * BATCH], &mut pq_out);
+            black_box(pq_out.last().copied());
+        });
+        report_row(&format!("pq_adc_batch x{BATCH} d={dim}"), &s);
         println!(
             "{:>60}",
             format!("~{:.1} ns/pair amortized", s.mean / BATCH as f64 * 1e9)

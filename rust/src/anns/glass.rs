@@ -22,9 +22,11 @@ use crate::anns::hnsw::search::{
     beam_search0, greedy_descent, search_admit, BeamScorer, SearchContext,
 };
 use crate::anns::scratch::ScratchPool;
+use crate::anns::store::pq::PqStore;
 use crate::anns::tombstones::Tombstones;
 use crate::anns::{AnnIndex, MutableAnnIndex, VectorSet};
 use crate::distance::quant::QuantizedStore;
+use crate::distance::simd::PqLut;
 use crate::distance::Metric;
 use crate::util::rng::Rng;
 use crate::variants::VariantConfig;
@@ -40,6 +42,12 @@ use crate::variants::VariantConfig;
 pub struct GlassIndex {
     pub graph: HnswGraph,
     pub quant: QuantizedStore,
+    /// Optional 4-bit PQ codes for the layer-0 beam (DESIGN.md
+    /// §PQ-Fast-Scan): when present, the quantized preliminary search
+    /// scores through ADC lookup tables instead of the SQ8 rows — 8× less
+    /// code traffic — and the exact rerank stays unchanged. Outside the
+    /// CRINN action space (a serving-mode choice, not a tuned knob).
+    pq: Option<PqStore>,
     pub config: VariantConfig,
     label: String,
     scratch: ScratchPool,
@@ -62,6 +70,7 @@ impl GlassIndex {
         GlassIndex {
             graph,
             quant,
+            pq: None,
             config,
             label: "glass".to_string(),
             scratch: ScratchPool::new(),
@@ -77,6 +86,29 @@ impl GlassIndex {
         self
     }
 
+    /// Train 4-bit PQ codebooks over the current vectors and switch the
+    /// layer-0 beam to ADC fast-scan. Deterministic for a fixed seed;
+    /// codebooks are frozen afterwards (inserts only encode).
+    pub fn enable_pq(&mut self, m: usize, seed: u64) {
+        self.pq = Some(PqStore::build(
+            &self.graph.vectors.data,
+            self.graph.vectors.dim,
+            m,
+            seed,
+        ));
+    }
+
+    /// Attach an already-built PQ store (snapshot load path). The reader
+    /// validates shape/row-count against the graph before calling this.
+    pub(crate) fn attach_pq(&mut self, store: PqStore) {
+        self.pq = Some(store);
+    }
+
+    /// The layer-0 PQ store, when enabled.
+    pub fn pq_store(&self) -> Option<&PqStore> {
+        self.pq.as_ref()
+    }
+
     /// Tune the selectivity crossover: filters with at most this many
     /// matching ids take the exact-scan fallback instead of the beam.
     pub fn set_filtered_fallback(&mut self, threshold: usize) {
@@ -89,6 +121,7 @@ impl GlassIndex {
         GlassIndex {
             graph,
             quant,
+            pq: None,
             config,
             label: "glass".to_string(),
             scratch: ScratchPool::new(),
@@ -195,8 +228,39 @@ impl GlassIndex {
         let g = &self.graph;
         let knobs = &self.config.search;
         let refine = &self.config.refine;
-        let qcode = self.quant.encode_query(query);
         let metric = g.vectors.metric;
+        if let Some(store) = &self.pq {
+            // PQ beam: one LUT build per query, then every scored node is
+            // m u8 table lookups. Same control flow, same admission, same
+            // exact rerank afterwards.
+            let lut = store.lut(metric, query);
+            let (_, e0) = greedy_descent(g, query);
+            let d0 = store.distance(&lut, e0 as usize);
+            let scorer = PqScorer {
+                pq: store,
+                graph: g,
+                lut: &lut,
+                batch_lookahead: if refine.adaptive_prefetch {
+                    knobs.prefetch_depth.max(1)
+                } else {
+                    0
+                },
+                seq_lookahead: refine.lookahead.max(1),
+                adaptive_prefetch: refine.adaptive_prefetch,
+                precomputed_metadata: refine.precomputed_metadata,
+                locality: knobs.prefetch_locality,
+            };
+            return beam_search0(
+                &scorer,
+                knobs,
+                ctx,
+                (d0, e0),
+                &g.entry_points,
+                ef.max(k),
+                &admit,
+            );
+        }
+        let qcode = self.quant.encode_query(query);
         // Tier-1 entry from full-precision greedy descent, re-scored in the
         // quantized space the beam ranks in.
         let (_, e0) = greedy_descent(g, query);
@@ -357,6 +421,56 @@ impl BeamScorer for QuantScorer<'_> {
     }
 }
 
+/// PQ ADC scorer for the shared beam — the fast-scan sibling of
+/// [`QuantScorer`]: distances come from u8 lookup tables over the packed
+/// 4-bit rows, adjacency and prefetch knobs behave identically. Batch
+/// scoring is bitwise identical to per-pair (pure integer accumulation +
+/// one shared f32 decode), so the edge-batch knob stays a speed dial here
+/// too.
+struct PqScorer<'a> {
+    pq: &'a PqStore,
+    graph: &'a HnswGraph,
+    lut: &'a PqLut,
+    /// Lookahead depth for the one-to-many ADC gather (edge-batch path).
+    batch_lookahead: usize,
+    /// Lookahead distance for the sequential scan (§6.3 `refine.lookahead`).
+    seq_lookahead: usize,
+    adaptive_prefetch: bool,
+    precomputed_metadata: bool,
+    locality: i32,
+}
+
+impl BeamScorer for PqScorer<'_> {
+    fn score(&self, id: u32) -> f32 {
+        self.pq.distance(self.lut, id as usize)
+    }
+
+    fn score_batch(&self, ids: &[u32], out: &mut Vec<f32>) {
+        self.pq
+            .distance_batch_with(self.lut, ids, self.batch_lookahead, self.locality, out);
+    }
+
+    fn neighbors(&self, u: u32) -> &[u32] {
+        if self.precomputed_metadata {
+            self.graph.neighbors0_meta(u)
+        } else {
+            self.graph.neighbors0_scan(u)
+        }
+    }
+
+    fn warmup(&self, _neighbors: &[u32]) {}
+
+    fn lookahead(&self, neighbors: &[u32], j: usize) {
+        if self.adaptive_prefetch {
+            let ahead = j + self.seq_lookahead;
+            if ahead < neighbors.len() {
+                let row = self.pq.code(neighbors[ahead] as usize);
+                crate::distance::prefetch_ptr(row.as_ptr(), self.locality);
+            }
+        }
+    }
+}
+
 #[inline]
 fn prefetch_code(code: &[i8], locality: i32) {
     // Hint the raw byte address — cache lines are typeless. The previous
@@ -423,15 +537,19 @@ impl AnnIndex for GlassIndex {
     }
 
     fn memory_bytes(&self) -> usize {
-        self.graph.memory_bytes() + self.quant.bytes()
+        self.graph.memory_bytes()
+            + self.quant.bytes()
+            + self.pq.as_ref().map_or(0, |p| p.bytes())
     }
 }
 
 impl MutableAnnIndex for GlassIndex {
     fn insert(&mut self, vec: &[f32]) -> crate::Result<u32> {
-        // Shared HNSW insertion body; the slot hook keeps the SQ8 code
-        // rows in lockstep with the vector rows (frozen-scale encoding).
+        // Shared HNSW insertion body; the slot hook keeps the SQ8 (and,
+        // when enabled, PQ) code rows in lockstep with the vector rows —
+        // both encoders are frozen after training.
         let quant = &mut self.quant;
+        let pq = &mut self.pq;
         crate::anns::hnsw::insert_point(
             &mut self.graph,
             &self.config.construction,
@@ -445,6 +563,13 @@ impl MutableAnnIndex for GlassIndex {
                     quant.reencode(id as usize, vec);
                 } else {
                     quant.append(vec);
+                }
+                if let Some(p) = pq {
+                    if recycled {
+                        p.reencode(id as usize, vec);
+                    } else {
+                        p.append(vec);
+                    }
                 }
             },
         )
@@ -864,5 +989,62 @@ mod tests {
                 assert_eq!(got, want, "quantized_primary={quantized} query {qi}");
             }
         }
+    }
+
+    #[test]
+    fn glass_pq_beam_reaches_recall_and_stays_schedule_invariant() {
+        let ds = dataset();
+        let mut idx = GlassIndex::build(
+            VectorSet::from_dataset(&ds),
+            VariantConfig::glass_baseline(),
+            3,
+        );
+        idx.enable_pq(16, 3);
+        let r = recall(&idx, &ds, 128);
+        // 4-bit codes rank coarser than SQ8, but the exact rerank must
+        // still carry the pipeline to useful recall.
+        assert!(r > 0.75, "glass-pq recall@10 ef=128: {r}");
+        // Edge-batch and prefetch knobs stay pure speed dials on the PQ
+        // path (integer ADC sums + one shared decode).
+        let mut cfg = idx.config.clone();
+        cfg.search.edge_batch = false;
+        idx.set_runtime_knobs(&cfg);
+        let per_pair: Vec<_> = (0..ds.n_queries())
+            .map(|qi| idx.search_with_dists(ds.query_vec(qi), 10, 64))
+            .collect();
+        cfg.search.edge_batch = true;
+        cfg.search.batch_size = 8;
+        cfg.refine.adaptive_prefetch = true;
+        cfg.search.prefetch_depth = 6;
+        idx.set_runtime_knobs(&cfg);
+        let batched: Vec<_> = (0..ds.n_queries())
+            .map(|qi| idx.search_with_dists(ds.query_vec(qi), 10, 64))
+            .collect();
+        assert_eq!(per_pair, batched, "pq beam changed under batch/prefetch knobs");
+    }
+
+    #[test]
+    fn glass_pq_insert_keeps_codes_in_lockstep() {
+        let ds = dataset();
+        let mut idx = GlassIndex::build(
+            VectorSet::from_dataset(&ds),
+            VariantConfig::glass_baseline(),
+            3,
+        );
+        idx.enable_pq(16, 3);
+        let n0 = idx.len();
+        let v = ds.query_vec(1).to_vec();
+        let id = idx.insert(&v).unwrap();
+        assert_eq!(id as usize, n0);
+        assert_eq!(idx.pq_store().unwrap().len(), n0 + 1, "pq row must be appended");
+        // The exact duplicate wins its own query through the PQ beam +
+        // exact rerank.
+        assert_eq!(idx.search(&v, 1, 64), vec![id]);
+        idx.delete(id).unwrap();
+        assert_eq!(idx.consolidate().unwrap(), 1);
+        let id2 = idx.insert(&v).unwrap();
+        assert_eq!(id2, id, "freed slot must be recycled");
+        assert_eq!(idx.pq_store().unwrap().len(), n0 + 1, "recycle must not grow pq codes");
+        assert_eq!(idx.search(&v, 1, 64), vec![id2]);
     }
 }

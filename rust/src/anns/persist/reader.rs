@@ -292,6 +292,46 @@ pub(crate) fn load_v3(
         .map_err(|e| Error::msg(format!("corrupt index: {e}")))?;
     let mut idx = crate::anns::glass::GlassIndex::from_parts(graph, quant, config);
     idx.restore_mutation_state(deleted, free, rng_state);
+
+    // SEC_PQ_* (optional): layer-0 PQ fast-scan state. A present meta
+    // section makes the codebook and packed-code sections mandatory, and
+    // both are sized against the header's point count before any view is
+    // taken — the codes become zero-copy [`Segment`] views exactly like
+    // the SQ8 section above.
+    if let Some((poff, plen)) = dir.get(sections::SEC_PQ_META) {
+        let mut s = &region.as_slice()[poff..poff + plen];
+        let pq_m;
+        {
+            let mut r = R { inner: &mut s, limit: plen as u64 };
+            pq_m = r.u32()? as usize;
+            let _reserved = r.u32()?;
+        }
+        crate::ensure!(s.is_empty(), "corrupt index: trailing bytes in pq meta section");
+        crate::ensure!(
+            pq_m >= 1 && pq_m <= dim.min(256),
+            "corrupt index: pq subquantizer count {pq_m} out of range for dimension {dim}"
+        );
+        let ds = dim.div_ceil(pq_m);
+        let row_bytes = pq_m.div_ceil(2);
+        let cb_elems = (pq_m * 16 * ds) as u64;
+        let code_elems = (n as u64)
+            .checked_mul(row_bytes as u64)
+            .ok_or_else(|| Error::msg("corrupt index: pq code size overflows".to_string()))?;
+        let (cboff, _) = sized(sections::SEC_PQ_CODEBOOKS, 4, cb_elems, "pq codebooks")?;
+        let (pcoff, _) = sized(sections::SEC_PQ_CODES, 1, code_elems, "pq codes")?;
+        let codebooks: Segment<f32> =
+            Segment::from_region(Arc::clone(&region), cboff, pq_m * 16 * ds)?;
+        let pq_codes: Segment<u8> = Segment::from_region(Arc::clone(&region), pcoff, n * row_bytes)?;
+        let store = crate::anns::store::pq::PqStore::from_parts(dim, pq_m, codebooks, pq_codes)
+            .map_err(|e| Error::msg(format!("corrupt index: pq state: {e}")))?;
+        crate::ensure!(
+            store.len() == n,
+            "corrupt index: pq codes cover {} rows but the index has {n} points",
+            store.len()
+        );
+        idx.attach_pq(store);
+    }
+
     Ok((idx, metadata))
 }
 
@@ -631,6 +671,119 @@ mod tests {
         let sum = sections::checksum(&deep[index_off..index_off + 40]);
         deep = patched_at(&deep, entry_at(0) + 24, &sum.to_le_bytes());
         expect_err(deep, "popcount mismatch", "popcount");
+        std::fs::remove_file(&path).ok();
+    }
+
+    /// Read the i-th directory entry's payload (offset, len) from raw
+    /// snapshot bytes.
+    fn entry_payload(full: &[u8], i: usize) -> (usize, usize) {
+        let off =
+            u64::from_le_bytes(full[entry_at(i) + 8..entry_at(i) + 16].try_into().unwrap());
+        let len =
+            u64::from_le_bytes(full[entry_at(i) + 16..entry_at(i) + 24].try_into().unwrap());
+        (off as usize, len as usize)
+    }
+
+    #[test]
+    fn v3_pq_roundtrip_heap_and_mmap_bitwise_identical() {
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 700, 20, 95);
+        ds.compute_ground_truth(10);
+        let mut idx = GlassIndex::build(
+            crate::anns::VectorSet::from_dataset(&ds),
+            VariantConfig::crinn_full(),
+            7,
+        );
+        idx.enable_pq(16, 7);
+        let path = tmp("pq_roundtrip_v3.idx");
+        save_glass(&idx, &path).unwrap();
+        let heap = load_glass(&path).unwrap();
+        let mapped = load_glass_mmap(&path).unwrap();
+        for loaded in [&heap, &mapped] {
+            let pq = loaded.pq_store().expect("pq sections must round-trip");
+            assert_eq!(pq.m(), 16);
+            assert_eq!(pq.len(), idx.len());
+        }
+        // Both loads serve the packed codes as region views, not copies.
+        assert!(heap.pq_store().unwrap().is_mapped());
+        assert!(mapped.pq_store().unwrap().is_mapped());
+        for qi in 0..ds.n_queries() {
+            let want = idx.search_with_dists(ds.query_vec(qi), 10, 64);
+            assert_eq!(heap.search_with_dists(ds.query_vec(qi), 10, 64), want, "heap q{qi}");
+            assert_eq!(mapped.search_with_dists(ds.query_vec(qi), 10, 64), want, "mmap q{qi}");
+        }
+        // PQ-less snapshots keep reporting no store.
+        let plain = GlassIndex::build(
+            crate::anns::VectorSet::from_dataset(&ds),
+            VariantConfig::crinn_full(),
+            7,
+        );
+        save_glass(&plain, &path).unwrap();
+        assert!(load_glass(&path).unwrap().pq_store().is_none());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v3_pq_rejects_hostile_pq_sections() {
+        let sp = synth::spec("demo-64").unwrap();
+        let ds = synth::generate_counts(sp, 300, 5, 96);
+        let mut idx = GlassIndex::build(
+            crate::anns::VectorSet::from_dataset(&ds),
+            VariantConfig::glass_baseline(),
+            7,
+        );
+        idx.enable_pq(8, 7);
+        let path = tmp("pq_hostile_v3.idx");
+        save_glass(&idx, &path).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        assert!(load_glass(&path).unwrap().pq_store().is_some(), "pristine file must load");
+        // No metadata section, so the insertion order puts the PQ
+        // sections at slots 10 (meta), 11 (codebooks), 12 (codes).
+        let expect_err = |bytes: Vec<u8>, what: &str, needle: &str| {
+            std::fs::write(&path, bytes).unwrap();
+            for (label, res) in [
+                ("heap", load_glass(&path)),
+                ("mmap", load_glass_mmap(&path)),
+            ] {
+                let err = res.err().unwrap_or_else(|| panic!("{what} accepted ({label})"));
+                let msg = format!("{err:#}");
+                assert!(msg.contains(needle), "{what} ({label}): unexpected error: {msg}");
+            }
+        };
+
+        // (a) Subquantizer count zeroed — deep-patch the meta payload and
+        // restore its checksum so only the semantic range check can fire.
+        let (moff, mlen) = entry_payload(&full, 10);
+        assert_eq!(mlen, 8, "pq meta payload is m + reserved");
+        let mut deep = patched_at(&full, moff, &0u32.to_le_bytes());
+        let sum = sections::checksum(&deep[moff..moff + mlen]);
+        deep = patched_at(&deep, entry_at(10) + 24, &sum.to_le_bytes());
+        expect_err(deep, "zero pq m", "pq subquantizer count");
+        // (b) Subquantizer count above the dimension, same re-sign trick.
+        let mut deep = patched_at(&full, moff, &65u32.to_le_bytes());
+        let sum = sections::checksum(&deep[moff..moff + mlen]);
+        deep = patched_at(&deep, entry_at(10) + 24, &sum.to_le_bytes());
+        expect_err(deep, "oversized pq m", "pq subquantizer count");
+        // (c) Truncated codebook section: shrink the directory length and
+        // re-sign over the shorter payload so the size check, not the
+        // checksum, must reject it.
+        let (cboff, cblen) = entry_payload(&full, 11);
+        let mut deep = patched_at(&full, entry_at(11) + 16, &((cblen - 4) as u64).to_le_bytes());
+        let sum = sections::checksum(&deep[cboff..cboff + cblen - 4]);
+        deep = patched_at(&deep, entry_at(11) + 24, &sum.to_le_bytes());
+        expect_err(deep, "truncated pq codebooks", "pq codebooks");
+        // (d) Truncated packed-code section, same trick.
+        let (pcoff, pclen) = entry_payload(&full, 12);
+        let mut deep = patched_at(&full, entry_at(12) + 16, &((pclen - 1) as u64).to_le_bytes());
+        let sum = sections::checksum(&deep[pcoff..pcoff + pclen - 1]);
+        deep = patched_at(&deep, entry_at(12) + 24, &sum.to_le_bytes());
+        expect_err(deep, "truncated pq codes", "pq codes");
+        // (e) A non-finite codebook entry must be rejected by the store's
+        // own validation (checksum re-signed so it gets that far).
+        let mut deep = patched_at(&full, cboff, &f32::NAN.to_le_bytes());
+        let sum = sections::checksum(&deep[cboff..cboff + cblen]);
+        deep = patched_at(&deep, entry_at(11) + 24, &sum.to_le_bytes());
+        expect_err(deep, "non-finite pq codebook", "pq state");
         std::fs::remove_file(&path).ok();
     }
 }

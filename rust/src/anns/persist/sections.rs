@@ -63,6 +63,14 @@ pub(crate) const SEC_CONFIG: u32 = 9;
 pub(crate) const SEC_METADATA: u32 = 10;
 /// Mutation state: tombstone bitset words, free list, insert RNG state.
 pub(crate) const SEC_MUTATION: u32 = 11;
+/// Optional PQ header: subquantizer count `m` (u32) + reserved u32.
+/// Present iff the index has a layer-0 PQ store; then the two sections
+/// below are required.
+pub(crate) const SEC_PQ_META: u32 = 12;
+/// Raw `[m * 16 * ds]` f32 PQ codebooks (served zero-copy).
+pub(crate) const SEC_PQ_CODEBOOKS: u32 = 13;
+/// Raw `[n * (m+1)/2]` u8 packed 4-bit PQ code rows (served zero-copy).
+pub(crate) const SEC_PQ_CODES: u32 = 14;
 
 /// Word-at-a-time FNV-1a-64 over the payload bytes: 8 bytes per round
 /// (LE-read into the accumulator), remainder bytes one at a time — for

@@ -178,5 +178,20 @@ pub(crate) fn save_v3(
     }
     b.add(sections::SEC_MUTATION, buf);
 
+    // SEC_PQ_* (optional): layer-0 PQ fast-scan state — header (m), raw
+    // f32 codebooks, raw packed 4-bit rows. Appended after every legacy
+    // section so directory slots of PQ-less snapshots are unchanged.
+    if let Some(pq) = idx.pq_store() {
+        let mut buf = Vec::new();
+        {
+            let mut w = W(&mut buf);
+            w.u32(pq.m() as u32)?;
+            w.u32(0)?; // reserved
+        }
+        b.add(sections::SEC_PQ_META, buf);
+        b.add(sections::SEC_PQ_CODEBOOKS, as_bytes(pq.codebooks()).to_vec());
+        b.add(sections::SEC_PQ_CODES, as_bytes(pq.codes()).to_vec());
+    }
+
     b.write_to(path)
 }

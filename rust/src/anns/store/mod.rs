@@ -6,6 +6,9 @@
 //!   page cache) or heap-backed (tests, non-unix targets, small files),
 //!   plus [`region::Segment`], the copy-on-write typed view the graph
 //!   adjacency and SQ8 code arrays live behind;
+//! * [`pq`] — [`pq::PqStore`], 4-bit product-quantized codebooks + packed
+//!   code rows (the ADC fast-scan substrate, DESIGN.md §PQ-Fast-Scan),
+//!   both `Segment`-backed so snapshots serve them from mmap;
 //! * [`wal`] — [`wal::VectorLog`], the append-only mutation log: every
 //!   acked insert/delete is a checksummed, fsync'd frame, and recovery
 //!   drops exactly the torn tail;
@@ -13,9 +16,11 @@
 //!   compaction (fold the log into a fresh snapshot, truncate it).
 
 pub mod durable;
+pub mod pq;
 pub mod region;
 pub mod wal;
 
 pub use durable::{compact_glass, restore_glass, CompactionStats, RestoredGlass};
+pub use pq::PqStore;
 pub use region::{MappedRegion, Segment};
 pub use wal::{LogRecord, VectorLog};

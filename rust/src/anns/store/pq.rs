@@ -1,0 +1,574 @@
+//! 4-bit product-quantized vector storage (DESIGN.md §PQ-Fast-Scan).
+//!
+//! A [`PqStore`] is the PQ sibling of `distance::quant::QuantizedStore`:
+//! it splits each `dim`-dimensional vector into `m` subspaces of
+//! `ds = ceil(dim / m)` dims (the tail subspace zero-padded), trains 16
+//! centroids per subspace with deterministic seeded k-means (4-bit codes),
+//! and stores each vector as `(m + 1) / 2` packed bytes — two codes per
+//! byte, low nibble = even subspace `2p`, high nibble = odd subspace
+//! `2p + 1`. That is 1/8 the bytes of SQ8 per dim when `m = dim / 4`, and
+//! ≤ 1/8 of f32 whenever `m ≤ dim / 2` (asserted by the size test below).
+//!
+//! Search-time distances are asymmetric (ADC): the query builds a
+//! [`PqLut`] of per-subspace distance tables once, then every row costs
+//! `m` u8 table lookups (`distance::simd` fast-scan kernels). Approximate
+//! by construction — callers re-rank survivors in exact f32, same contract
+//! as the SQ8 path.
+//!
+//! Codebooks are **frozen after training**: `append`/`reencode` only run
+//! the encoder, so an insert never perturbs existing rows and rebuilds are
+//! bit-stable — the same freeze discipline as `QuantizedStore.scale`.
+
+use super::region::Segment;
+use crate::distance::simd::{self, PqLut, PQ_BLOCK};
+use crate::distance::Metric;
+use crate::util::rng::Rng;
+
+/// Centroids per subspace — fixed at 16 so one code is one nibble.
+pub const PQ_K: usize = 16;
+
+/// Rows sampled for codebook training (matches the IVF k-means cap).
+const TRAIN_SAMPLE: usize = 20_000;
+
+/// Lloyd iterations per subspace. Fixed (not a knob): PQ codebook quality
+/// saturates fast at k=16, and a fixed count keeps builds deterministic
+/// and cheap.
+const LLOYD_ITERS: usize = 12;
+
+/// Clamp a requested subquantizer count to what the dimensionality (and
+/// the u16-accumulator overflow bound of the fast-scan kernel) supports.
+pub fn clamp_m(dim: usize, m: usize) -> usize {
+    m.clamp(1, dim.min(256))
+}
+
+/// 4-bit PQ codebooks + packed code rows. Both live in [`Segment`]s so a
+/// v3 snapshot can serve them straight from an mmap.
+pub struct PqStore {
+    dim: usize,
+    /// Subquantizer count (`1 ..= min(dim, 256)`).
+    m: usize,
+    /// Dims per subspace (`ceil(dim / m)`; the last subspace is
+    /// zero-padded past `dim`).
+    ds: usize,
+    /// `m × 16 × ds` f32, row-major `[subspace][centroid][dim]`, padding
+    /// dims stored as 0.0 so they contribute nothing to L2 or dot tables.
+    codebooks: Segment<f32>,
+    /// `n × row_bytes` packed rows.
+    codes: Segment<u8>,
+}
+
+impl PqStore {
+    /// Train codebooks on `data` (row-major `n × dim`) and encode every
+    /// row. Deterministic for a fixed `(data, dim, m, seed)`.
+    pub fn build(data: &[f32], dim: usize, m: usize, seed: u64) -> PqStore {
+        assert!(dim > 0, "pq dim must be positive");
+        assert_eq!(data.len() % dim, 0, "pq data not a multiple of dim");
+        let m = clamp_m(dim, m);
+        let ds = dim.div_ceil(m);
+        let n = data.len() / dim;
+        let codebooks = train_codebooks(data, dim, m, ds, seed);
+        let mut store = PqStore {
+            dim,
+            m,
+            ds,
+            codebooks: Segment::from(codebooks),
+            codes: Segment::from(Vec::new()),
+        };
+        let mut packed = Vec::with_capacity(n * store.row_bytes());
+        for i in 0..n {
+            store.encode_into(&data[i * dim..(i + 1) * dim], &mut packed);
+        }
+        store.codes = Segment::from(packed);
+        store
+    }
+
+    /// Reassemble from snapshot sections. Every structural property is
+    /// re-derived and checked — a hostile file gets an error, not a panic.
+    pub fn from_parts(
+        dim: usize,
+        m: usize,
+        codebooks: Segment<f32>,
+        codes: Segment<u8>,
+    ) -> Result<PqStore, String> {
+        if dim == 0 {
+            return Err("pq store: dim must be positive".into());
+        }
+        if m < 1 || m > dim.min(256) {
+            return Err(format!("pq store: m={m} out of range [1, {}]", dim.min(256)));
+        }
+        let ds = dim.div_ceil(m);
+        if codebooks.len() != m * PQ_K * ds {
+            return Err(format!(
+                "pq store: codebook length {} != m*16*ds = {}",
+                codebooks.len(),
+                m * PQ_K * ds
+            ));
+        }
+        if let Some(bad) = codebooks.iter().find(|v| !v.is_finite()) {
+            return Err(format!("pq store: non-finite codebook entry {bad}"));
+        }
+        let row_bytes = (m + 1) / 2;
+        if codes.len() % row_bytes != 0 {
+            return Err(format!(
+                "pq store: code bytes {} not a multiple of row stride {row_bytes}",
+                codes.len()
+            ));
+        }
+        Ok(PqStore { dim, m, ds, codebooks, codes })
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Dims per subspace.
+    pub fn ds(&self) -> usize {
+        self.ds
+    }
+
+    /// Packed bytes per row.
+    pub fn row_bytes(&self) -> usize {
+        (self.m + 1) / 2
+    }
+
+    pub fn len(&self) -> usize {
+        self.codes.len() / self.row_bytes()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+
+    /// Packed row `i`.
+    pub fn code(&self, i: usize) -> &[u8] {
+        let rb = self.row_bytes();
+        &self.codes[i * rb..(i + 1) * rb]
+    }
+
+    /// The whole packed code matrix (row-major).
+    pub fn codes(&self) -> &[u8] {
+        &self.codes
+    }
+
+    /// The raw codebook array (`m × 16 × ds` f32).
+    pub fn codebooks(&self) -> &[f32] {
+        &self.codebooks
+    }
+
+    /// Centroid `c` of subspace `j`.
+    fn centroid(&self, j: usize, c: usize) -> &[f32] {
+        let at = (j * PQ_K + c) * self.ds;
+        &self.codebooks[at..at + self.ds]
+    }
+
+    /// Encode one vector against the frozen codebooks: nearest centroid
+    /// per subspace in (zero-padded) subspace L2, ties to the lowest
+    /// index. Deterministic, and independent of every other row.
+    pub fn encode(&self, v: &[f32]) -> Vec<u8> {
+        let mut row = Vec::with_capacity(self.row_bytes());
+        self.encode_into(v, &mut row);
+        row
+    }
+
+    fn encode_into(&self, v: &[f32], out: &mut Vec<u8>) {
+        assert_eq!(v.len(), self.dim, "pq encode dim mismatch");
+        let mut nibbles = [0u8; 2];
+        for j in 0..self.m {
+            let mut best = f32::INFINITY;
+            let mut code = 0u8;
+            for c in 0..PQ_K {
+                let d = sub_l2(v, self.dim, j, self.ds, self.centroid(j, c));
+                if d < best {
+                    best = d;
+                    code = c as u8;
+                }
+            }
+            nibbles[j & 1] = code;
+            if j & 1 == 1 {
+                out.push(nibbles[0] | (nibbles[1] << 4));
+            }
+        }
+        if self.m & 1 == 1 {
+            // Odd m: the final high nibble is the phantom subspace, always 0.
+            out.push(nibbles[0]);
+        }
+    }
+
+    /// Append one vector's codes (codebooks frozen — existing rows are
+    /// untouched, mirroring `QuantizedStore::append`).
+    pub fn append(&mut self, v: &[f32]) {
+        let row = self.encode(v);
+        self.codes.to_mut().extend_from_slice(&row);
+    }
+
+    /// Re-encode row `i` in place (slot recycling).
+    pub fn reencode(&mut self, i: usize, v: &[f32]) {
+        let row = self.encode(v);
+        let rb = self.row_bytes();
+        self.codes.to_mut()[i * rb..(i + 1) * rb].copy_from_slice(&row);
+    }
+
+    /// Build the query's quantized ADC tables. O(m · 16 · ds) f32 work
+    /// once per query; every row afterwards costs `m` u8 lookups.
+    pub fn lut(&self, metric: Metric, q: &[f32]) -> PqLut {
+        assert_eq!(q.len(), self.dim, "pq query dim mismatch");
+        let mut raw = vec![0f32; self.m * PQ_K];
+        for j in 0..self.m {
+            for c in 0..PQ_K {
+                let cb = self.centroid(j, c);
+                let mut acc = 0f32;
+                for d in 0..self.ds {
+                    let full = j * self.ds + d;
+                    let qv = if full < self.dim { q[full] } else { 0.0 };
+                    match metric {
+                        Metric::L2 => {
+                            let diff = qv - cb[d];
+                            acc += diff * diff;
+                        }
+                        // Angular (1 - <q,b>) and Ip (-<q,b>) both reduce
+                        // to summed -<q_j, c>; the additive constant rides
+                        // in the LUT bias below.
+                        Metric::Angular | Metric::Ip => acc -= qv * cb[d],
+                    }
+                }
+                raw[j * PQ_K + c] = acc;
+            }
+        }
+        let metric_bias = match metric {
+            Metric::Angular => 1.0,
+            Metric::L2 | Metric::Ip => 0.0,
+        };
+        PqLut::quantize(&raw, self.m, metric_bias)
+    }
+
+    /// ADC distance from a prepared LUT to row `i`, in metric units.
+    pub fn distance(&self, lut: &PqLut, i: usize) -> f32 {
+        lut.decode(simd::pq_adc(lut, self.code(i)))
+    }
+
+    /// One-to-many ADC distances (bitwise identical to per-pair
+    /// [`PqStore::distance`] calls, any prefetch schedule).
+    pub fn distance_batch(&self, lut: &PqLut, ids: &[u32], out: &mut Vec<f32>) {
+        simd::pq_adc_batch(lut, ids, &self.codes, out);
+    }
+
+    /// [`PqStore::distance_batch`] with an explicit prefetch schedule.
+    pub fn distance_batch_with(
+        &self,
+        lut: &PqLut,
+        ids: &[u32],
+        lookahead: usize,
+        locality: i32,
+        out: &mut Vec<f32>,
+    ) {
+        simd::pq_adc_batch_with(lut, ids, &self.codes, lookahead, locality, out);
+    }
+
+    /// Bytes of quantized state: packed codes + f32 codebooks. This is
+    /// the figure the ≤ 1/8-of-f32 acceptance test audits.
+    pub fn bytes(&self) -> usize {
+        self.codes.len() + self.codebooks.len() * 4
+    }
+
+    /// Whether codes are currently served from an mmap.
+    pub fn is_mapped(&self) -> bool {
+        self.codes.is_mapped()
+    }
+}
+
+/// Squared L2 between the `j`-th zero-padded subspace of `v` and one
+/// centroid row.
+fn sub_l2(v: &[f32], dim: usize, j: usize, ds: usize, centroid: &[f32]) -> f32 {
+    let mut acc = 0f32;
+    for d in 0..ds {
+        let full = j * ds + d;
+        let qv = if full < dim { v[full] } else { 0.0 };
+        let diff = qv - centroid[d];
+        acc += diff * diff;
+    }
+    acc
+}
+
+/// Per-subspace 16-centroid k-means (k-means++ seeding + fixed Lloyd
+/// iterations over a deterministic sample). Always plain subspace L2 —
+/// the standard PQ training objective for every serving metric.
+fn train_codebooks(data: &[f32], dim: usize, m: usize, ds: usize, seed: u64) -> Vec<f32> {
+    let n = data.len() / dim;
+    let mut rng = Rng::new(seed ^ 0x5051_4641_5354_5343); // "PQFASTSC" stream tag
+    let mut codebooks = vec![0f32; m * PQ_K * ds];
+    if n == 0 {
+        return codebooks;
+    }
+    let sample_n = n.min(TRAIN_SAMPLE);
+    let sample = rng.sample_indices(n, sample_n);
+    // Padded per-sample subvectors, rebuilt per subspace.
+    let mut sub = vec![0f32; sample_n * ds];
+    for j in 0..m {
+        for (s, &i) in sample.iter().enumerate() {
+            for d in 0..ds {
+                let full = j * ds + d;
+                sub[s * ds + d] = if full < dim { data[i * dim + full] } else { 0.0 };
+            }
+        }
+        let cb = &mut codebooks[j * PQ_K * ds..(j + 1) * PQ_K * ds];
+        train_subspace(&sub, sample_n, ds, cb, &mut rng);
+    }
+    codebooks
+}
+
+fn l2(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// One subspace's k-means over `sample_n` rows of `ds` dims into
+/// `cb` (`16 × ds`). Empty clusters keep their previous centroid.
+fn train_subspace(sub: &[f32], sample_n: usize, ds: usize, cb: &mut [f32], rng: &mut Rng) {
+    let row = |i: usize| &sub[i * ds..(i + 1) * ds];
+    // k-means++ seeding.
+    let first = rng.next_below(sample_n);
+    cb[..ds].copy_from_slice(row(first));
+    let mut d2: Vec<f32> = (0..sample_n).map(|i| l2(&cb[..ds], row(i))).collect();
+    for c in 1..PQ_K {
+        let total: f64 = d2.iter().map(|&x| x as f64).sum();
+        let pick = if total <= 0.0 {
+            rng.next_below(sample_n)
+        } else {
+            let mut t = rng.next_f64() * total;
+            let mut idx = 0;
+            for (j, &x) in d2.iter().enumerate() {
+                t -= x as f64;
+                if t <= 0.0 {
+                    idx = j;
+                    break;
+                }
+            }
+            idx
+        };
+        cb[c * ds..(c + 1) * ds].copy_from_slice(row(pick));
+        for (j, d) in d2.iter_mut().enumerate() {
+            let nd = l2(&cb[c * ds..(c + 1) * ds], row(j));
+            if nd < *d {
+                *d = nd;
+            }
+        }
+    }
+    // Lloyd iterations.
+    let mut assign = vec![0u8; sample_n];
+    for _ in 0..LLOYD_ITERS {
+        for i in 0..sample_n {
+            let mut best = f32::INFINITY;
+            let mut a = 0u8;
+            for c in 0..PQ_K {
+                let d = l2(&cb[c * ds..(c + 1) * ds], row(i));
+                if d < best {
+                    best = d;
+                    a = c as u8;
+                }
+            }
+            assign[i] = a;
+        }
+        let mut sums = vec![0f64; PQ_K * ds];
+        let mut counts = [0usize; PQ_K];
+        for i in 0..sample_n {
+            let c = assign[i] as usize;
+            counts[c] += 1;
+            for (s, &v) in sums[c * ds..(c + 1) * ds].iter_mut().zip(row(i)) {
+                *s += v as f64;
+            }
+        }
+        for c in 0..PQ_K {
+            if counts[c] > 0 {
+                for (dst, s) in cb[c * ds..(c + 1) * ds].iter_mut().zip(&sums[c * ds..(c + 1) * ds]) {
+                    *dst = (*s / counts[c] as f64) as f32;
+                }
+            }
+        }
+    }
+}
+
+/// Bytes of one position-major fast-scan block (32 rows).
+pub fn block_bytes(row_bytes: usize) -> usize {
+    PQ_BLOCK * row_bytes
+}
+
+/// Scatter one packed row into a position-major block buffer at `slot`
+/// (the cell-local position). Grows `blocks` by one zeroed block whenever
+/// `slot` crosses a 32-row boundary; zero padding is harmless — tail
+/// slots decode against table entry 0 and are discarded by the scanner.
+pub fn scatter_row(blocks: &mut Vec<u8>, row_bytes: usize, slot: usize, row: &[u8]) {
+    debug_assert_eq!(row.len(), row_bytes);
+    let block = slot / PQ_BLOCK;
+    let lane = slot % PQ_BLOCK;
+    let base = block * block_bytes(row_bytes);
+    if blocks.len() < base + block_bytes(row_bytes) {
+        blocks.resize(base + block_bytes(row_bytes), 0);
+    }
+    for (p, &b) in row.iter().enumerate() {
+        blocks[base + p * PQ_BLOCK + lane] = b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn gaussian_rows(n: usize, dim: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n * dim).map(|_| rng.next_gaussian_f32()).collect()
+    }
+
+    #[test]
+    fn pq_build_is_deterministic_for_seed() {
+        let data = gaussian_rows(300, 25, 7);
+        let a = PqStore::build(&data, 25, 8, 42);
+        let b = PqStore::build(&data, 25, 8, 42);
+        assert_eq!(a.codebooks(), b.codebooks());
+        assert_eq!(a.codes(), b.codes());
+    }
+
+    #[test]
+    fn pq_append_and_reencode_match_build_encoding() {
+        let data = gaussian_rows(200, 16, 3);
+        let mut store = PqStore::build(&data, 16, 4, 11);
+        let original = store.code(17).to_vec();
+        // Re-encoding the same vector against frozen codebooks is a no-op.
+        store.reencode(17, &data[17 * 16..18 * 16]);
+        assert_eq!(store.code(17), &original[..]);
+        // Appending a copy reproduces the original row's code exactly.
+        store.append(&data[17 * 16..18 * 16]);
+        assert_eq!(store.code(store.len() - 1), &original[..]);
+    }
+
+    #[test]
+    fn pq_shape_corners_including_m_not_dividing_dim_and_odd_m() {
+        for &(dim, m) in &[(1usize, 1usize), (7, 3), (25, 8), (100, 7), (100, 16), (960, 5)] {
+            let data = gaussian_rows(64, dim, dim as u64 ^ m as u64);
+            let store = PqStore::build(&data, dim, m, 5);
+            assert_eq!(store.m(), clamp_m(dim, m));
+            assert_eq!(store.ds(), dim.div_ceil(store.m()));
+            assert_eq!(store.row_bytes(), (store.m() + 1) / 2);
+            assert_eq!(store.len(), 64);
+            if store.m() & 1 == 1 {
+                // Odd m: phantom high nibble of the last byte must be 0.
+                for i in 0..store.len() {
+                    assert_eq!(store.code(i)[store.row_bytes() - 1] >> 4, 0);
+                }
+            }
+            let lut = store.lut(crate::distance::Metric::L2, &data[..dim]);
+            assert_eq!(lut.row_bytes(), store.row_bytes());
+            // Self-distance must be among the smallest — sanity that the
+            // ADC tables line up with the codes.
+            let self_d = store.distance(&lut, 0);
+            let far: Vec<f32> = (0..store.len()).map(|i| store.distance(&lut, i)).collect();
+            let smaller = far.iter().filter(|&&d| d < self_d).count();
+            assert!(smaller <= 8, "self-distance not near-minimal: {smaller} closer");
+        }
+    }
+
+    #[test]
+    fn pq_adc_error_within_quantization_bound() {
+        // ADC distance vs the exact f32 table sum: the u8 quantization
+        // errs by at most delta/2 per subspace (DESIGN.md bound).
+        let dim = 32;
+        let m = 8;
+        let data = gaussian_rows(128, dim, 9);
+        let store = PqStore::build(&data, dim, m, 1);
+        for metric in [Metric::L2, Metric::Angular, Metric::Ip] {
+            let q = &data[5 * dim..6 * dim];
+            let lut = store.lut(metric, q);
+            for i in 0..store.len() {
+                // Exact f32 ADC: sum the true per-subspace table values.
+                let mut exact = match metric {
+                    Metric::Angular => 1.0f64,
+                    _ => 0.0,
+                };
+                for j in 0..m {
+                    let code = (store.code(i)[j / 2] >> (4 * (j % 2))) & 0x0F;
+                    let cb = &store.codebooks()[(j * PQ_K + code as usize) * store.ds()..][..store.ds()];
+                    for d in 0..store.ds() {
+                        let full = j * store.ds() + d;
+                        let qv = if full < dim { q[full] } else { 0.0 };
+                        match metric {
+                            Metric::L2 => exact += ((qv - cb[d]) * (qv - cb[d])) as f64,
+                            _ => exact -= (qv * cb[d]) as f64,
+                        }
+                    }
+                }
+                let got = store.distance(&lut, i) as f64;
+                // m * delta/2 rounding + a little f32 slack.
+                let bound = 1e-3 + m as f64 * 0.5 * 1e-3
+                    + (exact.abs() + 1.0) * 1e-5
+                    + m as f64 * 0.5 * lut_delta(&lut);
+                assert!(
+                    (got - exact).abs() <= bound,
+                    "metric {metric:?} row {i}: got {got} exact {exact} bound {bound}"
+                );
+            }
+        }
+    }
+
+    fn lut_delta(lut: &crate::distance::simd::PqLut) -> f64 {
+        // Recover delta from decode: decode(1) - decode(0).
+        (lut.decode(1) - lut.decode(0)) as f64
+    }
+
+    #[test]
+    fn pq_store_is_at_most_one_eighth_of_f32() {
+        let n = 2048;
+        let dim = 64;
+        let data = gaussian_rows(n, dim, 13);
+        let store = PqStore::build(&data, dim, 16, 2);
+        let f32_bytes = n * dim * 4;
+        assert!(
+            store.bytes() * 8 <= f32_bytes,
+            "pq bytes {} > 1/8 of f32 bytes {}",
+            store.bytes(),
+            f32_bytes
+        );
+    }
+
+    #[test]
+    fn pq_from_parts_rejects_malformed_shapes() {
+        let data = gaussian_rows(32, 8, 1);
+        let store = PqStore::build(&data, 8, 4, 1);
+        let cb: Vec<f32> = store.codebooks().to_vec();
+        let codes: Vec<u8> = store.codes().to_vec();
+        assert!(PqStore::from_parts(0, 4, cb.clone().into(), codes.clone().into()).is_err());
+        assert!(PqStore::from_parts(8, 0, cb.clone().into(), codes.clone().into()).is_err());
+        assert!(PqStore::from_parts(8, 9, cb.clone().into(), codes.clone().into()).is_err());
+        // Wrong codebook length.
+        assert!(PqStore::from_parts(8, 4, cb[1..].to_vec().into(), codes.clone().into()).is_err());
+        // Ragged code bytes.
+        assert!(PqStore::from_parts(8, 4, cb.clone().into(), codes[1..].to_vec().into()).is_err());
+        // Non-finite codebook entry.
+        let mut bad = cb.clone();
+        bad[3] = f32::NAN;
+        assert!(PqStore::from_parts(8, 4, bad.into(), codes.clone().into()).is_err());
+        // And the well-formed parts round-trip.
+        let rt = PqStore::from_parts(8, 4, cb.into(), codes.into()).unwrap();
+        assert_eq!(rt.codes(), store.codes());
+        assert_eq!(rt.len(), store.len());
+    }
+
+    #[test]
+    fn pq_scatter_row_builds_position_major_blocks() {
+        let rb = 3;
+        let mut blocks = Vec::new();
+        let rows: Vec<Vec<u8>> = (0..40u8).map(|i| vec![i, i ^ 0x55, i ^ 0xAA]).collect();
+        for (slot, row) in rows.iter().enumerate() {
+            scatter_row(&mut blocks, rb, slot, row);
+        }
+        assert_eq!(blocks.len(), 2 * block_bytes(rb));
+        for (slot, row) in rows.iter().enumerate() {
+            let base = (slot / PQ_BLOCK) * block_bytes(rb);
+            for p in 0..rb {
+                assert_eq!(blocks[base + p * PQ_BLOCK + slot % PQ_BLOCK], row[p]);
+            }
+        }
+    }
+}

@@ -22,8 +22,9 @@ pub mod quant;
 pub mod simd;
 
 pub use simd::{
-    distance_batch, distance_batch_with, dot_batch, dot_i8_batch, l2_sq_batch, l2_sq_i8_batch,
-    quant_distance_batch, quant_distance_batch_with,
+    distance_batch, distance_batch_with, dot_batch, dot_i8_batch, kernels_pq, l2_sq_batch,
+    l2_sq_i8_batch, pq_adc, pq_adc_batch, pq_adc_batch_with, quant_distance_batch,
+    quant_distance_batch_with, PqLut, PQ_BLOCK,
 };
 
 /// Distance metric. Mirrors the dataset metric in Table 2.

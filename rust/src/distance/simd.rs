@@ -646,6 +646,288 @@ pub fn quant_distance_batch_with(
     });
 }
 
+// ---------------------------------------------------------------------------
+// 4-bit PQ ADC fast-scan (DESIGN.md §PQ-Fast-Scan).
+//
+// Asymmetric distance computation for product-quantized rows: a query is
+// turned into per-subspace lookup tables once ([`PqLut`]), then the distance
+// to a stored row is the sum of one table entry per 4-bit code. The tables
+// are quantized to u8 with one per-query scale/bias so the accumulation is
+// pure integer arithmetic — like the i8 kernels, SIMD, portable, and batch
+// forms are **exactly** equal, and the f32 mapping back to metric units is
+// one shared multiply-add.
+// ---------------------------------------------------------------------------
+
+/// Rows per fast-scan block: the AVX2 kernel scans 32 packed code rows per
+/// iteration (one `_mm256_shuffle_epi8` table gather per nibble position),
+/// so block storage interleaves codes *position-major* in groups of 32 rows:
+/// byte `p` of rows `0..32`, then byte `p+1` of rows `0..32`, …
+pub const PQ_BLOCK: usize = 32;
+
+/// A query's quantized ADC lookup tables: `mp × 16` u8 entries plus the
+/// per-query scale (`delta`) and bias that map an integer accumulator back
+/// to f32 metric units.
+///
+/// Quantization: per subspace `j`, the f32 table minimum `b_j` is
+/// subtracted; one global step `delta = max_j(spread_j) / 255` quantizes
+/// every entry to `round((t - b_j) / delta)` (clamped to 255). Each entry
+/// rounds within `delta / 2`, so the reconstructed distance
+/// `sum * delta + Σb_j` errs by at most `m · delta / 2` — the u8 bound
+/// DESIGN.md §PQ-Fast-Scan documents. Approximate distances only ever rank
+/// candidates; survivors are re-ranked in exact f32.
+#[derive(Clone, Debug)]
+pub struct PqLut {
+    /// `mp × 16` u8 tables, subspace-major (`tables[j * 16 + c]`). When `m`
+    /// is odd, a phantom all-zero table pads `mp` to even so every packed
+    /// byte has both a low-nibble and a high-nibble table.
+    tables: Vec<u8>,
+    /// Padded subspace count (`m` rounded up to even).
+    mp: usize,
+    /// f32 value of one accumulator count (`0.0` for degenerate tables).
+    delta: f32,
+    /// Sum of per-subspace table minima plus the metric constant.
+    bias: f32,
+}
+
+impl PqLut {
+    /// Quantize per-subspace f32 distance tables (`m × 16`, subspace-major,
+    /// smaller = closer) into u8 with one per-query scale/bias.
+    /// `metric_bias` is the metric's additive constant (`1.0` for Angular's
+    /// `1 - <q,b>`, `0.0` otherwise), folded into the bias so
+    /// [`PqLut::decode`] lands directly in metric units.
+    pub fn quantize(raw: &[f32], m: usize, metric_bias: f32) -> PqLut {
+        assert!(
+            (1..=256).contains(&m),
+            "pq subquantizer count {m} out of range [1, 256]"
+        );
+        assert_eq!(raw.len(), m * 16, "pq raw table shape mismatch");
+        let mp = m + (m & 1);
+        // f64 bias accumulation: one rounding at the end keeps the bias
+        // independent of subspace count.
+        let mut bias = metric_bias as f64;
+        let mut spread = 0f32;
+        let mut mins = [0f32; 256];
+        for j in 0..m {
+            let t = &raw[j * 16..j * 16 + 16];
+            let lo = t.iter().copied().fold(f32::INFINITY, f32::min);
+            let hi = t.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+            mins[j] = lo;
+            bias += lo as f64;
+            spread = spread.max(hi - lo);
+        }
+        let (delta, inv) = if spread > 0.0 {
+            (spread / 255.0, 255.0 / spread)
+        } else {
+            (0.0, 0.0)
+        };
+        let mut tables = vec![0u8; mp * 16];
+        for j in 0..m {
+            for c in 0..16 {
+                let q = ((raw[j * 16 + c] - mins[j]) * inv).round();
+                tables[j * 16 + c] = q.clamp(0.0, 255.0) as u8;
+            }
+        }
+        PqLut { tables, mp, delta, bias: bias as f32 }
+    }
+
+    /// The raw `mp × 16` u8 tables (subspace-major).
+    #[inline]
+    pub fn tables(&self) -> &[u8] {
+        &self.tables
+    }
+
+    /// Packed bytes per code row this LUT scans (`mp / 2` — equals the
+    /// store's `(m + 1) / 2` row stride for every `m`).
+    #[inline]
+    pub fn row_bytes(&self) -> usize {
+        self.mp / 2
+    }
+
+    /// Map an integer ADC accumulator to f32 metric units. ONE multiply-add
+    /// shared by the per-pair, block, and batch paths — which is what makes
+    /// them bitwise identical.
+    #[inline]
+    pub fn decode(&self, sum: u32) -> f32 {
+        sum as f32 * self.delta + self.bias
+    }
+}
+
+/// Portable scalar ADC kernels — the per-pair form and the exact-equality
+/// oracle for the AVX2 block kernel.
+pub mod portable_pq {
+    use super::{PqLut, PQ_BLOCK};
+
+    /// ADC over one packed row: one table lookup per nibble, u32 sum. This
+    /// IS the per-pair kernel on every target — a single row has exactly
+    /// one lookup per table, so there is no in-register parallelism to
+    /// exploit; the `pshufb` win ([`super::kernels_pq`]) needs 32 rows
+    /// against the same tables.
+    #[inline]
+    pub fn adc(lut: &PqLut, row: &[u8]) -> u32 {
+        debug_assert_eq!(row.len(), lut.row_bytes());
+        let t = lut.tables();
+        let mut sum = 0u32;
+        for (p, &b) in row.iter().enumerate() {
+            sum += t[p * 32 + (b & 0x0F) as usize] as u32;
+            sum += t[p * 32 + 16 + (b >> 4) as usize] as u32;
+        }
+        sum
+    }
+
+    /// Scalar 32-row block scan over the position-major layout — the
+    /// portable fallback of [`super::kernels_pq`] and the oracle the AVX2
+    /// form must match exactly (asserted by the property tests).
+    pub fn adc_block(lut: &PqLut, block: &[u8], out: &mut [u32; PQ_BLOCK]) {
+        assert_eq!(block.len(), lut.row_bytes() * PQ_BLOCK);
+        let t = lut.tables();
+        out.fill(0);
+        for p in 0..lut.row_bytes() {
+            let col = &block[p * PQ_BLOCK..(p + 1) * PQ_BLOCK];
+            let tlo = &t[p * 32..p * 32 + 16];
+            let thi = &t[p * 32 + 16..p * 32 + 32];
+            for (s, &b) in col.iter().enumerate() {
+                out[s] += tlo[(b & 0x0F) as usize] as u32 + thi[(b >> 4) as usize] as u32;
+            }
+        }
+    }
+}
+
+/// AVX2 fast-scan block kernel: the FAISS "fast scan" idiom. Both nibble
+/// tables of one byte position are broadcast into a ymm register
+/// (16 entries per 128-bit lane), and one `_mm256_shuffle_epi8` gathers 32
+/// table entries — one per row of the block — in a single instruction.
+/// Accumulation is u16 (bounded: `mp ≤ 256` keeps every lane ≤ 65280),
+/// widened to the caller's u32 slots at the end; integer arithmetic makes
+/// the result exactly the scalar oracle's.
+#[cfg(target_arch = "x86_64")]
+mod avx2_pq {
+    use super::{PqLut, PQ_BLOCK};
+    use std::arch::x86_64::*;
+
+    pub fn adc_block(lut: &PqLut, block: &[u8], out: &mut [u32; PQ_BLOCK]) {
+        // Hard assert: the impl reads through raw pointers (the tables'
+        // length is mp*16 by construction).
+        assert_eq!(block.len(), lut.row_bytes() * PQ_BLOCK);
+        // SAFETY: `select_pq` gates this path on runtime AVX2 detection,
+        // and the lengths are checked above.
+        unsafe { adc_block_impl(lut, block, out) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn adc_block_impl(lut: &PqLut, block: &[u8], out: &mut [u32; PQ_BLOCK]) {
+        let row_bytes = lut.row_bytes();
+        let tables = lut.tables().as_ptr();
+        let codes = block.as_ptr();
+        let nib = _mm256_set1_epi8(0x0F);
+        let zero = _mm256_setzero_si256();
+        // Two u16 accumulators: `unpacklo/hi_epi8` are lane-local, so
+        // acc_a holds rows {0..8, 16..24} and acc_b rows {8..16, 24..32}.
+        let mut acc_a = zero;
+        let mut acc_b = zero;
+        for p in 0..row_bytes {
+            let c = _mm256_loadu_si256(codes.add(p * PQ_BLOCK) as *const __m256i);
+            let lo = _mm256_and_si256(c, nib);
+            let hi = _mm256_and_si256(_mm256_srli_epi16::<4>(c), nib);
+            let tlo = _mm256_broadcastsi128_si256(_mm_loadu_si128(
+                tables.add(p * 32) as *const __m128i
+            ));
+            let thi = _mm256_broadcastsi128_si256(_mm_loadu_si128(
+                tables.add(p * 32 + 16) as *const __m128i,
+            ));
+            let vlo = _mm256_shuffle_epi8(tlo, lo);
+            let vhi = _mm256_shuffle_epi8(thi, hi);
+            acc_a = _mm256_add_epi16(
+                acc_a,
+                _mm256_add_epi16(_mm256_unpacklo_epi8(vlo, zero), _mm256_unpacklo_epi8(vhi, zero)),
+            );
+            acc_b = _mm256_add_epi16(
+                acc_b,
+                _mm256_add_epi16(_mm256_unpackhi_epi8(vlo, zero), _mm256_unpackhi_epi8(vhi, zero)),
+            );
+        }
+        let mut a = [0u16; 16];
+        let mut b = [0u16; 16];
+        _mm256_storeu_si256(a.as_mut_ptr() as *mut __m256i, acc_a);
+        _mm256_storeu_si256(b.as_mut_ptr() as *mut __m256i, acc_b);
+        for i in 0..8 {
+            out[i] = a[i] as u32;
+            out[8 + i] = b[i] as u32;
+            out[16 + i] = a[8 + i] as u32;
+            out[24 + i] = b[8 + i] as u32;
+        }
+    }
+}
+
+/// A selected PQ block-scan kernel (`out[s]` = ADC sum of row `s`).
+pub type PqBlockFn = fn(&PqLut, &[u8], &mut [u32; PQ_BLOCK]);
+
+/// The dispatched PQ fast-scan kernel set.
+pub struct KernelsPq {
+    /// 32-row position-major block scan.
+    pub block: PqBlockFn,
+    /// Which implementation was selected (`"avx2-fastscan"` or
+    /// `"portable-fastscan"`) — reported by `benches/micro_distance`.
+    pub name: &'static str,
+}
+
+/// The process-wide PQ kernel set, selected once on first call (AVX2 only —
+/// the arithmetic is `pshufb` + u16 adds, no FMA).
+pub fn kernels_pq() -> &'static KernelsPq {
+    static KERNELS: std::sync::OnceLock<KernelsPq> = std::sync::OnceLock::new();
+    KERNELS.get_or_init(select_pq)
+}
+
+fn select_pq() -> KernelsPq {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return KernelsPq {
+                block: avx2_pq::adc_block,
+                name: "avx2-fastscan",
+            };
+        }
+    }
+    KernelsPq {
+        block: portable_pq::adc_block,
+        name: "portable-fastscan",
+    }
+}
+
+/// Per-pair ADC over one packed row in integer counts (decode with
+/// [`PqLut::decode`]). Scalar on every target — see [`portable_pq::adc`]
+/// for why the single-row form has no SIMD variant.
+#[inline]
+pub fn pq_adc(lut: &PqLut, row: &[u8]) -> u32 {
+    portable_pq::adc(lut, row)
+}
+
+/// One-to-many ADC distances (f32 metric units) from a query LUT to the
+/// `ids` rows of a row-major packed code matrix, default prefetch
+/// schedule. Bitwise identical to per-pair `lut.decode(pq_adc(..))` calls.
+#[inline]
+pub fn pq_adc_batch(lut: &PqLut, ids: &[u32], codes: &[u8], out: &mut Vec<f32>) {
+    pq_adc_batch_with(lut, ids, codes, BATCH_LOOKAHEAD, BATCH_LOCALITY, out);
+}
+
+/// [`pq_adc_batch`] with an explicit prefetch schedule (`lookahead == 0`
+/// disables prefetch; the schedule is a pure speed dial — results are
+/// bitwise identical for every schedule, same discipline as the f32/i8
+/// batch kernels). Code rows are tiny (`(m+1)/2` bytes), so the prefetch
+/// hint covers the whole row of pair `i + lookahead`.
+pub fn pq_adc_batch_with(
+    lut: &PqLut,
+    ids: &[u32],
+    codes: &[u8],
+    lookahead: usize,
+    locality: i32,
+    out: &mut Vec<f32>,
+) {
+    let row_bytes = lut.row_bytes();
+    batch_core(&[], ids, codes, row_bytes, lookahead, locality, out, |_q: &[u8], row| {
+        lut.decode(portable_pq::adc(lut, row))
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -841,5 +1123,125 @@ mod tests {
         assert!(out.is_empty());
         assert_eq!((kernels_i8().l2_sq)(&[], &[]), 0);
         assert_eq!((kernels_i8().dot)(&[], &[]), 0);
+    }
+
+    // --- PQ ADC fast-scan ---------------------------------------------
+
+    fn random_pq_lut(m: usize, rng: &mut Rng) -> PqLut {
+        let raw: Vec<f32> = (0..m * 16).map(|_| rng.next_gaussian_f32().abs() * 3.0).collect();
+        PqLut::quantize(&raw, m, 0.0)
+    }
+
+    fn random_rows(n: usize, row_bytes: usize, rng: &mut Rng) -> Vec<u8> {
+        (0..n * row_bytes).map(|_| (rng.next_u64() & 0xFF) as u8).collect()
+    }
+
+    /// Position-major block from 32 row-major rows — the layout
+    /// `anns::store::pq::scatter_row` maintains for the IVF cells.
+    fn transpose_block(rows: &[u8], row_bytes: usize) -> Vec<u8> {
+        assert_eq!(rows.len(), PQ_BLOCK * row_bytes);
+        let mut block = vec![0u8; rows.len()];
+        for s in 0..PQ_BLOCK {
+            for p in 0..row_bytes {
+                block[p * PQ_BLOCK + s] = rows[s * row_bytes + p];
+            }
+        }
+        block
+    }
+
+    #[test]
+    fn pq_block_kernel_exactly_equals_portable_oracle() {
+        // The dispatched (AVX2 on this hardware) block kernel, the scalar
+        // block form, and 32 per-row oracle calls must agree exactly —
+        // across even/odd m, the mp-padding corner, and the full m range
+        // the u16 accumulator bound covers.
+        let mut rng = Rng::new(0xADC0);
+        for m in [1usize, 2, 3, 5, 8, 13, 16, 32, 64, 100, 128, 256] {
+            let lut = random_pq_lut(m, &mut rng);
+            let rows = random_rows(PQ_BLOCK, lut.row_bytes(), &mut rng);
+            let block = transpose_block(&rows, lut.row_bytes());
+            let mut got = [0u32; PQ_BLOCK];
+            (kernels_pq().block)(&lut, &block, &mut got);
+            let mut portable = [0u32; PQ_BLOCK];
+            portable_pq::adc_block(&lut, &block, &mut portable);
+            assert_eq!(got, portable, "m={m}");
+            for s in 0..PQ_BLOCK {
+                let row = &rows[s * lut.row_bytes()..(s + 1) * lut.row_bytes()];
+                assert_eq!(got[s], pq_adc(&lut, row), "m={m} slot={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn pq_block_kernel_saturation_corner() {
+        // Every table entry quantizes to 255 for nonzero nibbles; at
+        // m = 256 (the accumulator bound) the per-row sum is 256·255 =
+        // 65280 — the u16 lanes must not wrap.
+        let m = 256;
+        let raw: Vec<f32> = (0..m * 16).map(|i| if i % 16 == 0 { 0.0 } else { 1.0 }).collect();
+        let lut = PqLut::quantize(&raw, m, 0.0);
+        let rows = vec![0x11u8; PQ_BLOCK * lut.row_bytes()]; // all nibbles = 1
+        let block = transpose_block(&rows, lut.row_bytes());
+        let mut got = [0u32; PQ_BLOCK];
+        (kernels_pq().block)(&lut, &block, &mut got);
+        assert_eq!(got, [m as u32 * 255; PQ_BLOCK]);
+        assert_eq!(pq_adc(&lut, &rows[..lut.row_bytes()]), m as u32 * 255);
+    }
+
+    #[test]
+    fn pq_batch_bitwise_identical_to_per_pair() {
+        let mut rng = Rng::new(0xADC1);
+        for m in [1usize, 3, 8, 17, 48] {
+            let lut = random_pq_lut(m, &mut rng);
+            let n = 77;
+            let codes = random_rows(n, lut.row_bytes(), &mut rng);
+            let ids: Vec<u32> = (0..n as u32).rev().step_by(2).chain([0, 0]).collect();
+            let mut out = Vec::new();
+            pq_adc_batch(&lut, &ids, &codes, &mut out);
+            assert_eq!(out.len(), ids.len());
+            for (&id, &d) in ids.iter().zip(&out) {
+                let row = &codes[id as usize * lut.row_bytes()..(id as usize + 1) * lut.row_bytes()];
+                // assert_eq on f32: bitwise identity, not approximation.
+                assert_eq!(d, lut.decode(pq_adc(&lut, row)), "m={m} id={id}");
+            }
+        }
+    }
+
+    #[test]
+    fn pq_batch_schedule_is_result_invariant() {
+        let mut rng = Rng::new(0xADC2);
+        let lut = random_pq_lut(12, &mut rng);
+        let n = 64;
+        let codes = random_rows(n, lut.row_bytes(), &mut rng);
+        let ids: Vec<u32> = (0..n as u32).collect();
+        let mut want = Vec::new();
+        pq_adc_batch_with(&lut, &ids, &codes, 0, 3, &mut want);
+        for (lookahead, locality) in [(1usize, 1i32), (4, 3), (16, 0), (100, 2)] {
+            let mut got = Vec::new();
+            pq_adc_batch_with(&lut, &ids, &codes, lookahead, locality, &mut got);
+            assert_eq!(got, want, "lookahead={lookahead} locality={locality}");
+        }
+    }
+
+    #[test]
+    fn pq_lut_quantization_shape_and_degenerate_tables() {
+        // Odd m pads a phantom all-zero table; constant tables quantize
+        // to delta = 0 and decode to the exact bias.
+        let lut = PqLut::quantize(&vec![2.5f32; 5 * 16], 5, 1.0);
+        assert_eq!(lut.row_bytes(), 3);
+        assert_eq!(&lut.tables()[5 * 16..], &[0u8; 16][..]);
+        let row = [0x31u8, 0x07, 0x0F];
+        assert_eq!(pq_adc(&lut, &row), 0);
+        // Bias = 5 · 2.5 + metric constant 1.0.
+        assert_eq!(lut.decode(pq_adc(&lut, &row)), 13.5);
+        let mut empty = Vec::new();
+        pq_adc_batch(&lut, &[], &[], &mut empty);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn pq_dispatch_reports_a_kernel_name() {
+        let name = kernels_pq().name;
+        assert!(name == "avx2-fastscan" || name == "portable-fastscan", "{name}");
     }
 }

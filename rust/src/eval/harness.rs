@@ -133,6 +133,17 @@ pub fn algorithms() -> Vec<(&'static str, fn(&Dataset, u64) -> Arc<dyn AnnIndex>
             seed,
         ))
     }
+    fn ivfpq(ds: &Dataset, seed: u64) -> Arc<dyn AnnIndex> {
+        Arc::new(crate::anns::ivf::IvfIndex::build(
+            VectorSet::from_dataset(ds),
+            crate::anns::ivf::IvfParams {
+                pq_m: 16,
+                pq_rerank: 8,
+                ..crate::anns::ivf::IvfParams::default()
+            },
+            seed,
+        ))
+    }
     fn voyager(ds: &Dataset, seed: u64) -> Arc<dyn AnnIndex> {
         Arc::new(
             crate::anns::hnsw::HnswIndex::build(
@@ -155,6 +166,7 @@ pub fn algorithms() -> Vec<(&'static str, fn(&Dataset, u64) -> Arc<dyn AnnIndex>
         ("nndescent", nndescent),
         ("pynndescent", pynndescent),
         ("vearch-ivf", vearch),
+        ("ivfpq", ivfpq),
         ("voyager", voyager),
     ]
 }

@@ -13,7 +13,7 @@
 //!
 //! ```text
 //! [0..4)   magic  "CRTC"
-//! [4..8)   version (u32 LE) = 1
+//! [4..8)   version (u32 LE) = 2 (v2 added the IVF pq_m/pq_rerank knobs)
 //! [8..12)  payload length (u32 LE)
 //! [12..20) FNV-1a-64 checksum of the payload (u64 LE)
 //! [20..)   payload: config knobs + provenance (fields in source order)
@@ -24,7 +24,7 @@ use crate::variants::space::{validate_config, IndexFamily, TunedConfig};
 use std::path::Path;
 
 pub const MAGIC: &[u8; 4] = b"CRTC";
-pub const VERSION: u32 = 1;
+pub const VERSION: u32 = 2;
 /// Bytes before the checksummed payload.
 pub const HEADER_BYTES: usize = 4 + 4 + 4 + 8;
 
@@ -161,6 +161,8 @@ impl TunedArtifact {
         w.u32(i.kmeans_iters as u32);
         w.u32(i.rerank_mult as u32);
         w.boolean(i.quantized_scan);
+        w.u32(i.pq_m as u32);
+        w.u32(i.pq_rerank as u32);
         let v = &c.serving;
         w.u32(v.k as u32);
         w.u32(v.ef as u32);
@@ -216,6 +218,8 @@ fn parse_payload(payload: &[u8]) -> Result<TunedArtifact> {
     i.kmeans_iters = r.u32()? as usize;
     i.rerank_mult = r.u32()? as usize;
     i.quantized_scan = r.boolean()?;
+    i.pq_m = r.u32()? as usize;
+    i.pq_rerank = r.u32()? as usize;
     let v = &mut config.serving;
     v.k = r.u32()? as usize;
     v.ef = r.u32()? as usize;

@@ -65,6 +65,7 @@ mod tests {
             "nndescent",
             "pynndescent",
             "vearch-ivf",
+            "ivfpq",
         ] {
             let cfg = TunedConfig::from_algo_name(algo).unwrap();
             let idx = build_index(&cfg, VectorSet::from_dataset(&ds), 42);

@@ -90,6 +90,12 @@ pub struct IvfKnobs {
     pub rerank_mult: usize,
     /// SQ8 posting-list scan + exact rerank vs. exact IVFFlat.
     pub quantized_scan: bool,
+    /// 4-bit PQ subquantizer count (0 = PQ off). When > 0, posting lists
+    /// scan packed PQ codes with the fast-scan ADC kernel and PQ
+    /// supersedes the SQ8 scan.
+    pub pq_m: usize,
+    /// Rerank-pool multiplier over k for the PQ candidate pass.
+    pub pq_rerank: usize,
 }
 
 impl Default for IvfKnobs {
@@ -99,6 +105,8 @@ impl Default for IvfKnobs {
             kmeans_iters: 8,
             rerank_mult: 4,
             quantized_scan: true,
+            pq_m: 0,
+            pq_rerank: 8,
         }
     }
 }
@@ -176,7 +184,7 @@ impl TunedConfig {
     }
 
     /// Map a CLI `--algo` string to its configuration — the single place
-    /// the eight algo names resolve (`cmd_sweep`, `cmd_serve` and
+    /// the nine algo names resolve (`cmd_sweep`, `cmd_serve` and
     /// `crinn tune` all go through here).
     pub fn from_algo_name(algo: &str) -> Option<Self> {
         let mut cfg = match algo {
@@ -191,6 +199,12 @@ impl TunedConfig {
             "parlayann" => TunedConfig::for_family(IndexFamily::Vamana),
             "nndescent" | "pynndescent" => TunedConfig::for_family(IndexFamily::NnDescent),
             "vearch-ivf" => TunedConfig::for_family(IndexFamily::Ivf),
+            "ivfpq" => {
+                let mut c = TunedConfig::for_family(IndexFamily::Ivf);
+                c.ivf.pq_m = 16;
+                c.ivf.pq_rerank = 8;
+                c
+            }
             _ => return None,
         };
         cfg.label = algo.to_string();
@@ -204,6 +218,8 @@ impl TunedConfig {
             kmeans_iters: self.ivf.kmeans_iters,
             rerank_mult: self.ivf.rerank_mult,
             quantized_scan: self.ivf.quantized_scan,
+            pq_m: self.ivf.pq_m,
+            pq_rerank: self.ivf.pq_rerank,
         }
     }
 
@@ -215,8 +231,14 @@ impl TunedConfig {
             IndexFamily::Ivf => {
                 let i = &self.ivf;
                 format!(
-                    "{}: nlist={} kmeans_iters={} rerank_mult={} sq8={} | {serving}",
-                    self.label, i.nlist, i.kmeans_iters, i.rerank_mult, i.quantized_scan
+                    "{}: nlist={} kmeans_iters={} rerank_mult={} sq8={} pq_m={} pq_rerank={} | {serving}",
+                    self.label,
+                    i.nlist,
+                    i.kmeans_iters,
+                    i.rerank_mult,
+                    i.quantized_scan,
+                    i.pq_m,
+                    i.pq_rerank
                 )
             }
             _ => {
@@ -292,11 +314,14 @@ const REFINE_BOUNDS: [KnobBound; N_KNOBS] = [
     kb("refine.reserved7", KnobKind::Float, -1.0, 1.0),
 ];
 
-const IVF_BOUNDS: [KnobBound; 4] = [
+const IVF_BOUNDS: [KnobBound; 6] = [
     kb("ivf.nlist", KnobKind::Int, 8.0, 2048.0),
     kb("ivf.kmeans_iters", KnobKind::Int, 2.0, 20.0),
     kb("ivf.rerank_mult", KnobKind::Int, 1.0, 16.0),
     kb("ivf.quantized_scan", KnobKind::Bool, 0.0, 1.0),
+    // 0 is in-range (PQ off), so no zero-sentinel carve-out is needed.
+    kb("ivf.pq_m", KnobKind::Int, 0.0, 64.0),
+    kb("ivf.pq_rerank", KnobKind::Int, 1.0, 32.0),
 ];
 
 const SERVING_BOUNDS: [KnobBound; 2] = [
@@ -396,6 +421,8 @@ impl TuningSpace {
                 a.push(unlerp(IVF_BOUNDS[1].lo, IVF_BOUNDS[1].hi, i.kmeans_iters as f64));
                 a.push(unlerp(IVF_BOUNDS[2].lo, IVF_BOUNDS[2].hi, i.rerank_mult as f64));
                 a.push(if i.quantized_scan { 0.8 } else { -0.8 });
+                a.push(unlerp(IVF_BOUNDS[4].lo, IVF_BOUNDS[4].hi, i.pq_m as f64));
+                a.push(unlerp(IVF_BOUNDS[5].lo, IVF_BOUNDS[5].hi, i.pq_rerank as f64));
             }
             _ => unreachable!("constructed only for tunable families"),
         }
@@ -435,6 +462,8 @@ impl TuningSpace {
                 i.kmeans_iters = lerp(IVF_BOUNDS[1].lo, IVF_BOUNDS[1].hi, a[1]).round() as usize;
                 i.rerank_mult = lerp(IVF_BOUNDS[2].lo, IVF_BOUNDS[2].hi, a[2]).round() as usize;
                 i.quantized_scan = a[3] > 0.0;
+                i.pq_m = lerp(IVF_BOUNDS[4].lo, IVF_BOUNDS[4].hi, a[4]).round() as usize;
+                i.pq_rerank = lerp(IVF_BOUNDS[5].lo, IVF_BOUNDS[5].hi, a[5]).round() as usize;
             }
             _ => unreachable!("constructed only for tunable families"),
         }
@@ -509,6 +538,8 @@ fn knob_value(cfg: &TunedConfig, name: &str) -> Option<f64> {
         "ivf.nlist" => cfg.ivf.nlist as f64,
         "ivf.kmeans_iters" => cfg.ivf.kmeans_iters as f64,
         "ivf.rerank_mult" => cfg.ivf.rerank_mult as f64,
+        "ivf.pq_m" => cfg.ivf.pq_m as f64,
+        "ivf.pq_rerank" => cfg.ivf.pq_rerank as f64,
         "serving.batch" => cfg.serving.batch as f64,
         "serving.threads" => cfg.serving.threads as f64,
         _ => return None,
@@ -568,6 +599,7 @@ mod tests {
             "nndescent",
             "pynndescent",
             "vearch-ivf",
+            "ivfpq",
         ] {
             let cfg = TunedConfig::from_algo_name(algo).unwrap();
             assert_eq!(cfg.label, algo);
@@ -578,6 +610,10 @@ mod tests {
             TunedConfig::from_algo_name("crinn").unwrap().variant,
             VariantConfig::crinn_full()
         );
+        let ivfpq = TunedConfig::from_algo_name("ivfpq").unwrap();
+        assert_eq!(ivfpq.family, IndexFamily::Ivf);
+        assert_eq!((ivfpq.ivf.pq_m, ivfpq.ivf.pq_rerank), (16, 8));
+        assert_eq!(TunedConfig::from_algo_name("vearch-ivf").unwrap().ivf.pq_m, 0);
     }
 
     #[test]
@@ -589,7 +625,7 @@ mod tests {
         let hnsw = TuningSpace::for_family(IndexFamily::Hnsw).unwrap();
         assert_eq!(hnsw.dims(), 2 * N_KNOBS + 2);
         let ivf = TuningSpace::for_family(IndexFamily::Ivf).unwrap();
-        assert_eq!(ivf.dims(), 6);
+        assert_eq!(ivf.dims(), 8);
         // encode_action and the bound table agree on the m range.
         let mut cfg = TunedConfig::for_family(IndexFamily::Glass);
         cfg.variant = decode_action(&cfg.variant, Module::Construction, &[-1.0; N_KNOBS]);

@@ -57,7 +57,7 @@ pub fn floor_for(case: &IndexCase, metric: Metric) -> f64 {
     }
 }
 
-/// The six index types as one table — the single place the cross-index
+/// The seven index cases as one table — the single place the cross-index
 /// conformance loop iterates.
 pub fn static_index_cases() -> Vec<IndexCase> {
     vec![
@@ -100,6 +100,22 @@ pub fn static_index_cases() -> Vec<IndexCase> {
                 Box::new(crinn::anns::ivf::IvfIndex::build(
                     vs,
                     crinn::anns::ivf::IvfParams::default(),
+                    seed,
+                ))
+            },
+        },
+        IndexCase {
+            name: "ivfpq",
+            ef: 256,
+            floors: (0.75, 0.60, 0.20),
+            build: |vs, seed| {
+                Box::new(crinn::anns::ivf::IvfIndex::build(
+                    vs,
+                    crinn::anns::ivf::IvfParams {
+                        pq_m: 16,
+                        pq_rerank: 8,
+                        ..crinn::anns::ivf::IvfParams::default()
+                    },
                     seed,
                 ))
             },

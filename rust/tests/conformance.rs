@@ -283,6 +283,30 @@ fn mmap_conformance_for_metric(metric: Metric, seed: u64) {
     std::fs::remove_file(&path).ok();
 }
 
+/// IVF-PQ acceptance: the trained PQ store must hold at most 1/8 the
+/// vector bytes of the f32 base set (4-bit codes + codebooks) while the
+/// `ivfpq` table row above clears its recall floors with exact rerank.
+#[test]
+fn conformance_ivfpq_pq_store_stays_under_one_eighth_of_f32() {
+    let ds = common::metric_dataset(Metric::L2, 1200, 8, 84);
+    let idx = crinn::anns::ivf::IvfIndex::build(
+        VectorSet::from_dataset(&ds),
+        crinn::anns::ivf::IvfParams {
+            pq_m: 16,
+            pq_rerank: 8,
+            ..crinn::anns::ivf::IvfParams::default()
+        },
+        7,
+    );
+    let pq = idx.pq_store().expect("ivfpq build trains a PqStore");
+    let f32_bytes = ds.n_base() * ds.dim * 4;
+    assert!(
+        pq.bytes() * 8 <= f32_bytes,
+        "pq store {} bytes exceeds 1/8 of the {f32_bytes}-byte f32 set",
+        pq.bytes()
+    );
+}
+
 #[test]
 fn conformance_batch_identity_and_recall_l2() {
     conformance_for_metric(Metric::L2, 81);
