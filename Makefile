@@ -1,6 +1,6 @@
 # Convenience targets. Rust work happens in rust/ (see README.md §Quickstart).
 
-.PHONY: build test test-filtered test-storage test-tune test-pq tune-smoke bench bench-distance bench-filtered bench-restart artifacts clean
+.PHONY: build test test-filtered test-storage test-tune test-pq test-net tune-smoke bench bench-distance bench-filtered bench-restart bench-net artifacts clean
 
 build:
 	cd rust && cargo build --release
@@ -42,6 +42,18 @@ test-tune:
 # IVF-PQ / GLASS PQ-beam serving modes plus conformance floors.
 test-pq:
 	cd rust && CRINN_THREADS=2 cargo test -q pq && CRINN_THREADS=2 cargo test -q conformance
+
+# Network-edge suite (the CI serving lane): wire-protocol + admission
+# unit groups, the loopback socket integration tests (bitwise identity,
+# hostile frames, tenant quotas, deadlines, graceful drain), and the
+# coordinator groups they lean on.
+test-net:
+	cd rust && CRINN_THREADS=2 cargo test -q net && CRINN_THREADS=2 cargo test -q coordinator
+
+# Closed-loop socket vs in-process QPS -> reports/net_qps.csv
+# (EXPERIMENTS.md §Net-QPS). CRINN_BENCH_NET_CLIENTS=1,4,16 to override.
+bench-net:
+	cd rust && cargo bench --bench net_qps
 
 # End-to-end self-tuning smoke: `crinn tune` on a tiny dataset writes a
 # checksummed artifact, `crinn serve --tuned` loads it and serves with

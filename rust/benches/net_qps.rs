@@ -1,0 +1,136 @@
+//! Closed-loop throughput bench for the network serving edge
+//! (DESIGN.md §Network-Edge): N clients, each firing the next search the
+//! moment the previous response lands, over real loopback sockets — vs
+//! the same closed loop through the in-process `ServerHandle`, which
+//! prices the wire (frame encode/decode, syscalls, event-loop hop)
+//! separately from the serving path itself.
+//!
+//! Emits `reports/net_qps.csv`:
+//! `mode,clients,requests,elapsed_s,qps,p50_us,p99_us`.
+//!
+//! Overrides: `CRINN_BENCH_NET_N` (base vectors, default 20000),
+//! `CRINN_BENCH_NET_REQUESTS` (total per row, default 4000),
+//! `CRINN_BENCH_NET_CLIENTS` (comma list, default `1,4,16`).
+
+#[cfg(not(unix))]
+fn main() {
+    eprintln!("net_qps: the socket front end is unix-only; skipping");
+}
+
+#[cfg(unix)]
+fn main() -> crinn::Result<()> {
+    use crinn::anns::glass::GlassIndex;
+    use crinn::anns::{AnnIndex, VectorSet};
+    use crinn::coordinator::{Client, NetConfig, NetServer, Server};
+    use crinn::dataset::synth;
+    use crinn::eval::{harness, report};
+    use crinn::util::bench::Stats;
+    use crinn::variants::VariantConfig;
+    use std::fmt::Write as _;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    let env_usize = |key: &str, default: usize| -> usize {
+        std::env::var(key)
+            .ok()
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap_or(default)
+    };
+    let n = env_usize("CRINN_BENCH_NET_N", 20_000);
+    let requests = env_usize("CRINN_BENCH_NET_REQUESTS", 4_000);
+    let client_counts: Vec<usize> = match std::env::var("CRINN_BENCH_NET_CLIENTS") {
+        Ok(s) => s
+            .split(',')
+            .filter(|t| !t.trim().is_empty())
+            .map(|t| {
+                t.trim()
+                    .parse()
+                    .unwrap_or_else(|_| panic!("CRINN_BENCH_NET_CLIENTS: bad integer {t:?}"))
+            })
+            .collect(),
+        Err(_) => vec![1, 4, 16],
+    };
+    let (k, ef) = (10, 64);
+
+    eprintln!("== net_qps: {n} base vectors, {requests} requests per row ==");
+    let ds = synth::generate_counts(synth::spec("demo-64").unwrap(), n, 200, 42);
+    let t = Instant::now();
+    let index: Arc<dyn AnnIndex> = Arc::new(GlassIndex::build(
+        VectorSet::from_dataset(&ds),
+        VariantConfig::crinn_full(),
+        42,
+    ));
+    eprintln!("  built in {:.2}s", t.elapsed().as_secs_f64());
+    let net = NetServer::start(
+        Server::start(index, Default::default()),
+        "127.0.0.1:0",
+        NetConfig::default(),
+    )?;
+    let addr = net.addr().to_string();
+    let queries: Arc<Vec<Vec<f32>>> = Arc::new(
+        (0..ds.n_queries()).map(|qi| ds.query_vec(qi).to_vec()).collect(),
+    );
+
+    let mut csv = String::from("mode,clients,requests,elapsed_s,qps,p50_us,p99_us\n");
+    for &clients in &client_counts {
+        let per_client = requests / clients.max(1);
+        for mode in ["in-process", "net"] {
+            let t = Instant::now();
+            let workers: Vec<_> = (0..clients)
+                .map(|c| {
+                    let queries = queries.clone();
+                    let addr = addr.clone();
+                    let handle = net.handle();
+                    std::thread::spawn(move || {
+                        let mut lat = Vec::with_capacity(per_client);
+                        let mut client = (mode == "net")
+                            .then(|| Client::connect(&addr, "bench").unwrap());
+                        for r in 0..per_client {
+                            let q = &queries[(c * per_client + r) % queries.len()];
+                            let t = Instant::now();
+                            match &mut client {
+                                Some(cl) => {
+                                    cl.search(q, k, ef).expect("wire search");
+                                }
+                                None => {
+                                    handle.query(q.clone(), k, ef).expect("in-process search");
+                                }
+                            }
+                            lat.push(t.elapsed().as_secs_f64());
+                        }
+                        lat
+                    })
+                })
+                .collect();
+            let mut lat = Vec::with_capacity(requests);
+            for w in workers {
+                lat.extend(w.join().expect("bench client thread"));
+            }
+            let elapsed = t.elapsed().as_secs_f64();
+            let stats = Stats::from_samples(lat);
+            let qps = stats.n as f64 / elapsed;
+            eprintln!(
+                "  {mode:<10} clients={clients:<3} {qps:>8.0} qps  p50 {:>7.1}us  p99 {:>7.1}us",
+                stats.p50 * 1e6,
+                stats.p99 * 1e6
+            );
+            writeln!(
+                csv,
+                "{mode},{clients},{},{elapsed:.3},{qps:.0},{:.1},{:.1}",
+                stats.n,
+                stats.p50 * 1e6,
+                stats.p99 * 1e6
+            )
+            .unwrap();
+        }
+    }
+    let snap = net.shutdown();
+    eprintln!(
+        "  served {} searches over {} connections ({} frames)",
+        snap.requests, snap.connections, snap.protocol_frames
+    );
+    let path = harness::reports_dir().join("net_qps.csv");
+    report::save(&path, &csv)?;
+    eprintln!("wrote {}", path.display());
+    Ok(())
+}

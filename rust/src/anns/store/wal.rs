@@ -85,6 +85,10 @@ pub struct VectorLog {
     bytes: u64,
     /// Frames appended or recovered through this handle.
     records: u64,
+    /// Fault-injection seam: when set, every append fails before writing
+    /// anything, as a full disk or yanked volume would. Serving tests use
+    /// it to pin the applied-but-not-logged ack path.
+    poison: bool,
 }
 
 impl VectorLog {
@@ -102,6 +106,7 @@ impl VectorLog {
             path: path.to_path_buf(),
             bytes: 0,
             records: 0,
+            poison: false,
         })
     }
 
@@ -170,6 +175,7 @@ impl VectorLog {
                 path: path.to_path_buf(),
                 bytes: at as u64,
                 records: n,
+                poison: false,
             },
         ))
     }
@@ -216,7 +222,18 @@ impl VectorLog {
         self.append_frame(&payload)
     }
 
+    /// Make every subsequent append fail without writing (fault
+    /// injection — see the `poison` field).
+    pub fn poison_appends(&mut self, on: bool) {
+        self.poison = on;
+    }
+
     fn append_frame(&mut self, payload: &[u8]) -> Result<()> {
+        crate::ensure!(
+            !self.poison,
+            "mutation log {:?}: append failed (injected fault)",
+            self.path
+        );
         let mut frame = Vec::with_capacity(FRAME_HEADER + payload.len());
         frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
         frame.extend_from_slice(&sections::checksum(payload).to_le_bytes());
@@ -401,6 +418,33 @@ mod tests {
         drop(log);
         let (records, _) = VectorLog::recover(&path).unwrap();
         assert_eq!(records, vec![LogRecord::Tombstone { id: 9 }]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn wal_poisoned_appends_fail_without_writing() {
+        let path = tmp("poison");
+        let mut log = VectorLog::create(&path).unwrap();
+        log.append_vector(1, &[0.5]).unwrap();
+        let before = log.bytes();
+        log.poison_appends(true);
+        assert!(log.append_tombstone(2).is_err());
+        assert!(log.append_vector(3, &[1.0]).is_err());
+        assert_eq!(log.bytes(), before, "a failed append writes nothing");
+        log.poison_appends(false);
+        log.append_tombstone(4).unwrap();
+        drop(log);
+        let (records, _) = VectorLog::recover(&path).unwrap();
+        assert_eq!(
+            records,
+            vec![
+                LogRecord::Vector {
+                    id: 1,
+                    vector: vec![0.5]
+                },
+                LogRecord::Tombstone { id: 4 },
+            ]
+        );
         std::fs::remove_file(&path).ok();
     }
 

@@ -91,9 +91,17 @@ pub fn group_by_key<T, K: PartialEq>(
     items: Vec<T>,
     key: impl Fn(&T) -> K,
 ) -> Vec<(K, Vec<T>)> {
+    group_precomputed(items.into_iter().map(|item| (key(&item), item)).collect())
+}
+
+/// [`group_by_key`] over items whose keys were already computed — the
+/// server precomputes one fingerprinted key per search request so group
+/// membership tests never re-derive (or clone) anything per comparison.
+/// Same contracts: groups in first-seen key order, arrival order within a
+/// group, and the output is a partition of the input.
+pub fn group_precomputed<K: PartialEq, T>(items: Vec<(K, T)>) -> Vec<(K, Vec<T>)> {
     let mut groups: Vec<(K, Vec<T>)> = Vec::new();
-    for item in items {
-        let k = key(&item);
+    for (k, item) in items {
         match groups.iter_mut().find(|(gk, _)| *gk == k) {
             Some((_, g)) => g.push(item),
             None => groups.push((k, vec![item])),
@@ -213,6 +221,24 @@ mod tests {
         );
         let same = group_by_key(vec![5, 6, 7, 8], |_| 42);
         assert_eq!(same, vec![(42, vec![5, 6, 7, 8])]);
+    }
+
+    #[test]
+    fn group_precomputed_matches_group_by_key() {
+        // The precomputed-key path must be the same stable partition the
+        // closure path produces — the server switched to it for the
+        // filter-fingerprint keys and the property suite rides on both.
+        use crate::util::rng::Rng;
+        for seed in 0..20u64 {
+            let mut rng = Rng::new(seed ^ 0x9409);
+            let n = rng.next_below(64);
+            let items: Vec<(usize, usize)> =
+                (0..n).map(|i| (rng.next_below(5), i)).collect();
+            let via_closure = group_by_key(items.clone(), |&(k, _)| k);
+            let via_precomputed =
+                group_precomputed(items.into_iter().map(|it| (it.0, it)).collect());
+            assert_eq!(via_closure, via_precomputed, "seed {seed}");
+        }
     }
 
     #[test]

@@ -1,13 +1,57 @@
 //! Serving metrics: counters + latency reservoir (p50/p99), lock-light.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+/// Admission decisions recorded for one tenant at the network edge.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TenantCounters {
+    /// Requests the token bucket let through to the bounded queue.
+    pub admits: u64,
+    /// Requests answered with an `Overloaded` frame instead.
+    pub rejects: u64,
+}
+
+/// Uniform latency reservoir: Algorithm R (Vitter) over the stream of
+/// per-request latencies. Once the buffer is full, the `n`-th sample
+/// replaces a uniformly chosen slot with probability `RESERVOIR / n`, so
+/// the snapshot stays an unbiased sample of the whole stream. The old
+/// scheme hashed the latency value itself into a slot index, which made
+/// equal or similar latencies (coarse timers, steady-state load) hammer
+/// one slot and let p50/p99 go stale once the reservoir filled.
+struct Reservoir {
+    samples: Vec<f64>,
+    /// Latencies observed so far (including the current one while
+    /// recording) — Algorithm R's `n`.
+    seen: u64,
+    rng: crate::util::rng::Rng,
+}
+
+impl Default for Reservoir {
+    fn default() -> Self {
+        Reservoir {
+            samples: Vec::new(),
+            seen: 0,
+            // Fixed seed: sampling stays deterministic run-to-run, which
+            // keeps the reservoir tests exact.
+            rng: crate::util::rng::Rng::new(0x1a7e_4c7),
+        }
+    }
+}
 
 /// Shared serving metrics.
 #[derive(Default)]
 pub struct Metrics {
+    /// Searches served (mutations and deadline drops count separately).
     pub requests: AtomicU64,
     pub batches: AtomicU64,
+    /// Requests drained into batches — searches *and* mutations, served
+    /// or deadline-dropped. The numerator of
+    /// [`MetricsSnapshot::mean_batch_size`]: dividing `requests` by
+    /// `batches` under-reported whenever mutations flowed, because
+    /// mutation-only batches inflated the denominator only.
+    pub batch_items: AtomicU64,
     pub rejected: AtomicU64,
     /// Requests answered through a multi-query `search_batch` group (size
     /// > 1) — how much of the traffic actually amortized per-query
@@ -33,8 +77,24 @@ pub struct Metrics {
     /// untuned default configuration. Lets a fleet check which tuning
     /// generation each process runs.
     pub tuned_config_hash: AtomicU64,
+    /// Network edge: connections accepted on the socket listener.
+    pub connections: AtomicU64,
+    /// Network edge: request frames decoded off the wire (valid ones;
+    /// hostile input counts under `protocol_errors` instead).
+    pub protocol_frames: AtomicU64,
+    /// Network edge: hostile or malformed wire input — bad magic,
+    /// oversized length, checksum mismatch, undecodable body. Each one
+    /// also closes its connection.
+    pub protocol_errors: AtomicU64,
+    /// Requests dropped unserved at dequeue because their deadline had
+    /// already passed — a backed-up queue sheds stale load instead of
+    /// serving it late.
+    pub deadline_drops: AtomicU64,
+    /// Per-tenant admission decisions (token bucket at the network
+    /// edge). BTreeMap so snapshots list tenants in a stable order.
+    tenants: Mutex<BTreeMap<String, TenantCounters>>,
     /// Reservoir of recent request latencies (seconds).
-    latencies: Mutex<Vec<f64>>,
+    latencies: Mutex<Reservoir>,
 }
 
 const RESERVOIR: usize = 65_536;
@@ -46,18 +106,25 @@ impl Metrics {
 
     pub fn record_request(&self, latency_s: f64) {
         self.requests.fetch_add(1, Ordering::Relaxed);
-        let mut l = self.latencies.lock().unwrap();
-        if l.len() >= RESERVOIR {
-            // Overwrite pseudo-randomly (cheap reservoir behavior).
-            let idx = (latency_s.to_bits() as usize) % RESERVOIR;
-            l[idx] = latency_s;
+        let mut r = self.latencies.lock().unwrap();
+        r.seen += 1;
+        if r.samples.len() < RESERVOIR {
+            r.samples.push(latency_s);
         } else {
-            l.push(latency_s);
+            // Algorithm R: replace a uniform slot with probability k/n.
+            let n = r.seen as usize;
+            let j = r.rng.next_below(n);
+            if j < RESERVOIR {
+                r.samples[j] = latency_s;
+            }
         }
     }
 
-    pub fn record_batch(&self) {
+    /// Record one drained batch of `items` requests (searches and
+    /// mutations alike — everything the batcher handed the worker).
+    pub fn record_batch(&self, items: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_items.fetch_add(items as u64, Ordering::Relaxed);
     }
 
     /// Record one `search_batch` group of `group_len` requests; only
@@ -108,12 +175,61 @@ impl Metrics {
         self.tuned_config_hash.store(hash, Ordering::Relaxed);
     }
 
-    /// Snapshot (requests, batches, rejected, mutations, latency stats).
+    /// Record one accepted network connection.
+    pub fn record_connection(&self) {
+        self.connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one valid request frame decoded off the wire.
+    pub fn record_frame(&self) {
+        self.protocol_frames.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one hostile/malformed piece of wire input.
+    pub fn record_protocol_error(&self) {
+        self.protocol_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one request dropped unserved because its deadline passed.
+    pub fn record_deadline_drop(&self) {
+        self.deadline_drops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one admitted request for `tenant`.
+    pub fn record_tenant_admit(&self, tenant: &str) {
+        self.tenants
+            .lock()
+            .unwrap()
+            .entry(tenant.to_string())
+            .or_default()
+            .admits += 1;
+    }
+
+    /// Record one over-quota rejection for `tenant`.
+    pub fn record_tenant_reject(&self, tenant: &str) {
+        self.tenants
+            .lock()
+            .unwrap()
+            .entry(tenant.to_string())
+            .or_default()
+            .rejects += 1;
+    }
+
+    /// Snapshot (requests, batches, rejected, mutations, network edge,
+    /// per-tenant admission, latency stats).
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let lat = self.latencies.lock().unwrap().clone();
+        let lat = self.latencies.lock().unwrap().samples.clone();
+        let tenants: Vec<(String, TenantCounters)> = self
+            .tenants
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(name, c)| (name.clone(), *c))
+            .collect();
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             batches: self.batches.load(Ordering::Relaxed),
+            batch_items: self.batch_items.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             batched_queries: self.batched_queries.load(Ordering::Relaxed),
             inserts: self.inserts.load(Ordering::Relaxed),
@@ -123,6 +239,11 @@ impl Metrics {
             filtered_queries: self.filtered_queries.load(Ordering::Relaxed),
             filtered_fallbacks: self.filtered_fallbacks.load(Ordering::Relaxed),
             tuned_config_hash: self.tuned_config_hash.load(Ordering::Relaxed),
+            connections: self.connections.load(Ordering::Relaxed),
+            protocol_frames: self.protocol_frames.load(Ordering::Relaxed),
+            protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+            deadline_drops: self.deadline_drops.load(Ordering::Relaxed),
+            tenants,
             latency: crate::util::bench::Stats::from_samples(lat),
         }
     }
@@ -133,6 +254,7 @@ impl Metrics {
 pub struct MetricsSnapshot {
     pub requests: u64,
     pub batches: u64,
+    pub batch_items: u64,
     pub rejected: u64,
     pub batched_queries: u64,
     pub inserts: u64,
@@ -142,16 +264,65 @@ pub struct MetricsSnapshot {
     pub filtered_queries: u64,
     pub filtered_fallbacks: u64,
     pub tuned_config_hash: u64,
+    pub connections: u64,
+    pub protocol_frames: u64,
+    pub protocol_errors: u64,
+    pub deadline_drops: u64,
+    /// Per-tenant admission counters, tenant name ascending.
+    pub tenants: Vec<(String, TenantCounters)>,
     pub latency: crate::util::bench::Stats,
 }
 
 impl MetricsSnapshot {
+    /// Mean requests per drained batch, over *every* request kind the
+    /// batcher handled — `batch_items / batches`, not
+    /// `requests / batches`, which under-reported whenever mutations
+    /// flowed (searches alone in the numerator, every batch in the
+    /// denominator).
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches == 0 {
             0.0
         } else {
-            self.requests as f64 / self.batches as f64
+            self.batch_items as f64 / self.batches as f64
         }
+    }
+
+    /// Flatten the snapshot into `(name, value)` counters — the payload
+    /// of a wire `Metrics` reply, also handy for logs. Latencies are
+    /// reported in integer microseconds; per-tenant admission counters
+    /// appear as `tenant.<name>.admits` / `tenant.<name>.rejects`.
+    pub fn counters(&self) -> Vec<(String, u64)> {
+        let mut out = vec![
+            ("requests".to_string(), self.requests),
+            ("batches".to_string(), self.batches),
+            ("batch_items".to_string(), self.batch_items),
+            ("rejected".to_string(), self.rejected),
+            ("batched_queries".to_string(), self.batched_queries),
+            ("inserts".to_string(), self.inserts),
+            ("deletes".to_string(), self.deletes),
+            ("mutation_errors".to_string(), self.mutation_errors),
+            ("live_points".to_string(), self.live_points),
+            ("filtered_queries".to_string(), self.filtered_queries),
+            ("filtered_fallbacks".to_string(), self.filtered_fallbacks),
+            ("tuned_config_hash".to_string(), self.tuned_config_hash),
+            ("connections".to_string(), self.connections),
+            ("protocol_frames".to_string(), self.protocol_frames),
+            ("protocol_errors".to_string(), self.protocol_errors),
+            ("deadline_drops".to_string(), self.deadline_drops),
+            (
+                "latency_p50_us".to_string(),
+                (self.latency.p50 * 1e6) as u64,
+            ),
+            (
+                "latency_p99_us".to_string(),
+                (self.latency.p99 * 1e6) as u64,
+            ),
+        ];
+        for (tenant, c) in &self.tenants {
+            out.push((format!("tenant.{tenant}.admits"), c.admits));
+            out.push((format!("tenant.{tenant}.rejects"), c.rejects));
+        }
+        out
     }
 }
 
@@ -165,18 +336,98 @@ mod tests {
         for i in 0..100 {
             m.record_request(i as f64 * 1e-4);
         }
-        m.record_batch();
-        m.record_batch();
+        m.record_batch(60);
+        m.record_batch(40);
         m.record_rejected();
         m.record_group(1); // singleton groups never count as batched
         m.record_group(8);
         let s = m.snapshot();
         assert_eq!(s.requests, 100);
         assert_eq!(s.batches, 2);
+        assert_eq!(s.batch_items, 100);
         assert_eq!(s.rejected, 1);
         assert_eq!(s.batched_queries, 8);
         assert_eq!(s.latency.n, 100);
         assert_eq!(s.mean_batch_size(), 50.0);
+    }
+
+    #[test]
+    fn mean_batch_size_counts_mutations() {
+        // The regression the accounting fix pins: mutation-only batches
+        // used to inflate the denominator while contributing nothing to
+        // the numerator. Two batches — one with 4 searches, one with 4
+        // mutations — must average 4.0, not 2.0.
+        let m = Metrics::new();
+        m.record_batch(4);
+        for _ in 0..4 {
+            m.record_request(1e-4);
+        }
+        m.record_batch(4);
+        for _ in 0..4 {
+            m.record_insert();
+        }
+        let s = m.snapshot();
+        assert_eq!(s.requests, 4, "requests still counts searches only");
+        assert_eq!(s.batch_items, 8);
+        assert_eq!(s.mean_batch_size(), 4.0);
+    }
+
+    #[test]
+    fn full_reservoir_keeps_absorbing_new_values() {
+        // The reservoir-bias regression: the old scheme indexed by
+        // `latency.to_bits() % RESERVOIR`, so a stream of equal latencies
+        // overwrote a single slot forever and the percentiles went stale.
+        // Algorithm R must keep touching many distinct slots: fill the
+        // reservoir with 1.0s, then stream 4 * RESERVOIR samples of 2.0
+        // — close to 4/5 of the reservoir should now hold 2.0, and
+        // certainly far more than one slot.
+        let m = Metrics::new();
+        for _ in 0..RESERVOIR {
+            m.record_request(1.0);
+        }
+        for _ in 0..4 * RESERVOIR {
+            m.record_request(2.0);
+        }
+        let snap = m.snapshot();
+        assert_eq!(snap.latency.n, RESERVOIR);
+        let twos = {
+            let r = m.latencies.lock().unwrap();
+            r.samples.iter().filter(|&&x| x == 2.0).count()
+        };
+        // Expectation is 4/5 of the reservoir; allow a wide band (it is
+        // a fixed-seed deterministic stream, but keep the assertion
+        // meaningful rather than exact).
+        assert!(
+            twos > RESERVOIR / 2,
+            "only {twos}/{RESERVOIR} slots absorbed the new value"
+        );
+        // And the percentiles reflect the newer distribution.
+        assert_eq!(snap.latency.p50, 2.0);
+    }
+
+    #[test]
+    fn reservoir_replaces_across_many_distinct_slots() {
+        // Distinct values after the fill must land in distinct slots —
+        // the old value-hashed scheme put equal values in one slot and
+        // gave similar values heavily clustered slots.
+        let m = Metrics::new();
+        for _ in 0..RESERVOIR {
+            m.record_request(0.5);
+        }
+        for i in 0..RESERVOIR {
+            m.record_request(10.0 + i as f64);
+        }
+        let replaced = {
+            let r = m.latencies.lock().unwrap();
+            r.samples.iter().filter(|&&x| x >= 10.0).count()
+        };
+        // A slot filled at n=k survives the stream up to n=2k with
+        // probability prod(1 - 1/n) = k/2k, so about half the reservoir
+        // should be replaced.
+        assert!(
+            replaced > RESERVOIR / 3 && replaced < RESERVOIR,
+            "replaced {replaced} of {RESERVOIR}"
+        );
     }
 
     #[test]
@@ -217,5 +468,46 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.filtered_queries, 4);
         assert_eq!(s.filtered_fallbacks, 1);
+    }
+
+    #[test]
+    fn network_and_tenant_counters() {
+        let m = Metrics::new();
+        m.record_connection();
+        m.record_frame();
+        m.record_frame();
+        m.record_protocol_error();
+        m.record_deadline_drop();
+        m.record_tenant_admit("acme");
+        m.record_tenant_admit("acme");
+        m.record_tenant_reject("acme");
+        m.record_tenant_admit("zeta");
+        let s = m.snapshot();
+        assert_eq!(s.connections, 1);
+        assert_eq!(s.protocol_frames, 2);
+        assert_eq!(s.protocol_errors, 1);
+        assert_eq!(s.deadline_drops, 1);
+        assert_eq!(
+            s.tenants,
+            vec![
+                ("acme".to_string(), TenantCounters { admits: 2, rejects: 1 }),
+                ("zeta".to_string(), TenantCounters { admits: 1, rejects: 0 }),
+            ]
+        );
+        // The flattened counter view carries the per-tenant rows.
+        let counters = s.counters();
+        let get = |name: &str| {
+            counters
+                .iter()
+                .find(|(n, _)| n == name)
+                .map(|(_, v)| *v)
+                .unwrap_or_else(|| panic!("missing counter {name}"))
+        };
+        assert_eq!(get("connections"), 1);
+        assert_eq!(get("protocol_errors"), 1);
+        assert_eq!(get("deadline_drops"), 1);
+        assert_eq!(get("tenant.acme.admits"), 2);
+        assert_eq!(get("tenant.acme.rejects"), 1);
+        assert_eq!(get("tenant.zeta.admits"), 1);
     }
 }

@@ -12,16 +12,31 @@
 //!   a `MutableAnnIndex` behind an `RwLock`), filtered search (filter
 //!   expressions compiled once per batch group against a shared metadata
 //!   store), durable serving (`Server::start_durable` writes every acked
-//!   mutation through an fsync'd append-only log before replying), and
-//!   latency/throughput/mutation/filtered metrics.
+//!   mutation through an fsync'd append-only log before replying),
+//!   wire-supplied deadlines (expired requests are dropped at dequeue and
+//!   counted), and latency/throughput/mutation/filtered metrics;
+//! * [`proto`] — length-prefixed checksummed binary wire protocol
+//!   (hostile-input hardened: every length is capped before allocation);
+//! * [`admission`] — per-tenant token-bucket admission control in front
+//!   of the bounded queue;
+//! * [`net`] (unix) — non-blocking socket front end: `epoll(7)` on Linux,
+//!   `poll(2)` elsewhere, zero dependencies; plus the blocking
+//!   [`net::Client`].
 
+pub mod admission;
 pub mod batcher;
 pub mod metrics;
+#[cfg(unix)]
+pub mod net;
+pub mod proto;
 pub mod router;
 pub mod server;
 
+pub use admission::{Admission, AdmissionConfig, AdmissionController};
+#[cfg(unix)]
+pub use net::{Client, NetConfig, NetServer};
 pub use router::{MutableShardedRouter, ShardedRouter};
 pub use server::{
-    MutationResponse, QueryRequest, QueryResponse, Server, ServerConfig, SharedLog,
+    MutationResponse, QueryRequest, QueryResponse, Reply, Server, ServerConfig, SharedLog,
     SharedMetadata, SharedMutableIndex,
 };

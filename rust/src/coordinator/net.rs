@@ -1,0 +1,980 @@
+//! Non-blocking TCP front end for the serving coordinator.
+//!
+//! Zero-dependency in the style of the mmap FFI in `store/region.rs`:
+//! raw `epoll(7)` syscalls on Linux, a portable `poll(2)` fallback on
+//! other unixes, `std::net` non-blocking sockets everywhere — no tokio
+//! (unavailable offline, and the workload is CPU-bound graph traversal;
+//! see DESIGN.md §Network-Edge). One event-loop thread owns every
+//! connection and the per-tenant admission controller; decoded requests
+//! flow into the existing bounded queue + dynamic batcher through
+//! [`super::server::ServerHandle::submit_request`] with
+//! [`Reply::hook`] completions, and worker threads hand finished frames
+//! back through a mutex-guarded completion list plus a loopback wake
+//! socket.
+//!
+//! Protocol, admission, and deadline semantics live in [`super::proto`]
+//! and [`super::admission`]; hostile frames (bad magic, oversized
+//! length, checksum mismatch, undecodable body) get an error frame and a
+//! connection close — never a panic, never unbounded buffering.
+
+use super::admission::{Admission, AdmissionConfig, AdmissionController};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::proto::{self, Request, RequestFrame, Response};
+use super::server::{
+    DeleteRequest, InsertRequest, QueryRequest, Reply, SearchRequest, Server, ServerHandle,
+};
+use crate::util::error::{Context, Result};
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Readiness event surfaced by [`Poller`].
+struct Event {
+    token: u64,
+    readable: bool,
+    writable: bool,
+}
+
+/// Interest registration tokens: listener, wake pipe, then connections.
+const TOKEN_LISTENER: u64 = 0;
+const TOKEN_WAKE: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// Per-read chunk size; frames larger than this just take several reads.
+const READ_CHUNK: usize = 16 * 1024;
+
+#[cfg(target_os = "linux")]
+mod sys {
+    //! `epoll(7)` via local `extern "C"` declarations (no libc crate).
+    use super::{Event, RawFd};
+    use crate::util::error::Result;
+
+    // The kernel ABI packs epoll_event on x86-64 only.
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+    const EINTR: i32 = 4;
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout: i32) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    pub struct Poller {
+        epfd: i32,
+        buf: Vec<EpollEvent>,
+    }
+
+    impl Poller {
+        pub fn new() -> Result<Poller> {
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            crate::ensure!(
+                epfd >= 0,
+                "epoll_create1 failed: {}",
+                std::io::Error::last_os_error()
+            );
+            Ok(Poller {
+                epfd,
+                buf: vec![EpollEvent { events: 0, data: 0 }; 64],
+            })
+        }
+
+        fn ctl(&mut self, op: i32, fd: RawFd, events: u32, token: u64) -> Result<()> {
+            let mut ev = EpollEvent {
+                events,
+                data: token,
+            };
+            let rc = unsafe { epoll_ctl(self.epfd, op, fd, &mut ev) };
+            crate::ensure!(
+                rc == 0,
+                "epoll_ctl(op={op}, fd={fd}) failed: {}",
+                std::io::Error::last_os_error()
+            );
+            Ok(())
+        }
+
+        pub fn add(&mut self, fd: RawFd, token: u64, readable: bool, writable: bool) -> Result<()> {
+            self.ctl(EPOLL_CTL_ADD, fd, interest(readable, writable), token)
+        }
+
+        pub fn modify(
+            &mut self,
+            fd: RawFd,
+            token: u64,
+            readable: bool,
+            writable: bool,
+        ) -> Result<()> {
+            self.ctl(EPOLL_CTL_MOD, fd, interest(readable, writable), token)
+        }
+
+        pub fn remove(&mut self, fd: RawFd) -> Result<()> {
+            self.ctl(EPOLL_CTL_DEL, fd, 0, 0)
+        }
+
+        pub fn wait(&mut self, timeout_ms: i32, out: &mut Vec<Event>) -> Result<()> {
+            out.clear();
+            let n = loop {
+                let n = unsafe {
+                    epoll_wait(
+                        self.epfd,
+                        self.buf.as_mut_ptr(),
+                        self.buf.len() as i32,
+                        timeout_ms,
+                    )
+                };
+                if n >= 0 {
+                    break n as usize;
+                }
+                let err = std::io::Error::last_os_error();
+                crate::ensure!(err.raw_os_error() == Some(EINTR), "epoll_wait failed: {err}");
+            };
+            for ev in &self.buf[..n] {
+                // Copy out of the (possibly packed) struct before use.
+                let (events, data) = (ev.events, ev.data);
+                out.push(Event {
+                    token: data,
+                    readable: events & (EPOLLIN | EPOLLERR | EPOLLHUP) != 0,
+                    writable: events & (EPOLLOUT | EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+            Ok(())
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            unsafe { close(self.epfd) };
+        }
+    }
+
+    fn interest(readable: bool, writable: bool) -> u32 {
+        let mut e = 0;
+        if readable {
+            e |= EPOLLIN;
+        }
+        if writable {
+            e |= EPOLLOUT;
+        }
+        e
+    }
+}
+
+#[cfg(all(unix, not(target_os = "linux")))]
+mod sys {
+    //! Portable `poll(2)` fallback: interest kept in a map, pollfd array
+    //! rebuilt per wait — fine at the connection counts this front end
+    //! is configured for.
+    use super::{Event, RawFd};
+    use crate::util::error::Result;
+    use std::collections::HashMap;
+
+    #[repr(C)]
+    struct PollFd {
+        fd: i32,
+        events: i16,
+        revents: i16,
+    }
+
+    const POLLIN: i16 = 0x001;
+    const POLLOUT: i16 = 0x004;
+    const POLLERR: i16 = 0x008;
+    const POLLHUP: i16 = 0x010;
+    const EINTR: i32 = 4;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: u32, timeout: i32) -> i32;
+    }
+
+    pub struct Poller {
+        interest: HashMap<RawFd, (u64, bool, bool)>,
+    }
+
+    impl Poller {
+        pub fn new() -> Result<Poller> {
+            Ok(Poller {
+                interest: HashMap::new(),
+            })
+        }
+
+        pub fn add(&mut self, fd: RawFd, token: u64, readable: bool, writable: bool) -> Result<()> {
+            self.interest.insert(fd, (token, readable, writable));
+            Ok(())
+        }
+
+        pub fn modify(
+            &mut self,
+            fd: RawFd,
+            token: u64,
+            readable: bool,
+            writable: bool,
+        ) -> Result<()> {
+            self.interest.insert(fd, (token, readable, writable));
+            Ok(())
+        }
+
+        pub fn remove(&mut self, fd: RawFd) -> Result<()> {
+            self.interest.remove(&fd);
+            Ok(())
+        }
+
+        pub fn wait(&mut self, timeout_ms: i32, out: &mut Vec<Event>) -> Result<()> {
+            out.clear();
+            let mut entries: Vec<u64> = Vec::with_capacity(self.interest.len());
+            let mut fds: Vec<PollFd> = Vec::with_capacity(self.interest.len());
+            for (&fd, &(token, r, w)) in &self.interest {
+                entries.push(token);
+                fds.push(PollFd {
+                    fd,
+                    events: (if r { POLLIN } else { 0 }) | (if w { POLLOUT } else { 0 }),
+                    revents: 0,
+                });
+            }
+            let n = loop {
+                let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as u32, timeout_ms) };
+                if n >= 0 {
+                    break n;
+                }
+                let err = std::io::Error::last_os_error();
+                crate::ensure!(err.raw_os_error() == Some(EINTR), "poll failed: {err}");
+            };
+            if n > 0 {
+                for (pfd, &token) in fds.iter().zip(entries.iter()) {
+                    if pfd.revents != 0 {
+                        out.push(Event {
+                            token,
+                            readable: pfd.revents & (POLLIN | POLLERR | POLLHUP) != 0,
+                            writable: pfd.revents & (POLLOUT | POLLERR | POLLHUP) != 0,
+                        });
+                    }
+                }
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Network front-end configuration.
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Connections beyond this are accepted and immediately closed.
+    pub max_conns: usize,
+    /// Per-tenant token-bucket parameters.
+    pub admission: AdmissionConfig,
+    /// How long a graceful [`NetServer::shutdown`] waits for in-flight
+    /// requests to finish and flush before giving up.
+    pub drain_timeout: Duration,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            max_conns: 1024,
+            admission: AdmissionConfig::default(),
+            drain_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+/// State shared between the event loop, worker-side reply hooks, and the
+/// owning [`NetServer`].
+struct Shared {
+    /// Hard stop: exit the loop now, dropping everything.
+    stop: AtomicBool,
+    /// Graceful drain: stop accepting/reading, finish + flush in-flight
+    /// requests, then exit.
+    drain: AtomicBool,
+    /// Finished response frames awaiting delivery: `(conn token, frame)`.
+    completions: Mutex<Vec<(u64, Vec<u8>)>>,
+    /// True while a wake byte is (probably) in flight — collapses a
+    /// burst of completions into one write.
+    wake_flag: AtomicBool,
+    /// Write half of the loopback wake connection (non-blocking).
+    wake_tx: Mutex<TcpStream>,
+}
+
+impl Shared {
+    /// Queue a finished frame for `token` and nudge the event loop.
+    fn push_completion(&self, token: u64, frame: Vec<u8>) {
+        self.completions.lock().unwrap().push((token, frame));
+        self.wake();
+    }
+
+    fn wake(&self) {
+        if !self.wake_flag.swap(true, Ordering::SeqCst) {
+            // A full buffer (WouldBlock) is fine: the loop polls with a
+            // bounded timeout and drains completions every iteration.
+            let _ = (&*self.wake_tx.lock().unwrap()).write(&[1]);
+        }
+    }
+}
+
+/// One client connection owned by the event loop.
+struct Conn {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    /// Flushed prefix of `wbuf` (drained lazily to avoid per-write
+    /// memmoves).
+    wpos: usize,
+    /// Requests submitted to the queue whose responses have not been
+    /// delivered to `wbuf` yet.
+    pending: usize,
+    /// Protocol error: stop reading, close once flushed and drained.
+    closing: bool,
+    /// EOF or socket error from the peer: remove as soon as convenient.
+    peer_gone: bool,
+    /// Interest currently registered with the poller.
+    want_read: bool,
+    want_write: bool,
+}
+
+impl Conn {
+    fn flushed(&self) -> bool {
+        self.wpos == self.wbuf.len()
+    }
+
+    /// Append a frame and opportunistically flush.
+    fn queue_frame(&mut self, frame: &[u8]) {
+        self.wbuf.extend_from_slice(frame);
+        self.flush();
+    }
+
+    fn flush(&mut self) {
+        while self.wpos < self.wbuf.len() {
+            match self.stream.write(&self.wbuf[self.wpos..]) {
+                Ok(0) => {
+                    self.peer_gone = true;
+                    break;
+                }
+                Ok(n) => self.wpos += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.peer_gone = true;
+                    break;
+                }
+            }
+        }
+        if self.flushed() {
+            self.wbuf.clear();
+            self.wpos = 0;
+        } else if self.wpos > 64 * 1024 {
+            self.wbuf.drain(..self.wpos);
+            self.wpos = 0;
+        }
+    }
+}
+
+/// A running socket front end. Owns the [`Server`] it feeds; shut down
+/// with [`NetServer::shutdown`] for a graceful drain, or just drop it for
+/// a hard stop.
+pub struct NetServer {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    thread: Option<std::thread::JoinHandle<()>>,
+    server: Option<Server>,
+    metrics: Arc<Metrics>,
+}
+
+impl NetServer {
+    /// Bind `listen` (e.g. `"127.0.0.1:0"`) and start the event loop over
+    /// an already-started [`Server`].
+    pub fn start(server: Server, listen: &str, config: NetConfig) -> Result<NetServer> {
+        let listener =
+            TcpListener::bind(listen).with_context(|| format!("bind {listen}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("listener set_nonblocking")?;
+        let addr = listener.local_addr().context("listener local_addr")?;
+
+        // Loopback wake pair: the one-byte channel worker threads use to
+        // interrupt a poll. A throwaway ephemeral listener mints a
+        // connected pair from std alone — no pipe2/eventfd FFI, and the
+        // same code works on every unix.
+        let pair_listener =
+            TcpListener::bind("127.0.0.1:0").context("bind wake-pair listener")?;
+        let pair_addr = pair_listener.local_addr().context("wake-pair local_addr")?;
+        let wake_tx = TcpStream::connect(pair_addr).context("connect wake pair")?;
+        let (wake_rx, _) = pair_listener.accept().context("accept wake pair")?;
+        for s in [&wake_tx, &wake_rx] {
+            s.set_nonblocking(true).context("wake pair set_nonblocking")?;
+            s.set_nodelay(true).ok();
+        }
+
+        let shared = Arc::new(Shared {
+            stop: AtomicBool::new(false),
+            drain: AtomicBool::new(false),
+            completions: Mutex::new(Vec::new()),
+            wake_flag: AtomicBool::new(false),
+            wake_tx: Mutex::new(wake_tx),
+        });
+        let metrics = server.metrics.clone();
+        let handle = server.handle();
+        let loop_shared = shared.clone();
+        let loop_metrics = metrics.clone();
+        let thread = std::thread::Builder::new()
+            .name("crinn-net".to_string())
+            .spawn(move || {
+                event_loop(listener, wake_rx, loop_shared, handle, loop_metrics, config)
+            })
+            .context("spawn net event loop")?;
+        Ok(NetServer {
+            addr,
+            shared,
+            thread: Some(thread),
+            server: Some(server),
+            metrics,
+        })
+    }
+
+    /// The actual bound address (resolves `:0` listens).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// In-process submission handle to the same server the sockets feed —
+    /// the loopback-identity tests compare the two paths.
+    pub fn handle(&self) -> ServerHandle {
+        self.server.as_ref().expect("server running").handle()
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Graceful drain: stop accepting and reading, let submitted requests
+    /// finish and their responses flush (bounded by
+    /// [`NetConfig::drain_timeout`]), then stop the inner server and
+    /// return its final metrics snapshot.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.shared.drain.store(true, Ordering::SeqCst);
+        self.shared.wake();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+        let server = self.server.take().expect("server running");
+        server.shutdown()
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.wake();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+        if let Some(s) = self.server.take() {
+            s.shutdown();
+        }
+    }
+}
+
+/// The event loop: single thread, owns the poller, the connections, and
+/// the admission controller.
+fn event_loop(
+    listener: TcpListener,
+    wake_rx: TcpStream,
+    shared: Arc<Shared>,
+    handle: ServerHandle,
+    metrics: Arc<Metrics>,
+    config: NetConfig,
+) {
+    let Ok(mut poller) = sys::Poller::new() else { return };
+    if poller.add(listener.as_raw_fd(), TOKEN_LISTENER, true, false).is_err() {
+        return;
+    }
+    if poller.add(wake_rx.as_raw_fd(), TOKEN_WAKE, true, false).is_err() {
+        return;
+    }
+    let mut admission = AdmissionController::new(config.admission.clone());
+    let mut conns: HashMap<u64, Conn> = HashMap::new();
+    let mut next_token = FIRST_CONN_TOKEN;
+    let mut events: Vec<Event> = Vec::new();
+    let mut wake_buf = [0u8; 256];
+    let mut drain_deadline: Option<Instant> = None;
+    let mut accepting = true;
+
+    loop {
+        if shared.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        let draining = shared.drain.load(Ordering::SeqCst);
+        if draining {
+            let deadline =
+                *drain_deadline.get_or_insert_with(|| Instant::now() + config.drain_timeout);
+            if accepting {
+                // Deregister the listener: a level-triggered poller would
+                // otherwise spin on unaccepted connections.
+                let _ = poller.remove(listener.as_raw_fd());
+                accepting = false;
+                for conn in conns.values_mut() {
+                    conn.closing = true;
+                }
+            }
+            let all_idle = conns.values().all(|c| c.pending == 0 && c.flushed())
+                && shared.completions.lock().unwrap().is_empty();
+            if all_idle || Instant::now() >= deadline {
+                break;
+            }
+        }
+
+        if poller.wait(50, &mut events).is_err() {
+            break;
+        }
+        for ev in &events {
+            match ev.token {
+                TOKEN_LISTENER => {
+                    if !accepting {
+                        continue;
+                    }
+                    loop {
+                        match listener.accept() {
+                            Ok((stream, _)) => {
+                                if conns.len() >= config.max_conns {
+                                    drop(stream); // at capacity: refuse
+                                    continue;
+                                }
+                                if stream.set_nonblocking(true).is_err() {
+                                    continue;
+                                }
+                                stream.set_nodelay(true).ok();
+                                let token = next_token;
+                                next_token += 1;
+                                if poller.add(stream.as_raw_fd(), token, true, false).is_ok() {
+                                    metrics.record_connection();
+                                    conns.insert(
+                                        token,
+                                        Conn {
+                                            stream,
+                                            rbuf: Vec::new(),
+                                            wbuf: Vec::new(),
+                                            wpos: 0,
+                                            pending: 0,
+                                            closing: false,
+                                            peer_gone: false,
+                                            want_read: true,
+                                            want_write: false,
+                                        },
+                                    );
+                                }
+                            }
+                            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                            Err(_) => break,
+                        }
+                    }
+                }
+                TOKEN_WAKE => {
+                    // Drain the wake bytes, then lower the flag; a racing
+                    // wake after the drain re-raises it and the bounded
+                    // poll timeout covers the window either way.
+                    loop {
+                        match (&wake_rx).read(&mut wake_buf) {
+                            Ok(0) => break,
+                            Ok(_) => continue,
+                            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                            Err(_) => break,
+                        }
+                    }
+                    shared.wake_flag.store(false, Ordering::SeqCst);
+                }
+                token => {
+                    let Some(conn) = conns.get_mut(&token) else { continue };
+                    if ev.readable && conn.want_read {
+                        read_conn(
+                            token, conn, &mut admission, &handle, &metrics, &shared,
+                        );
+                    }
+                    if ev.writable {
+                        conn.flush();
+                    }
+                }
+            }
+        }
+
+        // Deliver finished responses to their connections.
+        let finished: Vec<(u64, Vec<u8>)> =
+            std::mem::take(&mut *shared.completions.lock().unwrap());
+        for (token, frame) in finished {
+            if let Some(conn) = conns.get_mut(&token) {
+                conn.pending = conn.pending.saturating_sub(1);
+                conn.queue_frame(&frame);
+            }
+            // A gone connection's responses are discarded.
+        }
+
+        // Re-arm interest and reap finished connections.
+        conns.retain(|&token, conn| {
+            if conn.peer_gone {
+                let _ = poller.remove(conn.stream.as_raw_fd());
+                return false;
+            }
+            if conn.closing && conn.pending == 0 && conn.flushed() {
+                let _ = poller.remove(conn.stream.as_raw_fd());
+                return false;
+            }
+            let want_read = !conn.closing && !draining;
+            let want_write = !conn.flushed();
+            if (want_read, want_write) != (conn.want_read, conn.want_write) {
+                conn.want_read = want_read;
+                conn.want_write = want_write;
+                let _ =
+                    poller.modify(conn.stream.as_raw_fd(), token, want_read, want_write);
+            }
+            true
+        });
+    }
+}
+
+/// Pull bytes off one readable connection and act on every whole frame.
+fn read_conn(
+    token: u64,
+    conn: &mut Conn,
+    admission: &mut AdmissionController,
+    handle: &ServerHandle,
+    metrics: &Arc<Metrics>,
+    shared: &Arc<Shared>,
+) {
+    let mut chunk = [0u8; READ_CHUNK];
+    loop {
+        match conn.stream.read(&mut chunk) {
+            Ok(0) => {
+                conn.peer_gone = true;
+                break;
+            }
+            Ok(n) => {
+                conn.rbuf.extend_from_slice(&chunk[..n]);
+                parse_frames(token, conn, admission, handle, metrics, shared);
+                if conn.closing || conn.peer_gone {
+                    break;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                conn.peer_gone = true;
+                break;
+            }
+        }
+    }
+}
+
+/// Split and dispatch every whole frame in `conn.rbuf`. A hostile frame
+/// answers with an error frame and flips the connection to `closing`.
+fn parse_frames(
+    token: u64,
+    conn: &mut Conn,
+    admission: &mut AdmissionController,
+    handle: &ServerHandle,
+    metrics: &Arc<Metrics>,
+    shared: &Arc<Shared>,
+) {
+    loop {
+        let (payload_range, consumed) = match proto::split_frame(&conn.rbuf) {
+            Ok(None) => break,
+            Ok(Some((payload, consumed))) => {
+                ((proto::FRAME_HEADER, proto::FRAME_HEADER + payload.len()), consumed)
+            }
+            Err(e) => {
+                // Hostile framing: error frame, then close. The request
+                // id is unknowable (the header itself is suspect), so 0.
+                metrics.record_protocol_error();
+                let frame = proto::encode_response(
+                    0,
+                    &Response::Error {
+                        code: proto::ERR_MALFORMED,
+                        message: format!("{e:#}"),
+                    },
+                );
+                conn.queue_frame(&frame);
+                conn.closing = true;
+                conn.rbuf.clear();
+                return;
+            }
+        };
+        let payload = &conn.rbuf[payload_range.0..payload_range.1];
+        metrics.record_frame();
+        match proto::decode_request(payload) {
+            Ok(frame) => handle_request(token, conn, frame, admission, handle, metrics, shared),
+            Err(e) => {
+                // Framing was fine (checksum matched) but the body is
+                // malformed: echo the id if it was readable, then close.
+                metrics.record_protocol_error();
+                let id = proto::peek_request_id(payload);
+                let frame = proto::encode_response(
+                    id,
+                    &Response::Error {
+                        code: proto::ERR_MALFORMED,
+                        message: format!("{e:#}"),
+                    },
+                );
+                conn.queue_frame(&frame);
+                conn.closing = true;
+                conn.rbuf.clear();
+                return;
+            }
+        }
+        conn.rbuf.drain(..consumed);
+        if conn.closing {
+            return;
+        }
+    }
+}
+
+/// Admit, then submit one decoded request into the serving queue with a
+/// hook completion; or answer immediately (metrics, overload).
+fn handle_request(
+    token: u64,
+    conn: &mut Conn,
+    frame: RequestFrame,
+    admission: &mut AdmissionController,
+    handle: &ServerHandle,
+    metrics: &Arc<Metrics>,
+    shared: &Arc<Shared>,
+) {
+    let RequestFrame {
+        request_id,
+        tenant,
+        deadline_ms,
+        body,
+    } = frame;
+
+    // Metrics frames bypass admission: they are cheap, carry no index
+    // work, and operators need them most during overload.
+    if let Request::Metrics = body {
+        let counters = metrics.snapshot().counters();
+        let resp = proto::encode_response(request_id, &Response::Metrics { counters });
+        conn.queue_frame(&resp);
+        return;
+    }
+
+    let now = Instant::now();
+    match admission.admit(&tenant, now) {
+        Admission::Reject { retry_after_ms } => {
+            metrics.record_tenant_reject(&tenant);
+            let resp =
+                proto::encode_response(request_id, &Response::Overloaded { retry_after_ms });
+            conn.queue_frame(&resp);
+            return;
+        }
+        Admission::Admit => metrics.record_tenant_admit(&tenant),
+    }
+
+    let deadline = if deadline_ms > 0 {
+        Some(now + Duration::from_millis(deadline_ms as u64))
+    } else {
+        None
+    };
+    let submitted = now;
+
+    let req = match body {
+        Request::Search {
+            k,
+            ef,
+            filter,
+            query,
+        } => {
+            let shared = shared.clone();
+            QueryRequest::Search(SearchRequest {
+                query,
+                k,
+                ef,
+                filter,
+                submitted,
+                deadline,
+                reply: Reply::hook(move |resp| {
+                    let body = match resp {
+                        Some(r) => Response::Search {
+                            ids: r.ids,
+                            dists: r.dists,
+                            latency_s: r.latency_s,
+                        },
+                        None => dropped_unserved(),
+                    };
+                    shared.push_completion(token, proto::encode_response(request_id, &body));
+                }),
+            })
+        }
+        Request::Insert {
+            tenant: meta_tenant,
+            tags,
+            vector,
+        } => {
+            let shared = shared.clone();
+            QueryRequest::Insert(InsertRequest {
+                vector,
+                tenant: meta_tenant,
+                tags,
+                submitted,
+                deadline,
+                reply: Reply::hook(move |resp| {
+                    let body = match resp {
+                        Some(r) => Response::Mutation {
+                            result: r.result,
+                            latency_s: r.latency_s,
+                        },
+                        None => dropped_unserved(),
+                    };
+                    shared.push_completion(token, proto::encode_response(request_id, &body));
+                }),
+            })
+        }
+        Request::Delete { id } => {
+            let shared = shared.clone();
+            QueryRequest::Delete(DeleteRequest {
+                id,
+                submitted,
+                deadline,
+                reply: Reply::hook(move |resp| {
+                    let body = match resp {
+                        Some(r) => Response::Mutation {
+                            result: r.result,
+                            latency_s: r.latency_s,
+                        },
+                        None => dropped_unserved(),
+                    };
+                    shared.push_completion(token, proto::encode_response(request_id, &body));
+                }),
+            })
+        }
+        Request::Metrics => unreachable!("handled above"),
+    };
+
+    conn.pending += 1;
+    // On rejection (queue full / stopping) the dropped request fires the
+    // hook with `None`, which queues the explicit dropped-frame — the
+    // client always hears back.
+    let _ = handle.submit_request(req);
+}
+
+fn dropped_unserved() -> Response {
+    Response::Error {
+        code: proto::ERR_DROPPED,
+        message: "dropped unserved (queue full, deadline passed, or shutting down)".to_string(),
+    }
+}
+
+/// Blocking client for the wire protocol — used by `benches/net_qps.rs`,
+/// the integration tests, and as the reference implementation for other
+/// languages.
+pub struct Client {
+    stream: TcpStream,
+    rbuf: Vec<u8>,
+    next_id: u64,
+    tenant: String,
+    deadline_ms: u32,
+}
+
+impl Client {
+    /// Connect to `addr`, identifying as `tenant` for admission control.
+    pub fn connect(addr: &str, tenant: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(Client {
+            stream,
+            rbuf: Vec::new(),
+            next_id: 1,
+            tenant: tenant.to_string(),
+            deadline_ms: 0,
+        })
+    }
+
+    /// Serve-by budget attached to every subsequent request (0 = none).
+    pub fn set_deadline_ms(&mut self, ms: u32) {
+        self.deadline_ms = ms;
+    }
+
+    pub fn search(&mut self, query: &[f32], k: usize, ef: usize) -> Result<Response> {
+        self.search_filtered(query, k, ef, None)
+    }
+
+    pub fn search_filtered(
+        &mut self,
+        query: &[f32],
+        k: usize,
+        ef: usize,
+        filter: Option<crate::anns::FilterExpr>,
+    ) -> Result<Response> {
+        self.call(Request::Search {
+            k,
+            ef,
+            filter,
+            query: query.to_vec(),
+        })
+    }
+
+    pub fn insert(
+        &mut self,
+        vector: &[f32],
+        tenant: Option<&str>,
+        tags: &[&str],
+    ) -> Result<Response> {
+        self.call(Request::Insert {
+            tenant: tenant.map(|t| t.to_string()),
+            tags: tags.iter().map(|t| t.to_string()).collect(),
+            vector: vector.to_vec(),
+        })
+    }
+
+    pub fn delete(&mut self, id: u32) -> Result<Response> {
+        self.call(Request::Delete { id })
+    }
+
+    pub fn metrics(&mut self) -> Result<Response> {
+        self.call(Request::Metrics)
+    }
+
+    /// One request/response round trip (requests on one client are
+    /// serial; open more clients for concurrency).
+    pub fn call(&mut self, body: Request) -> Result<Response> {
+        let request_id = self.next_id;
+        self.next_id += 1;
+        let frame = proto::encode_request(&RequestFrame {
+            request_id,
+            tenant: self.tenant.clone(),
+            deadline_ms: self.deadline_ms,
+            body,
+        });
+        self.stream
+            .write_all(&frame)
+            .context("write request frame")?;
+        loop {
+            if let Some((payload, consumed)) = proto::split_frame(&self.rbuf)? {
+                let (echoed, resp) = proto::decode_response(payload)?;
+                self.rbuf.drain(..consumed);
+                crate::ensure!(
+                    echoed == request_id || echoed == 0,
+                    "response for request {echoed}, expected {request_id}"
+                );
+                return Ok(resp);
+            }
+            let mut chunk = [0u8; READ_CHUNK];
+            let n = self
+                .stream
+                .read(&mut chunk)
+                .context("read response frame")?;
+            crate::ensure!(n > 0, "server closed the connection");
+            self.rbuf.extend_from_slice(&chunk[..n]);
+        }
+    }
+}

@@ -1,0 +1,806 @@
+//! Wire protocol for the network serving edge: length-prefixed,
+//! checksummed binary frames mirroring [`super::server::QueryRequest`].
+//!
+//! ## Frame layout
+//!
+//! ```text
+//! [magic: u32 LE = "CRN1"] [len: u32 LE] [crc: u64 LE] [payload: len bytes]
+//! ```
+//!
+//! `crc` is the storage tier's FNV-1a-64 (`persist::sections::checksum`)
+//! over the payload. The payload starts `[version: u8] [kind: u8]
+//! [request_id: u64 LE]`; request payloads continue `[tenant: str]
+//! [deadline_ms: u32]` then the kind-specific body, response payloads go
+//! straight to the body. Strings are `[len: u32 LE][utf-8 bytes]` and
+//! capped at [`MAX_STR`]; filter expressions are a tagged recursive
+//! encoding with depth and node budgets.
+//!
+//! ## Hostility discipline
+//!
+//! Decoding follows the persist tier's byte-patch rules: every length is
+//! validated *before* any allocation (an oversized frame length is an
+//! error the moment the header is readable — the reader never buffers
+//! toward it, so hostile lengths cannot OOM), every payload must be
+//! consumed exactly, and any violation is an `Err` — never a panic. The
+//! checksum rejects corruption; the structural checks reject everything a
+//! colliding or hand-built payload could still try.
+
+use crate::anns::persist::sections::checksum;
+use crate::anns::FilterExpr;
+use crate::util::error::Result;
+
+/// Frame magic: `b"CRN1"` little-endian.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"CRN1");
+/// Protocol version carried in every payload.
+pub const VERSION: u8 = 1;
+/// `magic + len + crc`.
+pub const FRAME_HEADER: usize = 16;
+/// Hard cap on a frame payload — anything larger is hostile.
+pub const MAX_PAYLOAD: usize = 1 << 20;
+/// Hard cap on any string field (tenant, tag, error message, counter name).
+pub const MAX_STR: usize = 4096;
+/// Hard cap on a query/insert vector's dimension.
+pub const MAX_DIM: usize = 65_536;
+/// Caps on search parameters (sanity, not tuning).
+pub const MAX_K: usize = 65_536;
+pub const MAX_EF: usize = 1 << 20;
+/// Filter expression budgets (match the storage tier's hostile-input
+/// posture: bounded recursion, bounded fan-out).
+pub const MAX_FILTER_DEPTH: usize = 8;
+pub const MAX_FILTER_NODES: usize = 256;
+/// Cap on metrics counter entries in one response.
+pub const MAX_COUNTERS: usize = 4096;
+
+/// Request payload kinds.
+pub const REQ_SEARCH: u8 = 1;
+pub const REQ_INSERT: u8 = 2;
+pub const REQ_DELETE: u8 = 3;
+pub const REQ_METRICS: u8 = 4;
+/// Response payload kinds.
+pub const RESP_SEARCH: u8 = 0x81;
+pub const RESP_MUTATION: u8 = 0x82;
+pub const RESP_METRICS: u8 = 0x83;
+pub const RESP_OVERLOADED: u8 = 0x84;
+pub const RESP_ERROR: u8 = 0xE0;
+
+/// Error codes carried by [`Response::Error`].
+pub const ERR_MALFORMED: u8 = 1;
+/// Rejected at admission (queue full or server stopping).
+pub const ERR_REJECTED: u8 = 2;
+/// Accepted but dropped unserved (deadline passed, shutdown drain).
+pub const ERR_DROPPED: u8 = 3;
+pub const ERR_UNSUPPORTED: u8 = 4;
+
+/// One decoded request frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestFrame {
+    /// Client-chosen correlation id, echoed on the response.
+    pub request_id: u64,
+    /// Admission identity: the token bucket charges this tenant.
+    pub tenant: String,
+    /// Serve-by budget in milliseconds from arrival; 0 = no deadline.
+    pub deadline_ms: u32,
+    pub body: Request,
+}
+
+/// The request body, mirroring `QueryRequest`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    Search {
+        k: usize,
+        ef: usize,
+        filter: Option<FilterExpr>,
+        query: Vec<f32>,
+    },
+    Insert {
+        /// Metadata tenant recorded for the assigned id (independent of
+        /// the frame's admission tenant, though clients usually match).
+        tenant: Option<String>,
+        tags: Vec<String>,
+        vector: Vec<f32>,
+    },
+    Delete {
+        id: u32,
+    },
+    Metrics,
+}
+
+/// The response body.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Search {
+        ids: Vec<u32>,
+        dists: Vec<f32>,
+        latency_s: f64,
+    },
+    Mutation {
+        result: std::result::Result<u32, String>,
+        latency_s: f64,
+    },
+    Metrics {
+        counters: Vec<(String, u64)>,
+    },
+    /// Admission rejected the request before it touched the queue.
+    Overloaded { retry_after_ms: u32 },
+    Error { code: u8, message: String },
+}
+
+/// Encode one request frame (header + checksummed payload).
+pub fn encode_request(frame: &RequestFrame) -> Vec<u8> {
+    let kind = match frame.body {
+        Request::Search { .. } => REQ_SEARCH,
+        Request::Insert { .. } => REQ_INSERT,
+        Request::Delete { .. } => REQ_DELETE,
+        Request::Metrics => REQ_METRICS,
+    };
+    let mut p = Vec::new();
+    p.push(VERSION);
+    p.push(kind);
+    p.extend_from_slice(&frame.request_id.to_le_bytes());
+    put_str(&mut p, &frame.tenant);
+    p.extend_from_slice(&frame.deadline_ms.to_le_bytes());
+    match &frame.body {
+        Request::Search {
+            k,
+            ef,
+            filter,
+            query,
+        } => {
+            p.extend_from_slice(&(*k as u32).to_le_bytes());
+            p.extend_from_slice(&(*ef as u32).to_le_bytes());
+            put_filter(&mut p, filter.as_ref());
+            put_vector(&mut p, query);
+        }
+        Request::Insert {
+            tenant,
+            tags,
+            vector,
+        } => {
+            match tenant {
+                Some(t) => {
+                    p.push(1);
+                    put_str(&mut p, t);
+                }
+                None => p.push(0),
+            }
+            p.extend_from_slice(&(tags.len() as u32).to_le_bytes());
+            for t in tags {
+                put_str(&mut p, t);
+            }
+            put_vector(&mut p, vector);
+        }
+        Request::Delete { id } => p.extend_from_slice(&id.to_le_bytes()),
+        Request::Metrics => {}
+    }
+    seal(p)
+}
+
+/// Encode one response frame for `request_id`.
+pub fn encode_response(request_id: u64, resp: &Response) -> Vec<u8> {
+    let kind = match resp {
+        Response::Search { .. } => RESP_SEARCH,
+        Response::Mutation { .. } => RESP_MUTATION,
+        Response::Metrics { .. } => RESP_METRICS,
+        Response::Overloaded { .. } => RESP_OVERLOADED,
+        Response::Error { .. } => RESP_ERROR,
+    };
+    let mut p = Vec::new();
+    p.push(VERSION);
+    p.push(kind);
+    p.extend_from_slice(&request_id.to_le_bytes());
+    match resp {
+        Response::Search {
+            ids,
+            dists,
+            latency_s,
+        } => {
+            p.extend_from_slice(&(ids.len() as u32).to_le_bytes());
+            for id in ids {
+                p.extend_from_slice(&id.to_le_bytes());
+            }
+            for d in dists {
+                p.extend_from_slice(&d.to_le_bytes());
+            }
+            p.extend_from_slice(&latency_s.to_le_bytes());
+        }
+        Response::Mutation { result, latency_s } => {
+            match result {
+                Ok(id) => {
+                    p.push(1);
+                    p.extend_from_slice(&id.to_le_bytes());
+                }
+                Err(msg) => {
+                    p.push(0);
+                    // Hard-cap the echoed error so a pathological message
+                    // cannot blow the payload budget.
+                    let msg: String = msg.chars().take(MAX_STR / 4).collect();
+                    put_str(&mut p, &msg);
+                }
+            }
+            p.extend_from_slice(&latency_s.to_le_bytes());
+        }
+        Response::Metrics { counters } => {
+            p.extend_from_slice(&(counters.len() as u32).to_le_bytes());
+            for (name, value) in counters {
+                put_str(&mut p, name);
+                p.extend_from_slice(&value.to_le_bytes());
+            }
+        }
+        Response::Overloaded { retry_after_ms } => {
+            p.extend_from_slice(&retry_after_ms.to_le_bytes());
+        }
+        Response::Error { code, message } => {
+            p.push(*code);
+            let message: String = message.chars().take(MAX_STR / 4).collect();
+            put_str(&mut p, &message);
+        }
+    }
+    seal(p)
+}
+
+/// Try to split one frame off the front of `buf`.
+///
+/// * `Ok(None)` — `buf` holds a valid prefix of an incomplete frame;
+///   read more bytes.
+/// * `Ok(Some((payload, consumed)))` — one whole frame: its checksummed
+///   payload, and the total bytes (header + payload) to drain.
+/// * `Err` — hostile input (bad magic, oversized length, checksum
+///   mismatch): close the connection. Oversized lengths error as soon as
+///   the header is readable, before any buffering toward them.
+pub fn split_frame(buf: &[u8]) -> Result<Option<(&[u8], usize)>> {
+    if buf.len() >= 4 {
+        let magic = u32::from_le_bytes(buf[..4].try_into().unwrap());
+        crate::ensure!(magic == MAGIC, "bad frame magic {magic:#010x}");
+    }
+    if buf.len() < FRAME_HEADER {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(buf[4..8].try_into().unwrap()) as usize;
+    crate::ensure!(len <= MAX_PAYLOAD, "frame payload of {len} bytes exceeds cap");
+    if buf.len() < FRAME_HEADER + len {
+        return Ok(None);
+    }
+    let crc = u64::from_le_bytes(buf[8..16].try_into().unwrap());
+    let payload = &buf[FRAME_HEADER..FRAME_HEADER + len];
+    crate::ensure!(checksum(payload) == crc, "frame checksum mismatch");
+    Ok(Some((payload, FRAME_HEADER + len)))
+}
+
+/// Best-effort request id from a (possibly undecodable) payload, for
+/// error frames that should still echo the client's correlation id.
+/// Returns 0 when the payload is too short to carry one.
+pub fn peek_request_id(payload: &[u8]) -> u64 {
+    match payload.get(2..10) {
+        Some(b) => u64::from_le_bytes(b.try_into().unwrap()),
+        None => 0,
+    }
+}
+
+/// Decode a request payload (as returned by [`split_frame`]).
+pub fn decode_request(payload: &[u8]) -> Result<RequestFrame> {
+    let mut c = Cursor(payload);
+    let version = c.u8()?;
+    crate::ensure!(version == VERSION, "unsupported protocol version {version}");
+    let kind = c.u8()?;
+    let request_id = c.u64()?;
+    let tenant = c.string()?;
+    let deadline_ms = c.u32()?;
+    let body = match kind {
+        REQ_SEARCH => {
+            let k = c.u32()? as usize;
+            let ef = c.u32()? as usize;
+            crate::ensure!(k >= 1 && k <= MAX_K, "search k={k} out of range");
+            crate::ensure!(ef <= MAX_EF, "search ef={ef} out of range");
+            let filter = take_filter(&mut c)?;
+            let query = c.vector()?;
+            Request::Search {
+                k,
+                ef,
+                filter,
+                query,
+            }
+        }
+        REQ_INSERT => {
+            let tenant = match c.u8()? {
+                0 => None,
+                1 => Some(c.string()?),
+                b => crate::bail!("insert has bad tenant marker {b}"),
+            };
+            let n = c.u32()? as usize;
+            crate::ensure!(n <= MAX_FILTER_NODES, "insert claims {n} tags");
+            let mut tags = Vec::with_capacity(n);
+            for _ in 0..n {
+                tags.push(c.string()?);
+            }
+            let vector = c.vector()?;
+            Request::Insert {
+                tenant,
+                tags,
+                vector,
+            }
+        }
+        REQ_DELETE => Request::Delete { id: c.u32()? },
+        REQ_METRICS => Request::Metrics,
+        k => crate::bail!("unknown request kind {k:#04x}"),
+    };
+    crate::ensure!(c.0.is_empty(), "trailing bytes in request payload");
+    Ok(RequestFrame {
+        request_id,
+        tenant,
+        deadline_ms,
+        body,
+    })
+}
+
+/// Decode a response payload: `(echoed request id, body)`.
+pub fn decode_response(payload: &[u8]) -> Result<(u64, Response)> {
+    let mut c = Cursor(payload);
+    let version = c.u8()?;
+    crate::ensure!(version == VERSION, "unsupported protocol version {version}");
+    let kind = c.u8()?;
+    let request_id = c.u64()?;
+    let body = match kind {
+        RESP_SEARCH => {
+            let n = c.u32()? as usize;
+            crate::ensure!(n <= MAX_K, "search response claims {n} results");
+            let mut ids = Vec::with_capacity(n);
+            for _ in 0..n {
+                ids.push(c.u32()?);
+            }
+            let mut dists = Vec::with_capacity(n);
+            for _ in 0..n {
+                dists.push(f32::from_le_bytes(c.take(4)?.try_into().unwrap()));
+            }
+            Response::Search {
+                ids,
+                dists,
+                latency_s: c.f64()?,
+            }
+        }
+        RESP_MUTATION => {
+            let result = match c.u8()? {
+                1 => Ok(c.u32()?),
+                0 => Err(c.string()?),
+                b => crate::bail!("mutation response has bad status {b}"),
+            };
+            Response::Mutation {
+                result,
+                latency_s: c.f64()?,
+            }
+        }
+        RESP_METRICS => {
+            let n = c.u32()? as usize;
+            crate::ensure!(n <= MAX_COUNTERS, "metrics response claims {n} counters");
+            let mut counters = Vec::with_capacity(n);
+            for _ in 0..n {
+                let name = c.string()?;
+                counters.push((name, c.u64()?));
+            }
+            Response::Metrics { counters }
+        }
+        RESP_OVERLOADED => Response::Overloaded {
+            retry_after_ms: c.u32()?,
+        },
+        RESP_ERROR => Response::Error {
+            code: c.u8()?,
+            message: c.string()?,
+        },
+        k => crate::bail!("unknown response kind {k:#04x}"),
+    };
+    crate::ensure!(c.0.is_empty(), "trailing bytes in response payload");
+    Ok((request_id, body))
+}
+
+/// Wrap a payload in `[magic][len][crc]`.
+fn seal(payload: Vec<u8>) -> Vec<u8> {
+    debug_assert!(payload.len() <= MAX_PAYLOAD, "encoder built an oversized payload");
+    let mut frame = Vec::with_capacity(FRAME_HEADER + payload.len());
+    frame.extend_from_slice(&MAGIC.to_le_bytes());
+    frame.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    frame.extend_from_slice(&checksum(&payload).to_le_bytes());
+    frame.extend_from_slice(&payload);
+    frame
+}
+
+fn put_str(p: &mut Vec<u8>, s: &str) {
+    p.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    p.extend_from_slice(s.as_bytes());
+}
+
+fn put_vector(p: &mut Vec<u8>, v: &[f32]) {
+    p.extend_from_slice(&(v.len() as u32).to_le_bytes());
+    for x in v {
+        p.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// `[0]` for none, `[1][expr]` for some; expr nodes are `[1][str]`
+/// tenant, `[2][str]` tag, `[3][n: u32][exprs…]` conjunction.
+fn put_filter(p: &mut Vec<u8>, f: Option<&FilterExpr>) {
+    match f {
+        None => p.push(0),
+        Some(f) => {
+            p.push(1);
+            put_expr(p, f);
+        }
+    }
+}
+
+fn put_expr(p: &mut Vec<u8>, f: &FilterExpr) {
+    match f {
+        FilterExpr::Tenant(name) => {
+            p.push(1);
+            put_str(p, name);
+        }
+        FilterExpr::HasTag(name) => {
+            p.push(2);
+            put_str(p, name);
+        }
+        FilterExpr::And(parts) => {
+            p.push(3);
+            p.extend_from_slice(&(parts.len() as u32).to_le_bytes());
+            for part in parts {
+                put_expr(p, part);
+            }
+        }
+    }
+}
+
+fn take_filter(c: &mut Cursor<'_>) -> Result<Option<FilterExpr>> {
+    match c.u8()? {
+        0 => Ok(None),
+        1 => {
+            let mut nodes = 0usize;
+            Ok(Some(take_expr(c, 0, &mut nodes)?))
+        }
+        b => crate::bail!("bad filter marker {b}"),
+    }
+}
+
+fn take_expr(c: &mut Cursor<'_>, depth: usize, nodes: &mut usize) -> Result<FilterExpr> {
+    crate::ensure!(depth < MAX_FILTER_DEPTH, "filter expression nested too deep");
+    *nodes += 1;
+    crate::ensure!(*nodes <= MAX_FILTER_NODES, "filter expression too large");
+    match c.u8()? {
+        1 => Ok(FilterExpr::Tenant(c.string()?)),
+        2 => Ok(FilterExpr::HasTag(c.string()?)),
+        3 => {
+            let n = c.u32()? as usize;
+            crate::ensure!(n <= MAX_FILTER_NODES, "filter conjunction claims {n} parts");
+            let mut parts = Vec::with_capacity(n);
+            for _ in 0..n {
+                parts.push(take_expr(c, depth + 1, nodes)?);
+            }
+            Ok(FilterExpr::And(parts))
+        }
+        t => crate::bail!("unknown filter node tag {t}"),
+    }
+}
+
+/// Bounds-checked cursor (the WAL's, with the protocol's caps).
+struct Cursor<'a>(&'a [u8]);
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        crate::ensure!(self.0.len() >= n, "payload truncated");
+        let (head, rest) = self.0.split_at(n);
+        self.0 = rest;
+        Ok(head)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        crate::ensure!(n <= MAX_STR, "string field of {n} bytes exceeds cap");
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| crate::util::error::Error::msg("string field is not UTF-8".into()))
+    }
+
+    fn vector(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        crate::ensure!(n >= 1 && n <= MAX_DIM, "vector dimension {n} out of range");
+        let bytes = self.take(n * 4)?;
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_requests() -> Vec<RequestFrame> {
+        vec![
+            RequestFrame {
+                request_id: 1,
+                tenant: "acme".to_string(),
+                deadline_ms: 250,
+                body: Request::Search {
+                    k: 5,
+                    ef: 64,
+                    filter: None,
+                    query: vec![0.25, -1.5, 3.0],
+                },
+            },
+            RequestFrame {
+                request_id: u64::MAX,
+                tenant: String::new(),
+                deadline_ms: 0,
+                body: Request::Search {
+                    k: 1,
+                    ef: 0,
+                    filter: Some(FilterExpr::and(vec![
+                        FilterExpr::tenant("t1"),
+                        FilterExpr::tag("hot"),
+                        FilterExpr::and(vec![]),
+                    ])),
+                    query: vec![1.0],
+                },
+            },
+            RequestFrame {
+                request_id: 7,
+                tenant: "acme".to_string(),
+                deadline_ms: 100,
+                body: Request::Insert {
+                    tenant: Some("t1".to_string()),
+                    tags: vec!["hot".to_string(), "eu".to_string()],
+                    vector: vec![9.0, -0.0],
+                },
+            },
+            RequestFrame {
+                request_id: 8,
+                tenant: "b".to_string(),
+                deadline_ms: 0,
+                body: Request::Insert {
+                    tenant: None,
+                    tags: vec![],
+                    vector: vec![1.0, 2.0],
+                },
+            },
+            RequestFrame {
+                request_id: 9,
+                tenant: "acme".to_string(),
+                deadline_ms: 50,
+                body: Request::Delete { id: 42 },
+            },
+            RequestFrame {
+                request_id: 10,
+                tenant: "ops".to_string(),
+                deadline_ms: 0,
+                body: Request::Metrics,
+            },
+        ]
+    }
+
+    fn sample_responses() -> Vec<Response> {
+        vec![
+            Response::Search {
+                ids: vec![3, 1, 4],
+                dists: vec![0.0, 0.5, 2.25],
+                latency_s: 0.0015,
+            },
+            Response::Search {
+                ids: vec![],
+                dists: vec![],
+                latency_s: 0.0,
+            },
+            Response::Mutation {
+                result: Ok(400),
+                latency_s: 0.25,
+            },
+            Response::Mutation {
+                result: Err("applied but not logged: boom".to_string()),
+                latency_s: 0.1,
+            },
+            Response::Metrics {
+                counters: vec![
+                    ("requests".to_string(), 100),
+                    ("tenant.acme.admits".to_string(), 7),
+                ],
+            },
+            Response::Overloaded { retry_after_ms: 40 },
+            Response::Error {
+                code: ERR_DROPPED,
+                message: "dropped unserved".to_string(),
+            },
+        ]
+    }
+
+    #[test]
+    fn request_frames_round_trip() {
+        for want in sample_requests() {
+            let frame = encode_request(&want);
+            let (payload, consumed) = split_frame(&frame).unwrap().unwrap();
+            assert_eq!(consumed, frame.len());
+            assert_eq!(peek_request_id(payload), want.request_id);
+            let got = decode_request(payload).unwrap();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn response_frames_round_trip() {
+        for want in sample_responses() {
+            let frame = encode_response(99, &want);
+            let (payload, consumed) = split_frame(&frame).unwrap().unwrap();
+            assert_eq!(consumed, frame.len());
+            let (id, got) = decode_response(payload).unwrap();
+            assert_eq!(id, 99);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn split_waits_for_whole_frames() {
+        // Feeding a valid frame byte by byte: every proper prefix is
+        // `Ok(None)`, the whole thing splits, and two frames
+        // back-to-back split one at a time.
+        let frame = encode_request(&sample_requests()[0]);
+        for cut in 0..frame.len() {
+            assert!(
+                split_frame(&frame[..cut]).unwrap().is_none(),
+                "prefix of {cut} bytes should be incomplete"
+            );
+        }
+        let mut two = frame.clone();
+        two.extend_from_slice(&encode_request(&sample_requests()[4]));
+        let (_, consumed) = split_frame(&two).unwrap().unwrap();
+        assert_eq!(consumed, frame.len());
+        let (payload, _) = split_frame(&two[consumed..]).unwrap().unwrap();
+        assert_eq!(decode_request(payload).unwrap().body, Request::Delete { id: 42 });
+    }
+
+    #[test]
+    fn hostile_frames_error_without_panics() {
+        // Bad magic: rejected as soon as 4 bytes are readable.
+        assert!(split_frame(b"EVIL").is_err());
+        // Oversized length: rejected at the header, long before the
+        // claimed bytes could be buffered.
+        let mut huge = Vec::new();
+        huge.extend_from_slice(&MAGIC.to_le_bytes());
+        huge.extend_from_slice(&(u32::MAX).to_le_bytes());
+        huge.extend_from_slice(&0u64.to_le_bytes());
+        assert!(split_frame(&huge).is_err());
+        // Corrupt checksum.
+        let mut frame = encode_request(&sample_requests()[0]);
+        let n = frame.len();
+        frame[n - 1] ^= 0x01;
+        assert!(split_frame(&frame).is_err());
+    }
+
+    #[test]
+    fn byte_patch_never_panics_or_wrongly_equals() {
+        // The persist tier's discipline applied to the wire: flip each
+        // byte of a valid frame — splitting/decoding must never panic,
+        // and whenever it still decodes, it must not silently decode to
+        // a *different* value while claiming to be the original (the
+        // checksum makes accidental equality the only allowed outcome).
+        for original in sample_requests() {
+            let frame = encode_request(&original);
+            for i in 0..frame.len() {
+                let mut patched = frame.clone();
+                patched[i] ^= 0x10;
+                match split_frame(&patched) {
+                    Err(_) => {}
+                    Ok(None) => {} // length shrank; now an incomplete frame
+                    Ok(Some((payload, _))) => {
+                        if let Ok(got) = decode_request(payload) {
+                            // The checksum survived the flip only if the
+                            // flip landed in ignorable territory; a decode
+                            // that differs from the original would mean
+                            // silent corruption.
+                            assert_eq!(got, original, "byte {i} silently corrupted");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn filter_budgets_reject_hostile_expressions() {
+        // Depth: a chain of nested single-child Ands past MAX_FILTER_DEPTH.
+        let mut deep = FilterExpr::tenant("t");
+        for _ in 0..MAX_FILTER_DEPTH + 1 {
+            deep = FilterExpr::and(vec![deep]);
+        }
+        let frame = encode_request(&RequestFrame {
+            request_id: 1,
+            tenant: "a".to_string(),
+            deadline_ms: 0,
+            body: Request::Search {
+                k: 1,
+                ef: 0,
+                filter: Some(deep),
+                query: vec![1.0],
+            },
+        });
+        let (payload, _) = split_frame(&frame).unwrap().unwrap();
+        let err = format!("{:#}", decode_request(payload).unwrap_err());
+        assert!(err.contains("nested too deep"), "{err}");
+        // Node budget: a flat conjunction of too many leaves.
+        let wide = FilterExpr::and(
+            (0..MAX_FILTER_NODES).map(|_| FilterExpr::tag("t")).collect(),
+        );
+        let frame = encode_request(&RequestFrame {
+            request_id: 1,
+            tenant: "a".to_string(),
+            deadline_ms: 0,
+            body: Request::Search {
+                k: 1,
+                ef: 0,
+                filter: Some(wide),
+                query: vec![1.0],
+            },
+        });
+        let (payload, _) = split_frame(&frame).unwrap().unwrap();
+        let err = format!("{:#}", decode_request(payload).unwrap_err());
+        assert!(err.contains("too large"), "{err}");
+    }
+
+    #[test]
+    fn structural_caps_reject_out_of_range_fields() {
+        // Hand-seal payloads (valid checksum!) so the structural checks
+        // are what rejects them, not the crc.
+        let reseal = |mutate: &dyn Fn(&mut Vec<u8>)| {
+            let frame = encode_request(&sample_requests()[0]);
+            let mut payload = frame[FRAME_HEADER..].to_vec();
+            mutate(&mut payload);
+            seal(payload)
+        };
+        // Wrong version.
+        let f = reseal(&|p| p[0] = 9);
+        let (payload, _) = split_frame(&f).unwrap().unwrap();
+        assert!(decode_request(payload).is_err());
+        // Unknown kind.
+        let f = reseal(&|p| p[1] = 0x7F);
+        let (payload, _) = split_frame(&f).unwrap().unwrap();
+        assert!(decode_request(payload).is_err());
+        // k = 0 is out of range.
+        let f = reseal(&|p| {
+            // [ver u8][kind u8][id u64][tenant len u32 + 4 bytes][deadline u32] → k at 22
+            p[22..26].copy_from_slice(&0u32.to_le_bytes());
+        });
+        let (payload, _) = split_frame(&f).unwrap().unwrap();
+        let err = format!("{:#}", decode_request(payload).unwrap_err());
+        assert!(err.contains("out of range"), "{err}");
+        // Oversized string length inside a valid frame.
+        let f = reseal(&|p| {
+            p[10..14].copy_from_slice(&(MAX_STR as u32 + 1).to_le_bytes());
+        });
+        let (payload, _) = split_frame(&f).unwrap().unwrap();
+        let err = format!("{:#}", decode_request(payload).unwrap_err());
+        assert!(err.contains("exceeds cap"), "{err}");
+        // Trailing garbage after a well-formed body.
+        let f = reseal(&|p| p.push(0));
+        let (payload, _) = split_frame(&f).unwrap().unwrap();
+        let err = format!("{:#}", decode_request(payload).unwrap_err());
+        assert!(err.contains("trailing bytes"), "{err}");
+    }
+
+    #[test]
+    fn peek_request_id_tolerates_short_payloads() {
+        assert_eq!(peek_request_id(&[]), 0);
+        assert_eq!(peek_request_id(&[1, 2, 3]), 0);
+        let frame = encode_request(&sample_requests()[2]);
+        assert_eq!(peek_request_id(&frame[FRAME_HEADER..]), 7);
+    }
+}

@@ -23,7 +23,7 @@
 
 use crate::anns::store::VectorLog;
 use crate::anns::{AnnIndex, FilterBitset, FilterExpr, MetadataStore, MutableAnnIndex};
-use crate::coordinator::batcher::{group_by_key, next_batch_or_stop, BatchPolicy};
+use crate::coordinator::batcher::{group_precomputed, next_batch_or_stop, BatchPolicy};
 use crate::coordinator::metrics::Metrics;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -49,6 +49,54 @@ pub enum QueryRequest {
     Delete(DeleteRequest),
 }
 
+/// How a response travels back to whoever submitted the request: a
+/// bounded channel (the in-process `submit_*` path) or a one-shot hook
+/// (the network front end, which must learn about *unserved* requests
+/// too). Dropping an unsent `Reply` — deadline shed, queue-full
+/// rejection, shutdown — fires a hook with `None`, so a socket client
+/// always gets an explicit "dropped" frame instead of a silent stall; a
+/// dropped channel reply is simply gone, matching the old behavior where
+/// an abandoned `Receiver` made `send` a no-op.
+pub struct Reply<T>(Option<ReplyKind<T>>);
+
+enum ReplyKind<T> {
+    Channel(SyncSender<T>),
+    Hook(Box<dyn FnOnce(Option<T>) + Send>),
+}
+
+impl<T> Reply<T> {
+    /// Reply over a bounded channel; a gone receiver makes `send` a no-op.
+    pub fn channel(tx: SyncSender<T>) -> Reply<T> {
+        Reply(Some(ReplyKind::Channel(tx)))
+    }
+
+    /// Reply through a one-shot hook. The hook is ALWAYS called exactly
+    /// once: with `Some(response)` when the request was served, with
+    /// `None` when it was dropped unserved.
+    pub fn hook(f: impl FnOnce(Option<T>) + Send + 'static) -> Reply<T> {
+        Reply(Some(ReplyKind::Hook(Box::new(f))))
+    }
+
+    /// Deliver the response.
+    pub fn send(mut self, value: T) {
+        match self.0.take() {
+            Some(ReplyKind::Channel(tx)) => {
+                let _ = tx.send(value);
+            }
+            Some(ReplyKind::Hook(f)) => f(Some(value)),
+            None => unreachable!("Reply sent twice"),
+        }
+    }
+}
+
+impl<T> Drop for Reply<T> {
+    fn drop(&mut self) {
+        if let Some(ReplyKind::Hook(f)) = self.0.take() {
+            f(None);
+        }
+    }
+}
+
 /// One query.
 pub struct SearchRequest {
     pub query: Vec<f32>,
@@ -60,8 +108,12 @@ pub struct SearchRequest {
     /// the unfiltered fast path, bitwise identical to pre-filter serving.
     pub filter: Option<FilterExpr>,
     pub submitted: Instant,
-    /// Reply channel.
-    pub reply: SyncSender<QueryResponse>,
+    /// Serve-by time: a worker that dequeues this request at or after the
+    /// deadline drops it unserved (counted in `deadline_drops`) — a
+    /// backed-up queue sheds stale load instead of serving it late.
+    /// `None` (every in-process `submit_*` helper) never expires.
+    pub deadline: Option<Instant>,
+    pub reply: Reply<QueryResponse>,
 }
 
 /// One online insert.
@@ -72,14 +124,18 @@ pub struct InsertRequest {
     pub tenant: Option<String>,
     pub tags: Vec<String>,
     pub submitted: Instant,
-    pub reply: SyncSender<MutationResponse>,
+    /// See [`SearchRequest::deadline`].
+    pub deadline: Option<Instant>,
+    pub reply: Reply<MutationResponse>,
 }
 
 /// One tombstone delete.
 pub struct DeleteRequest {
     pub id: u32,
     pub submitted: Instant,
-    pub reply: SyncSender<MutationResponse>,
+    /// See [`SearchRequest::deadline`].
+    pub deadline: Option<Instant>,
+    pub reply: Reply<MutationResponse>,
 }
 
 /// Outcome of a mutation: the assigned id for inserts (the echoed id for
@@ -211,6 +267,75 @@ enum Mutation {
     Delete(u32),
 }
 
+/// Batch-group key: `(k, ef, filter)` with the filter *taken* from the
+/// request (not cloned) and fingerprinted once at construction. Equality
+/// checks compare `(k, ef, fingerprint)` before walking the expression,
+/// so the linear group scan costs integer compares per mismatch; the full
+/// structural compare on fingerprint match keeps colliding-but-different
+/// filters in separate groups (correctness never rests on the hash).
+struct GroupKey {
+    k: usize,
+    ef: usize,
+    fingerprint: u64,
+    filter: Option<FilterExpr>,
+}
+
+impl GroupKey {
+    fn new(k: usize, ef: usize, filter: Option<FilterExpr>) -> GroupKey {
+        let mut h = 0xcbf2_9ce4_8422_2325u64; // FNV-1a-64 offset basis
+        if let Some(f) = &filter {
+            fingerprint_filter(f, &mut h);
+        }
+        GroupKey {
+            k,
+            ef,
+            fingerprint: h,
+            filter,
+        }
+    }
+}
+
+impl PartialEq for GroupKey {
+    fn eq(&self, other: &Self) -> bool {
+        self.k == other.k
+            && self.ef == other.ef
+            && self.fingerprint == other.fingerprint
+            && self.filter == other.filter
+    }
+}
+
+/// FNV-1a-64 over a tagged, length-prefixed walk of the expression — an
+/// unambiguous serialization, so structurally different filters hash
+/// differently except for true 64-bit collisions (which the structural
+/// compare in [`GroupKey::eq`] absorbs).
+fn fingerprint_filter(f: &FilterExpr, h: &mut u64) {
+    fn eat(h: &mut u64, bytes: &[u8]) {
+        for &b in bytes {
+            *h ^= b as u64;
+            *h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    match f {
+        FilterExpr::Tenant(name) => {
+            eat(h, &[1]);
+            eat(h, &(name.len() as u32).to_le_bytes());
+            eat(h, name.as_bytes());
+        }
+        FilterExpr::HasTag(name) => {
+            eat(h, &[2]);
+            eat(h, &(name.len() as u32).to_le_bytes());
+            eat(h, name.as_bytes());
+        }
+        FilterExpr::And(parts) => {
+            eat(h, &[3]);
+            eat(h, &(parts.len() as u32).to_le_bytes());
+            for p in parts {
+                fingerprint_filter(p, h);
+            }
+        }
+    }
+}
+
 /// A running server. Submit with [`Server::handle`]; drop to stop.
 pub struct Server {
     tx: Option<SyncSender<QueryRequest>>,
@@ -314,7 +439,7 @@ impl Server {
                     next_batch_or_stop(&guard, &policy, &stop)
                 };
                 let Some(batch) = batch else { break };
-                metrics.record_batch();
+                metrics.record_batch(batch.len());
                 // Split the drained batch: mutations apply first (arrival
                 // order preserved), then the searches — so a search
                 // batched alongside a delete observes it. One shared
@@ -322,7 +447,7 @@ impl Server {
                 // the accounting protocol cannot drift between them.
                 let mut searches = Vec::with_capacity(batch.len());
                 for req in batch {
-                    let (op, reply, submitted, ins_meta) = match req {
+                    let (op, reply, submitted, deadline, ins_meta) = match req {
                         QueryRequest::Search(s) => {
                             searches.push(s);
                             continue;
@@ -331,23 +456,24 @@ impl Server {
                             Mutation::Insert(r.vector),
                             r.reply,
                             r.submitted,
+                            r.deadline,
                             Some((r.tenant, r.tags)),
                         ),
                         QueryRequest::Delete(r) => {
-                            (Mutation::Delete(r.id), r.reply, r.submitted, None)
+                            (Mutation::Delete(r.id), r.reply, r.submitted, r.deadline, None)
                         }
                     };
+                    // Deadline shed at dequeue: an already-late mutation is
+                    // dropped unserved (the dropped reply notifies a hook
+                    // completion) rather than applied late.
+                    if deadline.map_or(false, |d| Instant::now() >= d) {
+                        metrics.record_deadline_drop();
+                        drop(reply);
+                        inflight.fetch_sub(1, Ordering::Relaxed);
+                        continue;
+                    }
                     let is_insert = ins_meta.is_some();
                     let result = backend.apply(&op, &metrics);
-                    // Record the insert's tenant/tags under the assigned id
-                    // before replying: once the client holds the ack, a
-                    // filtered search must already see the metadata.
-                    if let (Ok(id), Some(meta), Some((tenant, tags))) =
-                        (&result, metadata.as_ref(), ins_meta.as_ref())
-                    {
-                        let tags: Vec<&str> = tags.iter().map(|t| t.as_str()).collect();
-                        meta.write().unwrap().set_for(*id, tenant.as_deref(), &tags);
-                    }
                     // Durable write-through: the applied mutation reaches
                     // the fsync'd log before the client sees the ack. A
                     // mutation that applied but failed to log is acked as
@@ -378,27 +504,65 @@ impl Server {
                         }
                         (other, _) => other,
                     };
+                    // Record the insert's tenant/tags under the assigned id
+                    // only once the mutation fully succeeded — applied AND
+                    // logged — but still before replying: once the client
+                    // holds the ack, a filtered search must already see the
+                    // metadata, while an insert acked as "applied but not
+                    // logged" must leave no metadata a restart would not
+                    // replay.
+                    if let (Ok(id), Some(meta), Some((tenant, tags))) =
+                        (&result, metadata.as_ref(), ins_meta.as_ref())
+                    {
+                        let tags: Vec<&str> = tags.iter().map(|t| t.as_str()).collect();
+                        meta.write().unwrap().set_for(*id, tenant.as_deref(), &tags);
+                    }
                     match (&result, is_insert) {
                         (Ok(_), true) => metrics.record_insert(),
                         (Ok(_), false) => metrics.record_delete(),
                         (Err(_), _) => metrics.record_mutation_error(),
                     }
-                    let _ = reply.send(MutationResponse {
+                    reply.send(MutationResponse {
                         result,
                         latency_s: submitted.elapsed().as_secs_f64(),
                     });
                     inflight.fetch_sub(1, Ordering::Relaxed);
                 }
+                // Deadline shed for searches, also at dequeue: drop the
+                // already-late ones before any grouping or bitset work.
+                // The dropped requests' replies notify hook completions.
+                let now = Instant::now();
+                let searches: Vec<SearchRequest> = searches
+                    .into_iter()
+                    .filter(|s| {
+                        if s.deadline.map_or(false, |d| now >= d) {
+                            metrics.record_deadline_drop();
+                            inflight.fetch_sub(1, Ordering::Relaxed);
+                            false
+                        } else {
+                            true
+                        }
+                    })
+                    .collect();
                 // Serve each (k, ef, filter) group through one multi-query
                 // `search_batch` call — the index reuses a single pooled
                 // scratch context across the group, and results are
                 // bitwise identical to per-request `search_with_dists`.
                 // A filter expression is compiled to a bitset ONCE per
                 // group under the metadata read lock; with no store, a
-                // filtered query matches nothing (deny-safe).
-                for ((k, ef, filter), group) in
-                    group_by_key(searches, |r| (r.k, r.ef, r.filter.clone()))
-                {
+                // filtered query matches nothing (deny-safe). The group
+                // key takes each request's filter (no clone) and carries
+                // its fingerprint, so membership tests cost a few integer
+                // compares instead of an expression walk.
+                let keyed: Vec<(GroupKey, SearchRequest)> = searches
+                    .into_iter()
+                    .map(|mut r| {
+                        let filter = r.filter.take();
+                        (GroupKey::new(r.k, r.ef, filter), r)
+                    })
+                    .collect();
+                for (key, group) in group_precomputed(keyed) {
+                    let (k, ef, filter) = (key.k, key.ef, key.filter);
                     let queries: Vec<&[f32]> =
                         group.iter().map(|r| r.query.as_slice()).collect();
                     let results = match &filter {
@@ -422,7 +586,7 @@ impl Server {
                         let latency = req.submitted.elapsed().as_secs_f64();
                         metrics.record_request(latency);
                         let (dists, ids) = pairs.into_iter().unzip();
-                        let _ = req.reply.send(QueryResponse {
+                        req.reply.send(QueryResponse {
                             ids,
                             dists,
                             latency_s: latency,
@@ -513,9 +677,19 @@ impl ServerHandle {
             ef,
             filter,
             submitted: Instant::now(),
-            reply: reply_tx,
+            deadline: None,
+            reply: Reply::channel(reply_tx),
         }))
         .then_some(reply_rx)
+    }
+
+    /// Enqueue a fully-formed request — the network front end builds
+    /// these itself ([`Reply::hook`] completions, wire-supplied
+    /// deadlines). Same admission control as the typed `submit_*`
+    /// helpers; `false` means rejected (shutting down or queue full), and
+    /// the dropped request fires any hook reply with `None`.
+    pub fn submit_request(&self, req: QueryRequest) -> bool {
+        self.push(req)
     }
 
     /// Submit an online insert; same admission control as [`Self::submit`].
@@ -537,7 +711,8 @@ impl ServerHandle {
             tenant,
             tags,
             submitted: Instant::now(),
-            reply: reply_tx,
+            deadline: None,
+            reply: Reply::channel(reply_tx),
         }))
         .then_some(reply_rx)
     }
@@ -549,7 +724,8 @@ impl ServerHandle {
         self.push(QueryRequest::Delete(DeleteRequest {
             id,
             submitted: Instant::now(),
-            reply: reply_tx,
+            deadline: None,
+            reply: Reply::channel(reply_tx),
         }))
         .then_some(reply_rx)
     }
@@ -967,5 +1143,262 @@ mod tests {
         let idx = index.read().unwrap();
         assert_eq!(idx.live_count(), 400);
         assert!(idx.is_deleted(victim));
+    }
+
+    #[test]
+    fn reply_hook_fires_exactly_once() {
+        // Served → Some(response); dropped unserved → None. Exactly one
+        // call either way — the network front end's pending-count
+        // bookkeeping rests on this.
+        let got: Arc<Mutex<Vec<Option<u32>>>> = Arc::new(Mutex::new(Vec::new()));
+        let g = got.clone();
+        Reply::hook(move |v: Option<u32>| g.lock().unwrap().push(v)).send(7);
+        let g = got.clone();
+        drop(Reply::hook(move |v: Option<u32>| g.lock().unwrap().push(v)));
+        assert_eq!(*got.lock().unwrap(), vec![Some(7), None]);
+        // A channel reply with a gone receiver stays a silent no-op.
+        let (tx, rx) = sync_channel::<u32>(1);
+        drop(rx);
+        Reply::channel(tx).send(1);
+    }
+
+    #[test]
+    fn group_key_fingerprints_agree_with_equality() {
+        let k1 = GroupKey::new(5, 64, Some(FilterExpr::tenant("t1")));
+        let k2 = GroupKey::new(5, 64, Some(FilterExpr::tenant("t1")));
+        assert!(k1 == k2);
+        assert_eq!(k1.fingerprint, k2.fingerprint);
+        // Same string under a different node kind must not collide: the
+        // walk is tagged and length-prefixed.
+        let k3 = GroupKey::new(5, 64, Some(FilterExpr::tag("t1")));
+        assert!(k1 != k3);
+        assert_ne!(k1.fingerprint, k3.fingerprint);
+        // And(vec![x]) is structurally distinct from x.
+        let k4 = GroupKey::new(5, 64, Some(FilterExpr::and(vec![FilterExpr::tenant("t1")])));
+        assert!(k1 != k4);
+        assert_ne!(k1.fingerprint, k4.fingerprint);
+        let unfiltered = GroupKey::new(5, 64, None);
+        assert!(unfiltered == GroupKey::new(5, 64, None));
+        assert!(unfiltered != GroupKey::new(5, 32, None));
+        assert!(unfiltered != k1);
+    }
+
+    #[test]
+    fn expired_deadline_requests_are_dropped_and_counted() {
+        let (server, ds) = make_server(64);
+        let h = server.handle();
+        // A deadline of "now" is in the past by the time a worker
+        // dequeues. The channel reply sender is dropped unsent, so the
+        // receiver sees a disconnect, not a response.
+        let (tx, rx) = sync_channel(1);
+        assert!(h.submit_request(QueryRequest::Search(SearchRequest {
+            query: ds.query_vec(0).to_vec(),
+            k: 5,
+            ef: 0,
+            filter: None,
+            submitted: Instant::now(),
+            deadline: Some(Instant::now()),
+            reply: Reply::channel(tx),
+        })));
+        assert!(rx.recv().is_err(), "expired search must be dropped, not served");
+        // Same for mutations — and the drop happens before apply, so an
+        // expired delete on this immutable backend is NOT a mutation
+        // error (it never touched the backend).
+        let (tx, rx) = sync_channel(1);
+        assert!(h.submit_request(QueryRequest::Delete(DeleteRequest {
+            id: 1,
+            submitted: Instant::now(),
+            deadline: Some(Instant::now()),
+            reply: Reply::channel(tx),
+        })));
+        assert!(rx.recv().is_err(), "expired delete must be dropped, not applied");
+        // A deadline comfortably in the future serves normally.
+        let (tx, rx) = sync_channel(1);
+        assert!(h.submit_request(QueryRequest::Search(SearchRequest {
+            query: ds.query_vec(0).to_vec(),
+            k: 5,
+            ef: 0,
+            filter: None,
+            submitted: Instant::now(),
+            deadline: Some(Instant::now() + std::time::Duration::from_secs(60)),
+            reply: Reply::channel(tx),
+        })));
+        assert_eq!(rx.recv().unwrap().ids, ds.gt[0][..5].to_vec());
+        let snap = server.shutdown();
+        assert_eq!(snap.deadline_drops, 2);
+        assert_eq!(snap.requests, 1, "dropped requests are not served requests");
+        assert_eq!(snap.mutation_errors, 0);
+    }
+
+    #[test]
+    fn dropped_reply_receiver_neither_panics_nor_leaks_inflight() {
+        let (server, ds) = make_server(64);
+        let h = server.handle();
+        // Submit and immediately abandon the receivers — the worker's
+        // send fails, which must not panic it and must still decrement
+        // the inflight gauge.
+        for qi in 0..8 {
+            drop(h.submit(ds.query_vec(qi % ds.n_queries()).to_vec(), 5, 0).unwrap());
+        }
+        // Mutation replies too (this backend answers inserts with an
+        // error; the error response also has nowhere to go).
+        drop(h.submit_insert(ds.base_vec(0).to_vec()).unwrap());
+        let deadline = Instant::now() + std::time::Duration::from_secs(10);
+        while h.inflight() > 0 && Instant::now() < deadline {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert_eq!(h.inflight(), 0, "abandoned replies leaked inflight slots");
+        // The workers survived: a live client is still served.
+        let resp = h.query(ds.query_vec(0).to_vec(), 5, 0).unwrap();
+        assert_eq!(resp.ids, ds.gt[0][..5].to_vec());
+        let snap = server.shutdown();
+        assert_eq!(snap.requests, 9, "abandoned searches are still served");
+        assert_eq!(snap.mutation_errors, 1);
+    }
+
+    #[test]
+    fn shutdown_drains_already_queued_requests() {
+        // One worker, batch size 1: plug it on a rendezvous reply channel
+        // so everything submitted next stays queued, call shutdown while
+        // they wait, then release the plug — shutdown must serve the
+        // queued requests before joining, not strand them.
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 300, 10, 91);
+        ds.compute_ground_truth(5);
+        let idx: Arc<dyn AnnIndex> =
+            Arc::new(BruteForceIndex::build(VectorSet::from_dataset(&ds)));
+        let server = Server::start(
+            idx,
+            ServerConfig {
+                workers: 1,
+                queue_depth: 64,
+                batch: BatchPolicy {
+                    max_batch: 1,
+                    max_wait: std::time::Duration::from_millis(1),
+                },
+            },
+        );
+        let h = server.handle();
+        let (plug_tx, plug_rx) = sync_channel(0); // rendezvous: send blocks
+        assert!(h.submit_request(QueryRequest::Search(SearchRequest {
+            query: ds.query_vec(0).to_vec(),
+            k: 5,
+            ef: 0,
+            filter: None,
+            submitted: Instant::now(),
+            deadline: None,
+            reply: Reply::channel(plug_tx),
+        })));
+        let receivers: Vec<_> = (0..5)
+            .map(|qi| h.submit(ds.query_vec(qi).to_vec(), 5, 0).unwrap())
+            .collect();
+        let releaser = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(100));
+            plug_rx.recv().unwrap();
+        });
+        let snap = server.shutdown(); // entered while the 5 are queued
+        releaser.join().unwrap();
+        for (qi, rx) in receivers.into_iter().enumerate() {
+            let resp = rx.try_recv().unwrap_or_else(|_| panic!("request {qi} stranded"));
+            assert_eq!(resp.ids, ds.gt[qi][..5].to_vec(), "request {qi}");
+        }
+        assert_eq!(snap.requests, 6);
+    }
+
+    #[test]
+    fn failed_wal_append_leaves_no_metadata_behind() {
+        // The durability-ordering regression: an insert that applies but
+        // fails to log is acked as an error — and must leave NO metadata
+        // visible, because a restart will not replay it. Before the fix,
+        // `set_for` ran before the WAL append, so filtered searches
+        // matched state the client was told failed.
+        let sp = synth::spec("demo-64").unwrap();
+        let ds = synth::generate_counts(sp, 200, 5, 96);
+        let index: crate::coordinator::SharedMutableIndex = Arc::new(RwLock::new(Box::new(
+            BruteForceIndex::build(VectorSet::from_dataset(&ds)),
+        )));
+        let metadata: SharedMetadata = Arc::new(RwLock::new(MetadataStore::new()));
+        let path = std::env::temp_dir()
+            .join(format!("crinn_{}_server_poisoned.wal", std::process::id()));
+        let mut log = VectorLog::create(&path).unwrap();
+        log.poison_appends(true);
+        let wal: SharedLog = Arc::new(Mutex::new(log));
+        let server = Server::start_durable(
+            index,
+            Some(metadata.clone()),
+            wal,
+            ServerConfig {
+                workers: 2,
+                queue_depth: 64,
+                batch: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: std::time::Duration::from_millis(1),
+                },
+            },
+        );
+        let h = server.handle();
+        let ack = h
+            .insert_with_metadata(
+                ds.query_vec(0).to_vec(),
+                Some("t1".to_string()),
+                vec!["hot".to_string()],
+            )
+            .unwrap();
+        let err = ack.result.unwrap_err();
+        assert!(err.contains("applied but not logged"), "{err}");
+        // No metadata for the failed insert: the tenant filter matches
+        // nothing and the store has no tenant for the assigned id.
+        let resp = h
+            .query_filtered(ds.query_vec(0).to_vec(), 1, 0, Some(FilterExpr::tenant("t1")))
+            .unwrap();
+        assert!(resp.ids.is_empty(), "{:?}", resp.ids);
+        assert_eq!(metadata.read().unwrap().tenant(200), None);
+        let snap = server.shutdown();
+        assert_eq!(snap.mutation_errors, 1);
+        assert_eq!((snap.inserts, snap.deletes), (0, 0));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn mixed_search_mutation_batch_accounting() {
+        // The mean-batch-size skew regression: mutations must count into
+        // `batch_items`, so `mean_batch_size` reconciles exactly against
+        // the drained batches even when the traffic mixes kinds.
+        let sp = synth::spec("demo-64").unwrap();
+        let mut ds = synth::generate_counts(sp, 300, 10, 92);
+        ds.compute_ground_truth(5);
+        let index: crate::coordinator::SharedMutableIndex = Arc::new(RwLock::new(Box::new(
+            BruteForceIndex::build(VectorSet::from_dataset(&ds)),
+        )));
+        let server = Server::start_mutable(
+            index,
+            ServerConfig {
+                workers: 2,
+                queue_depth: 64,
+                batch: BatchPolicy {
+                    max_batch: 8,
+                    max_wait: std::time::Duration::from_millis(1),
+                },
+            },
+        );
+        let h = server.handle();
+        for qi in 0..3 {
+            h.query(ds.query_vec(qi).to_vec(), 5, 0).unwrap();
+        }
+        h.insert(ds.query_vec(0).to_vec()).unwrap().result.unwrap();
+        h.insert(ds.query_vec(1).to_vec()).unwrap().result.unwrap();
+        assert_eq!(h.delete(0).unwrap().result, Ok(0));
+        let snap = server.shutdown();
+        assert_eq!(snap.requests, 3, "requests still counts searches only");
+        assert_eq!((snap.inserts, snap.deletes), (2, 1));
+        assert_eq!(snap.batch_items, 6, "every kind counts into batch_items");
+        assert!(
+            (snap.mean_batch_size() * snap.batches as f64 - snap.batch_items as f64).abs()
+                < 1e-9,
+            "mean_batch_size must reconcile: {} * {} vs {}",
+            snap.mean_batch_size(),
+            snap.batches,
+            snap.batch_items
+        );
     }
 }

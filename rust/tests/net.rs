@@ -1,0 +1,411 @@
+//! Network serving edge, end to end over real loopback sockets: wire
+//! results must be bitwise identical to the in-process submission path,
+//! hostile bytes must get error frames (never a panic or an OOM), one
+//! over-quota tenant must not starve another, expired deadlines must be
+//! dropped and counted, and a graceful shutdown must drain pipelined
+//! requests before closing.
+#![cfg(unix)]
+
+use crinn::anns::glass::GlassIndex;
+use crinn::anns::{AnnIndex, FilterExpr, MetadataStore, VectorSet};
+use crinn::coordinator::batcher::BatchPolicy;
+use crinn::coordinator::proto::{self, Request, RequestFrame, Response};
+use crinn::coordinator::server::{QueryRequest, Reply, SearchRequest};
+use crinn::coordinator::{
+    AdmissionConfig, Client, NetConfig, NetServer, Server, ServerConfig, SharedMetadata,
+    SharedMutableIndex,
+};
+use crinn::dataset::synth;
+use crinn::variants::VariantConfig;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::mpsc::sync_channel;
+use std::sync::{Arc, RwLock};
+use std::time::{Duration, Instant};
+
+fn demo(n: usize, nq: usize, seed: u64) -> crinn::dataset::Dataset {
+    synth::generate_counts(synth::spec("demo-64").unwrap(), n, nq, seed)
+}
+
+/// Mutable GLASS server + metadata (tenants t0..t3 with tag "seed" on the
+/// first 100 ids), wrapped in the socket front end on an ephemeral port.
+fn start_net(
+    ds: &crinn::dataset::Dataset,
+    config: ServerConfig,
+    net: NetConfig,
+) -> NetServer {
+    let index = GlassIndex::build(VectorSet::from_dataset(ds), VariantConfig::crinn_full(), 7);
+    let mut meta = MetadataStore::new();
+    for id in 0..index.len().min(100) {
+        meta.push(Some(&format!("t{}", id % 4)), &["seed"]);
+    }
+    let index: SharedMutableIndex = Arc::new(RwLock::new(Box::new(index)));
+    let metadata: SharedMetadata = Arc::new(RwLock::new(meta));
+    let server = Server::start_mutable_with_metadata(index, metadata, config);
+    NetServer::start(server, "127.0.0.1:0", net).unwrap()
+}
+
+fn small_config() -> ServerConfig {
+    ServerConfig {
+        workers: 2,
+        queue_depth: 64,
+        batch: BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(1),
+        },
+    }
+}
+
+/// Pull one whole response frame off a raw socket (tolerates chunked
+/// arrival); `None` on EOF before a frame completes.
+fn read_raw_response(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Option<(u64, Response)> {
+    let mut chunk = [0u8; 4096];
+    loop {
+        if let Ok(Some((payload, consumed))) = proto::split_frame(buf) {
+            let decoded = proto::decode_response(payload).expect("server sent a valid frame");
+            buf.drain(..consumed);
+            return Some(decoded);
+        }
+        let n = stream.read(&mut chunk).ok()?;
+        if n == 0 {
+            return None;
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+}
+
+fn counter(resp: &Response, name: &str) -> u64 {
+    let Response::Metrics { counters } = resp else {
+        panic!("expected metrics response, got {resp:?}");
+    };
+    counters
+        .iter()
+        .find(|(n, _)| n == name)
+        .map(|(_, v)| *v)
+        .unwrap_or_else(|| panic!("no counter {name} in {counters:?}"))
+}
+
+#[test]
+fn loopback_round_trip_is_bitwise_identical_to_in_process() {
+    let ds = demo(400, 8, 31);
+    let net = start_net(&ds, small_config(), NetConfig::default());
+    let addr = net.addr().to_string();
+    let handle = net.handle();
+    let mut client = Client::connect(&addr, "acme").unwrap();
+
+    let assert_same = |wire: Response, local: crinn::coordinator::QueryResponse| {
+        let Response::Search { ids, dists, .. } = wire else {
+            panic!("expected search response, got {wire:?}");
+        };
+        assert_eq!(ids, local.ids);
+        let wire_bits: Vec<u32> = dists.iter().map(|d| d.to_bits()).collect();
+        let local_bits: Vec<u32> = local.dists.iter().map(|d| d.to_bits()).collect();
+        assert_eq!(wire_bits, local_bits, "distances must match bitwise");
+    };
+
+    // Plain and filtered searches, wire vs in-process, on the same state.
+    for (qi, filter) in [(0, None), (1, Some(FilterExpr::tenant("t1")))] {
+        let q = ds.query_vec(qi).to_vec();
+        let wire = client.search_filtered(&q, 10, 64, filter.clone()).unwrap();
+        let local = handle.query_filtered(q, 10, 64, filter).unwrap();
+        assert_same(wire, local);
+    }
+
+    // A wire insert is visible to both paths identically...
+    let inserted = client
+        .insert(ds.query_vec(2), Some("t1"), &["hot"])
+        .unwrap();
+    let Response::Mutation { result: Ok(new_id), .. } = inserted else {
+        panic!("insert failed: {inserted:?}");
+    };
+    let q = ds.query_vec(2).to_vec();
+    let filter = Some(FilterExpr::and(vec![
+        FilterExpr::tenant("t1"),
+        FilterExpr::tag("hot"),
+    ]));
+    let wire = client.search_filtered(&q, 5, 64, filter.clone()).unwrap();
+    let local = handle.query_filtered(q.clone(), 5, 64, filter.clone()).unwrap();
+    assert_eq!(local.ids, vec![new_id], "only the fresh insert has tag hot");
+    assert_same(wire, local);
+
+    // ...and so is a wire delete.
+    let deleted = client.delete(new_id).unwrap();
+    assert!(
+        matches!(deleted, Response::Mutation { result: Ok(id), .. } if id == new_id),
+        "{deleted:?}"
+    );
+    let wire = client.search_filtered(&q, 5, 64, filter.clone()).unwrap();
+    let local = handle.query_filtered(q, 5, 64, filter).unwrap();
+    assert!(local.ids.is_empty(), "deleted point must not match");
+    assert_same(wire, local);
+
+    let snap = net.shutdown();
+    assert!(snap.connections >= 1);
+    assert!(snap.protocol_frames >= 7);
+    assert_eq!(snap.protocol_errors, 0);
+}
+
+#[test]
+fn hostile_frames_get_error_frames_and_close_never_panic() {
+    let ds = demo(200, 4, 32);
+    let net = start_net(&ds, small_config(), NetConfig::default());
+    let addr = net.addr().to_string();
+
+    // (a) garbage magic, (b) oversized length, (c) corrupted checksum.
+    let mut valid = proto::encode_request(&RequestFrame {
+        request_id: 9,
+        tenant: "acme".to_string(),
+        deadline_ms: 0,
+        body: Request::Metrics,
+    });
+    valid[proto::FRAME_HEADER] ^= 0xFF; // payload byte flip breaks the crc
+    let mut oversized = Vec::new();
+    oversized.extend_from_slice(&proto::MAGIC.to_le_bytes());
+    oversized.extend_from_slice(&u32::MAX.to_le_bytes());
+    oversized.extend_from_slice(&[0u8; 8]);
+    for hostile in [b"totally not the protocol".to_vec(), oversized, valid] {
+        let mut raw = TcpStream::connect(&addr).unwrap();
+        raw.write_all(&hostile).unwrap();
+        let mut buf = Vec::new();
+        match read_raw_response(&mut raw, &mut buf) {
+            Some((_, Response::Error { code, .. })) => assert_eq!(code, proto::ERR_MALFORMED),
+            Some((_, other)) => panic!("expected error frame, got {other:?}"),
+            None => panic!("connection closed without an error frame"),
+        }
+        // After the error frame the server closes its end.
+        assert!(read_raw_response(&mut raw, &mut buf).is_none());
+    }
+
+    // A healthy client on the same server is entirely unaffected.
+    let mut client = Client::connect(&addr, "acme").unwrap();
+    let resp = client.search(ds.query_vec(0), 5, 32).unwrap();
+    assert!(matches!(&resp, Response::Search { ids, .. } if ids.len() == 5), "{resp:?}");
+    let metrics = client.metrics().unwrap();
+    assert_eq!(counter(&metrics, "protocol_errors"), 3);
+    assert!(counter(&metrics, "connections") >= 4);
+    drop(client);
+    net.shutdown();
+}
+
+#[test]
+fn over_quota_tenant_gets_overloaded_while_others_complete() {
+    let ds = demo(200, 4, 33);
+    let net = start_net(
+        &ds,
+        small_config(),
+        NetConfig {
+            // One-request burst, effectively no refill: the second request
+            // from the same tenant must bounce deterministically.
+            admission: AdmissionConfig {
+                rate: 0.001,
+                burst: 1.0,
+                ..Default::default()
+            },
+            ..NetConfig::default()
+        },
+    );
+    let addr = net.addr().to_string();
+
+    let mut alice = Client::connect(&addr, "alice").unwrap();
+    let first = alice.search(ds.query_vec(0), 5, 32).unwrap();
+    assert!(matches!(first, Response::Search { .. }), "{first:?}");
+    let second = alice.search(ds.query_vec(1), 5, 32).unwrap();
+    let Response::Overloaded { retry_after_ms } = second else {
+        panic!("expected overloaded, got {second:?}");
+    };
+    assert!(retry_after_ms > 0, "retry hint should be positive");
+
+    // A different tenant is admitted despite alice's empty bucket.
+    let mut bob = Client::connect(&addr, "bob").unwrap();
+    let served = bob.search(ds.query_vec(2), 5, 32).unwrap();
+    assert!(matches!(served, Response::Search { .. }), "{served:?}");
+
+    // Metrics frames bypass admission (alice is out of tokens here).
+    let metrics = alice.metrics().unwrap();
+    assert_eq!(counter(&metrics, "tenant.alice.admits"), 1);
+    assert_eq!(counter(&metrics, "tenant.alice.rejects"), 1);
+    assert_eq!(counter(&metrics, "tenant.bob.admits"), 1);
+    drop((alice, bob));
+    net.shutdown();
+}
+
+#[test]
+fn expired_deadline_requests_are_dropped_and_counted() {
+    let ds = demo(200, 4, 34);
+    // One worker, one-request batches: a plugged worker forces the wire
+    // request to wait in the queue past its deadline — deterministically,
+    // not by racing a sleep against the batcher.
+    let net = start_net(
+        &ds,
+        ServerConfig {
+            workers: 1,
+            queue_depth: 64,
+            batch: BatchPolicy {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+            },
+        },
+        NetConfig::default(),
+    );
+    let addr = net.addr().to_string();
+    let handle = net.handle();
+
+    // Plug: the worker blocks sending into a rendezvous channel nobody
+    // reads yet.
+    let (plug_tx, plug_rx) = sync_channel(0);
+    assert!(handle.submit_request(QueryRequest::Search(SearchRequest {
+        query: ds.query_vec(0).to_vec(),
+        k: 1,
+        ef: 8,
+        filter: None,
+        submitted: Instant::now(),
+        deadline: None,
+        reply: Reply::channel(plug_tx),
+    })));
+
+    // Release the plug only after the wire request's 30ms budget is long
+    // gone.
+    let releaser = std::thread::spawn(move || {
+        std::thread::sleep(Duration::from_millis(200));
+        plug_rx.recv().unwrap()
+    });
+
+    let mut client = Client::connect(&addr, "acme").unwrap();
+    client.set_deadline_ms(30);
+    let resp = client.search(ds.query_vec(1), 5, 32).unwrap();
+    let Response::Error { code, message } = resp else {
+        panic!("expected dropped-unserved error, got {resp:?}");
+    };
+    assert_eq!(code, proto::ERR_DROPPED);
+    assert!(message.contains("dropped"), "{message}");
+    releaser.join().unwrap();
+
+    client.set_deadline_ms(0);
+    let metrics = client.metrics().unwrap();
+    assert_eq!(counter(&metrics, "deadline_drops"), 1);
+    assert_eq!(counter(&metrics, "requests"), 1, "only the plug was served");
+    drop(client);
+    net.shutdown();
+}
+
+#[test]
+fn graceful_shutdown_drains_pipelined_requests() {
+    let ds = demo(300, 4, 35);
+    let net = start_net(&ds, small_config(), NetConfig::default());
+    let addr = net.addr().to_string();
+
+    // Pipeline three searches without reading any response, give the
+    // event loop a beat to submit them, then drain.
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    for rid in 1..=3u64 {
+        let frame = proto::encode_request(&RequestFrame {
+            request_id: rid,
+            tenant: "acme".to_string(),
+            deadline_ms: 0,
+            body: Request::Search {
+                k: 5,
+                ef: 32,
+                filter: None,
+                query: ds.query_vec(rid as usize % ds.n_queries()).to_vec(),
+            },
+        });
+        raw.write_all(&frame).unwrap();
+    }
+    std::thread::sleep(Duration::from_millis(300));
+    let snap = net.shutdown();
+
+    // Every pipelined request was answered (not dropped) before close.
+    let mut buf = Vec::new();
+    let mut seen = Vec::new();
+    while let Some((rid, resp)) = read_raw_response(&mut raw, &mut buf) {
+        assert!(matches!(resp, Response::Search { .. }), "request {rid}: {resp:?}");
+        seen.push(rid);
+    }
+    seen.sort_unstable();
+    assert_eq!(seen, vec![1, 2, 3]);
+    assert_eq!(snap.requests, 3);
+    assert_eq!(snap.deadline_drops, 0);
+}
+
+#[test]
+fn reply_abstraction_keeps_channel_and_hook_paths_equivalent() {
+    // The same server serves a hook-completed request (the net path) and
+    // a channel-completed one (the legacy path) with identical results.
+    let ds = demo(200, 4, 36);
+    let net = start_net(&ds, small_config(), NetConfig::default());
+    let handle = net.handle();
+
+    let legacy = handle.query(ds.query_vec(0).to_vec(), 5, 32).unwrap();
+    let (tx, rx) = sync_channel(1);
+    assert!(handle.submit_request(QueryRequest::Search(SearchRequest {
+        query: ds.query_vec(0).to_vec(),
+        k: 5,
+        ef: 32,
+        filter: None,
+        submitted: Instant::now(),
+        deadline: None,
+        reply: Reply::hook(move |resp| {
+            tx.send(resp.expect("served, not dropped")).unwrap();
+        }),
+    })));
+    let hooked = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    assert_eq!(hooked.ids, legacy.ids);
+    let hook_bits: Vec<u32> = hooked.dists.iter().map(|d| d.to_bits()).collect();
+    let legacy_bits: Vec<u32> = legacy.dists.iter().map(|d| d.to_bits()).collect();
+    assert_eq!(hook_bits, legacy_bits);
+    net.shutdown();
+}
+
+#[test]
+fn serve_cli_listens_and_drains_on_stdin_close() {
+    use std::io::{BufRead, BufReader};
+    use std::process::{Command, Stdio};
+
+    let mut child = Command::new(env!("CARGO_BIN_EXE_crinn"))
+        .args([
+            "serve",
+            "--listen",
+            "127.0.0.1:0",
+            "--dataset",
+            "demo-64",
+            "--n",
+            "1000",
+            "--queries",
+            "5",
+            "--shards",
+            "1",
+        ])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn crinn serve --listen");
+
+    let stdout = child.stdout.take().unwrap();
+    let mut lines = BufReader::new(stdout).lines();
+    let addr = loop {
+        let line = lines
+            .next()
+            .expect("stdout closed before the listening line")
+            .unwrap();
+        if let Some(rest) = line.strip_prefix("listening on ") {
+            break rest.to_string();
+        }
+    };
+
+    let mut client = Client::connect(&addr, "cli-test").unwrap();
+    let q = vec![0.1f32; 64];
+    let resp = client.search(&q, 5, 32).unwrap();
+    assert!(matches!(&resp, Response::Search { ids, .. } if ids.len() == 5), "{resp:?}");
+    drop(client);
+
+    // Closing stdin is the stop signal; the server drains and exits 0.
+    drop(child.stdin.take());
+    let status = child.wait().expect("wait for crinn serve");
+    assert!(status.success(), "serve exited with {status:?}");
+    let summary: Vec<String> = lines.map_while(|l| l.ok()).collect();
+    assert!(
+        summary.iter().any(|l| l.starts_with("served ")),
+        "missing summary in {summary:?}"
+    );
+}
